@@ -1,0 +1,78 @@
+//! Quickstart: train a PQDTW quantizer, encode a dataset, compute
+//! approximate distances three ways, and compare against true DTW.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use pqdtw::data::random_walk::RandomWalks;
+use pqdtw::distance::dtw::dtw;
+use pqdtw::pq::quantizer::{PqConfig, PrealignConfig, ProductQuantizer};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A toy database: 200 random walks of length 128.
+    let db = RandomWalks::new(42).generate(200, 128);
+    println!("database: {} series of length {}", db.n_series(), db.len);
+
+    // 2. Train the product quantizer (Algorithm 1): M=4 subspaces,
+    //    K=32 centroids, 10% warping window, MODWT pre-alignment.
+    let cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 32,
+        window_frac: 0.1,
+        prealign: Some(PrealignConfig { level: 2, tail_frac: 0.15 }),
+        ..Default::default()
+    };
+    let pq = ProductQuantizer::train(&db, &cfg, 7)?;
+    println!(
+        "trained: M={} K={} L={} window={:?} (pre-aligned, tail={})",
+        cfg.n_subspaces,
+        pq.codebook.k,
+        pq.codebook.sub_len,
+        pq.codebook.window,
+        pq.segmenter.tail
+    );
+
+    // 3. Encode the database (Algorithm 2). Each series becomes M small
+    //    integers — the §3.4 memory model quantifies the win.
+    let enc = pq.encode_dataset(&db);
+    let mm = pq.memory_model();
+    println!(
+        "encoded {} series; compression {:.1}x ({} -> {} bits/series)",
+        enc.n(),
+        mm.compression_factor,
+        mm.raw_bits_per_series,
+        mm.code_bits_per_series
+    );
+    let st = enc.stats;
+    println!(
+        "encode work: {} candidates, {:.0}% pruned by LB cascade",
+        st.candidates(),
+        100.0 * (st.pruned_kim + st.pruned_keogh) as f64 / st.candidates() as f64
+    );
+
+    // 4. Distances. Symmetric: O(M) table lookups.
+    let d_sym = pq.symmetric_distance(enc.code(0), enc.code(1));
+    // Keogh-patched symmetric: collision-safe variant for clustering.
+    let d_patched = pq.patched_distance(&enc, 0, 1);
+    // Asymmetric: query stays raw; one M×K table per query, then O(M).
+    let table = pq.asymmetric_table(db.row(0));
+    let d_asym = pq.asymmetric_distance(&table, enc.code(1));
+    // Ground truth.
+    let d_true = dtw(db.row(0), db.row(1), None);
+    println!("\ndistance(series 0, series 1):");
+    println!("  symmetric  : {d_sym:.4}");
+    println!("  patched    : {d_patched:.4}");
+    println!("  asymmetric : {d_asym:.4}");
+    println!("  true DTW   : {d_true:.4}");
+
+    // 5. A 1-NN query: nearest database series to a fresh walk.
+    let query_set = RandomWalks::new(1234).generate(1, 128);
+    let q = query_set.row(0);
+    let table = pq.asymmetric_table(q);
+    let (best, d) = (0..enc.n())
+        .map(|j| (j, pq.asymmetric_distance(&table, enc.code(j))))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!("\n1-NN of fresh query: series {best} at approx distance {d:.4}");
+    println!("   (exact DTW to it: {:.4})", dtw(q, db.row(best), None));
+    Ok(())
+}

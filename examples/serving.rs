@@ -1,0 +1,128 @@
+//! End-to-end serving driver — proves all three layers compose.
+//!
+//! Builds an engine over a real (synthetic-UCR) workload, starts the
+//! threaded coordinator with dynamic batching, drives concurrent clients
+//! against it, and reports latency/throughput percentiles. With
+//! `--features pjrt` (and `make artifacts`), queries are additionally
+//! cross-checked through the AOT-compiled JAX/Pallas encode graph
+//! executed via PJRT — Python is never in the loop.
+//!
+//! Run: `cargo run --release --features pjrt --example serving`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use pqdtw::cli::Args;
+use pqdtw::coordinator::{BatcherConfig, Engine, Request, Response, Service, ServiceConfig};
+use pqdtw::data::ucr_like::ucr_like_by_name;
+use pqdtw::nn::knn::PqQueryMode;
+use pqdtw::pq::quantizer::{PqConfig, PqMetric};
+#[cfg(feature = "pjrt")]
+use pqdtw::pq::quantizer::ProductQuantizer;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let seed = args.get_parsed("seed", 5u64);
+    let n_clients = args.get_parsed("clients", 4usize);
+    let per_client = args.get_parsed("requests", 100usize);
+    let n_workers = args.get_parsed("workers", 2usize);
+
+    // SpikePosition has length 100 = 4 × 25: matches the AOT artifact
+    // variant (M=4, K=16, L=25, w=5) lowered by python/compile/aot.py.
+    let tt = ucr_like_by_name("SpikePosition", seed).unwrap();
+    let cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 16,
+        window_frac: 0.2,
+        metric: PqMetric::Dtw,
+        ..Default::default()
+    };
+    println!("building engine on {} ({} series)…", tt.name, tt.train.n_series());
+    let engine = Arc::new(Engine::build(&tt.train, &cfg, seed)?);
+
+    // --- PJRT cross-check: the same encode through the AOT artifact ---
+    #[cfg(feature = "pjrt")]
+    {
+        use pqdtw::runtime::artifacts::Manifest;
+        use pqdtw::runtime::encoder::PjrtEncoder;
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            let manifest = Manifest::load(&dir)?;
+            let pq2 = ProductQuantizer::train(&tt.train, &cfg, seed)?;
+            let mut pjrt = PjrtEncoder::new(&pq2, &manifest)?;
+            let mut agree = 0;
+            let n_check = 16.min(tt.test.n_series());
+            let t0 = Instant::now();
+            for i in 0..n_check {
+                let via_pjrt = pjrt.encode(&pq2, tt.test.row(i))?;
+                let (native, _, _) = pq2.encode(tt.test.row(i));
+                if via_pjrt == native {
+                    agree += 1;
+                }
+            }
+            println!(
+                "PJRT cross-check: {agree}/{n_check} encodes identical to native ({:?} total, AOT graph M=4 K=16 L=25)",
+                t0.elapsed()
+            );
+        } else {
+            println!("PJRT cross-check skipped: run `make artifacts` first");
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT cross-check skipped (build with --features pjrt)");
+
+    // --- the serving run ---
+    let svc = Arc::new(Service::start(
+        Arc::clone(&engine),
+        ServiceConfig {
+            n_workers,
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_delay: std::time::Duration::from_millis(1),
+            },
+        },
+    ));
+    println!(
+        "service up: {n_workers} workers, {n_clients} clients × {per_client} requests\n"
+    );
+
+    let test = Arc::new(tt.test);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let svc = Arc::clone(&svc);
+        let test = Arc::clone(&test);
+        handles.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            for i in 0..per_client {
+                let idx = (c * per_client + i) % test.n_series();
+                let mode = if i % 2 == 0 { PqQueryMode::Symmetric } else { PqQueryMode::Asymmetric };
+                match svc.call(Request::NnQuery { series: test.row(idx).to_vec(), mode }) {
+                    Response::Nn { label, .. } => {
+                        if label == Some(test.label(idx)) {
+                            correct += 1;
+                        }
+                    }
+                    other => panic!("unexpected response: {other:?}"),
+                }
+            }
+            correct
+        }));
+    }
+    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = t0.elapsed();
+    let m = svc.metrics();
+
+    let total = (n_clients * per_client) as f64;
+    println!("== serving results ==");
+    println!("requests      : {}", m.requests);
+    println!("wall time     : {wall:?}");
+    println!("throughput    : {:.0} req/s", total / wall.as_secs_f64());
+    println!("mean latency  : {:.0} µs", m.mean_latency_us);
+    println!("p50 / p90 / p99 : ≤{} / ≤{} / ≤{} µs",
+        m.percentile_us(0.50), m.percentile_us(0.90), m.percentile_us(0.99));
+    println!("mean batch    : {:.2}", m.mean_batch_size);
+    println!("errors        : {}", m.errors);
+    println!("1-NN accuracy : {:.3} (vs labels, online queries)", correct as f64 / total);
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts for the Rust
+runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (one per manifest variant):
+    encode_m{M}_k{K}_l{L}_w{W}.hlo.txt    encode_series
+    adc_m{M}_k{K}_l{L}_w{W}.hlo.txt       adc_table
+    pairsym_n{N}_p{P}_m{M}_k{K}.hlo.txt   pairwise_symmetric
+plus ``manifest.tsv`` describing every artifact (kind, shape params,
+filename) in a format the Rust side parses without a JSON dependency.
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile's
+`artifacts` target). Python never runs at serving time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (M, K, L, window) variants to lower for encode/adc. These match the
+# configurations the Rust examples/benches use with the PJRT backend;
+# adding a line here is all it takes to support another shape.
+ENCODE_VARIANTS = [
+    (4, 16, 25, 5),   # SpikePosition-style serving demo (len 100, M=4)
+    (4, 64, 32, 4),   # larger codebook, len 128
+]
+
+# (N, P, M, K) variants for the batched symmetric-distance graph.
+PAIRSYM_VARIANTS = [
+    (8, 64, 4, 16),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_encode(m: int, k: int, length: int, window: int) -> str:
+    fn = functools.partial(model.encode_series, window=window)
+    subs = jax.ShapeDtypeStruct((m, length), jnp.float32)
+    books = jax.ShapeDtypeStruct((m, k, length), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(subs, books))
+
+
+def lower_adc(m: int, k: int, length: int, window: int) -> str:
+    fn = functools.partial(model.adc_table, window=window)
+    subs = jax.ShapeDtypeStruct((m, length), jnp.float32)
+    books = jax.ShapeDtypeStruct((m, k, length), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(subs, books))
+
+
+def lower_pairsym(n: int, p: int, m: int, k: int) -> str:
+    cx = jax.ShapeDtypeStruct((n, m), jnp.int32)
+    cy = jax.ShapeDtypeStruct((p, m), jnp.int32)
+    lut = jax.ShapeDtypeStruct((m, k, k), jnp.float32)
+    return to_hlo_text(jax.jit(model.pairwise_symmetric).lower(cx, cy, lut))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_rows: list[str] = []
+
+    for m, k, length, w in ENCODE_VARIANTS:
+        name = f"encode_m{m}_k{k}_l{length}_w{w}.hlo.txt"
+        text = lower_encode(m, k, length, w)
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest_rows.append(f"encode\t{m}\t{k}\t{length}\t{w}\t{name}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+        name = f"adc_m{m}_k{k}_l{length}_w{w}.hlo.txt"
+        text = lower_adc(m, k, length, w)
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest_rows.append(f"adc\t{m}\t{k}\t{length}\t{w}\t{name}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for n, p, m, k in PAIRSYM_VARIANTS:
+        name = f"pairsym_n{n}_p{p}_m{m}_k{k}.hlo.txt"
+        text = lower_pairsym(n, p, m, k)
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest_rows.append(f"pairsym\t{n}\t{p}\t{m}\t{k}\t{name}")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"manifest: {len(manifest_rows)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Layer-1 Pallas kernel: K-batched Sakoe-Chiba DTW via anti-diagonal
+wavefront dynamic programming.
+
+The encoding hot-spot of PQDTW is a 1-NN DTW query of one subspace vector
+against all K centroids of a sub-codebook (paper Alg. 2). On TPU the
+natural decomposition is:
+
+- **grid over centroid blocks**: each program instance owns a (KB, L)
+  block of the codebook, streamed HBM->VMEM once via BlockSpec;
+- **anti-diagonal wavefront** inside the program: cells on one diagonal
+  of the DP matrix have no mutual dependency, so each of the 2L-1 steps
+  is a fully vectorized (KB, L) update on the VPU — the sequential
+  dependence is only across diagonals, not across lanes;
+- the Sakoe-Chiba band is a static mask (+inf outside), keeping all
+  shapes static for AOT lowering.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* in DESIGN.md §Perf.
+Numerics are identical between the interpret path and the pure-jnp
+reference (checked by pytest against kernels/ref.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["batched_dtw_sq", "K_BLOCK"]
+
+# Centroids per program instance. 8 keeps the (KB, L) working set tiny
+# (8 x 160 x 4 B = 5 KiB) while filling VPU sublanes.
+K_BLOCK = 8
+
+_INF = float("inf")  # python float: avoids capturing a traced constant
+
+
+def _dtw_wavefront_kernel(q_ref, c_ref, o_ref, *, length: int, window: int):
+    """One program: DTW of query (L,) vs a (KB, L) centroid block.
+
+    DP matrix D[i, j]: i indexes the query, j the centroid. The diagonal
+    d holds cells with i + j = d; the vector ``diag[b, i]`` stores
+    D[i, d - i] for centroid b. Invalid cells (outside the matrix or the
+    band) hold +inf, which makes every boundary case fall out of the
+    same minimum.
+    """
+    L = length
+    w = window
+    q = q_ref[...].astype(jnp.float32)          # (L,)
+    c = c_ref[...].astype(jnp.float32)          # (KB, L)
+    kb = c.shape[0]
+
+    # crev[b, x] = c[b, L-1-x]; rolling it by (d - (L-1)) aligns
+    # crev[b, i + L-1-d] = c[b, d-i] with lane i.
+    crev = jnp.flip(c, axis=1)
+    ii = jnp.arange(L, dtype=jnp.int32)         # lane index i
+
+    def diag_cost(d):
+        shifted = jnp.roll(crev, d - (L - 1), axis=1)   # (KB, L): c[b, d-i]
+        diff = q[None, :] - shifted
+        return diff * diff
+
+    def valid_mask(d):
+        j = d - ii
+        ok = (j >= 0) & (j <= L - 1)
+        ok &= jnp.abs(ii - j) <= w
+        return ok[None, :]                       # (1, L) broadcasts over KB
+
+    # d = 0: only cell (0, 0).
+    init_cost = diag_cost(0)
+    diag0 = jnp.where((ii == 0)[None, :], init_cost, _INF)
+    # A phantom "d = -1" diagonal of all +inf seeds prev2.
+    diag_neg = jnp.full((kb, L), _INF, dtype=jnp.float32)
+
+    def step(d, carry):
+        prev2, prev1 = carry
+        cost = diag_cost(d)
+        # Predecessors: D[i-1, j] = prev1[i-1], D[i, j-1] = prev1[i],
+        # D[i-1, j-1] = prev2[i-1]; the i-1 shifts bring +inf in at i=0.
+        prev1_up = jnp.roll(prev1, 1, axis=1).at[:, 0].set(_INF)
+        prev2_up = jnp.roll(prev2, 1, axis=1).at[:, 0].set(_INF)
+        best = jnp.minimum(jnp.minimum(prev1, prev1_up), prev2_up)
+        new = jnp.where(valid_mask(d), cost + best, _INF)
+        return (prev1, new)
+
+    _, last = jax.lax.fori_loop(1, 2 * L - 1, step, (diag_neg, diag0))
+    # Final diagonal d = 2L-2 holds D[L-1, L-1] at lane i = L-1.
+    o_ref[...] = last[:, L - 1]
+
+
+def batched_dtw_sq(q: jax.Array, c: jax.Array, window: int | None = None) -> jax.Array:
+    """Squared banded-DTW cost of ``q`` (L,) against each row of ``c`` (K, L).
+
+    ``window`` is the Sakoe-Chiba half-width in samples (None = L, i.e.
+    unconstrained). K is padded up to a multiple of ``K_BLOCK`` internally;
+    the output always has shape (K,), dtype float32.
+    """
+    q = jnp.asarray(q, dtype=jnp.float32)
+    c = jnp.asarray(c, dtype=jnp.float32)
+    (L,) = q.shape
+    k, lc = c.shape
+    assert lc == L, f"centroid length {lc} != query length {L}"
+    w = L if window is None else max(1, min(int(window), L))
+
+    k_pad = ((k + K_BLOCK - 1) // K_BLOCK) * K_BLOCK
+    if k_pad != k:
+        # Padding rows never win and are sliced off below.
+        pad = jnp.full((k_pad - k, L), 1e6, dtype=jnp.float32)
+        c = jnp.concatenate([c, pad], axis=0)
+
+    kernel = functools.partial(_dtw_wavefront_kernel, length=L, window=w)
+    out = pl.pallas_call(
+        kernel,
+        grid=(k_pad // K_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((L,), lambda g: (0,)),
+            pl.BlockSpec((K_BLOCK, L), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((K_BLOCK,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((k_pad,), jnp.float32),
+        interpret=True,
+    )(q, c)
+    return out[:k]

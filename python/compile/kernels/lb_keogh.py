@@ -1,0 +1,62 @@
+"""Layer-1 Pallas kernel: batched reversed LB_Keogh.
+
+Computes the squared Keogh lower bound of one query against the
+precomputed envelopes of a block of centroids — the cascade stage the
+PQDTW encoder runs before paying for full DTW (paper §3.2). Pure
+elementwise + reduction, so the kernel is a single fused (KB, L) VPU
+pass per program instance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["batched_lb_keogh_sq", "K_BLOCK"]
+
+K_BLOCK = 8
+
+
+def _lb_keogh_kernel(q_ref, u_ref, l_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)           # (L,)
+    upper = u_ref[...].astype(jnp.float32)       # (KB, L)
+    lower = l_ref[...].astype(jnp.float32)       # (KB, L)
+    over = jnp.maximum(q[None, :] - upper, 0.0)
+    under = jnp.maximum(lower - q[None, :], 0.0)
+    o_ref[...] = jnp.sum(over * over + under * under, axis=1)
+
+
+def batched_lb_keogh_sq(q: jax.Array, upper: jax.Array, lower: jax.Array) -> jax.Array:
+    """Squared LB_Keogh of ``q`` (L,) against K envelopes (K, L) each.
+
+    Returns (K,) float32. K is padded to a multiple of ``K_BLOCK``
+    internally.
+    """
+    q = jnp.asarray(q, dtype=jnp.float32)
+    upper = jnp.asarray(upper, dtype=jnp.float32)
+    lower = jnp.asarray(lower, dtype=jnp.float32)
+    (L,) = q.shape
+    k = upper.shape[0]
+    assert upper.shape == lower.shape == (k, L)
+
+    k_pad = ((k + K_BLOCK - 1) // K_BLOCK) * K_BLOCK
+    if k_pad != k:
+        pad_u = jnp.full((k_pad - k, L), jnp.float32(1e6))
+        pad_l = jnp.full((k_pad - k, L), jnp.float32(-1e6))
+        upper = jnp.concatenate([upper, pad_u], axis=0)
+        lower = jnp.concatenate([lower, pad_l], axis=0)
+
+    out = pl.pallas_call(
+        _lb_keogh_kernel,
+        grid=(k_pad // K_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((L,), lambda g: (0,)),
+            pl.BlockSpec((K_BLOCK, L), lambda g: (g, 0)),
+            pl.BlockSpec((K_BLOCK, L), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((K_BLOCK,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((k_pad,), jnp.float32),
+        interpret=True,
+    )(q, upper, lower)
+    return out[:k]

@@ -1,0 +1,70 @@
+"""Pure-numpy oracles for the Pallas kernels.
+
+These are the correctness references: literal O(L^2) dynamic programs and
+envelope bounds, written for clarity, not speed. The pytest suite asserts
+the Pallas kernels (and, via the golden tests, the Rust implementation)
+agree with these to float32 tolerance.
+
+Conventions match rust/src/distance/mod.rs:
+- DTW accumulates squared pointwise costs (paper Eq. 1); callers take the
+  square root at the end.
+- `window` is the Sakoe-Chiba half-width in samples; it is clamped up to
+  |len(a) - len(b)| so a path always exists.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "dtw_sq_ref",
+    "batched_dtw_sq_ref",
+    "envelope_ref",
+    "lb_keogh_sq_ref",
+]
+
+
+def dtw_sq_ref(a: np.ndarray, b: np.ndarray, window: int | None = None) -> float:
+    """Accumulated squared DTW cost between 1-D arrays ``a`` and ``b``."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n, m = len(a), len(b)
+    if n == 0 or m == 0:
+        return 0.0 if n == m else float("inf")
+    w = max(window, abs(n - m)) if window is not None else max(n, m)
+    dp = np.full((n + 1, m + 1), np.inf)
+    dp[0, 0] = 0.0
+    for i in range(1, n + 1):
+        lo = max(1, i - w)
+        hi = min(m, i + w)
+        for j in range(lo, hi + 1):
+            cost = (a[i - 1] - b[j - 1]) ** 2
+            dp[i, j] = cost + min(dp[i - 1, j - 1], dp[i - 1, j], dp[i, j - 1])
+    return float(dp[n, m])
+
+
+def batched_dtw_sq_ref(q: np.ndarray, c: np.ndarray, window: int | None = None) -> np.ndarray:
+    """Squared DTW cost of query ``q`` (L,) against each row of ``c`` (K, L)."""
+    return np.array([dtw_sq_ref(q, c[k], window) for k in range(c.shape[0])])
+
+
+def envelope_ref(c: np.ndarray, window: int) -> tuple[np.ndarray, np.ndarray]:
+    """Keogh envelope (upper, lower) of ``c`` for half-width ``window``."""
+    c = np.asarray(c, dtype=np.float64)
+    n = len(c)
+    upper = np.empty(n)
+    lower = np.empty(n)
+    for i in range(n):
+        lo = max(0, i - window)
+        hi = min(n, i + window + 1)
+        upper[i] = c[lo:hi].max()
+        lower[i] = c[lo:hi].min()
+    return upper, lower
+
+
+def lb_keogh_sq_ref(q: np.ndarray, upper: np.ndarray, lower: np.ndarray) -> float:
+    """Squared LB_Keogh of ``q`` against an envelope."""
+    q = np.asarray(q, dtype=np.float64)
+    over = np.maximum(q - upper, 0.0)
+    under = np.maximum(lower - q, 0.0)
+    return float(np.sum(over * over + under * under))

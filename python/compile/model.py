@@ -1,0 +1,74 @@
+"""Layer-2 JAX graphs for PQDTW, built on the Layer-1 Pallas kernels.
+
+Three graphs are AOT-lowered (see aot.py) and executed from the Rust
+runtime (rust/src/runtime/) via PJRT:
+
+- ``encode_series``   — Algorithm 2's hot loop: one series' M subspace
+  vectors against the full codebook -> codes + exact distances. The Rust
+  coordinator does segmentation/pre-alignment (cheap, O(D)) and hands the
+  (M, L) block to this graph.
+- ``adc_table``       — the asymmetric distance table: (M, K) squared DTW
+  distances of a query's subspaces against every centroid (paper §3.3).
+- ``pairwise_symmetric`` — batched symmetric distances between two code
+  matrices through the (M, K, K) LUT: pure gather + reduce, the O(M)
+  per-pair path.
+
+All shapes are static; one artifact is produced per (M, K, L, window)
+variant listed in the AOT manifest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dtw_band import batched_dtw_sq
+
+__all__ = ["encode_series", "adc_table", "pairwise_symmetric"]
+
+
+def adc_table(subspaces: jax.Array, codebooks: jax.Array, *, window: int) -> jax.Array:
+    """Squared DTW of each subspace vector against its sub-codebook.
+
+    subspaces: (M, L) float32; codebooks: (M, K, L) float32.
+    Returns (M, K) float32.
+    """
+    m = subspaces.shape[0]
+    # M is small and static: unrolling at trace time keeps the Pallas
+    # grid one-dimensional and lets XLA pipeline the M kernel calls.
+    rows = [
+        batched_dtw_sq(subspaces[i], codebooks[i], window) for i in range(m)
+    ]
+    return jnp.stack(rows, axis=0)
+
+
+def encode_series(
+    subspaces: jax.Array, codebooks: jax.Array, *, window: int
+) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid codes for one series (Algorithm 2).
+
+    Returns (codes (M,) int32, dist_sq (M,) float32).
+    """
+    table = adc_table(subspaces, codebooks, window=window)
+    codes = jnp.argmin(table, axis=1).astype(jnp.int32)
+    dists = jnp.min(table, axis=1)
+    return codes, dists
+
+
+def pairwise_symmetric(
+    codes_x: jax.Array, codes_y: jax.Array, lut_sq: jax.Array
+) -> jax.Array:
+    """Symmetric PQ distances between two code matrices.
+
+    codes_x: (N, M) int32; codes_y: (P, M) int32; lut_sq: (M, K, K).
+    Returns (N, P) float32 distances (sqrt of summed squared LUT cells).
+    """
+    n, m = codes_x.shape
+    p, _ = codes_y.shape
+    # Gather lut_sq[mm, codes_x[i, mm], codes_y[j, mm]] for all i, j, mm.
+    mm = jnp.arange(m)
+    # (N, 1, M) and (1, P, M) index grids
+    cx = codes_x[:, None, :]
+    cy = codes_y[None, :, :]
+    cells = lut_sq[mm[None, None, :], cx, cy]   # (N, P, M)
+    return jnp.sqrt(jnp.sum(cells, axis=-1))

@@ -1,0 +1,57 @@
+"""Cross-language golden tests.
+
+The same inputs and expected values are asserted by rust/tests/golden.rs;
+any drift between the Rust DTW/LB implementations, the Python reference
+and the Pallas kernels shows up here or there.
+"""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.kernels.dtw_band import batched_dtw_sq
+from compile.kernels.lb_keogh import batched_lb_keogh_sq
+from compile.kernels.ref import dtw_sq_ref, envelope_ref, lb_keogh_sq_ref
+
+# Shared fixtures (keep in sync with rust/tests/golden.rs).
+GOLD_A = [0.3, -1.04, 0.75, 0.94, -1.95, -1.3, 0.13, -0.32, -0.02, -0.85]
+GOLD_B = [0.88, 0.78, 0.07, 1.13, 0.47, -0.86, 0.37, -0.96, 0.88, -0.05]
+# window -> accumulated squared DTW cost
+GOLD_DTW_SQ = {0: 12.1145, 1: 5.4631, 2: 5.4631, 10: 4.2112}
+
+GOLD_C = [1.0, -0.5, 2.5, 0.0, -1.5, 2.0, -0.5, 1.5]
+GOLD_Q = [0.0, 2.0, -1.0, 3.0, 0.5, -2.0, 1.0, 0.0]
+GOLD_ENV_W = 2
+GOLD_ENV_UPPER = [2.5, 2.5, 2.5, 2.5, 2.5, 2.0, 2.0, 2.0]
+GOLD_ENV_LOWER = [-0.5, -0.5, -1.5, -1.5, -1.5, -1.5, -1.5, -0.5]
+GOLD_LB_SQ = 0.5
+
+
+def test_ref_dtw_matches_golden():
+    a, b = np.array(GOLD_A), np.array(GOLD_B)
+    for w, want in GOLD_DTW_SQ.items():
+        assert_allclose(dtw_sq_ref(a, b, w), want, rtol=1e-9)
+
+
+def test_pallas_dtw_matches_golden():
+    q = np.array(GOLD_A, dtype=np.float32)
+    c = np.array([GOLD_B], dtype=np.float32)
+    for w, want in GOLD_DTW_SQ.items():
+        got = np.asarray(batched_dtw_sq(q, c, max(w, 1) if w == 0 else w))
+        if w == 0:
+            continue  # kernel clamps window to >= 1; skip the w=0 row
+        assert_allclose(got[0], want, rtol=1e-5)
+
+
+def test_envelope_and_lb_match_golden():
+    u, lo = envelope_ref(np.array(GOLD_C), GOLD_ENV_W)
+    assert_allclose(u, GOLD_ENV_UPPER)
+    assert_allclose(lo, GOLD_ENV_LOWER)
+    assert_allclose(lb_keogh_sq_ref(np.array(GOLD_Q), u, lo), GOLD_LB_SQ, rtol=1e-9)
+    got = np.asarray(
+        batched_lb_keogh_sq(
+            np.array(GOLD_Q, dtype=np.float32),
+            np.array([GOLD_ENV_UPPER], dtype=np.float32),
+            np.array([GOLD_ENV_LOWER], dtype=np.float32),
+        )
+    )
+    assert_allclose(got[0], GOLD_LB_SQ, rtol=1e-5)

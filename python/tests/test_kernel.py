@@ -1,0 +1,129 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-numpy oracle.
+
+Hypothesis sweeps shapes, windows and value ranges; every case asserts
+allclose at float32 tolerance. This is the core correctness signal for
+the compute layer that the Rust runtime executes via PJRT.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.dtw_band import K_BLOCK, batched_dtw_sq
+from compile.kernels.lb_keogh import batched_lb_keogh_sq
+from compile.kernels.ref import (
+    batched_dtw_sq_ref,
+    dtw_sq_ref,
+    envelope_ref,
+    lb_keogh_sq_ref,
+)
+
+# Interpret-mode Pallas is slow; keep hypothesis cases bounded but varied.
+COMMON = dict(max_examples=25, deadline=None)
+
+
+def _series(rng: np.random.Generator, n: int, scale: float) -> np.ndarray:
+    return (rng.normal(size=n) * scale).astype(np.float32)
+
+
+@settings(**COMMON)
+@given(
+    length=st.integers(min_value=2, max_value=24),
+    k=st.integers(min_value=1, max_value=12),
+    window=st.one_of(st.none(), st.integers(min_value=1, max_value=24)),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dtw_kernel_matches_ref(length, k, window, scale, seed):
+    rng = np.random.default_rng(seed)
+    q = _series(rng, length, scale)
+    c = np.stack([_series(rng, length, scale) for _ in range(k)])
+    got = np.asarray(batched_dtw_sq(q, c, window))
+    w = min(window, length) if window is not None else None
+    want = batched_dtw_sq_ref(q, c, w)
+    assert got.shape == (k,)
+    assert got.dtype == np.float32
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale * scale)
+
+
+@settings(**COMMON)
+@given(
+    length=st.integers(min_value=2, max_value=32),
+    k=st.integers(min_value=1, max_value=20),
+    window=st.integers(min_value=0, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lb_keogh_kernel_matches_ref(length, k, window, seed):
+    rng = np.random.default_rng(seed)
+    q = _series(rng, length, 1.0)
+    env = [envelope_ref(_series(rng, length, 1.0), window) for _ in range(k)]
+    upper = np.stack([u for u, _ in env]).astype(np.float32)
+    lower = np.stack([lo for _, lo in env]).astype(np.float32)
+    got = np.asarray(batched_lb_keogh_sq(q, upper, lower))
+    want = np.array([lb_keogh_sq_ref(q, upper[i], lower[i]) for i in range(k)])
+    assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(
+    length=st.integers(min_value=2, max_value=20),
+    window=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lb_keogh_lower_bounds_dtw(length, window, seed):
+    """Invariant: LB_Keogh(q, env(c, w)) <= DTW_w(q, c)."""
+    rng = np.random.default_rng(seed)
+    q = _series(rng, length, 1.0)
+    c = _series(rng, length, 1.0)
+    w = min(window, length)
+    u, lo = envelope_ref(c, w)
+    lb = lb_keogh_sq_ref(q, u, lo)
+    d = dtw_sq_ref(q, c, w)
+    assert lb <= d + 1e-5
+
+
+def test_kernel_identical_series_zero():
+    q = np.linspace(-1, 1, 16).astype(np.float32)
+    c = np.stack([q, q + 1.0])
+    got = np.asarray(batched_dtw_sq(q, c, 4))
+    assert got[0] == pytest.approx(0.0, abs=1e-6)
+    assert got[1] > 0.0
+
+
+def test_kernel_window_monotonicity():
+    rng = np.random.default_rng(7)
+    q = _series(rng, 16, 1.0)
+    c = np.stack([_series(rng, 16, 1.0) for _ in range(4)])
+    prev = None
+    for w in [1, 2, 4, 8, 16]:
+        cur = np.asarray(batched_dtw_sq(q, c, w))
+        if prev is not None:
+            assert np.all(cur <= prev + 1e-4)
+        prev = cur
+
+
+def test_kernel_k_padding_exact_multiple_and_not():
+    rng = np.random.default_rng(9)
+    q = _series(rng, 10, 1.0)
+    for k in [1, K_BLOCK - 1, K_BLOCK, K_BLOCK + 3, 3 * K_BLOCK]:
+        c = np.stack([_series(rng, 10, 1.0) for _ in range(k)])
+        got = np.asarray(batched_dtw_sq(q, c, 3))
+        want = batched_dtw_sq_ref(q, c, 3)
+        assert got.shape == (k,)
+        assert_allclose(got, want, rtol=1e-4)
+
+
+def test_kernel_float64_inputs_coerced():
+    q = np.array([0.0, 1.0, 2.0], dtype=np.float64)
+    c = np.array([[0.0, 1.0, 2.0]], dtype=np.float64)
+    got = np.asarray(batched_dtw_sq(q, c, 1))
+    assert got.dtype == np.float32
+    assert got[0] == pytest.approx(0.0, abs=1e-7)
+
+
+def test_kernel_rejects_mismatched_lengths():
+    q = np.zeros(5, dtype=np.float32)
+    c = np.zeros((2, 6), dtype=np.float32)
+    with pytest.raises(AssertionError):
+        batched_dtw_sq(q, c, 2)

@@ -1,0 +1,90 @@
+"""Layer-2 correctness: the JAX graphs that get AOT-lowered for Rust."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.model import adc_table, encode_series, pairwise_symmetric
+from compile.kernels.ref import batched_dtw_sq_ref
+
+COMMON = dict(max_examples=15, deadline=None)
+
+
+def _mk(rng, m, k, length):
+    subs = rng.normal(size=(m, length)).astype(np.float32)
+    books = rng.normal(size=(m, k, length)).astype(np.float32)
+    return subs, books
+
+
+@settings(**COMMON)
+@given(
+    m=st.integers(min_value=1, max_value=4),
+    k=st.integers(min_value=1, max_value=10),
+    length=st.integers(min_value=2, max_value=16),
+    window=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_adc_table_matches_ref(m, k, length, window, seed):
+    rng = np.random.default_rng(seed)
+    subs, books = _mk(rng, m, k, length)
+    got = np.asarray(adc_table(subs, books, window=window))
+    assert got.shape == (m, k)
+    w = min(window, length)
+    for i in range(m):
+        want = batched_dtw_sq_ref(subs[i], books[i], w)
+        assert_allclose(got[i], want, rtol=2e-4, atol=1e-4)
+
+
+def test_encode_series_argmin_semantics():
+    rng = np.random.default_rng(3)
+    subs, books = _mk(rng, 3, 8, 12)
+    codes, dists = encode_series(subs, books, window=4)
+    codes, dists = np.asarray(codes), np.asarray(dists)
+    assert codes.shape == (3,)
+    assert codes.dtype == np.int32
+    table = np.asarray(adc_table(subs, books, window=4))
+    assert_allclose(dists, table.min(axis=1), rtol=1e-6)
+    assert np.all(codes == table.argmin(axis=1))
+
+
+def test_encode_exact_centroid_is_chosen():
+    rng = np.random.default_rng(5)
+    subs, books = _mk(rng, 2, 6, 10)
+    # plant each subspace vector as centroid 4
+    books[:, 4, :] = subs
+    codes, dists = encode_series(subs, books, window=3)
+    codes, dists = np.asarray(codes), np.asarray(dists)
+    assert np.all(dists <= 1e-8)
+    for m in range(2):
+        # the winner must be at distance 0 (id 4 unless an exact tie)
+        assert dists[m] == pytest.approx(0.0, abs=1e-8)
+
+
+def test_pairwise_symmetric_matches_manual_gather():
+    rng = np.random.default_rng(7)
+    n, p, m, k = 5, 7, 3, 6
+    lut = np.abs(rng.normal(size=(m, k, k))).astype(np.float32)
+    # symmetrize with zero diagonal, like a real distance LUT
+    lut = lut + lut.transpose(0, 2, 1)
+    for mm in range(m):
+        np.fill_diagonal(lut[mm], 0.0)
+    cx = rng.integers(0, k, size=(n, m)).astype(np.int32)
+    cy = rng.integers(0, k, size=(p, m)).astype(np.int32)
+    got = np.asarray(pairwise_symmetric(jnp.array(cx), jnp.array(cy), jnp.array(lut)))
+    assert got.shape == (n, p)
+    for i in range(n):
+        for j in range(p):
+            want = np.sqrt(sum(lut[mm, cx[i, mm], cy[j, mm]] for mm in range(m)))
+            assert got[i, j] == pytest.approx(want, rel=1e-6)
+
+
+def test_pairwise_symmetric_zero_on_equal_codes():
+    m, k = 4, 5
+    lut = np.ones((m, k, k), dtype=np.float32)
+    for mm in range(m):
+        np.fill_diagonal(lut[mm], 0.0)
+    codes = np.array([[1, 2, 3, 4]], dtype=np.int32)
+    got = np.asarray(pairwise_symmetric(jnp.array(codes), jnp.array(codes), jnp.array(lut)))
+    assert got[0, 0] == 0.0

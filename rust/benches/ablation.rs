@@ -1,0 +1,129 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! 1. **Keogh patch** (§4.2): clustering RI with plain symmetric
+//!    distances (zero on code collisions) vs the Keogh-patched variant.
+//! 2. **Pre-alignment** (§3.5): 1-NN error with fixed segmentation vs
+//!    MODWT-elastic segmentation on phase-heavy datasets.
+//! 3. **LB cascade** (§3.2): encode cost with the cascade disabled
+//!    (brute-force DTW over all K) vs enabled.
+//!
+//! Run: `cargo bench --bench ablation`
+
+use std::time::Instant;
+
+use pqdtw::cluster::{agglomerative, compact_labels, rand_index, Linkage};
+use pqdtw::core::matrix::CondensedMatrix;
+use pqdtw::data::ucr_like::ucr_like_by_name;
+use pqdtw::eval::report::{fmt_f, Table};
+use pqdtw::nn::knn::{nn_classify_pq, PqQueryMode};
+use pqdtw::pq::distance::symmetric_sq;
+use pqdtw::pq::encode::encode_subspace_bruteforce;
+use pqdtw::pq::quantizer::{PqConfig, PrealignConfig, ProductQuantizer};
+
+fn main() {
+    let seed = 808u64;
+
+    // --- 1. Keogh patch in clustering ---
+    let mut t = Table::new(
+        "ablation 1: symmetric-distance collision patch (clustering RI)",
+        &["dataset", "plain RI", "patched RI", "zero-dist pairs"],
+    );
+    for name in ["Seasonal", "CBF", "DampedOsc", "SpikePosition"] {
+        let tt = ucr_like_by_name(name, seed).unwrap();
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            // small codebook => frequent code collisions => the patch matters
+            codebook_size: 8,
+            window_frac: 0.1,
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&tt.train, &cfg, seed).unwrap();
+        let enc = pq.encode_dataset(&tt.test);
+        let n = tt.test.n_series();
+        let k = tt.test.classes().len();
+        let truth = compact_labels(&tt.test.labels);
+        let mut zero_pairs = 0usize;
+        let plain = CondensedMatrix::build(n, |i, j| {
+            let d = symmetric_sq(&pq.codebook, enc.code(i), enc.code(j)).sqrt();
+            if d == 0.0 {
+                zero_pairs += 1;
+            }
+            d
+        });
+        let patched = CondensedMatrix::build(n, |i, j| pq.patched_distance(&enc, i, j));
+        let ri_plain = rand_index(&agglomerative(&plain, Linkage::Complete).cut(k), &truth);
+        let ri_patch = rand_index(&agglomerative(&patched, Linkage::Complete).cut(k), &truth);
+        t.add_row(vec![
+            name.to_string(),
+            fmt_f(ri_plain, 4),
+            fmt_f(ri_patch, 4),
+            format!("{zero_pairs}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- 2. pre-alignment on phase-heavy data ---
+    let mut t = Table::new(
+        "ablation 2: MODWT pre-alignment (1-NN error, asymmetric)",
+        &["dataset", "fixed splits", "pre-aligned"],
+    );
+    for name in ["SpikePosition", "StepPosition", "BumpCount", "GunPointLike"] {
+        let tt = ucr_like_by_name(name, seed).unwrap();
+        let base = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 32,
+            window_frac: 0.1,
+            ..Default::default()
+        };
+        let pre = PqConfig {
+            prealign: Some(PrealignConfig { level: 2, tail_frac: 0.2 }),
+            ..base
+        };
+        let mut errs = Vec::new();
+        for cfg in [base, pre] {
+            let pq = ProductQuantizer::train(&tt.train, &cfg, seed).unwrap();
+            let enc = pq.encode_dataset(&tt.train);
+            let (err, _) = nn_classify_pq(&pq, &enc, &tt.test, PqQueryMode::Asymmetric);
+            errs.push(err);
+        }
+        t.add_row(vec![name.to_string(), fmt_f(errs[0], 4), fmt_f(errs[1], 4)]);
+    }
+    println!("{}", t.render());
+
+    // --- 3. LB cascade vs brute force encoding ---
+    let tt = ucr_like_by_name("TraceLike", seed).unwrap();
+    let cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 40,
+        window_frac: 0.1,
+        ..Default::default()
+    };
+    let pq = ProductQuantizer::train(&tt.train, &cfg, seed).unwrap();
+    let data = &tt.test;
+    let t0 = Instant::now();
+    let enc = pq.encode_dataset(data);
+    let t_cascade = t0.elapsed().as_secs_f64();
+    // brute force: same codes, no bounds
+    let t0 = Instant::now();
+    let mut brute_codes: Vec<u16> = Vec::new();
+    for i in 0..data.n_series() {
+        for (m, s) in pq.segment(data.row(i)).iter().enumerate() {
+            brute_codes.push(encode_subspace_bruteforce(s, m, &pq.codebook).0);
+        }
+    }
+    let t_brute = t0.elapsed().as_secs_f64();
+    // distances must agree even when tie-broken differently
+    let mut mismatch = 0usize;
+    for (a, b) in enc.codes.iter().zip(brute_codes.iter()) {
+        if a != b {
+            mismatch += 1;
+        }
+    }
+    let st = enc.stats;
+    println!("ablation 3: LB cascade in the encoder ({} series, K=40)", data.n_series());
+    println!("  cascade : {:.4} s ({:.0}% pruned)", t_cascade,
+        100.0 * (st.pruned_kim + st.pruned_keogh) as f64 / st.candidates() as f64);
+    println!("  brute   : {:.4} s", t_brute);
+    println!("  speedup : x{:.2}", t_brute / t_cascade);
+    println!("  code disagreements (ties): {mismatch}/{}", enc.codes.len());
+}

@@ -1,0 +1,170 @@
+//! §Perf microbenchmarks — the hot paths the optimization pass iterates
+//! on: the DTW DP inner loop, the LB-cascade encoder, the O(M) symmetric
+//! distance, the asymmetric table, and the coordinator overhead.
+//!
+//! Prints ns/op style medians; EXPERIMENTS.md §Perf records before/after.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use pqdtw::coordinator::{Engine, Request, Service, ServiceConfig};
+use pqdtw::core::rng::Rng;
+use pqdtw::data::random_walk::RandomWalks;
+use pqdtw::distance::dtw::{dtw_sq_scratch, DtwScratch};
+use pqdtw::distance::euclidean::euclidean_sq;
+use pqdtw::distance::pruned_dtw::pruned_dtw_sq;
+use pqdtw::eval::report::median;
+use pqdtw::nn::knn::PqQueryMode;
+use pqdtw::pq::distance::{asymmetric_sq, asymmetric_table, symmetric_sq};
+use pqdtw::pq::quantizer::{PqConfig, ProductQuantizer};
+
+/// Median wall time of `f` over `reps` runs, in seconds.
+fn bench<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    median(&mut times)
+}
+
+fn main() {
+    let mut rng = Rng::new(777);
+    println!("§Perf hot-path microbenchmarks (medians)\n");
+
+    // --- DTW DP kernel ---
+    for (len, w) in [(128usize, None), (128, Some(13)), (512, Some(51)), (1024, Some(102))] {
+        let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let mut scratch = DtwScratch::new(len);
+        let t = bench(51, || {
+            std::hint::black_box(dtw_sq_scratch(
+                std::hint::black_box(&a),
+                std::hint::black_box(&b),
+                w,
+                f64::INFINITY,
+                &mut scratch,
+            ));
+        });
+        let cells = match w {
+            Some(w) => len * (2 * w + 1),
+            None => len * len,
+        };
+        println!(
+            "dtw_sq len={len:5} w={w:?}: {:9.1} µs  ({:.2} ns/cell)",
+            t * 1e6,
+            t * 1e9 / cells as f64
+        );
+    }
+
+    // --- PrunedDTW with tight bound ---
+    {
+        let len = 512;
+        let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = a.iter().map(|v| v + 0.05 * rng.normal()).collect();
+        let ub = euclidean_sq(&a, &b);
+        let t = bench(51, || {
+            std::hint::black_box(pruned_dtw_sq(&a, &b, None, std::hint::black_box(ub)));
+        });
+        println!("pruned_dtw len={len} (tight ub): {:9.1} µs", t * 1e6);
+    }
+
+    // --- encode (LB cascade + early-abandon DTW) ---
+    let data = RandomWalks::new(31).generate(128, 512);
+    let cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 64,
+        window_frac: 0.1,
+        kmeans_iters: 2,
+        dba_iters: 1,
+        train_subsample: Some(64),
+        ..Default::default()
+    };
+    let pq = ProductQuantizer::train(&data, &cfg, 3).unwrap();
+    {
+        let x = data.row(0);
+        let t = bench(31, || {
+            std::hint::black_box(pq.encode(std::hint::black_box(x)));
+        });
+        println!("encode series len=512 (M=4 K=64): {:9.1} µs", t * 1e6);
+    }
+
+    // --- symmetric + asymmetric distances ---
+    let enc = pq.encode_dataset(&data);
+    {
+        let cx = enc.code(0).to_vec();
+        let cy = enc.code(1).to_vec();
+        let t = bench(101, || {
+            for _ in 0..1000 {
+                std::hint::black_box(symmetric_sq(
+                    &pq.codebook,
+                    std::hint::black_box(&cx),
+                    std::hint::black_box(&cy),
+                ));
+            }
+        });
+        println!("symmetric_sq (M=4):        {:9.2} ns/op", t * 1e9 / 1000.0);
+    }
+    {
+        let table = asymmetric_table(&pq.codebook, &pq.segment(data.row(0)));
+        let cy = enc.code(1).to_vec();
+        let t = bench(101, || {
+            for _ in 0..1000 {
+                std::hint::black_box(asymmetric_sq(&pq.codebook, &table, &cy));
+            }
+        });
+        println!("asymmetric_sq (M=4):       {:9.2} ns/op", t * 1e9 / 1000.0);
+        let t = bench(11, || {
+            std::hint::black_box(asymmetric_table(&pq.codebook, &pq.segment(data.row(2))));
+        });
+        println!("asymmetric_table (M=4 K=64): {:7.1} µs/query", t * 1e6);
+    }
+
+    // --- full pairwise matrix (the clustering hot loop) ---
+    {
+        let n = data.n_series();
+        let t = bench(11, || {
+            std::hint::black_box(pqdtw::core::matrix::CondensedMatrix::build(n, |i, j| {
+                pq.patched_distance(&enc, i, j)
+            }));
+        });
+        println!(
+            "pairwise matrix n={n} (patched): {:7.1} µs ({:.1} ns/pair)",
+            t * 1e6,
+            t * 1e9 / (n * (n - 1) / 2) as f64
+        );
+    }
+
+    // --- coordinator overhead: request round-trip minus compute ---
+    {
+        let tt = pqdtw::data::ucr_like::ucr_like_by_name("SpikePosition", 7).unwrap();
+        let cfg = PqConfig { n_subspaces: 4, codebook_size: 16, window_frac: 0.2, ..Default::default() };
+        let engine = Arc::new(Engine::build(&tt.train, &cfg, 1).unwrap());
+        // direct engine call
+        let req = Request::NnQuery { series: tt.test.row(0).to_vec(), mode: PqQueryMode::Symmetric };
+        let t_direct = bench(31, || {
+            std::hint::black_box(engine.handle(std::hint::black_box(&req)));
+        });
+        // through the service (batcher + channel + thread hop)
+        let svc = Service::start(Arc::clone(&engine), ServiceConfig::default());
+        let t_svc = bench(31, || {
+            std::hint::black_box(svc.call(Request::NnQuery {
+                series: tt.test.row(0).to_vec(),
+                mode: PqQueryMode::Symmetric,
+            }));
+        });
+        svc.shutdown();
+        println!(
+            "engine direct: {:7.1} µs | via service: {:7.1} µs (overhead {:+.1} µs)",
+            t_direct * 1e6,
+            t_svc * 1e6,
+            (t_svc - t_direct) * 1e6
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Table 1 (clustering columns): complete-linkage hierarchical clustering
+//! with PQDTW vs the raw measures over the UCR-like suite — mean Rand
+//! index difference and median speedup of the pairwise-matrix phase.
+//!
+//! Paper shape to reproduce: no significant RI differences between any of
+//! the measures, but PQDTW one order of magnitude faster than cDTW/SBD
+//! and two orders faster than DTW (no lower-bound pruning exists for full
+//! pairwise matrices, so PQDTW's O(M)-per-pair LUT path dominates).
+//!
+//! Run: `cargo bench --bench table1_clustering`
+
+use std::time::Instant;
+
+use pqdtw::cluster::{agglomerative, compact_labels, rand_index, Linkage};
+use pqdtw::core::matrix::CondensedMatrix;
+use pqdtw::data::ucr_like::ucr_like_suite;
+use pqdtw::distance::measure::Measure;
+use pqdtw::eval::report::{fmt_mean_std, fmt_speedup, Table};
+use pqdtw::eval::stats::{mean, pairwise_significance, std_dev, Significance};
+use pqdtw::nn::knn::nn_classify_sax; // SAX words reused via mindist below
+use pqdtw::pq::quantizer::{PqConfig, PrealignConfig, ProductQuantizer};
+use pqdtw::repr::sax::SaxEncoder;
+
+fn cluster_ri(m: &CondensedMatrix, k: usize, truth: &[usize]) -> f64 {
+    let labels = agglomerative(m, Linkage::Complete).cut(k);
+    rand_index(&labels, truth)
+}
+
+fn main() {
+    let seed = 505u64;
+    let suite = ucr_like_suite(seed);
+    println!(
+        "Table 1 (clustering, complete linkage) — {} UCR-like datasets\n",
+        suite.len()
+    );
+    let names = ["ED", "DTW", "cDTW5", "cDTW10", "SBD", "SAX", "PQ_ED", "PQDTW"];
+    let mut ris: Vec<Vec<f64>> = vec![Vec::new(); names.len()];
+    let mut times: Vec<Vec<f64>> = vec![Vec::new(); names.len()];
+
+    for tt in &suite {
+        eprint!("  {} …", tt.name);
+        let test = &tt.test;
+        let n = test.n_series();
+        let k = test.classes().len();
+        let truth = compact_labels(&test.labels);
+
+        // raw measures
+        for (idx, measure) in [
+            (0, Measure::Euclidean),
+            (1, Measure::Dtw),
+            (2, Measure::CDtw { window_frac: 0.05 }),
+            (3, Measure::CDtw { window_frac: 0.10 }),
+            (4, Measure::Sbd),
+        ] {
+            let t0 = Instant::now();
+            let m = CondensedMatrix::build(n, |i, j| measure.dist(test.row(i), test.row(j)));
+            times[idx].push(t0.elapsed().as_secs_f64());
+            ris[idx].push(cluster_ri(&m, k, &truth));
+        }
+
+        // SAX mindist matrix
+        {
+            let enc = SaxEncoder::new(test.len, 4, 0.2);
+            let t0 = Instant::now();
+            let words: Vec<Vec<u8>> = (0..n).map(|i| enc.encode(test.row(i))).collect();
+            let m = CondensedMatrix::build(n, |i, j| enc.mindist(&words[i], &words[j]));
+            times[5].push(t0.elapsed().as_secs_f64());
+            ris[5].push(cluster_ri(&m, k, &truth));
+        }
+
+        // PQ variants: train offline on the training split; the timed
+        // phase is encode(test) + matrix, matching the paper's protocol.
+        for (idx, metric, prealign) in [
+            (6, pqdtw::pq::quantizer::PqMetric::Euclidean, None),
+            (
+                7,
+                pqdtw::pq::quantizer::PqMetric::Dtw,
+                Some(PrealignConfig { level: 2, tail_frac: 0.15 }),
+            ),
+        ] {
+            let cfg = PqConfig {
+                n_subspaces: 4,
+                codebook_size: 64,
+                window_frac: 0.1,
+                metric,
+                prealign,
+                ..Default::default()
+            };
+            let pq = ProductQuantizer::train(&tt.train, &cfg, seed).unwrap();
+            let t0 = Instant::now();
+            let enc = pq.encode_dataset(test);
+            let m = CondensedMatrix::build(n, |i, j| pq.patched_distance(&enc, i, j));
+            times[idx].push(t0.elapsed().as_secs_f64());
+            ris[idx].push(cluster_ri(&m, k, &truth));
+        }
+        eprintln!(" done");
+    }
+
+    // significance over RI (higher better → negate for rank machinery)
+    let n_data = suite.len();
+    let scores: Vec<Vec<f64>> = (0..n_data)
+        .map(|d| ris.iter().map(|r| -r[d]).collect())
+        .collect();
+    let pq_idx = 7;
+
+    let mut table = Table::new(
+        "Table 1 — clustering vs PQDTW",
+        &["measure", "mean RI diff (meas − PQDTW)", "speedup", "signif"],
+    );
+    for (i, name) in names.iter().enumerate().take(7) {
+        let diffs: Vec<f64> = (0..n_data).map(|d| ris[i][d] - ris[pq_idx][d]).collect();
+        let mut speedups: Vec<f64> =
+            (0..n_data).map(|d| times[i][d] / times[pq_idx][d]).collect();
+        let sig = match pairwise_significance(&scores, i, pq_idx) {
+            Significance::FirstBetter => "* (PQDTW worse)",
+            Significance::SecondBetter => "† (PQDTW better)",
+            Significance::None => "",
+        };
+        table.add_row(vec![
+            name.to_string(),
+            fmt_mean_std(mean(&diffs), std_dev(&diffs), 3),
+            fmt_speedup(pqdtw::eval::report::median(&mut speedups)),
+            sig.to_string(),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!("PQDTW mean RI: {:.3}", mean(&ris[pq_idx]));
+    println!("(timed phase: pairwise matrix construction + PQ test-encode;");
+    println!(" agglomeration itself is measure-independent)");
+
+    // Keep the SAX import honest (suppresses unused warnings on some
+    // toolchains where inference changes): quick sanity value.
+    let _ = nn_classify_sax;
+}

@@ -1,0 +1,231 @@
+//! Agglomerative hierarchical clustering with single / average / complete
+//! linkage (paper §4.2 / §6.3), via Lance–Williams updates on a condensed
+//! distance matrix, plus dendrogram cutting.
+
+use crate::core::matrix::CondensedMatrix;
+
+/// Linkage criterion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Linkage {
+    /// Minimum pairwise distance between clusters.
+    Single,
+    /// Unweighted average pairwise distance (UPGMA).
+    Average,
+    /// Maximum pairwise distance between clusters.
+    Complete,
+}
+
+/// One merge step of the dendrogram.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Merge {
+    /// First merged cluster id (ids `0..n` are leaves; merge `t` creates
+    /// cluster `n + t`).
+    pub a: usize,
+    /// Second merged cluster id.
+    pub b: usize,
+    /// Linkage distance at which the merge happened.
+    pub height: f64,
+    /// Size of the newly formed cluster.
+    pub size: usize,
+}
+
+/// A full agglomerative clustering (dendrogram).
+#[derive(Debug, Clone)]
+pub struct Dendrogram {
+    /// Number of leaves.
+    pub n: usize,
+    /// `n - 1` merges in non-decreasing height order (as produced by the
+    /// greedy agglomeration; heights may locally invert for average
+    /// linkage on pathological data, which is standard behaviour).
+    pub merges: Vec<Merge>,
+}
+
+impl Dendrogram {
+    /// Cut the dendrogram to exactly `k` clusters: apply the first
+    /// `n - k` merges and label the resulting components `0..k`.
+    pub fn cut(&self, k: usize) -> Vec<usize> {
+        assert!(k >= 1 && k <= self.n, "cut: k out of range");
+        // union-find over leaves + internal nodes
+        let mut parent: Vec<usize> = (0..self.n + self.merges.len()).collect();
+        fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+            while parent[x] != x {
+                parent[x] = parent[parent[x]];
+                x = parent[x];
+            }
+            x
+        }
+        for (t, m) in self.merges.iter().take(self.n - k).enumerate() {
+            let node = self.n + t;
+            let ra = find(&mut parent, m.a);
+            let rb = find(&mut parent, m.b);
+            parent[ra] = node;
+            parent[rb] = node;
+        }
+        // Map roots to compact labels.
+        let mut labels = vec![usize::MAX; self.n];
+        let mut next = 0usize;
+        let mut root_label = std::collections::HashMap::new();
+        for i in 0..self.n {
+            let r = find(&mut parent, i);
+            let l = *root_label.entry(r).or_insert_with(|| {
+                let l = next;
+                next += 1;
+                l
+            });
+            labels[i] = l;
+        }
+        debug_assert_eq!(next, k);
+        labels
+    }
+}
+
+/// Agglomerative clustering of a condensed pairwise distance matrix.
+pub fn agglomerative(dist: &CondensedMatrix, linkage: Linkage) -> Dendrogram {
+    let n = dist.n();
+    assert!(n >= 1);
+    // Active cluster list; cluster distances kept in a mutable square
+    // matrix for O(1) access (n is moderate for hierarchical clustering).
+    let mut d = vec![f64::INFINITY; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                d[i * n + j] = dist.get(i, j);
+            }
+        }
+    }
+    let mut active: Vec<bool> = vec![true; n];
+    let mut sizes: Vec<usize> = vec![1; n];
+    // node id of the cluster currently occupying slot i
+    let mut node_id: Vec<usize> = (0..n).collect();
+    let mut merges = Vec::with_capacity(n.saturating_sub(1));
+
+    for t in 0..n.saturating_sub(1) {
+        // Find the closest active pair.
+        let (mut bi, mut bj, mut bd) = (0usize, 0usize, f64::INFINITY);
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            for j in (i + 1)..n {
+                if !active[j] {
+                    continue;
+                }
+                let v = d[i * n + j];
+                if v < bd {
+                    bd = v;
+                    bi = i;
+                    bj = j;
+                }
+            }
+        }
+        // Merge bj into bi (slot bi holds the new cluster).
+        let new_size = sizes[bi] + sizes[bj];
+        merges.push(Merge { a: node_id[bi], b: node_id[bj], height: bd, size: new_size });
+        // Lance–Williams distance update for the remaining clusters.
+        for x in 0..n {
+            if !active[x] || x == bi || x == bj {
+                continue;
+            }
+            let dxi = d[x * n + bi];
+            let dxj = d[x * n + bj];
+            let nd = match linkage {
+                Linkage::Single => dxi.min(dxj),
+                Linkage::Complete => dxi.max(dxj),
+                Linkage::Average => {
+                    (sizes[bi] as f64 * dxi + sizes[bj] as f64 * dxj) / new_size as f64
+                }
+            };
+            d[x * n + bi] = nd;
+            d[bi * n + x] = nd;
+        }
+        active[bj] = false;
+        sizes[bi] = new_size;
+        node_id[bi] = n + t;
+    }
+    Dendrogram { n, merges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Distance matrix for points on a line: |x_i - x_j|.
+    fn line_matrix(points: &[f64]) -> CondensedMatrix {
+        CondensedMatrix::build(points.len(), |i, j| (points[i] - points[j]).abs())
+    }
+
+    #[test]
+    fn two_obvious_clusters() {
+        // {0, 1, 2} and {10, 11}
+        let m = line_matrix(&[0.0, 1.0, 2.0, 10.0, 11.0]);
+        for linkage in [Linkage::Single, Linkage::Average, Linkage::Complete] {
+            let dend = agglomerative(&m, linkage);
+            let labels = dend.cut(2);
+            assert_eq!(labels[0], labels[1]);
+            assert_eq!(labels[1], labels[2]);
+            assert_eq!(labels[3], labels[4]);
+            assert_ne!(labels[0], labels[3]);
+        }
+    }
+
+    #[test]
+    fn cut_to_n_is_singletons_and_1_is_everything() {
+        let m = line_matrix(&[0.0, 5.0, 9.0, 14.0]);
+        let dend = agglomerative(&m, Linkage::Complete);
+        let singles = dend.cut(4);
+        let mut sorted = singles.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+        let all = dend.cut(1);
+        assert!(all.iter().all(|&l| l == all[0]));
+    }
+
+    #[test]
+    fn single_vs_complete_chaining() {
+        // A chain 0-1-2-3-4 with gaps 1 and a far point: single linkage
+        // chains the whole line together before absorbing the far point;
+        // complete linkage splits the chain earlier. Classic behaviour.
+        let m = line_matrix(&[0.0, 1.0, 2.0, 3.0, 4.0, 20.0]);
+        let s = agglomerative(&m, Linkage::Single);
+        let labels = s.cut(2);
+        assert!(labels[..5].iter().all(|&l| l == labels[0]));
+        assert_ne!(labels[5], labels[0]);
+    }
+
+    #[test]
+    fn merge_heights_nondecreasing_single_complete() {
+        let m = line_matrix(&[0.0, 2.0, 3.0, 7.0, 8.0, 8.5, 15.0]);
+        for linkage in [Linkage::Single, Linkage::Complete] {
+            let dend = agglomerative(&m, linkage);
+            for w in dend.merges.windows(2) {
+                assert!(w[1].height >= w[0].height - 1e-12, "{linkage:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn average_linkage_heights_sane() {
+        let m = line_matrix(&[0.0, 1.0, 10.0, 11.0]);
+        let dend = agglomerative(&m, Linkage::Average);
+        // first two merges at height 1, final at avg distance 10
+        assert!((dend.merges[0].height - 1.0).abs() < 1e-12);
+        assert!((dend.merges[1].height - 1.0).abs() < 1e-12);
+        assert!((dend.merges[2].height - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sizes_accumulate() {
+        let m = line_matrix(&[0.0, 1.0, 2.0, 3.0]);
+        let dend = agglomerative(&m, Linkage::Single);
+        assert_eq!(dend.merges.last().unwrap().size, 4);
+    }
+
+    #[test]
+    fn single_point() {
+        let m = CondensedMatrix::new(1);
+        let dend = agglomerative(&m, Linkage::Single);
+        assert!(dend.merges.is_empty());
+        assert_eq!(dend.cut(1), vec![0]);
+    }
+}

@@ -1,0 +1,126 @@
+//! External clustering quality: Rand index (paper's clustering metric)
+//! and Adjusted Rand Index.
+
+/// Rand index between two labelings (Rand 1971): fraction of item pairs
+/// on which the two labelings agree (same-same or different-different).
+/// In `[0, 1]`, 1 = identical partitions.
+pub fn rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut agree = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let same_a = a[i] == a[j];
+            let same_b = b[i] == b[j];
+            if same_a == same_b {
+                agree += 1;
+            }
+        }
+    }
+    agree as f64 / (n * (n - 1) / 2) as f64
+}
+
+/// Adjusted Rand Index (Hubert & Arabie): Rand index corrected for
+/// chance; 0 ≈ random labeling, 1 = identical partitions.
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let ka = a.iter().max().map(|&m| m + 1).unwrap_or(0);
+    let kb = b.iter().max().map(|&m| m + 1).unwrap_or(0);
+    // contingency table
+    let mut table = vec![0u64; ka * kb];
+    let mut rows = vec![0u64; ka];
+    let mut cols = vec![0u64; kb];
+    for i in 0..n {
+        table[a[i] * kb + b[i]] += 1;
+        rows[a[i]] += 1;
+        cols[b[i]] += 1;
+    }
+    let c2 = |x: u64| (x * x.saturating_sub(1) / 2) as f64;
+    let sum_ij: f64 = table.iter().map(|&x| c2(x)).sum();
+    let sum_a: f64 = rows.iter().map(|&x| c2(x)).sum();
+    let sum_b: f64 = cols.iter().map(|&x| c2(x)).sum();
+    let total = c2(n as u64);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 0.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Convert arbitrary i64 class labels to compact usize labels.
+pub fn compact_labels(labels: &[i64]) -> Vec<usize> {
+    let mut map = std::collections::HashMap::new();
+    let mut next = 0usize;
+    labels
+        .iter()
+        .map(|&l| {
+            *map.entry(l).or_insert_with(|| {
+                let v = next;
+                next += 1;
+                v
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_partitions() {
+        let a = vec![0, 0, 1, 1, 2];
+        assert_eq!(rand_index(&a, &a), 1.0);
+        assert_eq!(adjusted_rand_index(&a, &a), 1.0);
+    }
+
+    #[test]
+    fn permuted_labels_still_identical() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![2, 2, 0, 0, 1, 1];
+        assert_eq!(rand_index(&a, &b), 1.0);
+        assert_eq!(adjusted_rand_index(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn hand_computed_rand_index() {
+        // a: {0,1},{2}; b: {0},{1,2}. Pairs: (0,1) same-a diff-b;
+        // (0,2) diff-diff agree; (1,2) diff-a same-b. agree = 1 of 3.
+        let a = vec![0, 0, 1];
+        let b = vec![0, 1, 1];
+        assert!((rand_index(&a, &b) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_zero_for_random_vs_structure() {
+        // One big cluster vs alternating labels: ARI ≈ 0 or negative.
+        let a = vec![0; 20];
+        let b: Vec<usize> = (0..20).map(|i| i % 2).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 1e-9, "ari={ari}");
+    }
+
+    #[test]
+    fn ari_le_ri_relationship_monotone() {
+        let a = vec![0, 0, 0, 1, 1, 1, 2, 2, 2];
+        let near = vec![0, 0, 1, 1, 1, 1, 2, 2, 2];
+        let far = vec![0, 1, 2, 0, 1, 2, 0, 1, 2];
+        assert!(adjusted_rand_index(&a, &near) > adjusted_rand_index(&a, &far));
+        assert!(rand_index(&a, &near) > rand_index(&a, &far));
+    }
+
+    #[test]
+    fn compact_mapping() {
+        let l = vec![5i64, -3, 5, 7, -3];
+        let c = compact_labels(&l);
+        assert_eq!(c, vec![0, 1, 0, 2, 1]);
+    }
+}

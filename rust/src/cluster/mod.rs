@@ -1,0 +1,8 @@
+//! Agglomerative hierarchical clustering and external quality metrics
+//! (paper §4.2 / §6.3).
+
+pub mod hierarchical;
+pub mod metrics;
+
+pub use hierarchical::{agglomerative, Dendrogram, Linkage};
+pub use metrics::{adjusted_rand_index, compact_labels, rand_index};

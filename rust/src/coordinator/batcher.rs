@@ -1,0 +1,248 @@
+//! Size-or-deadline dynamic batcher.
+//!
+//! Requests accumulate until either `max_batch` items are waiting or the
+//! oldest item has waited `max_delay` — the same policy a serving router
+//! uses to trade latency for throughput. Implemented over a Condvar'd
+//! queue; no external runtime (tokio is unavailable in the offline crate
+//! set; see DESIGN.md §3).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Maximum items per batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest item may wait before the batch is flushed.
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(2) }
+    }
+}
+
+struct Inner<T> {
+    queue: VecDeque<(Instant, T)>,
+    closed: bool,
+}
+
+/// A thread-safe dynamic batcher.
+pub struct DynamicBatcher<T> {
+    cfg: BatcherConfig,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> DynamicBatcher<T> {
+    /// New batcher with the given policy.
+    pub fn new(cfg: BatcherConfig) -> Self {
+        DynamicBatcher {
+            cfg,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue one item. Returns `false` if the batcher is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return false;
+        }
+        inner.queue.push_back((Instant::now(), item));
+        self.cv.notify_one();
+        true
+    }
+
+    /// Blocking: take the next batch. Returns `None` once the batcher is
+    /// closed *and* drained.
+    ///
+    /// Policy: **continuous batching** (vLLM-style). A non-empty queue is
+    /// drained immediately (up to `max_batch`); batches larger than one
+    /// form naturally while workers are busy, so an idle service adds no
+    /// artificial linger latency. `max_delay` only caps the extra wait
+    /// when the caller opts into lingering for a fuller batch via
+    /// [`DynamicBatcher::next_batch_lingering`].
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.queue.is_empty() {
+                let take = inner.queue.len().min(self.cfg.max_batch);
+                let batch: Vec<T> = inner.queue.drain(..take).map(|(_, it)| it).collect();
+                return Some(batch);
+            } else if inner.closed {
+                return None;
+            } else {
+                inner = self.cv.wait(inner).unwrap();
+            }
+        }
+    }
+
+    /// Deadline-lingering variant of [`DynamicBatcher::next_batch`]: wait
+    /// until the batch is full or the oldest item has aged `max_delay`.
+    /// Trades latency for throughput when per-batch fixed costs dominate.
+    pub fn next_batch_lingering(&self) -> Option<Vec<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.queue.is_empty() {
+                let oldest = inner.queue.front().unwrap().0;
+                let age = oldest.elapsed();
+                if inner.queue.len() >= self.cfg.max_batch || age >= self.cfg.max_delay {
+                    let take = inner.queue.len().min(self.cfg.max_batch);
+                    let batch: Vec<T> =
+                        inner.queue.drain(..take).map(|(_, it)| it).collect();
+                    return Some(batch);
+                }
+                let remaining = self.cfg.max_delay - age;
+                let (guard, _) = self.cv.wait_timeout(inner, remaining).unwrap();
+                inner = guard;
+            } else if inner.closed {
+                return None;
+            } else {
+                inner = self.cv.wait(inner).unwrap();
+            }
+        }
+    }
+
+    /// Close the batcher; `next_batch` drains what is left, then `None`.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Current queue depth (for backpressure decisions / metrics).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_delay: Duration::from_secs(10),
+        });
+        for i in 0..4 {
+            assert!(b.push(i));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn continuous_mode_flushes_partial_batch_immediately() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 100,
+            max_delay: Duration::from_secs(10),
+        });
+        b.push(7u32);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![7]);
+        // no linger: a lone item must not wait for the deadline
+        assert!(t0.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn lingering_mode_waits_for_deadline() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 100,
+            max_delay: Duration::from_millis(5),
+        });
+        b.push(7u32);
+        let t0 = Instant::now();
+        let batch = b.next_batch_lingering().unwrap();
+        assert_eq!(batch, vec![7]);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn lingering_mode_full_batch_immediate() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_delay: Duration::from_secs(10),
+        });
+        b.push(1u32);
+        b.push(2u32);
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch_lingering().unwrap(), vec![1, 2]);
+        assert!(t0.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_delay: Duration::from_millis(1),
+        });
+        b.push(1);
+        b.push(2);
+        b.push(3);
+        b.close();
+        assert!(!b.push(4));
+        assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
+        assert_eq!(b.next_batch().unwrap(), vec![3]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_consumer() {
+        let b = Arc::new(DynamicBatcher::new(BatcherConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+        }));
+        let n_producers = 4;
+        let per = 50;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    b.push(p * per + i);
+                }
+            }));
+        }
+        let consumer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = b.next_batch() {
+                    assert!(batch.len() <= 8);
+                    seen.extend(batch);
+                    if seen.len() == n_producers * per {
+                        break;
+                    }
+                }
+                seen
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n_producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn depth_reports_queue() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 10,
+            max_delay: Duration::from_secs(1),
+        });
+        assert_eq!(b.depth(), 0);
+        b.push(1);
+        b.push(2);
+        assert_eq!(b.depth(), 2);
+    }
+}

@@ -1,0 +1,204 @@
+//! Engine: the trained state (quantizer + encoded database) and the
+//! request vocabulary it serves.
+
+use anyhow::Result;
+
+use crate::core::series::Dataset;
+use crate::nn::knn::PqQueryMode;
+use crate::pq::distance as pqdist;
+use crate::pq::quantizer::{EncodedDataset, PqConfig, ProductQuantizer};
+
+/// A request to the similarity engine.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Encode a raw series into a PQ code word.
+    Encode {
+        /// The raw series (must match the trained length).
+        series: Vec<f64>,
+    },
+    /// 1-NN query against the encoded database.
+    NnQuery {
+        /// The raw query series.
+        series: Vec<f64>,
+        /// Symmetric (encode + LUT) or asymmetric (table + LUT).
+        mode: PqQueryMode,
+    },
+    /// Approximate distance between two database items by id.
+    PairDist {
+        /// First item id.
+        i: usize,
+        /// Second item id.
+        j: usize,
+    },
+}
+
+/// A response from the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// PQ code word.
+    Codes(Vec<u16>),
+    /// Nearest-neighbour result.
+    Nn {
+        /// Database index of the nearest item.
+        index: usize,
+        /// Approximate distance.
+        distance: f64,
+        /// Label of the nearest item when the database is labeled.
+        label: Option<i64>,
+    },
+    /// Pairwise distance.
+    Dist(f64),
+    /// Request failed.
+    Error(String),
+}
+
+/// Trained engine state: quantizer, encoded database, and the raw
+/// database retained for asymmetric re-ranking use cases.
+pub struct Engine {
+    /// Trained product quantizer.
+    pub pq: ProductQuantizer,
+    /// The encoded database.
+    pub encoded: EncodedDataset,
+    /// Number of database items.
+    pub n_items: usize,
+}
+
+impl Engine {
+    /// Train a quantizer on `db` and encode it.
+    pub fn build(db: &Dataset, cfg: &PqConfig, seed: u64) -> Result<Self> {
+        let pq = ProductQuantizer::train(db, cfg, seed)?;
+        let encoded = pq.encode_dataset(db);
+        Ok(Engine { pq, encoded, n_items: db.n_series() })
+    }
+
+    /// Serve one request.
+    pub fn handle(&self, req: &Request) -> Response {
+        match req {
+            Request::Encode { series } => {
+                if series.len() != self.pq.series_len {
+                    return Response::Error(format!(
+                        "series length {} != trained length {}",
+                        series.len(),
+                        self.pq.series_len
+                    ));
+                }
+                let (codes, _, _) = self.pq.encode(series);
+                Response::Codes(codes)
+            }
+            Request::NnQuery { series, mode } => {
+                if series.len() != self.pq.series_len {
+                    return Response::Error(format!(
+                        "series length {} != trained length {}",
+                        series.len(),
+                        self.pq.series_len
+                    ));
+                }
+                if self.n_items == 0 {
+                    return Response::Error("empty database".into());
+                }
+                let (best_j, best_sq) = match mode {
+                    PqQueryMode::Symmetric => {
+                        let (codes, _, _) = self.pq.encode(series);
+                        let mut best = (0usize, f64::INFINITY);
+                        for j in 0..self.n_items {
+                            let d = pqdist::symmetric_sq(
+                                &self.pq.codebook,
+                                &codes,
+                                self.encoded.code(j),
+                            );
+                            if d < best.1 {
+                                best = (j, d);
+                            }
+                        }
+                        best
+                    }
+                    PqQueryMode::Asymmetric => {
+                        let table = self.pq.asymmetric_table(series);
+                        let mut best = (0usize, f64::INFINITY);
+                        for j in 0..self.n_items {
+                            let d = pqdist::asymmetric_sq(
+                                &self.pq.codebook,
+                                &table,
+                                self.encoded.code(j),
+                            );
+                            if d < best.1 {
+                                best = (j, d);
+                            }
+                        }
+                        best
+                    }
+                };
+                Response::Nn {
+                    index: best_j,
+                    distance: best_sq.sqrt(),
+                    label: self.encoded.labels.get(best_j).copied(),
+                }
+            }
+            Request::PairDist { i, j } => {
+                if *i >= self.n_items || *j >= self.n_items {
+                    return Response::Error("index out of range".into());
+                }
+                Response::Dist(self.pq.patched_distance(&self.encoded, *i, *j))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ucr_like::ucr_like_by_name;
+
+    fn toy_engine() -> (Engine, Dataset) {
+        let tt = ucr_like_by_name("SpikePosition", 41).unwrap();
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 16,
+            window_frac: 0.2,
+            ..Default::default()
+        };
+        let engine = Engine::build(&tt.train, &cfg, 1).unwrap();
+        (engine, tt.test)
+    }
+
+    #[test]
+    fn encode_request() {
+        let (engine, test) = toy_engine();
+        match engine.handle(&Request::Encode { series: test.row(0).to_vec() }) {
+            Response::Codes(c) => assert_eq!(c.len(), 4),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nn_query_modes() {
+        let (engine, test) = toy_engine();
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            match engine.handle(&Request::NnQuery { series: test.row(0).to_vec(), mode }) {
+                Response::Nn { index, distance, label } => {
+                    assert!(index < engine.n_items);
+                    assert!(distance.is_finite());
+                    assert!(label.is_some());
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn pair_dist_and_errors() {
+        let (engine, _) = toy_engine();
+        match engine.handle(&Request::PairDist { i: 0, j: 1 }) {
+            Response::Dist(d) => assert!(d >= 0.0),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(
+            engine.handle(&Request::PairDist { i: 0, j: 999_999 }),
+            Response::Error(_)
+        ));
+        assert!(matches!(
+            engine.handle(&Request::Encode { series: vec![0.0; 3] }),
+            Response::Error(_)
+        ));
+    }
+}

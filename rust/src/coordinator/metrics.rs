@@ -1,0 +1,153 @@
+//! Lock-free service metrics: request counters, latency histogram and
+//! batch-size accounting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency buckets in microseconds (upper bounds).
+const BUCKETS_US: [u64; 12] =
+    [10, 25, 50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 50_000, u64::MAX];
+
+/// Concurrent metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    batched_items: AtomicU64,
+    latency_sum_us: AtomicU64,
+    latency_buckets: [AtomicU64; 12],
+}
+
+/// A point-in-time copy of the metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Total requests served.
+    pub requests: u64,
+    /// Requests that returned an error.
+    pub errors: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Mean batch size.
+    pub mean_batch_size: f64,
+    /// Mean latency (µs).
+    pub mean_latency_us: f64,
+    /// Latency histogram (bucket upper bound µs, count).
+    pub histogram: Vec<(u64, u64)>,
+}
+
+impl MetricsSnapshot {
+    /// Approximate latency percentile (µs) from the histogram (upper
+    /// bound of the bucket containing the percentile).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.histogram.iter().map(|(_, c)| c).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for &(ub, c) in &self.histogram {
+            acc += c;
+            if acc >= target {
+                return ub;
+            }
+        }
+        u64::MAX
+    }
+}
+
+impl Metrics {
+    /// New zeroed metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served request with its latency.
+    pub fn record_request(&self, latency_us: u64, is_error: bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if is_error {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
+        let idx = BUCKETS_US.iter().position(|&ub| latency_us <= ub).unwrap();
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one executed batch of `size` items.
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batched_items.load(Ordering::Relaxed);
+        let lat_sum = self.latency_sum_us.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests,
+            errors: self.errors.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches > 0 { items as f64 / batches as f64 } else { 0.0 },
+            mean_latency_us: if requests > 0 { lat_sum as f64 / requests as f64 } else { 0.0 },
+            histogram: BUCKETS_US
+                .iter()
+                .zip(self.latency_buckets.iter())
+                .map(|(&ub, c)| (ub, c.load(Ordering::Relaxed)))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request(30, false);
+        m.record_request(700, true);
+        m.record_batch(2);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch_size, 2.0);
+        assert!((s.mean_latency_us - 365.0).abs() < 1e-9);
+        // 30µs lands in the ≤50 bucket, 700µs in ≤1000
+        assert_eq!(s.histogram[2].1, 1);
+        assert_eq!(s.histogram[6].1, 1);
+    }
+
+    #[test]
+    fn percentiles_from_histogram() {
+        let m = Metrics::new();
+        for _ in 0..99 {
+            m.record_request(20, false);
+        }
+        m.record_request(40_000, false);
+        let s = m.snapshot();
+        assert_eq!(s.percentile_us(0.5), 25);
+        assert_eq!(s.percentile_us(0.999), 50_000);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let m = Arc::clone(&m);
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.record_request(100, false);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().requests, 4000);
+    }
+}

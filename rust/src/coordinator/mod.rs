@@ -1,0 +1,19 @@
+//! The serving layer: an in-memory time-series similarity engine with a
+//! threaded worker pool, dynamic batching and metrics.
+//!
+//! The paper's contribution is an algorithm, so per the architecture rule
+//! this layer is a driver in the spirit of a model-serving router: it owns
+//! the trained quantizer state, accepts concurrent encode / 1-NN / distance
+//! requests, groups them through a size-or-deadline dynamic batcher and
+//! executes them on a pool of workers, recording latency and batch-size
+//! metrics. Python is never on this path.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod service;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use engine::{Engine, Request, Response};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use service::{Service, ServiceConfig};

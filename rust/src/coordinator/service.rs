@@ -1,0 +1,201 @@
+//! The request service: worker threads pull batches from the dynamic
+//! batcher and execute them on the shared [`Engine`], answering through
+//! per-request oneshot channels.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::engine::{Engine, Request, Response};
+use super::metrics::{Metrics, MetricsSnapshot};
+
+/// Service sizing.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Worker threads.
+    pub n_workers: usize,
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { n_workers: 2, batcher: BatcherConfig::default() }
+    }
+}
+
+struct Job {
+    request: Request,
+    submitted: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+/// A running similarity-search service. Cloneable handles are cheap
+/// (everything shared is behind `Arc`).
+pub struct Service {
+    batcher: Arc<DynamicBatcher<Job>>,
+    metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start `cfg.n_workers` workers over a shared engine.
+    pub fn start(engine: Arc<Engine>, cfg: ServiceConfig) -> Self {
+        let batcher: Arc<DynamicBatcher<Job>> = Arc::new(DynamicBatcher::new(cfg.batcher));
+        let metrics = Arc::new(Metrics::new());
+        let mut workers = Vec::with_capacity(cfg.n_workers);
+        for _ in 0..cfg.n_workers.max(1) {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let engine = Arc::clone(&engine);
+            workers.push(std::thread::spawn(move || {
+                while let Some(batch) = batcher.next_batch() {
+                    metrics.record_batch(batch.len());
+                    for job in batch {
+                        let resp = engine.handle(&job.request);
+                        let is_err = matches!(resp, Response::Error(_));
+                        let latency = job.submitted.elapsed().as_micros() as u64;
+                        metrics.record_request(latency, is_err);
+                        // Receiver may have given up; that's fine.
+                        let _ = job.reply.send(resp);
+                    }
+                }
+            }));
+        }
+        Service { batcher, metrics, workers }
+    }
+
+    /// Submit a request; returns a oneshot receiver for the response.
+    /// `None` if the service is shutting down.
+    pub fn submit(&self, request: Request) -> Option<mpsc::Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        let ok = self.batcher.push(Job { request, submitted: Instant::now(), reply: tx });
+        ok.then_some(rx)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn call(&self, request: Request) -> Response {
+        match self.submit(request) {
+            Some(rx) => rx
+                .recv()
+                .unwrap_or_else(|_| Response::Error("worker dropped request".into())),
+            None => Response::Error("service closed".into()),
+        }
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Queue depth (backpressure signal).
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ucr_like::ucr_like_by_name;
+    use crate::nn::knn::PqQueryMode;
+    use crate::pq::quantizer::PqConfig;
+
+    fn toy_service(n_workers: usize) -> (Service, crate::core::series::Dataset) {
+        let tt = ucr_like_by_name("SpikePosition", 43).unwrap();
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 8,
+            window_frac: 0.2,
+            ..Default::default()
+        };
+        let engine = Arc::new(Engine::build(&tt.train, &cfg, 1).unwrap());
+        let svc = Service::start(
+            engine,
+            ServiceConfig { n_workers, batcher: BatcherConfig::default() },
+        );
+        (svc, tt.test)
+    }
+
+    #[test]
+    fn serves_blocking_calls() {
+        let (svc, test) = toy_service(2);
+        for i in 0..5 {
+            match svc.call(Request::NnQuery {
+                series: test.row(i).to_vec(),
+                mode: PqQueryMode::Symmetric,
+            }) {
+                Response::Nn { distance, .. } => assert!(distance.is_finite()),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.requests, 5);
+        assert_eq!(m.errors, 0);
+        assert!(m.batches >= 1);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (svc, test) = toy_service(3);
+        let svc = Arc::new(svc);
+        let test = Arc::new(test);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let svc = Arc::clone(&svc);
+            let test = Arc::clone(&test);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..8 {
+                    let idx = (t * 8 + i) % test.n_series();
+                    let r = svc.call(Request::Encode { series: test.row(idx).to_vec() });
+                    assert!(matches!(r, Response::Codes(_)));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests, 32);
+    }
+
+    #[test]
+    fn error_requests_counted() {
+        let (svc, _) = toy_service(1);
+        let r = svc.call(Request::Encode { series: vec![1.0, 2.0] });
+        assert!(matches!(r, Response::Error(_)));
+        let m = svc.shutdown();
+        assert_eq!(m.errors, 1);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let (svc, test) = toy_service(1);
+        let q = test.row(0).to_vec();
+        let m = svc.shutdown();
+        assert_eq!(m.errors, 0);
+        // new service needed after shutdown — check a fresh one works
+        let (svc2, _) = toy_service(1);
+        assert!(matches!(svc2.call(Request::Encode { series: q }), Response::Codes(_)));
+    }
+}

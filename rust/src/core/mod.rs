@@ -1,0 +1,10 @@
+//! Core containers and numeric utilities shared by every subsystem.
+
+pub mod series;
+pub mod preprocess;
+pub mod rng;
+pub mod matrix;
+
+pub use matrix::CondensedMatrix;
+pub use rng::Rng;
+pub use series::{Dataset, TimeSeries};

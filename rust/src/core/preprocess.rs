@@ -1,0 +1,143 @@
+//! Preprocessing: z-normalization and linear re-interpolation.
+//!
+//! The UCR evaluation protocol z-normalizes every series; the PQ
+//! pre-alignment step re-interpolates variable-length segments back to a
+//! fixed length (paper §3.5, following Mueen & Keogh's resampling note).
+
+use super::series::Dataset;
+
+/// Z-normalize a slice in place: zero mean, unit variance. Series with
+/// (near-)zero variance are centered only — dividing by ~0 would blow up.
+pub fn znorm_inplace(xs: &mut [f64]) {
+    let n = xs.len();
+    if n == 0 {
+        return;
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let std = var.sqrt();
+    if std < 1e-12 {
+        for x in xs.iter_mut() {
+            *x -= mean;
+        }
+    } else {
+        for x in xs.iter_mut() {
+            *x = (*x - mean) / std;
+        }
+    }
+}
+
+/// Z-normalized copy.
+pub fn znorm(xs: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    znorm_inplace(&mut v);
+    v
+}
+
+/// Z-normalize every row of a dataset in place.
+pub fn znorm_dataset(d: &mut Dataset) {
+    let len = d.len;
+    for i in 0..d.n_series() {
+        znorm_inplace(&mut d.values[i * len..(i + 1) * len]);
+    }
+}
+
+/// Linearly re-interpolate `xs` to `target_len` samples. Endpoints are
+/// preserved exactly. `xs` must contain at least two samples.
+pub fn reinterpolate(xs: &[f64], target_len: usize) -> Vec<f64> {
+    assert!(xs.len() >= 2, "reinterpolate: need >= 2 samples");
+    assert!(target_len >= 2, "reinterpolate: target_len >= 2");
+    if xs.len() == target_len {
+        return xs.to_vec();
+    }
+    let n = xs.len();
+    let scale = (n - 1) as f64 / (target_len - 1) as f64;
+    let mut out = Vec::with_capacity(target_len);
+    for i in 0..target_len {
+        let pos = i as f64 * scale;
+        let lo = pos.floor() as usize;
+        if lo + 1 >= n {
+            out.push(xs[n - 1]);
+        } else {
+            let frac = pos - lo as f64;
+            out.push(xs[lo] * (1.0 - frac) + xs[lo + 1] * frac);
+        }
+    }
+    out
+}
+
+/// Simple mean of a slice.
+#[inline]
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation of a slice.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn znorm_moments() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        znorm_inplace(&mut v);
+        assert!(mean(&v).abs() < 1e-12);
+        assert!((std_dev(&v) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn znorm_constant_series() {
+        let mut v = vec![3.0; 8];
+        znorm_inplace(&mut v);
+        assert!(v.iter().all(|&x| x.abs() < 1e-12));
+    }
+
+    #[test]
+    fn reinterp_identity() {
+        let v = vec![1.0, 5.0, 2.0, 8.0];
+        assert_eq!(reinterpolate(&v, 4), v);
+    }
+
+    #[test]
+    fn reinterp_endpoints_preserved() {
+        let v = vec![2.0, -1.0, 4.0, 0.5, 3.0];
+        for target in [2, 3, 7, 11, 50] {
+            let r = reinterpolate(&v, target);
+            assert_eq!(r.len(), target);
+            assert!((r[0] - 2.0).abs() < 1e-12);
+            assert!((r[target - 1] - 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reinterp_upsample_linear_line() {
+        // A straight line stays a straight line under linear interpolation.
+        let v: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let r = reinterpolate(&v, 9);
+        for (i, x) in r.iter().enumerate() {
+            assert!((x - i as f64 * 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn znorm_dataset_rows() {
+        let mut d = Dataset::from_flat(vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0], 3);
+        znorm_dataset(&mut d);
+        for r in d.rows() {
+            assert!(mean(r).abs() < 1e-12);
+            assert!((std_dev(r) - 1.0).abs() < 1e-9);
+        }
+    }
+}

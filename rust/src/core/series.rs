@@ -1,0 +1,209 @@
+//! Time-series and dataset containers.
+//!
+//! All series values are `f64` (the paper's Cython implementation uses
+//! doubles; single precision only matters for the memory *model*, which is
+//! analytic — see [`crate::pq::quantizer::MemoryModel`]). Datasets store
+//! their values in one flat row-major buffer so the hot loops never chase
+//! pointers.
+
+/// A single univariate time series with an optional class label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimeSeries {
+    /// Observations, equally spaced in time.
+    pub values: Vec<f64>,
+    /// Class label for classification/clustering benchmarks (`None` for
+    /// unlabeled data such as random-walk scaling corpora).
+    pub label: Option<i64>,
+}
+
+impl TimeSeries {
+    /// New unlabeled series.
+    pub fn new(values: Vec<f64>) -> Self {
+        TimeSeries { values, label: None }
+    }
+
+    /// New labeled series.
+    pub fn labeled(values: Vec<f64>, label: i64) -> Self {
+        TimeSeries { values, label: Some(label) }
+    }
+
+    /// Number of observations.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True if the series has no observations.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// A collection of equal-length time series stored in a flat row-major
+/// buffer (`n_series × len`).
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    /// Flat values, row-major: series `i` occupies
+    /// `values[i*len .. (i+1)*len]`.
+    pub values: Vec<f64>,
+    /// Length of each series.
+    pub len: usize,
+    /// Labels, parallel to rows; empty when the dataset is unlabeled.
+    pub labels: Vec<i64>,
+    /// Human-readable name (dataset generators fill this in).
+    pub name: String,
+}
+
+impl Dataset {
+    /// Build a dataset from individual series. All series must share one
+    /// length; labels are kept only if *every* series is labeled.
+    pub fn from_series(series: &[TimeSeries]) -> Self {
+        assert!(!series.is_empty(), "Dataset::from_series: empty input");
+        let len = series[0].len();
+        assert!(
+            series.iter().all(|s| s.len() == len),
+            "Dataset::from_series: unequal lengths"
+        );
+        let mut values = Vec::with_capacity(series.len() * len);
+        for s in series {
+            values.extend_from_slice(&s.values);
+        }
+        let labels = if series.iter().all(|s| s.label.is_some()) {
+            series.iter().map(|s| s.label.unwrap()).collect()
+        } else {
+            Vec::new()
+        };
+        Dataset { values, len, labels, name: String::new() }
+    }
+
+    /// Build from a flat buffer.
+    pub fn from_flat(values: Vec<f64>, len: usize) -> Self {
+        assert!(len > 0 && values.len() % len == 0, "from_flat: ragged buffer");
+        Dataset { values, len, labels: Vec::new(), name: String::new() }
+    }
+
+    /// Number of series.
+    #[inline]
+    pub fn n_series(&self) -> usize {
+        if self.len == 0 { 0 } else { self.values.len() / self.len }
+    }
+
+    /// Borrow series `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.values[i * self.len..(i + 1) * self.len]
+    }
+
+    /// Mutable borrow of series `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.values[i * self.len..(i + 1) * self.len]
+    }
+
+    /// Label of series `i` (panics when unlabeled).
+    #[inline]
+    pub fn label(&self, i: usize) -> i64 {
+        self.labels[i]
+    }
+
+    /// True when every row carries a label.
+    pub fn is_labeled(&self) -> bool {
+        !self.labels.is_empty()
+    }
+
+    /// Iterator over rows.
+    pub fn rows(&self) -> impl Iterator<Item = &[f64]> {
+        self.values.chunks_exact(self.len.max(1))
+    }
+
+    /// The sorted set of distinct labels.
+    pub fn classes(&self) -> Vec<i64> {
+        let mut cs = self.labels.clone();
+        cs.sort_unstable();
+        cs.dedup();
+        cs
+    }
+
+    /// Sub-dataset with the given row indices (labels carried over).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut values = Vec::with_capacity(idx.len() * self.len);
+        let mut labels = Vec::with_capacity(if self.is_labeled() { idx.len() } else { 0 });
+        for &i in idx {
+            values.extend_from_slice(self.row(i));
+            if self.is_labeled() {
+                labels.push(self.labels[i]);
+            }
+        }
+        Dataset { values, len: self.len, labels, name: self.name.clone() }
+    }
+
+    /// Column slice `[start, end)` of every series, as a new dataset
+    /// (used to cut out one PQ subspace).
+    pub fn column_slice(&self, start: usize, end: usize) -> Dataset {
+        assert!(start < end && end <= self.len, "column_slice out of range");
+        let w = end - start;
+        let mut values = Vec::with_capacity(self.n_series() * w);
+        for r in self.rows() {
+            values.extend_from_slice(&r[start..end]);
+        }
+        Dataset { values, len: w, labels: self.labels.clone(), name: self.name.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::from_series(&[
+            TimeSeries::labeled(vec![1.0, 2.0, 3.0, 4.0], 0),
+            TimeSeries::labeled(vec![5.0, 6.0, 7.0, 8.0], 1),
+            TimeSeries::labeled(vec![9.0, 10.0, 11.0, 12.0], 0),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_rows() {
+        let d = toy();
+        assert_eq!(d.n_series(), 3);
+        assert_eq!(d.len, 4);
+        assert_eq!(d.row(1), &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(d.label(2), 0);
+        assert_eq!(d.classes(), vec![0, 1]);
+    }
+
+    #[test]
+    fn subset_keeps_labels() {
+        let d = toy();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.n_series(), 2);
+        assert_eq!(s.row(0), &[9.0, 10.0, 11.0, 12.0]);
+        assert_eq!(s.labels, vec![0, 0]);
+    }
+
+    #[test]
+    fn column_slice_cuts_subspace() {
+        let d = toy();
+        let s = d.column_slice(1, 3);
+        assert_eq!(s.len, 2);
+        assert_eq!(s.row(0), &[2.0, 3.0]);
+        assert_eq!(s.row(2), &[10.0, 11.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unequal_lengths_panic() {
+        Dataset::from_series(&[
+            TimeSeries::new(vec![1.0]),
+            TimeSeries::new(vec![1.0, 2.0]),
+        ]);
+    }
+
+    #[test]
+    fn unlabeled_dataset() {
+        let d = Dataset::from_flat(vec![0.0; 12], 3);
+        assert_eq!(d.n_series(), 4);
+        assert!(!d.is_labeled());
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic workloads and dataset loading.
+//!
+//! The paper evaluates on (a) random walks for runtime scaling (Fig. 5)
+//! and (b) 48 UCR-2018 archives for accuracy (Table 1 / Fig. 6). The UCR
+//! archive is not redistributable inside this environment, so
+//! [`ucr_like`] provides a suite of 16 labeled generators that reproduce
+//! the properties the evaluated measures are sensitive to — class-specific
+//! shapes, local phase shifts, warping, noise — while [`ucr_loader`] can
+//! ingest the real archive's `.tsv` files when present.
+
+pub mod random_walk;
+pub mod ucr_like;
+pub mod ucr_loader;
+
+pub use random_walk::RandomWalks;
+pub use ucr_like::{ucr_like_suite, TrainTest};

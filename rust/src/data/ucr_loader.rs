@@ -1,0 +1,145 @@
+//! Loader for the real UCR-2018 archive format (`<Name>_TRAIN.tsv` /
+//! `<Name>_TEST.tsv`: one series per line, label first, tab-separated).
+//!
+//! When a local copy of the archive exists (`UCR_ARCHIVE_DIR` or an
+//! explicit path), benchmarks can run on the paper's actual datasets
+//! instead of the synthetic suite.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::ucr_like::TrainTest;
+use crate::core::preprocess::znorm_dataset;
+use crate::core::series::Dataset;
+
+/// Parse one UCR `.tsv` file into a labeled dataset.
+pub fn load_tsv(path: &Path) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut values: Vec<f64> = Vec::new();
+    let mut labels: Vec<i64> = Vec::new();
+    let mut len: Option<usize> = None;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut fields = line.split(['\t', ',']).filter(|f| !f.is_empty());
+        let label: f64 = fields
+            .next()
+            .context("empty line")?
+            .parse()
+            .with_context(|| format!("{}:{} bad label", path.display(), ln + 1))?;
+        let row: Vec<f64> = fields
+            .map(|f| f.parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("{}:{} bad value", path.display(), ln + 1))?;
+        match len {
+            None => len = Some(row.len()),
+            Some(l) if l != row.len() => {
+                bail!("{}:{} ragged series ({} vs {l})", path.display(), ln + 1, row.len())
+            }
+            _ => {}
+        }
+        labels.push(label as i64);
+        values.extend(row);
+    }
+    let len = len.context("empty file")?;
+    if len < 2 {
+        bail!("{}: series too short", path.display());
+    }
+    let mut d = Dataset::from_flat(values, len);
+    d.labels = labels;
+    d.name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    Ok(d)
+}
+
+/// Load a named UCR dataset (`dir/<name>/<name>_TRAIN.tsv` + `_TEST.tsv`),
+/// z-normalizing both splits (UCR-2018 files are mostly pre-normalized;
+/// re-normalizing is idempotent and covers the stragglers).
+pub fn load_ucr_dataset(dir: &Path, name: &str) -> Result<TrainTest> {
+    let base: PathBuf = dir.join(name);
+    let mut train = load_tsv(&base.join(format!("{name}_TRAIN.tsv")))?;
+    let mut test = load_tsv(&base.join(format!("{name}_TEST.tsv")))?;
+    if train.len != test.len {
+        bail!("{name}: train/test length mismatch");
+    }
+    znorm_dataset(&mut train);
+    znorm_dataset(&mut test);
+    Ok(TrainTest { name: name.to_string(), train, test })
+}
+
+/// All dataset names available under an archive directory.
+pub fn list_ucr_datasets(dir: &Path) -> Vec<String> {
+    let mut names = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if e.path().join(format!("{name}_TRAIN.tsv")).exists() {
+                names.push(name);
+            }
+        }
+    }
+    names.sort();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(name: &str, content: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pqdtw_ucr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    #[test]
+    fn parses_tsv() {
+        let p = write_tmp("a.tsv", "1\t0.1\t0.2\t0.3\n2\t1.0\t2.0\t3.0\n");
+        let d = load_tsv(&p).unwrap();
+        assert_eq!(d.n_series(), 2);
+        assert_eq!(d.len, 3);
+        assert_eq!(d.labels, vec![1, 2]);
+        assert_eq!(d.row(1), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let p = write_tmp("b.tsv", "1\t0.1\t0.2\n2\t1.0\n");
+        assert!(load_tsv(&p).is_err());
+    }
+
+    #[test]
+    fn full_dataset_roundtrip() {
+        let dir = std::env::temp_dir().join("pqdtw_ucr_test").join("arch");
+        let ds = dir.join("Toy");
+        std::fs::create_dir_all(&ds).unwrap();
+        std::fs::write(
+            ds.join("Toy_TRAIN.tsv"),
+            "1\t0.0\t1.0\t2.0\t1.0\n2\t2.0\t1.0\t0.0\t1.0\n",
+        )
+        .unwrap();
+        std::fs::write(
+            ds.join("Toy_TEST.tsv"),
+            "1\t0.1\t1.1\t2.1\t1.1\n2\t2.1\t1.1\t0.1\t1.1\n",
+        )
+        .unwrap();
+        let tt = load_ucr_dataset(&dir, "Toy").unwrap();
+        assert_eq!(tt.train.n_series(), 2);
+        assert_eq!(tt.test.n_series(), 2);
+        assert_eq!(list_ucr_datasets(&dir), vec!["Toy".to_string()]);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dir = std::env::temp_dir().join("pqdtw_ucr_test_missing");
+        assert!(load_ucr_dataset(&dir, "Nope").is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! Dynamic Time Warping (Sakoe & Chiba 1978).
+//!
+//! Rolling two-row dynamic program with optional Sakoe-Chiba band and
+//! optional early abandoning against an upper bound. This is the hot-path
+//! reference implementation used everywhere in the library; the AOT
+//! JAX/Pallas kernel (python/compile/kernels/dtw_band.py) implements the
+//! same recurrence and is checked against this one by the golden tests.
+
+/// Scratch buffers for the DTW dynamic program, reusable across calls to
+/// avoid per-call allocation in hot loops (encoding, pairwise matrices).
+#[derive(Debug, Default, Clone)]
+pub struct DtwScratch {
+    prev: Vec<f64>,
+    curr: Vec<f64>,
+}
+
+impl DtwScratch {
+    /// Scratch sized for series of length `n` (second argument of the DP).
+    pub fn new(n: usize) -> Self {
+        DtwScratch { prev: vec![0.0; n + 1], curr: vec![0.0; n + 1] }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.prev.len() < n + 1 {
+            self.prev.resize(n + 1, 0.0);
+            self.curr.resize(n + 1, 0.0);
+        }
+    }
+}
+
+/// Accumulated **squared** DTW cost between `a` and `b` under a
+/// Sakoe-Chiba band of half-width `window` (`None` = unconstrained).
+///
+/// Early abandoning: if `ub_sq` is finite and every cell of some row
+/// exceeds it, returns `f64::INFINITY` immediately — the true cost is
+/// then guaranteed to exceed `ub_sq`.
+pub fn dtw_sq_scratch(
+    a: &[f64],
+    b: &[f64],
+    window: Option<usize>,
+    ub_sq: f64,
+    scratch: &mut DtwScratch,
+) -> f64 {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 || m == 0 {
+        return if n == m { 0.0 } else { f64::INFINITY };
+    }
+    // The band must be at least |n - m| wide for any path to exist.
+    let w = match window {
+        Some(w) => w.max(n.abs_diff(m)),
+        None => n.max(m),
+    };
+    scratch.ensure(m);
+    let prev = &mut scratch.prev;
+    let curr = &mut scratch.curr;
+    // One-time init: row 1 only ever reads prev[lo_1 - 1 ..= hi_1].
+    prev[0] = 0.0;
+    for j in 1..=m {
+        prev[j] = f64::INFINITY;
+    }
+    // Banded rows write only their band plus two boundary sentinels
+    // (O(1) per row instead of clearing the whole row): row i+1 reads
+    // prev indices in [lo' - 1, hi'] ⊆ [lo - 1, hi + 1], all of which
+    // this row writes (computed cells or the two sentinels).
+    for i in 1..=n {
+        // Band limits for row i (1-based DP indices over b).
+        let lo = i.saturating_sub(w).max(1);
+        let hi = (i + w).min(m);
+        // Left boundary sentinel: the `left` read at j = lo.
+        curr[lo - 1] = f64::INFINITY;
+        let ai = a[i - 1];
+        let mut row_min = f64::INFINITY;
+        for j in lo..=hi {
+            let d = ai - b[j - 1];
+            let cost = d * d;
+            // min of (i-1,j-1), (i-1,j), (i,j-1)
+            let diag = prev[j - 1];
+            let up = prev[j];
+            let left = curr[j - 1];
+            let mut best = diag;
+            if up < best {
+                best = up;
+            }
+            if left < best {
+                best = left;
+            }
+            let v = cost + best;
+            curr[j] = v;
+            if v < row_min {
+                row_min = v;
+            }
+        }
+        // Right boundary sentinel: the next row's `up` read at hi + 1.
+        if hi < m {
+            curr[hi + 1] = f64::INFINITY;
+        }
+        if row_min > ub_sq {
+            return f64::INFINITY;
+        }
+        std::mem::swap(prev, curr);
+    }
+    prev[m]
+}
+
+/// Accumulated squared DTW cost (allocating convenience wrapper).
+pub fn dtw_sq(a: &[f64], b: &[f64], window: Option<usize>) -> f64 {
+    let mut s = DtwScratch::new(b.len());
+    dtw_sq_scratch(a, b, window, f64::INFINITY, &mut s)
+}
+
+/// DTW distance: `sqrt` of the accumulated squared cost.
+pub fn dtw(a: &[f64], b: &[f64], window: Option<usize>) -> f64 {
+    dtw_sq(a, b, window).sqrt()
+}
+
+/// Early-abandoning DTW distance against upper bound `ub` (same units as
+/// the returned distance). Returns `f64::INFINITY` when the distance
+/// provably exceeds `ub`.
+pub fn dtw_ea(a: &[f64], b: &[f64], window: Option<usize>, ub: f64) -> f64 {
+    let mut s = DtwScratch::new(b.len());
+    dtw_sq_scratch(a, b, window, ub * ub, &mut s).sqrt()
+}
+
+/// Full DTW cost matrix (for tests and DBA alignment). Entry `[i][j]` is
+/// the accumulated squared cost of aligning `a[..=i]` with `b[..=j]`.
+pub fn dtw_matrix(a: &[f64], b: &[f64], window: Option<usize>) -> Vec<Vec<f64>> {
+    let (n, m) = (a.len(), b.len());
+    let w = match window {
+        Some(w) => w.max(n.abs_diff(m)),
+        None => n.max(m),
+    };
+    let mut dp = vec![vec![f64::INFINITY; m + 1]; n + 1];
+    dp[0][0] = 0.0;
+    for i in 1..=n {
+        let lo = i.saturating_sub(w).max(1);
+        let hi = (i + w).min(m);
+        for j in lo..=hi {
+            let d = a[i - 1] - b[j - 1];
+            let best = dp[i - 1][j - 1].min(dp[i - 1][j]).min(dp[i][j - 1]);
+            dp[i][j] = d * d + best;
+        }
+    }
+    dp
+}
+
+/// Optimal warping path as `(i, j)` index pairs (0-based), computed by
+/// backtracking the full cost matrix. Used by DBA.
+pub fn dtw_path(a: &[f64], b: &[f64], window: Option<usize>) -> Vec<(usize, usize)> {
+    let dp = dtw_matrix(a, b, window);
+    let (mut i, mut j) = (a.len(), b.len());
+    let mut path = Vec::with_capacity(a.len() + b.len());
+    while i > 0 && j > 0 {
+        path.push((i - 1, j - 1));
+        // Move to the predecessor with minimal accumulated cost.
+        let diag = dp[i - 1][j - 1];
+        let up = dp[i - 1][j];
+        let left = dp[i][j - 1];
+        if diag <= up && diag <= left {
+            i -= 1;
+            j -= 1;
+        } else if up <= left {
+            i -= 1;
+        } else {
+            j -= 1;
+        }
+    }
+    path.reverse();
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::euclidean::euclidean_sq;
+
+    #[test]
+    fn identical_series_zero() {
+        let a = [1.0, 2.0, 3.0, 2.0, 1.0];
+        assert_eq!(dtw(&a, &a, None), 0.0);
+        assert_eq!(dtw(&a, &a, Some(1)), 0.0);
+    }
+
+    #[test]
+    fn hand_checked_small_case() {
+        // a=[0,1], b=[0,0,1]: optimal path aligns 0->{0,0}, 1->1, cost 0.
+        assert_eq!(dtw_sq(&[0.0, 1.0], &[0.0, 0.0, 1.0], None), 0.0);
+        // a=[0,1], b=[2,2]: best alignment cost = 4 + min(4+1,1,1+1) => DP:
+        // dp(1,1)=4; dp(1,2)=4+4=8; dp(2,1)=1+4=5; dp(2,2)=1+min(4,8,5)=5.
+        assert_eq!(dtw_sq(&[0.0, 1.0], &[2.0, 2.0], None), 5.0);
+    }
+
+    #[test]
+    fn window_zero_equals_euclidean() {
+        let a = [1.0, 3.0, 2.0, 5.0, 4.0];
+        let b = [2.0, 2.0, 2.0, 4.0, 6.0];
+        assert!((dtw_sq(&a, &b, Some(0)) - euclidean_sq(&a, &b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shifted_peak_cheaper_than_euclidean() {
+        // DTW should absorb a phase shift the Euclidean distance cannot.
+        let a: Vec<f64> = (0..32).map(|i| if i == 10 { 1.0 } else { 0.0 }).collect();
+        let b: Vec<f64> = (0..32).map(|i| if i == 13 { 1.0 } else { 0.0 }).collect();
+        assert!(dtw_sq(&a, &b, None) < 1e-12);
+        assert!(euclidean_sq(&a, &b) > 1.0);
+    }
+
+    #[test]
+    fn band_monotone_in_window() {
+        // Widening the band can only lower (or keep) the optimal cost.
+        let a = [0.0, 1.0, 2.0, 1.0, 0.0, -1.0, 0.0, 2.0];
+        let b = [0.0, 0.0, 1.0, 2.0, 1.0, 0.0, -1.0, 0.0];
+        let mut last = f64::INFINITY;
+        for w in 0..8 {
+            let d = dtw_sq(&a, &b, Some(w));
+            assert!(d <= last + 1e-12, "w={w}: {d} > {last}");
+            last = d;
+        }
+        assert!((dtw_sq(&a, &b, Some(8)) - dtw_sq(&a, &b, None)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = [0.3, -1.2, 0.8, 2.0, -0.5];
+        let b = [1.0, 0.2, -0.7, 1.5];
+        for w in [None, Some(1), Some(2), Some(4)] {
+            assert!((dtw_sq(&a, &b, w) - dtw_sq(&b, &a, w)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn unequal_lengths_band_widened() {
+        // |n-m| > window still yields a finite distance (band auto-widens).
+        let a = [1.0; 10];
+        let b = [1.0; 3];
+        assert_eq!(dtw(&a, &b, Some(0)), 0.0);
+    }
+
+    #[test]
+    fn early_abandon_consistent() {
+        let a = [0.0, 5.0, 1.0, 4.0];
+        let b = [2.0, 2.0, 2.0, 2.0];
+        let exact = dtw(&a, &b, None);
+        // Bound above the true distance: exact result.
+        assert!((dtw_ea(&a, &b, None, exact + 1.0) - exact).abs() < 1e-12);
+        // Bound below: abandoned.
+        assert!(dtw_ea(&a, &b, None, exact * 0.5).is_infinite());
+    }
+
+    #[test]
+    fn matrix_agrees_with_rolling() {
+        let a = [0.1, 0.9, -0.4, 1.2, 0.0, 0.3];
+        let b = [0.0, 1.0, -0.5, 1.0, 0.1, 0.2];
+        for w in [None, Some(1), Some(3)] {
+            let dp = dtw_matrix(&a, &b, w);
+            assert!((dp[6][6] - dtw_sq(&a, &b, w)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn path_is_valid_warping_path() {
+        let a = [0.0, 1.0, 2.0, 1.0];
+        let b = [0.0, 2.0, 1.0];
+        let p = dtw_path(&a, &b, None);
+        assert_eq!(p.first(), Some(&(0, 0)));
+        assert_eq!(p.last(), Some(&(3, 2)));
+        for k in 1..p.len() {
+            let (di, dj) = (p[k].0 - p[k - 1].0, p[k].1 as i64 - p[k - 1].1 as i64);
+            assert!(di <= 1 && (0..=1).contains(&dj) && (di == 1 || dj == 1));
+        }
+    }
+
+    #[test]
+    fn path_cost_equals_distance() {
+        let a = [0.3, 1.7, -0.2, 0.9, 2.2];
+        let b = [0.1, 1.5, 0.0, 1.0, 2.0];
+        let p = dtw_path(&a, &b, None);
+        let cost: f64 = p.iter().map(|&(i, j)| (a[i] - b[j]) * (a[i] - b[j])).sum();
+        assert!((cost - dtw_sq(&a, &b, None)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_series() {
+        assert_eq!(dtw_sq(&[], &[], None), 0.0);
+        assert!(dtw_sq(&[1.0], &[], None).is_infinite());
+    }
+}

@@ -1,0 +1,160 @@
+//! Keogh warping envelopes (upper/lower running min/max over the warping
+//! window), computed in O(n) with Lemire's streaming min/max (monotonic
+//! deques) rather than the naive O(n·w) scan.
+//!
+//! For a series `c` and window `w`, `U[i] = max(c[i-w ..= i+w])` and
+//! `L[i] = min(c[i-w ..= i+w])`. Any series `q` aligned to `c` under a
+//! Sakoe-Chiba band of half-width `w` satisfies `L[i] <= (aligned value)
+//! <= U[i]`, which is what makes LB_Keogh a valid lower bound.
+
+use std::collections::VecDeque;
+
+/// Upper and lower Keogh envelope of a series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    /// Pointwise upper envelope `U`.
+    pub upper: Vec<f64>,
+    /// Pointwise lower envelope `L`.
+    pub lower: Vec<f64>,
+}
+
+impl Envelope {
+    /// Compute the envelope of `c` for warping window `w` (half-width in
+    /// samples). `w >= len` degrades gracefully to global min/max.
+    pub fn new(c: &[f64], w: usize) -> Self {
+        let n = c.len();
+        let mut upper = vec![0.0; n];
+        let mut lower = vec![0.0; n];
+        if n == 0 {
+            return Envelope { upper, lower };
+        }
+        // Monotonic deques over the sliding window [i-w, i+w].
+        let mut maxq: VecDeque<usize> = VecDeque::new();
+        let mut minq: VecDeque<usize> = VecDeque::new();
+        // Window for position i covers indices [i-w, min(i+w, n-1)].
+        // Sweep the right edge r = 0..n+w; emit position i = r - w.
+        for r in 0..(n + w) {
+            if r < n {
+                while let Some(&b) = maxq.back() {
+                    if c[b] <= c[r] {
+                        maxq.pop_back();
+                    } else {
+                        break;
+                    }
+                }
+                maxq.push_back(r);
+                while let Some(&b) = minq.back() {
+                    if c[b] >= c[r] {
+                        minq.pop_back();
+                    } else {
+                        break;
+                    }
+                }
+                minq.push_back(r);
+            }
+            if r >= w {
+                let i = r - w;
+                if i >= n {
+                    break;
+                }
+                // Evict entries left of the window start i-w.
+                let start = i.saturating_sub(w);
+                while let Some(&f) = maxq.front() {
+                    if f < start {
+                        maxq.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                while let Some(&f) = minq.front() {
+                    if f < start {
+                        minq.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                upper[i] = c[*maxq.front().unwrap()];
+                lower[i] = c[*minq.front().unwrap()];
+            }
+        }
+        Envelope { upper, lower }
+    }
+
+    /// Series length.
+    pub fn len(&self) -> usize {
+        self.upper.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.upper.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive O(n·w) reference.
+    fn naive(c: &[f64], w: usize) -> Envelope {
+        let n = c.len();
+        let mut upper = vec![f64::NEG_INFINITY; n];
+        let mut lower = vec![f64::INFINITY; n];
+        for i in 0..n {
+            let lo = i.saturating_sub(w);
+            let hi = (i + w).min(n - 1);
+            for j in lo..=hi {
+                if c[j] > upper[i] {
+                    upper[i] = c[j];
+                }
+                if c[j] < lower[i] {
+                    lower[i] = c[j];
+                }
+            }
+        }
+        Envelope { upper, lower }
+    }
+
+    #[test]
+    fn matches_naive_reference() {
+        let c: Vec<f64> = (0..64)
+            .map(|i| ((i as f64) * 0.3).sin() * 2.0 + ((i * 7 % 13) as f64) * 0.1)
+            .collect();
+        for w in [0, 1, 2, 5, 10, 63, 100] {
+            assert_eq!(Envelope::new(&c, w), naive(&c, w), "w={w}");
+        }
+    }
+
+    #[test]
+    fn zero_window_is_identity() {
+        let c = [3.0, -1.0, 2.0];
+        let e = Envelope::new(&c, 0);
+        assert_eq!(e.upper, c.to_vec());
+        assert_eq!(e.lower, c.to_vec());
+    }
+
+    #[test]
+    fn envelope_bounds_series() {
+        let c: Vec<f64> = (0..40).map(|i| ((i as f64) * 0.7).cos()).collect();
+        for w in [1, 3, 8] {
+            let e = Envelope::new(&c, w);
+            for i in 0..c.len() {
+                assert!(e.lower[i] <= c[i] && c[i] <= e.upper[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn huge_window_is_global_extrema() {
+        let c = [1.0, 9.0, -4.0, 5.0];
+        let e = Envelope::new(&c, 100);
+        assert!(e.upper.iter().all(|&u| u == 9.0));
+        assert!(e.lower.iter().all(|&l| l == -4.0));
+    }
+
+    #[test]
+    fn empty_series() {
+        let e = Envelope::new(&[], 3);
+        assert!(e.is_empty());
+    }
+}

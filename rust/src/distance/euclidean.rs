@@ -1,0 +1,70 @@
+//! Euclidean (lock-step) distance.
+
+/// Squared Euclidean distance between equal-length slices.
+#[inline]
+pub fn euclidean_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Euclidean distance.
+#[inline]
+pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
+    euclidean_sq(a, b).sqrt()
+}
+
+/// Early-abandoning squared Euclidean distance: returns `f64::INFINITY`
+/// as soon as the running sum exceeds `ub_sq`. Used by 1-NN search.
+#[inline]
+pub fn euclidean_ea_sq(a: &[f64], b: &[f64], ub_sq: f64) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    // Check every 8 terms: cheap enough to matter, rare enough not to.
+    for (ca, cb) in a.chunks(8).zip(b.chunks(8)) {
+        for i in 0..ca.len() {
+            let d = ca[i] - cb[i];
+            s += d * d;
+        }
+        if s > ub_sq {
+            return f64::INFINITY;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic() {
+        assert_eq!(euclidean_sq(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(euclidean(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+    }
+
+    #[test]
+    fn zero_on_identical() {
+        let v = [1.0, -2.0, 3.5];
+        assert_eq!(euclidean(&v, &v), 0.0);
+    }
+
+    #[test]
+    fn early_abandon_triggers() {
+        let a = vec![0.0; 100];
+        let b = vec![1.0; 100];
+        assert!(euclidean_ea_sq(&a, &b, 10.0).is_infinite());
+        assert_eq!(euclidean_ea_sq(&a, &b, 1000.0), 100.0);
+    }
+
+    #[test]
+    fn early_abandon_equals_exact_when_under_bound() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let b = [2.0, 1.0, 4.0, 3.0, 6.0, 5.0, 8.0, 7.0, 9.5];
+        assert_eq!(euclidean_ea_sq(&a, &b, 1e9), euclidean_sq(&a, &b));
+    }
+}

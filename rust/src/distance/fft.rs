@@ -1,0 +1,174 @@
+//! Minimal radix-2 complex FFT, sufficient for the cross-correlations SBD
+//! needs. The offline registry carries no FFT crate, so we ship our own
+//! iterative Cooley–Tukey with bit-reversal permutation.
+
+/// Complex number as a `(re, im)` pair; kept deliberately tiny.
+pub type Complex = (f64, f64);
+
+#[inline]
+fn cmul(a: Complex, b: Complex) -> Complex {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// In-place iterative radix-2 FFT. `data.len()` must be a power of two.
+/// `inverse` computes the unscaled inverse transform (caller divides by n).
+pub fn fft_inplace(data: &mut [Complex], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft: length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) & (n - 1);
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * std::f64::consts::TAU / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w: Complex = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = cmul(data[i + k + len / 2], w);
+                data[i + k] = (u.0 + v.0, u.1 + v.1);
+                data[i + k + len / 2] = (u.0 - v.0, u.1 - v.1);
+                w = cmul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Next power of two ≥ `n`.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Full cross-correlation of `x` and `y` via FFT:
+/// `out[k] = Σ_i x[i+k-(m-1)] · y[i]` for shifts `k ∈ [0, n+m-1)`,
+/// i.e. the standard `numpy.correlate(x, y, "full")` layout reversed so
+/// that index `m-1` is the zero-shift term.
+pub fn cross_correlate(x: &[f64], y: &[f64]) -> Vec<f64> {
+    let (n, m) = (x.len(), y.len());
+    if n == 0 || m == 0 {
+        return Vec::new();
+    }
+    let size = next_pow2(n + m - 1);
+    let mut fx: Vec<Complex> = Vec::with_capacity(size);
+    fx.extend(x.iter().map(|&v| (v, 0.0)));
+    fx.resize(size, (0.0, 0.0));
+    let mut fy: Vec<Complex> = Vec::with_capacity(size);
+    fy.extend(y.iter().map(|&v| (v, 0.0)));
+    fy.resize(size, (0.0, 0.0));
+    fft_inplace(&mut fx, false);
+    fft_inplace(&mut fy, false);
+    // x ⋆ y = IFFT(FFT(x) · conj(FFT(y)))
+    for i in 0..size {
+        let c = cmul(fx[i], (fy[i].0, -fy[i].1));
+        fx[i] = c;
+    }
+    fft_inplace(&mut fx, true);
+    let scale = 1.0 / size as f64;
+    // Circular correlation: lag k >= 0 at index k, negative lags wrap to
+    // the end. Unpack to linear layout [-(m-1) .. n-1].
+    let mut out = Vec::with_capacity(n + m - 1);
+    for lag in -((m as isize) - 1)..(n as isize) {
+        let idx = if lag >= 0 { lag as usize } else { size - (-lag) as usize };
+        out.push(fx[idx].0 * scale);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive O(n·m) cross-correlation reference.
+    fn naive_xcorr(x: &[f64], y: &[f64]) -> Vec<f64> {
+        let (n, m) = (x.len(), y.len());
+        let mut out = Vec::with_capacity(n + m - 1);
+        for lag in -((m as isize) - 1)..(n as isize) {
+            let mut s = 0.0;
+            for j in 0..m {
+                let i = lag + j as isize;
+                if i >= 0 && (i as usize) < n {
+                    s += x[i as usize] * y[j];
+                }
+            }
+            out.push(s);
+        }
+        out
+    }
+
+    #[test]
+    fn fft_roundtrip() {
+        let orig: Vec<Complex> = (0..16).map(|i| (i as f64, (i * i) as f64 * 0.1)).collect();
+        let mut data = orig.clone();
+        fft_inplace(&mut data, false);
+        fft_inplace(&mut data, true);
+        for (a, b) in data.iter().zip(orig.iter()) {
+            assert!((a.0 / 16.0 - b.0).abs() < 1e-9);
+            assert!((a.1 / 16.0 - b.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_matches_dft() {
+        // Compare against a literal O(n²) DFT.
+        let x: Vec<f64> = vec![1.0, 2.0, -1.0, 0.5, 3.0, -2.0, 0.0, 1.5];
+        let mut data: Vec<Complex> = x.iter().map(|&v| (v, 0.0)).collect();
+        fft_inplace(&mut data, false);
+        let n = x.len();
+        for k in 0..n {
+            let (mut re, mut im) = (0.0, 0.0);
+            for (j, &v) in x.iter().enumerate() {
+                let ang = -std::f64::consts::TAU * (k * j) as f64 / n as f64;
+                re += v * ang.cos();
+                im += v * ang.sin();
+            }
+            assert!((data[k].0 - re).abs() < 1e-9, "k={k}");
+            assert!((data[k].1 - im).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn xcorr_matches_naive() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 0.5];
+        let y = vec![-1.0, 0.5, 2.0];
+        let got = cross_correlate(&x, &y);
+        let want = naive_xcorr(&x, &y);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-9, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn xcorr_equal_lengths() {
+        let x = vec![0.2, -0.5, 1.0, 0.7, -0.1, 0.4, 0.9, -0.8];
+        let y = vec![0.3, 0.1, -0.2, 0.8, 0.5, -0.6, 0.2, 0.0];
+        let got = cross_correlate(&x, &y);
+        let want = naive_xcorr(&x, &y);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_shift_is_dot_product() {
+        let x = vec![1.0, 2.0, 3.0];
+        let y = vec![4.0, 5.0, 6.0];
+        let c = cross_correlate(&x, &y);
+        // index m-1 = 2 is the aligned (zero-lag) dot product
+        assert!((c[2] - 32.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,161 @@
+//! DTW lower bounds: LB_Kim (constant time), LB_Keogh (linear time) and
+//! the cascade used by the PQDTW encoder (paper §3.2).
+//!
+//! All bounds here are expressed in **squared** units so they compare
+//! directly against `dtw_sq` / a squared best-so-far without taking roots
+//! in the hot loop.
+//!
+//! The PQDTW encoder *reverses* the query/data roles (Rakthanmanon et al.
+//! 2012): envelopes are built once around the **codebook centroids** at
+//! training time, and at encode time the bound is computed by walking the
+//! query against the candidate centroid's precomputed envelope. That makes
+//! the per-encode cost O(D/M) with no envelope construction per query.
+
+use super::envelope::Envelope;
+
+/// LB_Kim (the constant-time *FL* variant used by the UCR suite): squared
+/// distance between first points plus squared distance between last
+/// points. Valid because any warping path must match the two endpoints.
+#[inline]
+pub fn lb_kim_sq(q: &[f64], c: &[f64]) -> f64 {
+    if q.is_empty() || c.is_empty() {
+        return 0.0;
+    }
+    let df = q[0] - c[0];
+    let dl = q[q.len() - 1] - c[c.len() - 1];
+    df * df + dl * dl
+}
+
+/// LB_Keogh: squared exceedance of `q` outside the envelope `env`
+/// (built from the *candidate* series with the same warping window).
+///
+/// Early-abandons against `ub_sq`: returns `f64::INFINITY` once the
+/// partial sum exceeds it.
+#[inline]
+pub fn lb_keogh_sq(q: &[f64], env: &Envelope, ub_sq: f64) -> f64 {
+    debug_assert_eq!(q.len(), env.len());
+    let mut s = 0.0;
+    for i in 0..q.len() {
+        let x = q[i];
+        let u = env.upper[i];
+        let l = env.lower[i];
+        if x > u {
+            let d = x - u;
+            s += d * d;
+        } else if x < l {
+            let d = l - x;
+            s += d * d;
+        }
+        if s > ub_sq {
+            return f64::INFINITY;
+        }
+    }
+    s
+}
+
+/// Cascading lower bound used by the PQDTW encoder: LB_Kim first (O(1)),
+/// then reversed LB_Keogh (O(n)) only when LB_Kim did not already prune.
+/// Returns a squared lower bound on `dtw_sq(q, c, window)`, or
+/// `f64::INFINITY` when the bound exceeds `ub_sq` (candidate prunable).
+#[inline]
+pub fn lb_cascade_sq(q: &[f64], c: &[f64], env: &Envelope, ub_sq: f64) -> f64 {
+    let kim = lb_kim_sq(q, c);
+    if kim > ub_sq {
+        return f64::INFINITY;
+    }
+    // The reversed Keogh bound (query walked against candidate envelope)
+    // dominates Kim on everything except the endpoints; take the max so
+    // the cascade is at least as tight as its parts.
+    let keogh = lb_keogh_sq(q, env, ub_sq);
+    kim.max(keogh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+    use crate::distance::dtw::dtw_sq;
+
+    fn rand_series(rng: &mut Rng, n: usize) -> Vec<f64> {
+        // Random walk: adjacent-sample correlation makes bounds non-trivial.
+        let mut v = Vec::with_capacity(n);
+        let mut x = 0.0;
+        for _ in 0..n {
+            x += rng.normal();
+            v.push(x);
+        }
+        v
+    }
+
+    #[test]
+    fn lb_kim_is_lower_bound() {
+        let mut rng = Rng::new(17);
+        for _ in 0..50 {
+            let q = rand_series(&mut rng, 30);
+            let c = rand_series(&mut rng, 30);
+            for w in [0usize, 2, 5, 30] {
+                let d = dtw_sq(&q, &c, Some(w));
+                assert!(lb_kim_sq(&q, &c) <= d + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn lb_keogh_is_lower_bound() {
+        let mut rng = Rng::new(23);
+        for _ in 0..50 {
+            let q = rand_series(&mut rng, 40);
+            let c = rand_series(&mut rng, 40);
+            for w in [0usize, 1, 3, 8] {
+                let env = Envelope::new(&c, w);
+                let lb = lb_keogh_sq(&q, &env, f64::INFINITY);
+                let d = dtw_sq(&q, &c, Some(w));
+                assert!(lb <= d + 1e-9, "w={w} lb={lb} dtw={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn lb_cascade_is_lower_bound() {
+        let mut rng = Rng::new(31);
+        for _ in 0..50 {
+            let q = rand_series(&mut rng, 25);
+            let c = rand_series(&mut rng, 25);
+            let w = 4;
+            let env = Envelope::new(&c, w);
+            let lb = lb_cascade_sq(&q, &c, &env, f64::INFINITY);
+            assert!(lb <= dtw_sq(&q, &c, Some(w)) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn keogh_zero_when_inside_envelope() {
+        let c = [0.0, 1.0, 2.0, 1.0, 0.0];
+        let env = Envelope::new(&c, 2);
+        // A series within [L, U] everywhere gives bound 0.
+        let q: Vec<f64> = env
+            .lower
+            .iter()
+            .zip(env.upper.iter())
+            .map(|(l, u)| 0.5 * (l + u))
+            .collect();
+        assert_eq!(lb_keogh_sq(&q, &env, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn keogh_early_abandons() {
+        let c = [0.0; 16];
+        let env = Envelope::new(&c, 1);
+        let q = [10.0; 16];
+        assert!(lb_keogh_sq(&q, &env, 5.0).is_infinite());
+    }
+
+    #[test]
+    fn cascade_prunes_on_kim() {
+        // Endpoints far apart: Kim alone exceeds the bound.
+        let q = [100.0, 0.0, 0.0, 0.0];
+        let c = [0.0, 0.0, 0.0, 0.0];
+        let env = Envelope::new(&c, 1);
+        assert!(lb_cascade_sq(&q, &c, &env, 1.0).is_infinite());
+    }
+}

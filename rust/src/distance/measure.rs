@@ -1,0 +1,135 @@
+//! Unified measure abstraction used by the 1-NN / clustering harnesses and
+//! the benchmark drivers. Mirrors the paper's baseline set: ED, DTW
+//! (PrunedDTW under the hood), cDTW with a window fraction, and SBD. SAX
+//! and the PQ variants are representation-based and therefore live behind
+//! their own precomputed-representation paths (`repr::sax`, `pq`), but are
+//! addressable through [`Measure`] for naming/reporting.
+
+use super::dtw::dtw_sq;
+use super::euclidean::euclidean;
+use super::pruned_dtw::pruned_dtw_sq;
+use super::sbd::sbd;
+
+/// A pairwise time-series distance measure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Measure {
+    /// Lock-step Euclidean distance.
+    Euclidean,
+    /// Unconstrained DTW (computed with PrunedDTW using the Euclidean
+    /// upper bound, per the paper's experimental settings).
+    Dtw,
+    /// Sakoe-Chiba-constrained DTW; `window_frac` is the half-width as a
+    /// fraction of series length (e.g. 0.05 for cDTW5).
+    CDtw { window_frac: f64 },
+    /// Shape-based distance (k-Shape).
+    Sbd,
+    /// SAX MINDIST (requires representation precomputation; `dist` on raw
+    /// series converts on the fly — used only in tests).
+    Sax { alphabet: usize, seg_frac: f64 },
+}
+
+impl Measure {
+    /// Resolve the warping window (samples) for series of length `len`.
+    /// `None` for measures without a window.
+    pub fn window(&self, len: usize) -> Option<usize> {
+        match self {
+            Measure::CDtw { window_frac } => {
+                Some(((window_frac * len as f64).ceil() as usize).max(1))
+            }
+            _ => None,
+        }
+    }
+
+    /// Distance between two raw series.
+    pub fn dist(&self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            Measure::Euclidean => euclidean(a, b),
+            Measure::Dtw => {
+                // ED is a valid upper bound when lengths match; otherwise
+                // run unpruned.
+                let ub = if a.len() == b.len() {
+                    super::euclidean::euclidean_sq(a, b)
+                } else {
+                    f64::INFINITY
+                };
+                let d = pruned_dtw_sq(a, b, None, ub + 1e-12);
+                if d.is_finite() { d.sqrt() } else { ub.sqrt() }
+            }
+            Measure::CDtw { .. } => {
+                let w = self.window(a.len().max(b.len()));
+                dtw_sq(a, b, w).sqrt()
+            }
+            Measure::Sbd => sbd(a, b),
+            Measure::Sax { alphabet, seg_frac } => {
+                let sax = crate::repr::sax::SaxEncoder::new(a.len(), *alphabet, *seg_frac);
+                let wa = sax.encode(a);
+                let wb = sax.encode(b);
+                sax.mindist(&wa, &wb)
+            }
+        }
+    }
+
+    /// Short display name matching the paper's tables.
+    pub fn name(&self) -> String {
+        match self {
+            Measure::Euclidean => "ED".into(),
+            Measure::Dtw => "DTW".into(),
+            Measure::CDtw { window_frac } => format!("cDTW{}", (window_frac * 100.0).round()),
+            Measure::Sbd => "SBD".into(),
+            Measure::Sax { .. } => "SAX".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    #[test]
+    fn dtw_variant_consistency() {
+        let mut rng = Rng::new(71);
+        for _ in 0..20 {
+            let a: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+            let full = Measure::Dtw.dist(&a, &b);
+            let exact = super::super::dtw::dtw(&a, &b, None);
+            assert!((full - exact).abs() < 1e-9);
+            // cDTW with full-width window == DTW
+            let cw = Measure::CDtw { window_frac: 1.0 }.dist(&a, &b);
+            assert!((cw - exact).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ordering_ed_ge_cdtw_ge_dtw() {
+        let mut rng = Rng::new(73);
+        for _ in 0..20 {
+            let a: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+            let ed = Measure::Euclidean.dist(&a, &b);
+            let c5 = Measure::CDtw { window_frac: 0.05 }.dist(&a, &b);
+            let c10 = Measure::CDtw { window_frac: 0.10 }.dist(&a, &b);
+            let dtw = Measure::Dtw.dist(&a, &b);
+            assert!(ed + 1e-9 >= c5, "ed={ed} c5={c5}");
+            assert!(c5 + 1e-9 >= c10);
+            assert!(c10 + 1e-9 >= dtw);
+        }
+    }
+
+    #[test]
+    fn window_resolution() {
+        assert_eq!(Measure::CDtw { window_frac: 0.05 }.window(100), Some(5));
+        assert_eq!(Measure::CDtw { window_frac: 0.10 }.window(140), Some(14));
+        assert_eq!(Measure::Euclidean.window(100), None);
+        // tiny lengths round up to at least 1
+        assert_eq!(Measure::CDtw { window_frac: 0.05 }.window(4), Some(1));
+    }
+
+    #[test]
+    fn names_match_paper() {
+        assert_eq!(Measure::CDtw { window_frac: 0.05 }.name(), "cDTW5");
+        assert_eq!(Measure::CDtw { window_frac: 0.10 }.name(), "cDTW10");
+        assert_eq!(Measure::Dtw.name(), "DTW");
+    }
+}

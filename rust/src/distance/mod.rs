@@ -1,0 +1,28 @@
+//! Elastic and lock-step distance measures plus their acceleration
+//! machinery (envelopes, lower bounds, pruning).
+//!
+//! Conventions (shared with the Python oracle `python/compile/kernels/ref.py`
+//! and checked by the cross-language golden tests):
+//!
+//! - DTW accumulates **squared** pointwise costs, as in the paper's Eq. (1),
+//!   and all public entry points return the **square root** of the
+//!   accumulated cost, so DTW and the Euclidean distance coincide when the
+//!   warping window is zero and every lower bound is directly comparable.
+//! - A warping window `w` is the Sakoe-Chiba band half-width in *samples*;
+//!   `None` means unconstrained.
+
+pub mod dtw;
+pub mod envelope;
+pub mod euclidean;
+pub mod fft;
+pub mod lower_bounds;
+pub mod measure;
+pub mod pruned_dtw;
+pub mod sbd;
+
+pub use dtw::{dtw, dtw_ea, dtw_sq};
+pub use envelope::Envelope;
+pub use euclidean::{euclidean, euclidean_sq, euclidean_ea_sq};
+pub use lower_bounds::{lb_cascade_sq, lb_keogh_sq, lb_kim_sq};
+pub use measure::Measure;
+pub use sbd::sbd;

@@ -1,0 +1,168 @@
+//! PrunedDTW (Silva & Batista, SDM 2016): exact DTW that skips cells whose
+//! accumulated cost already exceeds an upper bound on the final distance.
+//!
+//! The pruning is *exact*: with any valid upper bound (e.g. the Euclidean
+//! distance, which is DTW's cost along the diagonal path), the returned
+//! value equals plain DTW. With `ub_sq = f64::INFINITY` no pruning happens
+//! and the routine degenerates to the standard rolling-row DP. When the
+//! true DTW cost exceeds the bound, `f64::INFINITY` is returned (early
+//! abandon), which is exactly what 1-NN and pairwise-matrix loops want.
+
+/// Accumulated squared PrunedDTW cost between `a` and `b` under an
+/// optional Sakoe-Chiba band, pruned against `ub_sq`.
+pub fn pruned_dtw_sq(a: &[f64], b: &[f64], window: Option<usize>, ub_sq: f64) -> f64 {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 || m == 0 {
+        return if n == m { 0.0 } else { f64::INFINITY };
+    }
+    let w = match window {
+        Some(w) => w.max(n.abs_diff(m)),
+        None => n.max(m),
+    };
+    let mut prev = vec![f64::INFINITY; m + 1];
+    let mut curr = vec![f64::INFINITY; m + 1];
+    prev[0] = 0.0;
+
+    // Pruning state: sc = first column that can still be on an optimal
+    // path, ec = one past the last column with a non-pruned value in the
+    // previous row.
+    let mut sc: usize = 1;
+    let mut ec: usize = 1;
+
+    for i in 1..=n {
+        let band_lo = i.saturating_sub(w).max(1);
+        let band_hi = (i + w).min(m);
+        let beg = band_lo.max(sc);
+        if beg > band_hi {
+            return f64::INFINITY; // pruned region left the band: abandon
+        }
+        curr[0] = f64::INFINITY;
+        // Cells before `beg` in this row are unreachable or pruned.
+        curr[beg - 1] = f64::INFINITY;
+
+        let ai = a[i - 1];
+        let mut smaller_found = false;
+        let mut sc_next = beg;
+        let mut ec_next = beg;
+        let mut pruned_all = true;
+
+        for j in beg..=band_hi {
+            let d = ai - b[j - 1];
+            let cost = d * d;
+            // Predecessors outside [sc-1, ec] of the previous row hold
+            // stale values; they were set to INF when that row was filled.
+            let diag = prev[j - 1];
+            let up = if j >= ec && j > beg { f64::INFINITY } else { prev[j] };
+            let left = curr[j - 1];
+            let best = diag.min(up).min(left);
+            let v = cost + best;
+
+            if v > ub_sq {
+                curr[j] = f64::INFINITY;
+                if !smaller_found {
+                    sc_next = j + 1;
+                }
+                if j >= ec {
+                    // Everything to the right can only grow: stop the row.
+                    for k in (j + 1)..=band_hi {
+                        curr[k] = f64::INFINITY;
+                    }
+                    break;
+                }
+            } else {
+                curr[j] = v;
+                pruned_all = false;
+                if !smaller_found {
+                    smaller_found = true;
+                    sc_next = j;
+                }
+                ec_next = j + 1;
+            }
+        }
+        for k in (band_hi + 1)..=m {
+            curr[k] = f64::INFINITY;
+        }
+        if pruned_all {
+            return f64::INFINITY;
+        }
+        sc = sc_next;
+        ec = ec_next;
+        std::mem::swap(&mut prev, &mut curr);
+    }
+    prev[m]
+}
+
+/// PrunedDTW distance (square root of the accumulated squared cost).
+pub fn pruned_dtw(a: &[f64], b: &[f64], window: Option<usize>, ub: f64) -> f64 {
+    pruned_dtw_sq(a, b, window, ub * ub).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+    use crate::distance::dtw::dtw_sq;
+    use crate::distance::euclidean::euclidean_sq;
+
+    fn rand_walk(rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut v = Vec::with_capacity(n);
+        let mut x = 0.0;
+        for _ in 0..n {
+            x += rng.normal();
+            v.push(x);
+        }
+        v
+    }
+
+    #[test]
+    fn equals_dtw_with_euclidean_bound() {
+        // ED is a valid DTW upper bound (diagonal path), so PrunedDTW must
+        // return the exact DTW cost.
+        let mut rng = Rng::new(41);
+        for _ in 0..60 {
+            let a = rand_walk(&mut rng, 35);
+            let b = rand_walk(&mut rng, 35);
+            for w in [None, Some(3), Some(10)] {
+                let ub = euclidean_sq(&a, &b);
+                let exact = dtw_sq(&a, &b, w);
+                let pruned = pruned_dtw_sq(&a, &b, w, ub + 1e-9);
+                assert!(
+                    (exact - pruned).abs() < 1e-9,
+                    "w={w:?} exact={exact} pruned={pruned}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn equals_dtw_without_bound() {
+        let mut rng = Rng::new(43);
+        let a = rand_walk(&mut rng, 50);
+        let b = rand_walk(&mut rng, 50);
+        assert!((pruned_dtw_sq(&a, &b, None, f64::INFINITY) - dtw_sq(&a, &b, None)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn abandons_below_true_cost() {
+        let mut rng = Rng::new(47);
+        let a = rand_walk(&mut rng, 30);
+        let b: Vec<f64> = a.iter().map(|x| x + 50.0).collect();
+        let exact = dtw_sq(&a, &b, None);
+        assert!(pruned_dtw_sq(&a, &b, None, exact * 0.1).is_infinite());
+    }
+
+    #[test]
+    fn identical_is_zero() {
+        let a = [1.0, 2.0, 1.0, 0.0];
+        assert_eq!(pruned_dtw_sq(&a, &a, None, 1e-6), 0.0);
+    }
+
+    #[test]
+    fn unequal_lengths() {
+        let mut rng = Rng::new(53);
+        let a = rand_walk(&mut rng, 20);
+        let b = rand_walk(&mut rng, 33);
+        let exact = dtw_sq(&a, &b, None);
+        assert!((pruned_dtw_sq(&a, &b, None, exact * 2.0 + 1.0) - exact).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,104 @@
+//! Stratified k-fold cross-validation splits.
+
+use crate::core::rng::Rng;
+use crate::core::series::Dataset;
+
+/// A single CV fold: train/validation row indices.
+#[derive(Debug, Clone)]
+pub struct Fold {
+    /// Training row indices.
+    pub train_idx: Vec<usize>,
+    /// Validation row indices.
+    pub val_idx: Vec<usize>,
+}
+
+/// Stratified `k`-fold split: class proportions are preserved per fold.
+pub fn stratified_kfold(data: &Dataset, k: usize, seed: u64) -> Vec<Fold> {
+    assert!(data.is_labeled(), "stratified CV needs labels");
+    assert!(k >= 2, "need k >= 2 folds");
+    let mut rng = Rng::new(seed);
+    // group indices by class, shuffled
+    let classes = data.classes();
+    let mut per_class: Vec<Vec<usize>> = classes
+        .iter()
+        .map(|&c| {
+            let mut idx: Vec<usize> =
+                (0..data.n_series()).filter(|&i| data.label(i) == c).collect();
+            rng.shuffle(&mut idx);
+            idx
+        })
+        .collect();
+    // deal each class round-robin into folds
+    let mut fold_members: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for idx in per_class.iter_mut() {
+        for (pos, &i) in idx.iter().enumerate() {
+            fold_members[pos % k].push(i);
+        }
+    }
+    (0..k)
+        .map(|f| {
+            let val_idx = fold_members[f].clone();
+            let train_idx: Vec<usize> = (0..k)
+                .filter(|&g| g != f)
+                .flat_map(|g| fold_members[g].iter().copied())
+                .collect();
+            Fold { train_idx, val_idx }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::series::{Dataset, TimeSeries};
+
+    fn toy(n_per_class: usize) -> Dataset {
+        let mut series = Vec::new();
+        for c in 0..3i64 {
+            for i in 0..n_per_class {
+                series.push(TimeSeries::labeled(vec![c as f64, i as f64], c));
+            }
+        }
+        Dataset::from_series(&series)
+    }
+
+    #[test]
+    fn folds_partition_the_data() {
+        let d = toy(10);
+        let folds = stratified_kfold(&d, 5, 1);
+        assert_eq!(folds.len(), 5);
+        let mut all_val: Vec<usize> = folds.iter().flat_map(|f| f.val_idx.clone()).collect();
+        all_val.sort_unstable();
+        assert_eq!(all_val, (0..30).collect::<Vec<_>>());
+        for f in &folds {
+            assert_eq!(f.train_idx.len() + f.val_idx.len(), 30);
+            // no overlap
+            for v in &f.val_idx {
+                assert!(!f.train_idx.contains(v));
+            }
+        }
+    }
+
+    #[test]
+    fn stratification_preserved() {
+        let d = toy(10);
+        let folds = stratified_kfold(&d, 5, 2);
+        for f in &folds {
+            // each fold gets 2 of each class (10 per class / 5 folds)
+            for c in 0..3i64 {
+                let cnt = f.val_idx.iter().filter(|&&i| d.label(i) == c).count();
+                assert_eq!(cnt, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = toy(7);
+        let a = stratified_kfold(&d, 3, 9);
+        let b = stratified_kfold(&d, 3, 9);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.val_idx, y.val_idx);
+        }
+    }
+}

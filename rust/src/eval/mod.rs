@@ -1,0 +1,11 @@
+//! Evaluation protocol: cross-validation, hyper-parameter search,
+//! statistical tests and report formatting (paper §5).
+
+pub mod cv;
+pub mod report;
+pub mod search;
+pub mod stats;
+
+pub use cv::{stratified_kfold, Fold};
+pub use search::{tune_pq, SearchResult, SearchSpace};
+pub use stats::{friedman_test, nemenyi_cd_005, pairwise_significance, Significance};

@@ -1,0 +1,220 @@
+//! Hyper-parameter search for PQDTW (paper §5 "Parameter settings").
+//!
+//! The paper tunes subspace size, wavelet level, tail and quantization
+//! window with Optuna's TPE for 12 h per dataset. Offline here, we use
+//! the same evaluation protocol (k-fold CV of the 1-NN error on the
+//! training set) under a bounded evaluation budget, with a two-stage
+//! strategy: a coarse randomized sweep over the grid followed by local
+//! refinement around the incumbent. Deterministic given the seed.
+
+use crate::core::rng::Rng;
+use crate::core::series::Dataset;
+use crate::eval::cv::stratified_kfold;
+use crate::nn::knn::{nn_classify_pq, PqQueryMode};
+use crate::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
+
+/// Candidate grid for the tunable parameters.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Candidate subspace counts `M`.
+    pub n_subspaces: Vec<usize>,
+    /// Candidate quantization windows (fraction of subspace length).
+    pub window_fracs: Vec<f64>,
+    /// Candidate MODWT levels (pre-alignment).
+    pub levels: Vec<usize>,
+    /// Candidate tails (fraction of subspace length); `0.0` disables
+    /// pre-alignment.
+    pub tail_fracs: Vec<f64>,
+    /// Codebook size (fixed; the paper defaults to 256).
+    pub codebook_size: usize,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace {
+            n_subspaces: vec![2, 4, 6, 8],
+            window_fracs: vec![0.05, 0.1, 0.2, 0.5],
+            levels: vec![1, 2, 3],
+            tail_fracs: vec![0.0, 0.1, 0.2],
+            codebook_size: 256,
+        }
+    }
+}
+
+/// Search outcome.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Best configuration found.
+    pub config: PqConfig,
+    /// Its cross-validated 1-NN error.
+    pub cv_error: f64,
+    /// Number of configurations evaluated.
+    pub evaluated: usize,
+}
+
+/// Cross-validated 1-NN error of one configuration on the training set.
+pub fn cv_error(train: &Dataset, cfg: &PqConfig, folds: usize, seed: u64) -> Option<f64> {
+    let splits = stratified_kfold(train, folds, seed);
+    let mut total_err = 0.0;
+    for (fi, fold) in splits.iter().enumerate() {
+        let tr = train.subset(&fold.train_idx);
+        let va = train.subset(&fold.val_idx);
+        if tr.n_series() < 2 || va.n_series() == 0 {
+            return None;
+        }
+        let pq = ProductQuantizer::train(&tr, cfg, seed.wrapping_add(fi as u64)).ok()?;
+        let enc = pq.encode_dataset(&tr);
+        let (err, _) = nn_classify_pq(&pq, &enc, &va, PqQueryMode::Symmetric);
+        total_err += err;
+    }
+    Some(total_err / folds as f64)
+}
+
+/// Randomized sweep + local refinement under an evaluation budget.
+pub fn tune_pq(
+    train: &Dataset,
+    space: &SearchSpace,
+    budget: usize,
+    folds: usize,
+    seed: u64,
+) -> SearchResult {
+    let mut rng = Rng::new(seed);
+    let mut evaluated = 0usize;
+    let mut best: Option<(f64, PqConfig)> = None;
+    let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
+
+    let make_cfg = |m: usize, w: f64, level: usize, tail: f64, space: &SearchSpace| PqConfig {
+        n_subspaces: m,
+        codebook_size: space.codebook_size,
+        window_frac: w,
+        metric: PqMetric::Dtw,
+        prealign: if tail > 0.0 {
+            Some(PrealignConfig { level, tail_frac: tail })
+        } else {
+            None
+        },
+        kmeans_iters: 5,
+        dba_iters: 2,
+        train_subsample: None,
+    };
+    let key = |c: &PqConfig| format!("{c:?}");
+
+    let try_cfg = |cfg: PqConfig,
+                       evaluated: &mut usize,
+                       best: &mut Option<(f64, PqConfig)>,
+                       seen: &mut std::collections::HashSet<String>| {
+        if train.len < 2 * cfg.n_subspaces || !seen.insert(key(&cfg)) {
+            return;
+        }
+        if let Some(err) = cv_error(train, &cfg, folds, seed) {
+            *evaluated += 1;
+            let better = match best {
+                Some((e, _)) => err < *e,
+                None => true,
+            };
+            if better {
+                *best = Some((err, cfg));
+            }
+        }
+    };
+
+    // Stage 1: randomized coarse sweep (half the budget).
+    let coarse = (budget / 2).max(1);
+    for _ in 0..coarse {
+        let cfg = make_cfg(
+            space.n_subspaces[rng.below(space.n_subspaces.len())],
+            space.window_fracs[rng.below(space.window_fracs.len())],
+            space.levels[rng.below(space.levels.len())],
+            space.tail_fracs[rng.below(space.tail_fracs.len())],
+            space,
+        );
+        try_cfg(cfg, &mut evaluated, &mut best, &mut seen);
+    }
+
+    // Stage 2: local refinement around the incumbent — vary one axis at a
+    // time through its neighbouring grid values.
+    if let Some((_, inc)) = best.clone() {
+        let mut neighbours: Vec<PqConfig> = Vec::new();
+        let pos = |v: usize, grid: &[usize]| grid.iter().position(|&g| g == v);
+        let posf = |v: f64, grid: &[f64]| grid.iter().position(|&g| (g - v).abs() < 1e-12);
+        if let Some(p) = pos(inc.n_subspaces, &space.n_subspaces) {
+            for q in [p.wrapping_sub(1), p + 1] {
+                if let Some(&m) = space.n_subspaces.get(q) {
+                    let (level, tail) = match inc.prealign {
+                        Some(pa) => (pa.level, pa.tail_frac),
+                        None => (space.levels[0], 0.0),
+                    };
+                    neighbours.push(make_cfg(m, inc.window_frac, level, tail, space));
+                }
+            }
+        }
+        if let Some(p) = posf(inc.window_frac, &space.window_fracs) {
+            for q in [p.wrapping_sub(1), p + 1] {
+                if let Some(&w) = space.window_fracs.get(q) {
+                    let (level, tail) = match inc.prealign {
+                        Some(pa) => (pa.level, pa.tail_frac),
+                        None => (space.levels[0], 0.0),
+                    };
+                    neighbours.push(make_cfg(inc.n_subspaces, w, level, tail, space));
+                }
+            }
+        }
+        for &tail in &space.tail_fracs {
+            for &level in &space.levels {
+                neighbours.push(make_cfg(inc.n_subspaces, inc.window_frac, level, tail, space));
+            }
+        }
+        for cfg in neighbours.into_iter().take(budget.saturating_sub(evaluated)) {
+            try_cfg(cfg, &mut evaluated, &mut best, &mut seen);
+        }
+    }
+
+    let (cv_err, config) = best.expect("no feasible configuration in search space");
+    SearchResult { config, cv_error: cv_err, evaluated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ucr_like::ucr_like_by_name;
+
+    #[test]
+    fn finds_feasible_config() {
+        let tt = ucr_like_by_name("SpikePosition", 29).unwrap();
+        let space = SearchSpace {
+            n_subspaces: vec![2, 4],
+            window_fracs: vec![0.1, 0.3],
+            levels: vec![2],
+            tail_fracs: vec![0.0, 0.15],
+            codebook_size: 16,
+        };
+        let res = tune_pq(&tt.train, &space, 6, 2, 7);
+        assert!(res.evaluated >= 3, "evaluated={}", res.evaluated);
+        assert!((0.0..=1.0).contains(&res.cv_error));
+        assert!(space.n_subspaces.contains(&res.config.n_subspaces));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let tt = ucr_like_by_name("Chirp", 31).unwrap();
+        let space = SearchSpace {
+            n_subspaces: vec![2, 4],
+            window_fracs: vec![0.2],
+            levels: vec![1],
+            tail_fracs: vec![0.0],
+            codebook_size: 8,
+        };
+        let a = tune_pq(&tt.train, &space, 4, 2, 3);
+        let b = tune_pq(&tt.train, &space, 4, 2, 3);
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.cv_error, b.cv_error);
+    }
+
+    #[test]
+    fn cv_error_in_range() {
+        let tt = ucr_like_by_name("BumpCount", 37).unwrap();
+        let cfg = PqConfig { n_subspaces: 2, codebook_size: 8, ..Default::default() };
+        let err = cv_error(&tt.train, &cfg, 2, 1).unwrap();
+        assert!((0.0..=1.0).contains(&err));
+    }
+}

@@ -1,0 +1,256 @@
+//! Statistical comparison of algorithms over multiple datasets: Friedman
+//! test + Nemenyi post-hoc critical difference (paper §5, "Statistical
+//! analysis"), plus the paired helpers the report tables need.
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Average ranks per algorithm: `scores[d][a]` is algorithm `a`'s score
+/// on dataset `d`, *lower is better*. Ties get the average rank.
+pub fn average_ranks(scores: &[Vec<f64>]) -> Vec<f64> {
+    let n_algos = scores[0].len();
+    let mut ranks = vec![0.0; n_algos];
+    for row in scores {
+        assert_eq!(row.len(), n_algos);
+        // rank with average tie handling
+        let mut idx: Vec<usize> = (0..n_algos).collect();
+        idx.sort_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap());
+        let mut i = 0;
+        while i < n_algos {
+            let mut j = i;
+            while j + 1 < n_algos && (row[idx[j + 1]] - row[idx[i]]).abs() < 1e-12 {
+                j += 1;
+            }
+            let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+            for &a in idx.iter().take(j + 1).skip(i) {
+                ranks[a] += avg_rank;
+            }
+            i = j + 1;
+        }
+    }
+    for r in ranks.iter_mut() {
+        *r /= scores.len() as f64;
+    }
+    ranks
+}
+
+/// Friedman test over `scores[d][a]` (lower is better). Returns the
+/// chi-square statistic, degrees of freedom and the p-value.
+pub fn friedman_test(scores: &[Vec<f64>]) -> (f64, usize, f64) {
+    let n = scores.len() as f64;
+    let k = scores[0].len() as f64;
+    let ranks = average_ranks(scores);
+    let sum_sq: f64 = ranks.iter().map(|r| (r - (k + 1.0) / 2.0).powi(2)).sum();
+    let chi2 = 12.0 * n / (k * (k + 1.0)) * sum_sq;
+    let dof = scores[0].len() - 1;
+    (chi2, dof, 1.0 - chi2_cdf(chi2, dof as f64))
+}
+
+/// Nemenyi critical difference at α = 0.05 for `k` algorithms over `n`
+/// datasets. Two algorithms differ significantly when their average
+/// ranks differ by more than this.
+pub fn nemenyi_cd_005(k: usize, n: usize) -> f64 {
+    // q_0.05 values (infinite-df studentized range / sqrt(2)), Demšar 2006.
+    const Q05: [f64; 11] = [
+        0.0, 0.0, 1.960, 2.343, 2.569, 2.728, 2.850, 2.949, 3.031, 3.102, 3.164,
+    ];
+    assert!((2..=10).contains(&k), "Nemenyi table covers k in 2..=10");
+    Q05[k] * (k as f64 * (k as f64 + 1.0) / (6.0 * n as f64)).sqrt()
+}
+
+/// Outcome of a pairwise significance check, matching the paper's Table 1
+/// annotations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Significance {
+    /// First algorithm significantly better (lower score).
+    FirstBetter,
+    /// Second algorithm significantly better.
+    SecondBetter,
+    /// No significant difference.
+    None,
+}
+
+/// Pairwise Nemenyi check between algorithms `a` and `b` of a score
+/// matrix (lower = better).
+pub fn pairwise_significance(scores: &[Vec<f64>], a: usize, b: usize) -> Significance {
+    let k = scores[0].len();
+    let n = scores.len();
+    let ranks = average_ranks(scores);
+    let cd = nemenyi_cd_005(k, n);
+    let diff = ranks[a] - ranks[b];
+    if diff.abs() <= cd {
+        Significance::None
+    } else if diff < 0.0 {
+        Significance::FirstBetter
+    } else {
+        Significance::SecondBetter
+    }
+}
+
+/// Regularized lower incomplete gamma P(s, x) via series / continued
+/// fraction (Numerical Recipes style) — powers the chi-square CDF.
+fn gamma_p(s: f64, x: f64) -> f64 {
+    if x < 0.0 || s <= 0.0 {
+        return 0.0;
+    }
+    if x == 0.0 {
+        return 0.0;
+    }
+    let ln_gamma_s = ln_gamma(s);
+    if x < s + 1.0 {
+        // series expansion
+        let mut sum = 1.0 / s;
+        let mut term = sum;
+        let mut a = s;
+        for _ in 0..500 {
+            a += 1.0;
+            term *= x / a;
+            sum += term;
+            if term.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        sum * (-x + s * x.ln() - ln_gamma_s).exp()
+    } else {
+        // continued fraction for Q, then P = 1 - Q
+        let mut b = x + 1.0 - s;
+        let mut c = 1.0 / 1e-300;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - s);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < 1e-300 {
+                d = 1e-300;
+            }
+            c = b + an / c;
+            if c.abs() < 1e-300 {
+                c = 1e-300;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-15 {
+                break;
+            }
+        }
+        1.0 - (-x + s * x.ln() - ln_gamma_s).exp() * h
+    }
+}
+
+/// Lanczos log-gamma.
+fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 6] = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    let mut ser = 1.000000000190015;
+    for g in G {
+        y += 1.0;
+        ser += g / y;
+    }
+    -tmp + (2.5066282746310005 * ser / x).ln()
+}
+
+/// Chi-square CDF with `k` degrees of freedom.
+pub fn chi2_cdf(x: f64, k: f64) -> f64 {
+    gamma_p(k / 2.0, x / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_simple() {
+        // algo 0 always best, algo 2 always worst
+        let scores = vec![
+            vec![0.1, 0.2, 0.3],
+            vec![0.0, 0.5, 0.9],
+            vec![0.2, 0.3, 0.4],
+        ];
+        let r = average_ranks(&scores);
+        assert_eq!(r, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn tied_ranks_averaged() {
+        let scores = vec![vec![0.1, 0.1, 0.3]];
+        let r = average_ranks(&scores);
+        assert_eq!(r, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn chi2_cdf_known_values() {
+        // chi2 with 1 dof: CDF(3.841) ≈ 0.95
+        assert!((chi2_cdf(3.841, 1.0) - 0.95).abs() < 1e-3);
+        // chi2 with 5 dof: CDF(11.07) ≈ 0.95
+        assert!((chi2_cdf(11.07, 5.0) - 0.95).abs() < 1e-3);
+        assert!(chi2_cdf(0.0, 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn friedman_detects_consistent_ordering() {
+        // 20 datasets where algo 0 always clearly wins
+        let scores: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![0.1, 0.3 + 0.001 * i as f64, 0.5])
+            .collect();
+        let (chi2, dof, p) = friedman_test(&scores);
+        assert_eq!(dof, 2);
+        assert!(chi2 > 30.0);
+        assert!(p < 0.001, "p={p}");
+    }
+
+    #[test]
+    fn friedman_no_difference() {
+        // alternate which algo wins → no consistent ranking
+        let scores: Vec<Vec<f64>> = (0..20)
+            .map(|i| {
+                if i % 2 == 0 {
+                    vec![0.1, 0.2]
+                } else {
+                    vec![0.2, 0.1]
+                }
+            })
+            .collect();
+        let (_, _, p) = friedman_test(&scores);
+        assert!(p > 0.5, "p={p}");
+    }
+
+    #[test]
+    fn nemenyi_cd_reference_value() {
+        // Demšar's example: k=5, N=30 → CD ≈ 1.102... q=2.728
+        let cd = nemenyi_cd_005(5, 30);
+        assert!((cd - 2.728 * (5.0 * 6.0 / 180.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pairwise_significance_directions() {
+        let scores: Vec<Vec<f64>> = (0..40).map(|_| vec![0.1, 0.9]).collect();
+        assert_eq!(pairwise_significance(&scores, 0, 1), Significance::FirstBetter);
+        assert_eq!(pairwise_significance(&scores, 1, 0), Significance::SecondBetter);
+        let even: Vec<Vec<f64>> = (0..40)
+            .map(|i| if i % 2 == 0 { vec![0.1, 0.9] } else { vec![0.9, 0.1] })
+            .collect();
+        assert_eq!(pairwise_significance(&even, 0, 1), Significance::None);
+    }
+}

@@ -1,0 +1,64 @@
+//! # PQDTW — Elastic Product Quantization for Time Series
+//!
+//! A production-grade reproduction of *"Elastic Product Quantization for
+//! Time Series"* (Robberechts, Meert & Davis, 2022) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper generalizes product quantization (PQ) from the Euclidean
+//! metric to Dynamic Time Warping: time series are partitioned into `M`
+//! subspaces, each subspace is vector-quantized against a DBA-k-means
+//! codebook under DTW, and distances between series are then approximated
+//! in `O(M)` table lookups (symmetric) or `O(K·(D/M)²)` once per query
+//! (asymmetric). A MODWT-based pre-alignment step moves subspace
+//! boundaries onto local structure so the segmentation does not cut
+//! through warped features.
+//!
+//! ## Crate layout
+//!
+//! - [`core`] — time-series containers, preprocessing, PRNG, condensed
+//!   distance matrices.
+//! - [`distance`] — the elastic-measure substrate: DTW (full / banded /
+//!   early-abandoned / pruned), Euclidean, SBD (+ FFT), Keogh envelopes
+//!   and the lower-bound cascade.
+//! - [`repr`] — baseline symbolic/segment representations (PAA, SAX).
+//! - [`wavelet`] — Haar MODWT and structure-aware segmentation.
+//! - [`pq`] — the paper's contribution: codebook learning (DBA k-means),
+//!   LB-cascade encoding, symmetric/asymmetric distances, pre-alignment.
+//! - [`nn`] — 1-NN classification over any measure, with LB pruning.
+//! - [`cluster`] — agglomerative hierarchical clustering + Rand/ARI.
+//! - [`data`] — synthetic workloads (random walks, a UCR-like suite) and
+//!   a UCR `.tsv` loader.
+//! - [`eval`] — cross-validation, hyper-parameter search, Friedman /
+//!   Nemenyi statistics, report formatting.
+//! - [`coordinator`] — the serving layer: engine state, dynamic batcher,
+//!   threaded worker service, metrics.
+//! - [`runtime`] — (feature `pjrt`) loads AOT-lowered HLO artifacts
+//!   produced by `python/compile/aot.py` and executes them via PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use pqdtw::data::random_walk::RandomWalks;
+//! use pqdtw::pq::quantizer::{PqConfig, ProductQuantizer};
+//!
+//! let train = RandomWalks::new(7).generate(64, 128); // 64 walks, length 128
+//! let cfg = PqConfig { n_subspaces: 4, codebook_size: 16, ..Default::default() };
+//! let pq = ProductQuantizer::train(&train, &cfg, 7).unwrap();
+//! let codes = pq.encode_dataset(&train);
+//! let d = pq.symmetric_distance(codes.code(0), codes.code(1));
+//! assert!(d >= 0.0);
+//! ```
+
+pub mod cli;
+pub mod core;
+pub mod distance;
+pub mod repr;
+pub mod wavelet;
+pub mod pq;
+pub mod nn;
+pub mod cluster;
+pub mod data;
+pub mod eval;
+pub mod coordinator;
+pub mod runtime;
+pub mod testutil;

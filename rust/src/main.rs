@@ -1,0 +1,230 @@
+//! `pqdtw` — leader binary: train / encode / query / cluster / serve /
+//! selftest over the PQDTW library.
+//!
+//! Examples:
+//!   pqdtw selftest
+//!   pqdtw train --dataset CBF --subspaces 4 --codebook 32
+//!   pqdtw query --dataset CBF --mode asymmetric --queries 50
+//!   pqdtw cluster --dataset Waveforms --linkage complete
+//!   pqdtw serve --workers 4 --requests 200
+//!   pqdtw info
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use pqdtw::cluster::{agglomerative, compact_labels, rand_index, Linkage};
+use pqdtw::coordinator::{Engine, Request, Response, Service, ServiceConfig};
+use pqdtw::core::matrix::CondensedMatrix;
+use pqdtw::data::ucr_like::{ucr_like_by_name, TrainTest};
+use pqdtw::nn::knn::{nn_classify_pq, nn_classify_raw, PqQueryMode};
+use pqdtw::distance::measure::Measure;
+use pqdtw::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
+
+use pqdtw::cli::Args;
+
+fn load_dataset(name: &str, seed: u64) -> Result<TrainTest> {
+    // Real UCR archive takes precedence when available.
+    if let Ok(dir) = std::env::var("UCR_ARCHIVE_DIR") {
+        let dir = std::path::PathBuf::from(dir);
+        if dir.join(name).exists() {
+            return pqdtw::data::ucr_loader::load_ucr_dataset(&dir, name);
+        }
+    }
+    ucr_like_by_name(name, seed)
+        .with_context(|| format!("unknown dataset '{name}' (and no UCR_ARCHIVE_DIR)"))
+}
+
+fn config_from_args(a: &Args) -> PqConfig {
+    let tail: f64 = a.get_parsed("tail", 0.0f64);
+    PqConfig {
+        n_subspaces: a.get_parsed("subspaces", 4usize),
+        codebook_size: a.get_parsed("codebook", 64usize),
+        window_frac: a.get_parsed("window", 0.1f64),
+        metric: if a.get("metric", "dtw") == "ed" { PqMetric::Euclidean } else { PqMetric::Dtw },
+        prealign: (tail > 0.0).then(|| PrealignConfig {
+            level: a.get_parsed("level", 2usize),
+            tail_frac: tail,
+        }),
+        kmeans_iters: a.get_parsed("kmeans-iters", 8usize),
+        dba_iters: a.get_parsed("dba-iters", 3usize),
+        train_subsample: None,
+    }
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let seed = a.get_parsed("seed", 7u64);
+    let tt = load_dataset(&a.get("dataset", "CBF"), seed)?;
+    let cfg = config_from_args(a);
+    let t0 = Instant::now();
+    let pq = ProductQuantizer::train(&tt.train, &cfg, seed)?;
+    let train_t = t0.elapsed();
+    let t0 = Instant::now();
+    let enc = pq.encode_dataset(&tt.train);
+    let enc_t = t0.elapsed();
+    let mm = pq.memory_model();
+    println!("dataset        : {} (n={}, D={})", tt.name, tt.train.n_series(), tt.train.len);
+    println!("codebook       : M={} K={} L={} window={:?}", cfg.n_subspaces, pq.codebook.k, pq.codebook.sub_len, pq.codebook.window);
+    println!("train time     : {train_t:?}");
+    println!("encode time    : {enc_t:?} ({} series)", enc.n());
+    println!("compression    : {:.1}x ({} -> {} bits/series)", mm.compression_factor, mm.raw_bits_per_series, mm.code_bits_per_series);
+    println!("aux memory     : {:.2} MB", mm.aux_bits() as f64 / 8.0 / 1024.0 / 1024.0);
+    let st = enc.stats;
+    println!(
+        "encode pruning : {} candidates, {:.1}% kim, {:.1}% keogh, {:.1}% dtw ({:.1}% abandoned)",
+        st.candidates(),
+        100.0 * st.pruned_kim as f64 / st.candidates().max(1) as f64,
+        100.0 * st.pruned_keogh as f64 / st.candidates().max(1) as f64,
+        100.0 * st.dtw_evals as f64 / st.candidates().max(1) as f64,
+        100.0 * st.dtw_abandoned as f64 / st.dtw_evals.max(1) as f64,
+    );
+    Ok(())
+}
+
+fn cmd_query(a: &Args) -> Result<()> {
+    let seed = a.get_parsed("seed", 7u64);
+    let tt = load_dataset(&a.get("dataset", "CBF"), seed)?;
+    let cfg = config_from_args(a);
+    let mode = if a.get("mode", "asymmetric") == "symmetric" {
+        PqQueryMode::Symmetric
+    } else {
+        PqQueryMode::Asymmetric
+    };
+    let pq = ProductQuantizer::train(&tt.train, &cfg, seed)?;
+    let enc = pq.encode_dataset(&tt.train);
+    let n_queries = a.get_parsed("queries", tt.test.n_series());
+    let test = tt.test.subset(&(0..n_queries.min(tt.test.n_series())).collect::<Vec<_>>());
+    let t0 = Instant::now();
+    let (err, _) = nn_classify_pq(&pq, &enc, &test, mode);
+    let dt = t0.elapsed();
+    let (err_ed, _) = nn_classify_raw(&tt.train, &test, Measure::Euclidean);
+    println!("dataset   : {}", tt.name);
+    println!("mode      : {mode:?}");
+    println!("1NN error : PQDTW {err:.4} | ED {err_ed:.4}");
+    println!("query time: {dt:?} ({} queries)", test.n_series());
+    Ok(())
+}
+
+fn cmd_cluster(a: &Args) -> Result<()> {
+    let seed = a.get_parsed("seed", 7u64);
+    let tt = load_dataset(&a.get("dataset", "Waveforms"), seed)?;
+    let cfg = config_from_args(a);
+    let linkage = match a.get("linkage", "complete").as_str() {
+        "single" => Linkage::Single,
+        "average" => Linkage::Average,
+        _ => Linkage::Complete,
+    };
+    let pq = ProductQuantizer::train(&tt.train, &cfg, seed)?;
+    let enc = pq.encode_dataset(&tt.test);
+    let n = tt.test.n_series();
+    let t0 = Instant::now();
+    let dist = CondensedMatrix::build(n, |i, j| pq.patched_distance(&enc, i, j));
+    let dend = agglomerative(&dist, linkage);
+    let k = tt.test.classes().len();
+    let labels = dend.cut(k);
+    let dt = t0.elapsed();
+    let truth = compact_labels(&tt.test.labels);
+    println!("dataset : {}", tt.name);
+    println!("linkage : {linkage:?}, k={k}");
+    println!("RI      : {:.4}", rand_index(&labels, &truth));
+    println!("time    : {dt:?} (n={n})");
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let seed = a.get_parsed("seed", 7u64);
+    let tt = load_dataset(&a.get("dataset", "SpikePosition"), seed)?;
+    let cfg = config_from_args(a);
+    let engine = Arc::new(Engine::build(&tt.train, &cfg, seed)?);
+    let svc = Service::start(
+        engine,
+        ServiceConfig {
+            n_workers: a.get_parsed("workers", 2usize),
+            batcher: Default::default(),
+        },
+    );
+    let n_requests = a.get_parsed("requests", 100usize);
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let q = tt.test.row(i % tt.test.n_series()).to_vec();
+        match svc.call(Request::NnQuery { series: q, mode: PqQueryMode::Symmetric }) {
+            Response::Nn { .. } => {}
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+    let dt = t0.elapsed();
+    let m = svc.shutdown();
+    println!("served {} requests in {dt:?} ({:.0} req/s)", m.requests, m.requests as f64 / dt.as_secs_f64());
+    println!("mean latency {:.0}µs, p50 ≤{}µs, p99 ≤{}µs, mean batch {:.1}", m.mean_latency_us, m.percentile_us(0.5), m.percentile_us(0.99), m.mean_batch_size);
+    Ok(())
+}
+
+fn cmd_selftest(a: &Args) -> Result<()> {
+    let seed = a.get_parsed("seed", 3u64);
+    println!("[1/4] training + encoding on CBF…");
+    let tt = load_dataset("CBF", seed)?;
+    let cfg = PqConfig { n_subspaces: 4, codebook_size: 16, window_frac: 0.2, ..Default::default() };
+    let pq = ProductQuantizer::train(&tt.train, &cfg, seed)?;
+    let enc = pq.encode_dataset(&tt.train);
+    anyhow::ensure!(enc.n() == tt.train.n_series(), "encode count");
+
+    println!("[2/4] 1-NN sanity…");
+    let (err, _) = nn_classify_pq(&pq, &enc, &tt.test, PqQueryMode::Asymmetric);
+    anyhow::ensure!(err < 0.67, "PQDTW no better than chance: {err}");
+
+    println!("[3/4] service round-trip…");
+    let engine = Arc::new(Engine::build(&tt.train, &cfg, seed)?);
+    let svc = Service::start(engine, ServiceConfig::default());
+    let r = svc.call(Request::NnQuery { series: tt.test.row(0).to_vec(), mode: PqQueryMode::Symmetric });
+    anyhow::ensure!(matches!(r, Response::Nn { .. }), "service response");
+    svc.shutdown();
+
+    #[cfg(feature = "pjrt")]
+    {
+        println!("[4/4] PJRT artifact execution…");
+        let dir = pqdtw::runtime::artifacts::Manifest::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            use pqdtw::data::random_walk::RandomWalks;
+            let data = RandomWalks::new(97).generate(32, 100);
+            let cfg = PqConfig { n_subspaces: 4, codebook_size: 16, window_frac: 0.2, ..Default::default() };
+            let pq = ProductQuantizer::train(&data, &cfg, 11)?;
+            let manifest = pqdtw::runtime::artifacts::Manifest::load(&dir)?;
+            let mut enc = pqdtw::runtime::encoder::PjrtEncoder::new(&pq, &manifest)?;
+            let codes = enc.encode(&pq, data.row(0))?;
+            anyhow::ensure!(codes.len() == 4, "pjrt encode");
+        } else {
+            println!("      (skipped: no artifacts/ — run `make artifacts`)");
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("[4/4] PJRT check skipped (build with --features pjrt)");
+
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("pqdtw {} — Elastic Product Quantization for Time Series", env!("CARGO_PKG_VERSION"));
+    println!("features : pjrt={}", cfg!(feature = "pjrt"));
+    println!("datasets : synthetic UCR-like suite of 16 (or UCR_ARCHIVE_DIR)");
+    let dir = pqdtw::runtime::artifacts::Manifest::default_dir();
+    match pqdtw::runtime::artifacts::Manifest::load(&dir) {
+        Ok(m) => println!("artifacts: {} in {}", m.specs.len(), dir.display()),
+        Err(_) => println!("artifacts: none (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "query" => cmd_query(&args),
+        "cluster" => cmd_cluster(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(&args),
+        "info" | "" => cmd_info(),
+        other => bail!("unknown command '{other}' (train|query|cluster|serve|selftest|info)"),
+    }
+}

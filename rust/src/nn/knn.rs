@@ -1,0 +1,323 @@
+//! 1-NN search over raw measures (with lower-bound pruning and early
+//! abandoning, matching the paper's experimental settings: Keogh lower
+//! bound for DTW/cDTW, PrunedDTW for the unconstrained case) and over PQ
+//! codes (symmetric and asymmetric modes).
+
+use crate::core::series::Dataset;
+use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
+use crate::distance::envelope::Envelope;
+use crate::distance::euclidean::{euclidean_ea_sq, euclidean_sq};
+use crate::distance::lower_bounds::{lb_keogh_sq, lb_kim_sq};
+use crate::distance::measure::Measure;
+use crate::distance::pruned_dtw::pruned_dtw_sq;
+use crate::distance::sbd::sbd;
+use crate::pq::quantizer::{EncodedDataset, ProductQuantizer};
+use crate::repr::sax::SaxEncoder;
+
+/// Result of a nearest-neighbour query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NnIndex {
+    /// Index of the nearest training series.
+    pub index: usize,
+    /// Distance to it.
+    pub distance: f64,
+}
+
+/// A prepared raw-measure 1-NN searcher: envelopes (for DTW-family
+/// measures) are built once over the training set, reversed-role style.
+pub struct RawNnSearcher<'a> {
+    train: &'a Dataset,
+    measure: Measure,
+    window: Option<usize>,
+    envelopes: Vec<Envelope>,
+}
+
+impl<'a> RawNnSearcher<'a> {
+    /// Prepare a searcher (precomputes envelopes for cDTW).
+    pub fn new(train: &'a Dataset, measure: Measure) -> Self {
+        let window = measure.window(train.len);
+        let envelopes = match measure {
+            Measure::CDtw { .. } => {
+                let w = window.unwrap();
+                (0..train.n_series())
+                    .map(|i| Envelope::new(train.row(i), w))
+                    .collect()
+            }
+            _ => Vec::new(),
+        };
+        RawNnSearcher { train, measure, window, envelopes }
+    }
+
+    /// Nearest neighbour of `q` in the training set.
+    pub fn query(&self, q: &[f64]) -> NnIndex {
+        let n = self.train.n_series();
+        let mut scratch = DtwScratch::new(self.train.len);
+        let mut best_sq = f64::INFINITY;
+        let mut best_i = 0usize;
+        match self.measure {
+            Measure::Euclidean => {
+                for i in 0..n {
+                    let d = euclidean_ea_sq(q, self.train.row(i), best_sq);
+                    if d < best_sq {
+                        best_sq = d;
+                        best_i = i;
+                    }
+                }
+            }
+            Measure::Dtw => {
+                // PrunedDTW: the running best-so-far is the upper bound.
+                for i in 0..n {
+                    let r = self.train.row(i);
+                    // seed the bound with ED on the first candidate
+                    let ub = if best_sq.is_infinite() { euclidean_sq(q, r) } else { best_sq };
+                    let d = pruned_dtw_sq(q, r, None, ub);
+                    let d = if d.is_finite() { d } else { ub };
+                    if d < best_sq {
+                        best_sq = d;
+                        best_i = i;
+                    }
+                }
+            }
+            Measure::CDtw { .. } => {
+                // LB_Kim → reversed LB_Keogh cascade, then early-abandoned
+                // DTW (paper: "Keogh lower bound for early stopping").
+                for i in 0..n {
+                    let r = self.train.row(i);
+                    if lb_kim_sq(q, r) >= best_sq {
+                        continue;
+                    }
+                    if lb_keogh_sq(q, &self.envelopes[i], best_sq) >= best_sq {
+                        continue;
+                    }
+                    let d = dtw_sq_scratch(q, r, self.window, best_sq, &mut scratch);
+                    if d < best_sq {
+                        best_sq = d;
+                        best_i = i;
+                    }
+                }
+            }
+            Measure::Sbd => {
+                for i in 0..n {
+                    let d = sbd(q, self.train.row(i));
+                    let d = d * d; // keep comparisons in squared space
+                    if d < best_sq {
+                        best_sq = d;
+                        best_i = i;
+                    }
+                }
+            }
+            Measure::Sax { .. } => {
+                // Representation-based; handled by `nn_classify_sax`.
+                for i in 0..n {
+                    let d = self.measure.dist(q, self.train.row(i));
+                    let d = d * d;
+                    if d < best_sq {
+                        best_sq = d;
+                        best_i = i;
+                    }
+                }
+            }
+        }
+        NnIndex { index: best_i, distance: best_sq.sqrt() }
+    }
+}
+
+/// 1-NN classification error of `measure` on a train/test split.
+pub fn nn_classify_raw(train: &Dataset, test: &Dataset, measure: Measure) -> (f64, Vec<i64>) {
+    assert!(train.is_labeled() && test.is_labeled());
+    let searcher = RawNnSearcher::new(train, measure);
+    let mut errors = 0usize;
+    let mut preds = Vec::with_capacity(test.n_series());
+    for i in 0..test.n_series() {
+        let nn = searcher.query(test.row(i));
+        let pred = train.label(nn.index);
+        preds.push(pred);
+        if pred != test.label(i) {
+            errors += 1;
+        }
+    }
+    (errors as f64 / test.n_series() as f64, preds)
+}
+
+/// SAX 1-NN: words precomputed for the training set once.
+pub fn nn_classify_sax(
+    train: &Dataset,
+    test: &Dataset,
+    alphabet: usize,
+    seg_frac: f64,
+) -> (f64, Vec<i64>) {
+    let enc = SaxEncoder::new(train.len, alphabet, seg_frac);
+    let train_words: Vec<Vec<u8>> =
+        (0..train.n_series()).map(|i| enc.encode(train.row(i))).collect();
+    let mut errors = 0usize;
+    let mut preds = Vec::with_capacity(test.n_series());
+    for i in 0..test.n_series() {
+        let qw = enc.encode(test.row(i));
+        let mut best = f64::INFINITY;
+        let mut best_j = 0usize;
+        for (j, tw) in train_words.iter().enumerate() {
+            let d = enc.mindist(&qw, tw);
+            if d < best {
+                best = d;
+                best_j = j;
+            }
+        }
+        let pred = train.label(best_j);
+        preds.push(pred);
+        if pred != test.label(i) {
+            errors += 1;
+        }
+    }
+    (errors as f64 / test.n_series() as f64, preds)
+}
+
+/// PQ query mode (paper §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PqQueryMode {
+    /// Encode the query, then `O(M)` LUT lookups per database item.
+    Symmetric,
+    /// Build the `M×K` query table with real DTW, then `O(M)` lookups —
+    /// lower distortion, recommended for 1-NN (paper §4.1).
+    Asymmetric,
+}
+
+/// 1-NN classification with a trained PQ over an encoded training set.
+pub fn nn_classify_pq(
+    pq: &ProductQuantizer,
+    enc_train: &EncodedDataset,
+    test: &Dataset,
+    mode: PqQueryMode,
+) -> (f64, Vec<i64>) {
+    assert!(!enc_train.labels.is_empty() && test.is_labeled());
+    let n = enc_train.n();
+    let mut errors = 0usize;
+    let mut preds = Vec::with_capacity(test.n_series());
+    for i in 0..test.n_series() {
+        let q = test.row(i);
+        let mut best = f64::INFINITY;
+        let mut best_j = 0usize;
+        match mode {
+            PqQueryMode::Symmetric => {
+                let (codes, _, _) = pq.encode(q);
+                for j in 0..n {
+                    let d = crate::pq::distance::symmetric_sq(
+                        &pq.codebook,
+                        &codes,
+                        enc_train.code(j),
+                    );
+                    if d < best {
+                        best = d;
+                        best_j = j;
+                    }
+                }
+            }
+            PqQueryMode::Asymmetric => {
+                let table = pq.asymmetric_table(q);
+                for j in 0..n {
+                    let d = crate::pq::distance::asymmetric_sq(
+                        &pq.codebook,
+                        &table,
+                        enc_train.code(j),
+                    );
+                    if d < best {
+                        best = d;
+                        best_j = j;
+                    }
+                }
+            }
+        }
+        let pred = enc_train.labels[best_j];
+        preds.push(pred);
+        if pred != test.label(i) {
+            errors += 1;
+        }
+    }
+    (errors as f64 / test.n_series() as f64, preds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ucr_like::ucr_like_by_name;
+    use crate::pq::quantizer::{PqConfig, ProductQuantizer};
+
+    #[test]
+    fn raw_searchers_agree_with_bruteforce() {
+        let tt = ucr_like_by_name("SpikePosition", 11).unwrap();
+        let (train, test) = (&tt.train, &tt.test);
+        for measure in [
+            Measure::Euclidean,
+            Measure::Dtw,
+            Measure::CDtw { window_frac: 0.1 },
+        ] {
+            let searcher = RawNnSearcher::new(train, measure);
+            for i in 0..10 {
+                let q = test.row(i);
+                let fast = searcher.query(q);
+                // brute force with the plain measure
+                let mut best = f64::INFINITY;
+                let mut best_j = 0;
+                for j in 0..train.n_series() {
+                    let d = measure.dist(q, train.row(j));
+                    if d < best {
+                        best = d;
+                        best_j = j;
+                    }
+                }
+                assert!(
+                    (fast.distance - best).abs() < 1e-6,
+                    "{measure:?}: {} vs {}",
+                    fast.distance,
+                    best
+                );
+                if fast.index != best_j {
+                    // tie: distances must match
+                    assert!((fast.distance - best).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_beats_chance_on_phase_dataset() {
+        let tt = ucr_like_by_name("SpikePosition", 13).unwrap();
+        let (err_dtw, _) = nn_classify_raw(&tt.train, &tt.test, Measure::Dtw);
+        assert!(err_dtw < 0.3, "DTW err={err_dtw}");
+    }
+
+    #[test]
+    fn pq_modes_classify_reasonably() {
+        let tt = ucr_like_by_name("CBF", 17).unwrap();
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 24,
+            window_frac: 0.2,
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&tt.train, &cfg, 5).unwrap();
+        let enc = pq.encode_dataset(&tt.train);
+        let (err_sym, preds_sym) = nn_classify_pq(&pq, &enc, &tt.test, PqQueryMode::Symmetric);
+        let (err_asym, _) = nn_classify_pq(&pq, &enc, &tt.test, PqQueryMode::Asymmetric);
+        assert_eq!(preds_sym.len(), tt.test.n_series());
+        let chance = 1.0 - 1.0 / 3.0;
+        assert!(err_sym < chance, "sym err={err_sym}");
+        assert!(err_asym < chance, "asym err={err_asym}");
+    }
+
+    #[test]
+    fn sax_classifier_runs() {
+        let tt = ucr_like_by_name("Waveforms", 19).unwrap();
+        let (err, preds) = nn_classify_sax(&tt.train, &tt.test, 4, 0.2);
+        assert_eq!(preds.len(), tt.test.n_series());
+        assert!((0.0..=1.0).contains(&err));
+    }
+
+    #[test]
+    fn perfect_on_self_classification() {
+        // Querying the training set itself: nearest neighbour is the
+        // series itself at distance 0 → error 0.
+        let tt = ucr_like_by_name("Chirp", 23).unwrap();
+        let (err, _) = nn_classify_raw(&tt.train, &tt.train, Measure::Euclidean);
+        assert_eq!(err, 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Nearest-neighbour search and 1-NN classification (paper §4.1).
+
+pub mod ivf;
+pub mod knn;
+
+pub use ivf::IvfIndex;
+pub use knn::{
+    nn_classify_pq, nn_classify_raw, nn_classify_sax, NnIndex, PqQueryMode, RawNnSearcher,
+};

@@ -1,0 +1,199 @@
+//! The trained codebook: per-subspace centroids plus the two precomputed
+//! acceleration structures from Algorithm 1 — the Keogh envelope of every
+//! centroid (for the reversed lower-bound cascade at encode time) and the
+//! `M×K×K` symmetric distance LUT (for O(M) symmetric distances).
+
+use crate::distance::dtw::dtw_sq;
+use crate::distance::envelope::Envelope;
+use crate::distance::euclidean::euclidean_sq;
+
+/// Metric the quantizer operates under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PqMetric {
+    /// Windowed DTW (the paper's PQDTW).
+    Dtw,
+    /// Plain Euclidean (the `PQ_ED` baseline).
+    Euclidean,
+}
+
+/// Trained per-subspace codebooks with precomputed envelopes and LUT.
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    /// Number of subspaces `M`.
+    pub n_subspaces: usize,
+    /// Codebook size `K` (identical across subspaces).
+    pub k: usize,
+    /// Subspace vector length `L`.
+    pub sub_len: usize,
+    /// Quantization warping window (samples) used for encoding, the LUT
+    /// and the envelopes; `None` = unconstrained.
+    pub window: Option<usize>,
+    /// Metric.
+    pub metric: PqMetric,
+    /// Centroids, flat `M × K × L` row-major.
+    pub centroids: Vec<f64>,
+    /// Keogh envelope per centroid (`M × K`), empty for the ED metric.
+    pub envelopes: Vec<Envelope>,
+    /// Squared symmetric distances, flat `M × K × K`.
+    pub lut_sq: Vec<f64>,
+}
+
+impl Codebook {
+    /// Assemble a codebook from per-subspace centroid buffers (each
+    /// `K × L` flat) and precompute envelopes + LUT.
+    pub fn build(
+        per_subspace: Vec<Vec<f64>>,
+        sub_len: usize,
+        window: Option<usize>,
+        metric: PqMetric,
+    ) -> Self {
+        let n_subspaces = per_subspace.len();
+        assert!(n_subspaces > 0);
+        let k = per_subspace[0].len() / sub_len;
+        assert!(per_subspace.iter().all(|c| c.len() == k * sub_len), "ragged codebooks");
+
+        let mut centroids = Vec::with_capacity(n_subspaces * k * sub_len);
+        for c in &per_subspace {
+            centroids.extend_from_slice(c);
+        }
+
+        let mut cb = Codebook {
+            n_subspaces,
+            k,
+            sub_len,
+            window,
+            metric,
+            centroids,
+            envelopes: Vec::new(),
+            lut_sq: vec![0.0; n_subspaces * k * k],
+        };
+        cb.precompute();
+        cb
+    }
+
+    /// Recompute the envelopes and distance LUT (Algorithm 1's
+    /// post-clustering loop).
+    fn precompute(&mut self) {
+        let (m_n, k, l) = (self.n_subspaces, self.k, self.sub_len);
+        // Envelopes: only meaningful under DTW. With window = None the
+        // envelope degenerates to global min/max (still a valid bound).
+        if self.metric == PqMetric::Dtw {
+            let w = self.window.unwrap_or(l);
+            self.envelopes = (0..m_n * k)
+                .map(|i| Envelope::new(&self.centroids[i * l..(i + 1) * l], w))
+                .collect();
+        } else {
+            self.envelopes.clear();
+        }
+        // Symmetric LUT.
+        for m in 0..m_n {
+            for i in 0..k {
+                let ci = self.centroid(m, i).to_vec();
+                for j in (i + 1)..k {
+                    let cj = self.centroid(m, j);
+                    let d = match self.metric {
+                        PqMetric::Dtw => dtw_sq(&ci, cj, self.window),
+                        PqMetric::Euclidean => euclidean_sq(&ci, cj),
+                    };
+                    self.lut_sq[m * k * k + i * k + j] = d;
+                    self.lut_sq[m * k * k + j * k + i] = d;
+                }
+            }
+        }
+    }
+
+    /// Borrow centroid `(m, k)`.
+    #[inline]
+    pub fn centroid(&self, m: usize, k: usize) -> &[f64] {
+        let base = (m * self.k + k) * self.sub_len;
+        &self.centroids[base..base + self.sub_len]
+    }
+
+    /// Envelope of centroid `(m, k)` (DTW metric only).
+    #[inline]
+    pub fn envelope(&self, m: usize, k: usize) -> &Envelope {
+        &self.envelopes[m * self.k + k]
+    }
+
+    /// Squared LUT entry for centroids `i, j` of subspace `m`.
+    #[inline]
+    pub fn lut_sq(&self, m: usize, i: usize, j: usize) -> f64 {
+        self.lut_sq[m * self.k * self.k + i * self.k + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    fn toy_codebook(metric: PqMetric) -> Codebook {
+        let mut rng = Rng::new(179);
+        let (m, k, l) = (3, 4, 8);
+        let per: Vec<Vec<f64>> = (0..m)
+            .map(|_| (0..k * l).map(|_| rng.normal()).collect())
+            .collect();
+        Codebook::build(per, l, Some(2), metric)
+    }
+
+    #[test]
+    fn shapes() {
+        let cb = toy_codebook(PqMetric::Dtw);
+        assert_eq!(cb.n_subspaces, 3);
+        assert_eq!(cb.k, 4);
+        assert_eq!(cb.sub_len, 8);
+        assert_eq!(cb.centroids.len(), 3 * 4 * 8);
+        assert_eq!(cb.envelopes.len(), 12);
+        assert_eq!(cb.lut_sq.len(), 3 * 16);
+    }
+
+    #[test]
+    fn lut_symmetric_zero_diagonal() {
+        let cb = toy_codebook(PqMetric::Dtw);
+        for m in 0..3 {
+            for i in 0..4 {
+                assert_eq!(cb.lut_sq(m, i, i), 0.0);
+                for j in 0..4 {
+                    assert_eq!(cb.lut_sq(m, i, j), cb.lut_sq(m, j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_matches_direct_dtw() {
+        let cb = toy_codebook(PqMetric::Dtw);
+        for m in 0..3 {
+            for i in 0..4 {
+                for j in 0..4 {
+                    let d = dtw_sq(cb.centroid(m, i), cb.centroid(m, j), cb.window);
+                    assert!((cb.lut_sq(m, i, j) - d).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn euclidean_metric_has_no_envelopes() {
+        let cb = toy_codebook(PqMetric::Euclidean);
+        assert!(cb.envelopes.is_empty());
+        for m in 0..3 {
+            let d = euclidean_sq(cb.centroid(m, 0), cb.centroid(m, 1));
+            assert!((cb.lut_sq(m, 0, 1) - d).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn envelopes_bound_centroids() {
+        let cb = toy_codebook(PqMetric::Dtw);
+        for m in 0..3 {
+            for k in 0..4 {
+                let c = cb.centroid(m, k);
+                let e = cb.envelope(m, k);
+                for (i, &v) in c.iter().enumerate() {
+                    assert!(e.lower[i] <= v && v <= e.upper[i]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! DTW Barycenter Averaging (Petitjean, Ketterlin & Gançarski 2011).
+//!
+//! DBA computes a length-`L` average of a set of series under DTW: each
+//! iteration aligns every series to the current average with a full DTW
+//! path, accumulates the values matched to each average coordinate, and
+//! replaces the average by the per-coordinate mean. The barycenter is what
+//! DBA-k-means uses as its centroid update (paper §3.1).
+
+use crate::distance::dtw::dtw_path;
+
+/// One DBA refinement step: align all `series` to `center`, return the
+/// per-coordinate means. `window` constrains the alignment.
+pub fn dba_step(center: &[f64], series: &[&[f64]], window: Option<usize>) -> Vec<f64> {
+    let l = center.len();
+    let mut sums = vec![0.0; l];
+    let mut counts = vec![0usize; l];
+    for s in series {
+        for (ci, sj) in dtw_path(center, s, window) {
+            sums[ci] += s[sj];
+            counts[ci] += 1;
+        }
+    }
+    sums.iter()
+        .zip(counts.iter())
+        .zip(center.iter())
+        .map(|((&s, &c), &old)| if c > 0 { s / c as f64 } else { old })
+        .collect()
+}
+
+/// DBA barycenter of `series`, starting from `init`, with at most
+/// `max_iters` refinement steps (stops early on numerical convergence).
+pub fn dba(init: &[f64], series: &[&[f64]], window: Option<usize>, max_iters: usize) -> Vec<f64> {
+    let mut center = init.to_vec();
+    if series.is_empty() {
+        return center;
+    }
+    for _ in 0..max_iters {
+        let next = dba_step(&center, series, window);
+        let delta: f64 = next
+            .iter()
+            .zip(center.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        center = next;
+        if delta < 1e-12 {
+            break;
+        }
+    }
+    center
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+    use crate::distance::dtw::dtw_sq;
+
+    #[test]
+    fn average_of_identical_series_is_the_series() {
+        let s = [0.0, 1.0, 2.0, 1.0, 0.0];
+        let out = dba(&s, &[&s, &s, &s], None, 5);
+        for (a, b) in out.iter().zip(s.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_series_converges_to_it() {
+        let init = [0.0; 6];
+        let s = [1.0, 2.0, 3.0, 3.0, 2.0, 1.0];
+        let out = dba(&init, &[&s], None, 20);
+        // With one series the barycenter matches its aligned values.
+        assert!(dtw_sq(&out, &s, None) < 1e-9, "out={out:?}");
+    }
+
+    #[test]
+    fn reduces_within_cluster_inertia() {
+        // DBA should (weakly) lower the sum of DTW costs to the members
+        // compared to a random member as center.
+        let mut rng = Rng::new(127);
+        let base: Vec<f64> = (0..24).map(|i| ((i as f64) * 0.4).sin()).collect();
+        let members: Vec<Vec<f64>> = (0..6)
+            .map(|_| base.iter().map(|v| v + 0.1 * rng.normal()).collect())
+            .collect();
+        let refs: Vec<&[f64]> = members.iter().map(|v| v.as_slice()).collect();
+        let inertia = |c: &[f64]| refs.iter().map(|s| dtw_sq(c, s, None)).sum::<f64>();
+        let before = inertia(&members[0]);
+        let center = dba(&members[0], &refs, None, 10);
+        let after = inertia(&center);
+        assert!(after <= before + 1e-9, "after={after} before={before}");
+    }
+
+    #[test]
+    fn respects_window() {
+        let mut rng = Rng::new(131);
+        let members: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..16).map(|_| rng.normal()).collect()).collect();
+        let refs: Vec<&[f64]> = members.iter().map(|v| v.as_slice()).collect();
+        let c = dba(&members[0], &refs, Some(2), 5);
+        assert_eq!(c.len(), 16);
+        assert!(c.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn empty_input_returns_init() {
+        let init = [1.0, 2.0];
+        assert_eq!(dba(&init, &[], None, 3), init.to_vec());
+    }
+}

@@ -1,0 +1,245 @@
+//! Approximate distances between PQ codes (paper §3.3, §4.2).
+//!
+//! - **Symmetric**: both series encoded; distance is `O(M)` LUT lookups.
+//! - **Keogh-patched symmetric**: clustering variant — when two series map
+//!   to the *same* centroid in a subspace the LUT term is 0, which
+//!   collapses distance rankings; the patch substitutes the larger of the
+//!   two stored reversed-Keogh bounds, guaranteed to lie between 0 and the
+//!   true subspace distance.
+//! - **Asymmetric**: only the database side encoded; a query-specific
+//!   `M×K` table is built once with real DTW, then each database distance
+//!   is `O(M)` lookups into it.
+
+use super::codebook::{Codebook, PqMetric};
+use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
+use crate::distance::euclidean::euclidean_sq;
+
+/// Squared symmetric PQ distance between two code words.
+#[inline]
+pub fn symmetric_sq(cb: &Codebook, cx: &[u16], cy: &[u16]) -> f64 {
+    debug_assert_eq!(cx.len(), cb.n_subspaces);
+    debug_assert_eq!(cy.len(), cb.n_subspaces);
+    let k = cb.k;
+    let kk = k * k;
+    let mut s = 0.0;
+    for m in 0..cb.n_subspaces {
+        s += cb.lut_sq[m * kk + cx[m] as usize * k + cy[m] as usize];
+    }
+    s
+}
+
+/// Symmetric PQ distance (`sqrt` of [`symmetric_sq`]).
+#[inline]
+pub fn symmetric(cb: &Codebook, cx: &[u16], cy: &[u16]) -> f64 {
+    symmetric_sq(cb, cx, cy).sqrt()
+}
+
+/// Squared Keogh-patched symmetric distance. `lbx`/`lby` are the stored
+/// per-subspace squared reversed-Keogh bounds of each series to its own
+/// centroid ([`super::encode::SubspaceCode::lb_self_sq`]).
+#[inline]
+pub fn patched_symmetric_sq(
+    cb: &Codebook,
+    cx: &[u16],
+    cy: &[u16],
+    lbx: &[f64],
+    lby: &[f64],
+) -> f64 {
+    let k = cb.k;
+    let kk = k * k;
+    let mut s = 0.0;
+    for m in 0..cb.n_subspaces {
+        let (i, j) = (cx[m] as usize, cy[m] as usize);
+        if i == j {
+            // Same centroid: LUT says 0; replace with the Keogh bound,
+            // which lies in [0, d(x^m, y^m)] — see paper §4.2.
+            s += lbx[m].max(lby[m]);
+        } else {
+            s += cb.lut_sq[m * kk + i * k + j];
+        }
+    }
+    s
+}
+
+/// Keogh-patched symmetric distance.
+#[inline]
+pub fn patched_symmetric(
+    cb: &Codebook,
+    cx: &[u16],
+    cy: &[u16],
+    lbx: &[f64],
+    lby: &[f64],
+) -> f64 {
+    patched_symmetric_sq(cb, cx, cy, lbx, lby).sqrt()
+}
+
+/// Build the asymmetric distance table for a query: `table[m·K + k]` is
+/// the squared distance between the query's `m`-th subspace vector and
+/// centroid `k`. Cost: `M×K` DTW (or ED) evaluations, paid once per query.
+pub fn asymmetric_table(cb: &Codebook, query_subspaces: &[Vec<f64>]) -> Vec<f64> {
+    assert_eq!(query_subspaces.len(), cb.n_subspaces);
+    let mut table = vec![0.0; cb.n_subspaces * cb.k];
+    let mut scratch = DtwScratch::new(cb.sub_len);
+    for (m, q) in query_subspaces.iter().enumerate() {
+        for k in 0..cb.k {
+            let c = cb.centroid(m, k);
+            table[m * cb.k + k] = match cb.metric {
+                PqMetric::Dtw => dtw_sq_scratch(q, c, cb.window, f64::INFINITY, &mut scratch),
+                PqMetric::Euclidean => euclidean_sq(q, c),
+            };
+        }
+    }
+    table
+}
+
+/// Squared asymmetric distance of one encoded database item against a
+/// query table from [`asymmetric_table`].
+#[inline]
+pub fn asymmetric_sq(cb: &Codebook, table: &[f64], codes: &[u16]) -> f64 {
+    let mut s = 0.0;
+    for m in 0..cb.n_subspaces {
+        s += table[m * cb.k + codes[m] as usize];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+    use crate::distance::dtw::dtw_sq;
+    use crate::pq::encode::{encode_subspace, EncodeStats};
+
+    fn toy_codebook() -> Codebook {
+        let mut rng = Rng::new(239);
+        let (m, k, l) = (4, 8, 10);
+        let per: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..k * l).map(|_| rng.normal()).collect()).collect();
+        Codebook::build(per, l, Some(2), PqMetric::Dtw)
+    }
+
+    #[test]
+    fn symmetric_equals_manual_lut_sum() {
+        let cb = toy_codebook();
+        let cx = vec![1u16, 3, 0, 7];
+        let cy = vec![2u16, 3, 5, 7];
+        let mut want = 0.0;
+        for m in 0..4 {
+            want += cb.lut_sq(m, cx[m] as usize, cy[m] as usize);
+        }
+        assert!((symmetric_sq(&cb, &cx, &cy) - want).abs() < 1e-12);
+        assert!((symmetric(&cb, &cx, &cy) - want.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_zero_iff_equal_codes() {
+        let cb = toy_codebook();
+        let cx = vec![1u16, 2, 3, 4];
+        assert_eq!(symmetric_sq(&cb, &cx, &cx), 0.0);
+    }
+
+    #[test]
+    fn patched_distance_breaks_zero_ties() {
+        let cb = toy_codebook();
+        let mut rng = Rng::new(241);
+        let mut scratch = crate::distance::dtw::DtwScratch::new(cb.sub_len);
+        // Two distinct series near the same centroids.
+        let mut make = |rng: &mut Rng| -> (Vec<u16>, Vec<f64>) {
+            let mut codes = Vec::new();
+            let mut lbs = Vec::new();
+            for m in 0..cb.n_subspaces {
+                let base = cb.centroid(m, 3).to_vec();
+                let q: Vec<f64> = base.iter().map(|v| v + 0.05 * rng.normal()).collect();
+                let mut st = EncodeStats::default();
+                let out = encode_subspace(&q, m, &cb, &mut scratch, &mut st);
+                codes.push(out.code);
+                lbs.push(out.lb_self_sq);
+            }
+            (codes, lbs)
+        };
+        let (cx, lbx) = make(&mut rng);
+        let (cy, lby) = make(&mut rng);
+        if cx == cy {
+            let plain = symmetric_sq(&cb, &cx, &cy);
+            let patched = patched_symmetric_sq(&cb, &cx, &cy, &lbx, &lby);
+            assert_eq!(plain, 0.0);
+            assert!(patched >= 0.0);
+            // patched >= plain always
+            assert!(patched >= plain);
+        }
+    }
+
+    #[test]
+    fn patched_equals_plain_when_codes_differ() {
+        let cb = toy_codebook();
+        let cx = vec![0u16, 1, 2, 3];
+        let cy = vec![4u16, 5, 6, 7];
+        let lb = vec![9.9; 4];
+        assert_eq!(
+            patched_symmetric_sq(&cb, &cx, &cy, &lb, &lb),
+            symmetric_sq(&cb, &cx, &cy)
+        );
+    }
+
+    #[test]
+    fn asymmetric_table_matches_direct_dtw() {
+        let cb = toy_codebook();
+        let mut rng = Rng::new(251);
+        let subs: Vec<Vec<f64>> = (0..cb.n_subspaces)
+            .map(|_| (0..cb.sub_len).map(|_| rng.normal()).collect())
+            .collect();
+        let table = asymmetric_table(&cb, &subs);
+        for m in 0..cb.n_subspaces {
+            for k in 0..cb.k {
+                let want = dtw_sq(&subs[m], cb.centroid(m, k), cb.window);
+                assert!((table[m * cb.k + k] - want).abs() < 1e-12);
+            }
+        }
+        // asymmetric distance of a code word = sum of its table cells
+        let codes = vec![1u16, 0, 7, 4];
+        let want: f64 = (0..4).map(|m| table[m * cb.k + codes[m] as usize]).sum();
+        assert!((asymmetric_sq(&cb, &table, &codes) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn asymmetric_tighter_than_symmetric_on_average() {
+        // Asymmetric uses the raw query, so its expected distortion is
+        // lower: check aggregate behaviour on random data.
+        let cb = toy_codebook();
+        let mut rng = Rng::new(257);
+        let mut scratch = crate::distance::dtw::DtwScratch::new(cb.sub_len);
+        let mut sym_err = 0.0;
+        let mut asym_err = 0.0;
+        let trials = 30;
+        for _ in 0..trials {
+            let xs: Vec<Vec<f64>> = (0..cb.n_subspaces)
+                .map(|_| (0..cb.sub_len).map(|_| rng.normal()).collect())
+                .collect();
+            let ys: Vec<Vec<f64>> = (0..cb.n_subspaces)
+                .map(|_| (0..cb.sub_len).map(|_| rng.normal()).collect())
+                .collect();
+            // true subspace-sum distance
+            let truth: f64 = xs
+                .iter()
+                .zip(ys.iter())
+                .map(|(x, y)| dtw_sq(x, y, cb.window))
+                .sum();
+            let mut st = EncodeStats::default();
+            let cx: Vec<u16> = (0..cb.n_subspaces)
+                .map(|m| encode_subspace(&xs[m], m, &cb, &mut scratch, &mut st).code)
+                .collect();
+            let cy: Vec<u16> = (0..cb.n_subspaces)
+                .map(|m| encode_subspace(&ys[m], m, &cb, &mut scratch, &mut st).code)
+                .collect();
+            let sym = symmetric_sq(&cb, &cx, &cy);
+            let table = asymmetric_table(&cb, &xs);
+            let asym = asymmetric_sq(&cb, &table, &cy);
+            sym_err += (sym - truth).abs();
+            asym_err += (asym - truth).abs();
+        }
+        assert!(
+            asym_err <= sym_err,
+            "asym_err={asym_err} should be <= sym_err={sym_err}"
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! Encoding: nearest-centroid search per subspace (Algorithm 2).
+//!
+//! The DTW path runs the reversed lower-bound cascade — LB_Kim (O(1)),
+//! then reversed LB_Keogh against the centroid's *precomputed* envelope
+//! (O(L)) — before paying for an early-abandoned DTW. The Euclidean path
+//! (PQ_ED) uses plain early abandoning. Pruning counters are recorded so
+//! the benchmarks (and the paper's Fig. 5 narrative about LB pruning) can
+//! be verified quantitatively.
+
+use super::codebook::{Codebook, PqMetric};
+use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
+use crate::distance::euclidean::euclidean_ea_sq;
+use crate::distance::lower_bounds::{lb_keogh_sq, lb_kim_sq};
+
+/// Counters describing how much work encoding did.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EncodeStats {
+    /// Candidates pruned by LB_Kim alone.
+    pub pruned_kim: usize,
+    /// Candidates pruned by reversed LB_Keogh.
+    pub pruned_keogh: usize,
+    /// Full (early-abandoned) DTW evaluations.
+    pub dtw_evals: usize,
+    /// Of those, evaluations abandoned before completion.
+    pub dtw_abandoned: usize,
+}
+
+impl EncodeStats {
+    /// Merge counters (for dataset-level aggregation).
+    pub fn merge(&mut self, o: &EncodeStats) {
+        self.pruned_kim += o.pruned_kim;
+        self.pruned_keogh += o.pruned_keogh;
+        self.dtw_evals += o.dtw_evals;
+        self.dtw_abandoned += o.dtw_abandoned;
+    }
+
+    /// Total candidates examined.
+    pub fn candidates(&self) -> usize {
+        self.pruned_kim + self.pruned_keogh + self.dtw_evals
+    }
+}
+
+/// Result of encoding one subspace vector.
+#[derive(Debug, Clone, Copy)]
+pub struct SubspaceCode {
+    /// Winning centroid id.
+    pub code: u16,
+    /// Exact squared distance from the vector to the winning centroid.
+    pub dist_sq: f64,
+    /// Squared reversed LB_Keogh between the vector and the winning
+    /// centroid's envelope — the replacement value used by the Keogh-
+    /// patched symmetric distance in clustering (paper §4.2). 0 under ED.
+    pub lb_self_sq: f64,
+}
+
+/// Nearest-centroid search for subspace `m` of the codebook.
+pub fn encode_subspace(
+    q: &[f64],
+    m: usize,
+    cb: &Codebook,
+    scratch: &mut DtwScratch,
+    stats: &mut EncodeStats,
+) -> SubspaceCode {
+    debug_assert_eq!(q.len(), cb.sub_len);
+    let mut best_sq = f64::INFINITY;
+    let mut best_k = 0usize;
+    match cb.metric {
+        PqMetric::Dtw => {
+            for k in 0..cb.k {
+                let c = cb.centroid(m, k);
+                // Cascade stage 1: LB_Kim, O(1).
+                let kim = lb_kim_sq(q, c);
+                if kim >= best_sq {
+                    stats.pruned_kim += 1;
+                    continue;
+                }
+                // Cascade stage 2: reversed LB_Keogh against the
+                // precomputed centroid envelope, O(L), early-abandoning.
+                let keogh = lb_keogh_sq(q, cb.envelope(m, k), best_sq);
+                if keogh >= best_sq {
+                    stats.pruned_keogh += 1;
+                    continue;
+                }
+                // Full early-abandoned DTW.
+                stats.dtw_evals += 1;
+                let d = dtw_sq_scratch(q, c, cb.window, best_sq, scratch);
+                if d.is_infinite() {
+                    stats.dtw_abandoned += 1;
+                } else if d < best_sq {
+                    best_sq = d;
+                    best_k = k;
+                }
+            }
+        }
+        PqMetric::Euclidean => {
+            for k in 0..cb.k {
+                let c = cb.centroid(m, k);
+                stats.dtw_evals += 1;
+                let d = euclidean_ea_sq(q, c, best_sq);
+                if d.is_infinite() {
+                    stats.dtw_abandoned += 1;
+                } else if d < best_sq {
+                    best_sq = d;
+                    best_k = k;
+                }
+            }
+        }
+    }
+    let lb_self_sq = if cb.metric == PqMetric::Dtw {
+        lb_keogh_sq(q, cb.envelope(m, best_k), f64::INFINITY)
+    } else {
+        0.0
+    };
+    SubspaceCode { code: best_k as u16, dist_sq: best_sq, lb_self_sq }
+}
+
+/// Brute-force nearest centroid (no bounds) — the correctness oracle for
+/// [`encode_subspace`], also used by tests.
+pub fn encode_subspace_bruteforce(q: &[f64], m: usize, cb: &Codebook) -> (u16, f64) {
+    let mut scratch = DtwScratch::new(cb.sub_len);
+    let mut best_sq = f64::INFINITY;
+    let mut best_k = 0usize;
+    for k in 0..cb.k {
+        let c = cb.centroid(m, k);
+        let d = match cb.metric {
+            PqMetric::Dtw => dtw_sq_scratch(q, c, cb.window, f64::INFINITY, &mut scratch),
+            PqMetric::Euclidean => crate::distance::euclidean::euclidean_sq(q, c),
+        };
+        if d < best_sq {
+            best_sq = d;
+            best_k = k;
+        }
+    }
+    (best_k as u16, best_sq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    fn toy_codebook(metric: PqMetric, seed: u64) -> Codebook {
+        let mut rng = Rng::new(seed);
+        let (m, k, l) = (2, 16, 12);
+        let per: Vec<Vec<f64>> = (0..m)
+            .map(|_| {
+                (0..k * l)
+                    .map(|_| {
+                        // random walks so LBs have teeth
+                        rng.normal()
+                    })
+                    .collect()
+            })
+            .collect();
+        Codebook::build(per, l, Some(2), metric)
+    }
+
+    #[test]
+    fn cascade_matches_bruteforce_dtw() {
+        let cb = toy_codebook(PqMetric::Dtw, 191);
+        let mut rng = Rng::new(193);
+        let mut scratch = DtwScratch::new(cb.sub_len);
+        for _ in 0..100 {
+            let q: Vec<f64> = (0..cb.sub_len).map(|_| rng.normal()).collect();
+            for m in 0..cb.n_subspaces {
+                let mut stats = EncodeStats::default();
+                let fast = encode_subspace(&q, m, &cb, &mut scratch, &mut stats);
+                let (slow_k, slow_d) = encode_subspace_bruteforce(&q, m, &cb);
+                assert!(
+                    (fast.dist_sq - slow_d).abs() < 1e-9,
+                    "dist mismatch: {} vs {}",
+                    fast.dist_sq,
+                    slow_d
+                );
+                // Ties can legitimately differ in id; distances must agree.
+                if fast.code != slow_k {
+                    assert!((fast.dist_sq - slow_d).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cascade_matches_bruteforce_euclidean() {
+        let cb = toy_codebook(PqMetric::Euclidean, 197);
+        let mut rng = Rng::new(199);
+        let mut scratch = DtwScratch::new(cb.sub_len);
+        for _ in 0..50 {
+            let q: Vec<f64> = (0..cb.sub_len).map(|_| rng.normal()).collect();
+            let mut stats = EncodeStats::default();
+            let fast = encode_subspace(&q, 0, &cb, &mut scratch, &mut stats);
+            let (_, slow_d) = encode_subspace_bruteforce(&q, 0, &cb);
+            assert!((fast.dist_sq - slow_d).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pruning_actually_happens() {
+        let cb = toy_codebook(PqMetric::Dtw, 211);
+        let mut rng = Rng::new(223);
+        let mut scratch = DtwScratch::new(cb.sub_len);
+        let mut stats = EncodeStats::default();
+        for _ in 0..50 {
+            let q: Vec<f64> = (0..cb.sub_len).map(|_| rng.normal()).collect();
+            encode_subspace(&q, 0, &cb, &mut scratch, &mut stats);
+        }
+        assert_eq!(stats.candidates(), 50 * cb.k);
+        assert!(
+            stats.pruned_kim + stats.pruned_keogh > 0,
+            "no LB pruning at all: {stats:?}"
+        );
+        assert!(stats.dtw_evals < 50 * cb.k, "no candidate ever pruned");
+    }
+
+    #[test]
+    fn exact_centroid_encodes_to_itself() {
+        let cb = toy_codebook(PqMetric::Dtw, 227);
+        let mut scratch = DtwScratch::new(cb.sub_len);
+        for m in 0..cb.n_subspaces {
+            for k in 0..cb.k {
+                let q = cb.centroid(m, k).to_vec();
+                let mut stats = EncodeStats::default();
+                let out = encode_subspace(&q, m, &cb, &mut scratch, &mut stats);
+                assert!(out.dist_sq < 1e-12);
+                // The winner must be a centroid at distance 0 (could tie).
+                let d = crate::distance::dtw::dtw_sq(&q, cb.centroid(m, out.code as usize), cb.window);
+                assert!(d < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn lb_self_is_lower_bound_of_dist() {
+        let cb = toy_codebook(PqMetric::Dtw, 229);
+        let mut rng = Rng::new(233);
+        let mut scratch = DtwScratch::new(cb.sub_len);
+        for _ in 0..50 {
+            let q: Vec<f64> = (0..cb.sub_len).map(|_| rng.normal()).collect();
+            let mut stats = EncodeStats::default();
+            let out = encode_subspace(&q, 1, &cb, &mut scratch, &mut stats);
+            assert!(out.lb_self_sq <= out.dist_sq + 1e-9);
+        }
+    }
+}

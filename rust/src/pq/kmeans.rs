@@ -1,0 +1,339 @@
+//! k-means over subspace vectors with pluggable geometry:
+//!
+//! - **DBA k-means** (paper §3.1): DTW assignment + DTW-barycenter update,
+//!   used to learn the PQDTW codebook;
+//! - **Euclidean k-means**: lock-step assignment + arithmetic-mean update,
+//!   used by the `PQ_ED` baseline.
+//!
+//! Initialization is k-means++ under the chosen metric. Empty clusters are
+//! re-seeded from the member of the most populous cluster farthest from
+//! its centroid (a standard fix that keeps exactly `K` codewords).
+
+use crate::core::rng::Rng;
+use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
+use crate::distance::euclidean::euclidean_sq;
+use crate::pq::dba::dba;
+
+/// Metric/update geometry for the clustering.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KmeansGeometry {
+    /// DTW assignment (optional band, in samples) + DBA update.
+    Dtw { window: Option<usize>, dba_iters: usize },
+    /// Squared-Euclidean assignment + mean update.
+    Euclidean,
+}
+
+impl KmeansGeometry {
+    #[inline]
+    fn dist_sq(&self, a: &[f64], b: &[f64], scratch: &mut DtwScratch) -> f64 {
+        match self {
+            KmeansGeometry::Dtw { window, .. } => {
+                dtw_sq_scratch(a, b, *window, f64::INFINITY, scratch)
+            }
+            KmeansGeometry::Euclidean => euclidean_sq(a, b),
+        }
+    }
+}
+
+/// Result of a k-means run.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// Flat centroid buffer, `k × dim` row-major.
+    pub centroids: Vec<f64>,
+    /// Vector length of each centroid.
+    pub dim: usize,
+    /// Cluster id per input row.
+    pub assignment: Vec<usize>,
+    /// Final within-cluster sum of squared distances.
+    pub inertia: f64,
+    /// Iterations executed.
+    pub iterations: usize,
+}
+
+impl KmeansResult {
+    /// Borrow centroid `k`.
+    pub fn centroid(&self, k: usize) -> &[f64] {
+        &self.centroids[k * self.dim..(k + 1) * self.dim]
+    }
+
+    /// Number of centroids.
+    pub fn k(&self) -> usize {
+        if self.dim == 0 { 0 } else { self.centroids.len() / self.dim }
+    }
+}
+
+/// k-means++ seeding: first center uniform, then proportional to squared
+/// distance to the nearest chosen center.
+fn kmeanspp_init(
+    rows: &[&[f64]],
+    k: usize,
+    geo: KmeansGeometry,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let n = rows.len();
+    let mut scratch = DtwScratch::new(rows[0].len());
+    let mut chosen = Vec::with_capacity(k);
+    chosen.push(rng.below(n));
+    let mut d2: Vec<f64> = rows
+        .iter()
+        .map(|r| geo.dist_sq(r, rows[chosen[0]], &mut scratch))
+        .collect();
+    while chosen.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // All points coincide with a center; fall back to uniform.
+            rng.below(n)
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        chosen.push(next);
+        for (i, r) in rows.iter().enumerate() {
+            let d = geo.dist_sq(r, rows[next], &mut scratch);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    chosen
+}
+
+/// Run k-means over `rows` (each of equal length) with `k` clusters.
+///
+/// `max_iters` bounds the assign/update loop; the loop stops early when
+/// the assignment reaches a fixed point.
+pub fn kmeans(
+    rows: &[&[f64]],
+    k: usize,
+    geo: KmeansGeometry,
+    max_iters: usize,
+    rng: &mut Rng,
+) -> KmeansResult {
+    let n = rows.len();
+    assert!(n > 0, "kmeans: empty input");
+    let dim = rows[0].len();
+    assert!(rows.iter().all(|r| r.len() == dim), "kmeans: ragged rows");
+    let k = k.min(n);
+
+    let seeds = kmeanspp_init(rows, k, geo, rng);
+    let mut centroids: Vec<f64> = Vec::with_capacity(k * dim);
+    for &s in &seeds {
+        centroids.extend_from_slice(rows[s]);
+    }
+
+    let mut scratch = DtwScratch::new(dim);
+    let mut assignment = vec![usize::MAX; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // --- assignment step ---
+        let mut changed = false;
+        let mut new_inertia = 0.0;
+        for (i, row) in rows.iter().enumerate() {
+            let mut best = f64::INFINITY;
+            let mut best_k = 0;
+            for c in 0..k {
+                let d = geo.dist_sq(row, &centroids[c * dim..(c + 1) * dim], &mut scratch);
+                if d < best {
+                    best = d;
+                    best_k = c;
+                }
+            }
+            if assignment[i] != best_k {
+                assignment[i] = best_k;
+                changed = true;
+            }
+            new_inertia += best;
+        }
+        inertia = new_inertia;
+        if !changed && it > 0 {
+            break;
+        }
+
+        // --- empty-cluster repair ---
+        let mut counts = vec![0usize; k];
+        for &a in &assignment {
+            counts[a] += 1;
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Steal the farthest member of the largest cluster.
+                let big = (0..k).max_by_key(|&x| counts[x]).unwrap();
+                let (mut far_i, mut far_d) = (0usize, -1.0);
+                for (i, row) in rows.iter().enumerate() {
+                    if assignment[i] == big {
+                        let d = geo.dist_sq(
+                            row,
+                            &centroids[big * dim..(big + 1) * dim],
+                            &mut scratch,
+                        );
+                        if d > far_d {
+                            far_d = d;
+                            far_i = i;
+                        }
+                    }
+                }
+                assignment[far_i] = c;
+                counts[c] += 1;
+                counts[big] -= 1;
+                centroids[c * dim..(c + 1) * dim].copy_from_slice(rows[far_i]);
+            }
+        }
+
+        // --- update step ---
+        match geo {
+            KmeansGeometry::Euclidean => {
+                let mut sums = vec![0.0; k * dim];
+                let mut counts = vec![0usize; k];
+                for (i, row) in rows.iter().enumerate() {
+                    let a = assignment[i];
+                    counts[a] += 1;
+                    for (j, &v) in row.iter().enumerate() {
+                        sums[a * dim + j] += v;
+                    }
+                }
+                for c in 0..k {
+                    if counts[c] > 0 {
+                        for j in 0..dim {
+                            centroids[c * dim + j] = sums[c * dim + j] / counts[c] as f64;
+                        }
+                    }
+                }
+            }
+            KmeansGeometry::Dtw { window, dba_iters } => {
+                for c in 0..k {
+                    let members: Vec<&[f64]> = rows
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| assignment[*i] == c)
+                        .map(|(_, r)| *r)
+                        .collect();
+                    if !members.is_empty() {
+                        let init = centroids[c * dim..(c + 1) * dim].to_vec();
+                        let updated = dba(&init, &members, window, dba_iters);
+                        centroids[c * dim..(c + 1) * dim].copy_from_slice(&updated);
+                    }
+                }
+            }
+        }
+    }
+
+    KmeansResult { centroids, dim, assignment, inertia, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blob_rows(rng: &mut Rng, n_per: usize, dim: usize) -> Vec<Vec<f64>> {
+        let mut rows = Vec::new();
+        for c in 0..2 {
+            let offset = if c == 0 { -3.0 } else { 3.0 };
+            for _ in 0..n_per {
+                rows.push((0..dim).map(|_| offset + 0.3 * rng.normal()).collect());
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn euclidean_separates_two_blobs() {
+        let mut rng = Rng::new(149);
+        let rows = two_blob_rows(&mut rng, 20, 8);
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let res = kmeans(&refs, 2, KmeansGeometry::Euclidean, 50, &mut rng);
+        // All of blob 0 in one cluster, all of blob 1 in the other.
+        let a0 = res.assignment[0];
+        assert!(res.assignment[..20].iter().all(|&a| a == a0));
+        assert!(res.assignment[20..].iter().all(|&a| a != a0));
+    }
+
+    #[test]
+    fn dtw_separates_shifted_shapes() {
+        // Class A: early peak; class B: valley. DTW k-means must separate
+        // them even with phase jitter within a class.
+        let mut rng = Rng::new(151);
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..10 {
+            let shift = rng.below(4);
+            let mut v = vec![0.0; 20];
+            for (j, x) in v.iter_mut().enumerate().skip(4 + shift).take(4) {
+                *x = 2.0 + 0.05 * (j as f64);
+            }
+            rows.push(v);
+        }
+        for _ in 0..10 {
+            let shift = rng.below(4);
+            let mut v = vec![0.0; 20];
+            for x in v.iter_mut().skip(4 + shift).take(4) {
+                *x = -2.0;
+            }
+            rows.push(v);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let geo = KmeansGeometry::Dtw { window: None, dba_iters: 3 };
+        let res = kmeans(&refs, 2, geo, 20, &mut rng);
+        let a0 = res.assignment[0];
+        assert!(res.assignment[..10].iter().all(|&a| a == a0), "{:?}", res.assignment);
+        assert!(res.assignment[10..].iter().all(|&a| a != a0), "{:?}", res.assignment);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Rng::new(157);
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let res = kmeans(&refs, 10, KmeansGeometry::Euclidean, 5, &mut rng);
+        assert_eq!(res.k(), 2);
+    }
+
+    #[test]
+    fn no_empty_clusters() {
+        let mut rng = Rng::new(163);
+        let rows: Vec<Vec<f64>> =
+            (0..30).map(|_| (0..6).map(|_| rng.normal()).collect()).collect();
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        for geo in [
+            KmeansGeometry::Euclidean,
+            KmeansGeometry::Dtw { window: Some(2), dba_iters: 2 },
+        ] {
+            let res = kmeans(&refs, 8, geo, 15, &mut rng);
+            let mut counts = vec![0usize; res.k()];
+            for &a in &res.assignment {
+                counts[a] += 1;
+            }
+            assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng_rows = Rng::new(167);
+        let rows = two_blob_rows(&mut rng_rows, 10, 5);
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let r1 = kmeans(&refs, 3, KmeansGeometry::Euclidean, 20, &mut Rng::new(1));
+        let r2 = kmeans(&refs, 3, KmeansGeometry::Euclidean, 20, &mut Rng::new(1));
+        assert_eq!(r1.assignment, r2.assignment);
+        assert_eq!(r1.centroids, r2.centroids);
+    }
+
+    #[test]
+    fn inertia_reported_finite() {
+        let mut rng = Rng::new(173);
+        let rows = two_blob_rows(&mut rng, 8, 4);
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let res = kmeans(&refs, 2, KmeansGeometry::Euclidean, 10, &mut rng);
+        assert!(res.inertia.is_finite());
+        assert!(res.inertia >= 0.0);
+    }
+}

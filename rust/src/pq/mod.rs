@@ -1,0 +1,26 @@
+//! Product quantization under time warping — the paper's contribution.
+//!
+//! Pipeline:
+//!
+//! 1. [`prealign`] cuts each series into `M` subspaces, optionally snapping
+//!    boundaries to MODWT structure points and re-interpolating to a fixed
+//!    sub-length.
+//! 2. [`kmeans`] (+ [`dba`]) learns a `K`-centroid codebook per subspace.
+//! 3. [`codebook`] stores centroids, their Keogh envelopes and the `M×K×K`
+//!    symmetric distance LUT.
+//! 4. [`encode`] maps a subspace vector to its nearest centroid id using
+//!    the LB_Kim → reversed-LB_Keogh cascade with early-abandoned DTW.
+//! 5. [`distance`] computes symmetric / asymmetric / Keogh-patched
+//!    approximate distances between codes.
+//! 6. [`quantizer`] is the user-facing API tying it together.
+
+pub mod codebook;
+pub mod dba;
+pub mod distance;
+pub mod encode;
+pub mod kmeans;
+pub mod prealign;
+pub mod quantizer;
+
+pub use codebook::Codebook;
+pub use quantizer::{EncodedDataset, PqConfig, PqMetric, PrealignConfig, ProductQuantizer};

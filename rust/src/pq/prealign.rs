@@ -1,0 +1,137 @@
+//! Subspace extraction: fixed or MODWT-pre-aligned partitioning of a
+//! series into `M` equal-length subspace vectors (paper §3.5).
+//!
+//! With pre-alignment enabled, each fixed split point may move backwards
+//! by up to `tail` samples onto a MODWT sign-change point; the resulting
+//! variable-length segments are linearly re-interpolated to the common
+//! length `sub_len = ceil(D/M) + tail`, which is what makes the Keogh
+//! envelopes of the codebook precomputable.
+
+use crate::core::preprocess::reinterpolate;
+use crate::wavelet::segment::{cut_at, elastic_split_points, fixed_split_points};
+
+/// How a series is partitioned into subspaces.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segmenter {
+    /// Number of subspaces `M`.
+    pub n_subspaces: usize,
+    /// MODWT decomposition level (ignored when `tail == 0`).
+    pub level: usize,
+    /// Tail length in samples; `0` disables pre-alignment.
+    pub tail: usize,
+}
+
+impl Segmenter {
+    /// Fixed-length segmentation (no pre-alignment).
+    pub fn fixed(n_subspaces: usize) -> Self {
+        Segmenter { n_subspaces, level: 1, tail: 0 }
+    }
+
+    /// MODWT pre-aligned segmentation.
+    pub fn prealigned(n_subspaces: usize, level: usize, tail: usize) -> Self {
+        Segmenter { n_subspaces, level, tail }
+    }
+
+    /// Common subspace vector length for series of length `len`.
+    pub fn sub_len(&self, len: usize) -> usize {
+        len.div_ceil(self.n_subspaces) + self.tail
+    }
+
+    /// Split `x` into `M` subspace vectors, each of length
+    /// [`Segmenter::sub_len`]. Segments are re-interpolated whenever their
+    /// raw length differs from the target (always true with pre-alignment
+    /// and whenever `len % M != 0`).
+    pub fn segment(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        assert!(
+            x.len() >= 2 * self.n_subspaces,
+            "series of length {} too short for {} subspaces",
+            x.len(),
+            self.n_subspaces
+        );
+        let boundaries = if self.tail == 0 {
+            fixed_split_points(x.len(), self.n_subspaces)
+        } else {
+            elastic_split_points(x, self.n_subspaces, self.level, self.tail)
+        };
+        let target = self.sub_len(x.len());
+        cut_at(x, &boundaries)
+            .into_iter()
+            .map(|seg| {
+                if seg.len() == target {
+                    seg.to_vec()
+                } else {
+                    reinterpolate(seg, target)
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    #[test]
+    fn fixed_segmentation_shapes() {
+        let x: Vec<f64> = (0..120).map(|i| i as f64).collect();
+        let seg = Segmenter::fixed(4);
+        let parts = seg.segment(&x);
+        assert_eq!(parts.len(), 4);
+        for p in &parts {
+            assert_eq!(p.len(), 30);
+        }
+        // Exact division: segmentation is pure slicing.
+        assert_eq!(parts[0], (0..30).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn non_divisible_length_reinterpolated() {
+        let x: Vec<f64> = (0..100).map(|i| (i as f64 * 0.3).sin()).collect();
+        let seg = Segmenter::fixed(3);
+        let parts = seg.segment(&x);
+        let target = seg.sub_len(100); // ceil(100/3) = 34
+        assert_eq!(target, 34);
+        for p in &parts {
+            assert_eq!(p.len(), target);
+        }
+    }
+
+    #[test]
+    fn prealigned_segments_have_common_length() {
+        let mut rng = Rng::new(137);
+        let x: Vec<f64> = {
+            let mut acc = 0.0;
+            (0..128)
+                .map(|_| {
+                    acc += rng.normal();
+                    acc
+                })
+                .collect()
+        };
+        let seg = Segmenter::prealigned(4, 2, 6);
+        let parts = seg.segment(&x);
+        assert_eq!(parts.len(), 4);
+        for p in &parts {
+            assert_eq!(p.len(), 32 + 6);
+        }
+    }
+
+    #[test]
+    fn segments_preserve_endpoints() {
+        let mut rng = Rng::new(139);
+        let x: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        for seg in [Segmenter::fixed(4), Segmenter::prealigned(4, 2, 4)] {
+            let parts = seg.segment(&x);
+            assert!((parts[0][0] - x[0]).abs() < 1e-12);
+            let last = parts.last().unwrap();
+            assert!((last.last().unwrap() - x.last().unwrap()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_short_series_panics() {
+        Segmenter::fixed(8).segment(&[1.0; 10]);
+    }
+}

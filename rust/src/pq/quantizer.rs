@@ -1,0 +1,448 @@
+//! User-facing product quantizer: configuration, training, encoding and
+//! the memory model from paper §3.4.
+
+use anyhow::{bail, Result};
+
+use super::codebook::Codebook;
+pub use super::codebook::PqMetric;
+use super::distance as pqdist;
+use super::encode::{encode_subspace, EncodeStats};
+use super::kmeans::{kmeans, KmeansGeometry};
+use super::prealign::Segmenter;
+use crate::core::rng::Rng;
+use crate::core::series::Dataset;
+use crate::distance::dtw::DtwScratch;
+
+/// MODWT pre-alignment settings (paper §3.5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrealignConfig {
+    /// Wavelet decomposition level `J`.
+    pub level: usize,
+    /// Tail as a fraction of the subspace length (e.g. `0.2` ⇒ the split
+    /// may move back by up to 20 % of `D/M`).
+    pub tail_frac: f64,
+}
+
+impl Default for PrealignConfig {
+    fn default() -> Self {
+        PrealignConfig { level: 2, tail_frac: 0.15 }
+    }
+}
+
+/// Product quantizer hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PqConfig {
+    /// Number of subspaces `M`.
+    pub n_subspaces: usize,
+    /// Codebook size `K` (clamped to the training-set size, as in the
+    /// paper's "or all time series in the training set if there are
+    /// less examples").
+    pub codebook_size: usize,
+    /// Quantization warping window as a fraction of the subspace length;
+    /// `>= 1.0` means unconstrained.
+    pub window_frac: f64,
+    /// DTW (PQDTW) or Euclidean (PQ_ED).
+    pub metric: PqMetric,
+    /// Optional MODWT pre-alignment.
+    pub prealign: Option<PrealignConfig>,
+    /// Max k-means assign/update iterations.
+    pub kmeans_iters: usize,
+    /// DBA refinement steps per k-means update.
+    pub dba_iters: usize,
+    /// Optional cap on the number of training series used to learn the
+    /// codebook (PQ classically trains on a subset).
+    pub train_subsample: Option<usize>,
+}
+
+impl Default for PqConfig {
+    fn default() -> Self {
+        PqConfig {
+            n_subspaces: 4,
+            codebook_size: 256,
+            window_frac: 0.1,
+            metric: PqMetric::Dtw,
+            prealign: None,
+            kmeans_iters: 10,
+            dba_iters: 3,
+            train_subsample: None,
+        }
+    }
+}
+
+/// A dataset re-represented as PQ codes.
+#[derive(Debug, Clone)]
+pub struct EncodedDataset {
+    /// Codes, flat `N × M` row-major.
+    pub codes: Vec<u16>,
+    /// Squared reversed-Keogh self bounds, flat `N × M` (zeros under ED).
+    pub lb_self_sq: Vec<f64>,
+    /// Number of subspaces.
+    pub n_subspaces: usize,
+    /// Labels carried over from the source dataset (may be empty).
+    pub labels: Vec<i64>,
+    /// Aggregated encoding work counters.
+    pub stats: EncodeStats,
+}
+
+impl EncodedDataset {
+    /// Number of encoded series.
+    pub fn n(&self) -> usize {
+        if self.n_subspaces == 0 { 0 } else { self.codes.len() / self.n_subspaces }
+    }
+
+    /// Code word of series `i`.
+    #[inline]
+    pub fn code(&self, i: usize) -> &[u16] {
+        &self.codes[i * self.n_subspaces..(i + 1) * self.n_subspaces]
+    }
+
+    /// Self-bound row of series `i`.
+    #[inline]
+    pub fn lb_self(&self, i: usize) -> &[f64] {
+        &self.lb_self_sq[i * self.n_subspaces..(i + 1) * self.n_subspaces]
+    }
+}
+
+/// Analytic memory model (paper §3.4), in bits, assuming the paper's
+/// single-precision storage convention.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryModel {
+    /// Bits per original series (`32·D`).
+    pub raw_bits_per_series: u64,
+    /// Bits per PQ code (`M·ceil(log2 K)`).
+    pub code_bits_per_series: u64,
+    /// Compression factor `raw / code`.
+    pub compression_factor: f64,
+    /// Codebook storage (`32·M·K·L` bits).
+    pub codebook_bits: u64,
+    /// Distance LUT storage (`32·K²·M` bits).
+    pub lut_bits: u64,
+    /// Envelope storage (`2·32·M·K·L` bits).
+    pub envelope_bits: u64,
+}
+
+impl MemoryModel {
+    /// Total auxiliary (non-data) bits.
+    pub fn aux_bits(&self) -> u64 {
+        self.codebook_bits + self.lut_bits + self.envelope_bits
+    }
+}
+
+/// A trained product quantizer (PQDTW or PQ_ED).
+#[derive(Debug, Clone)]
+pub struct ProductQuantizer {
+    /// Training configuration.
+    pub config: PqConfig,
+    /// Subspace segmenter (fixed or pre-aligned).
+    pub segmenter: Segmenter,
+    /// Trained codebook with envelopes + LUT.
+    pub codebook: Codebook,
+    /// Series length the quantizer was trained for.
+    pub series_len: usize,
+}
+
+impl ProductQuantizer {
+    /// Train on `data` (Algorithm 1). `seed` drives k-means seeding and
+    /// the optional training subsample.
+    pub fn train(data: &Dataset, cfg: &PqConfig, seed: u64) -> Result<Self> {
+        if data.n_series() == 0 {
+            bail!("PQ training requires a non-empty dataset");
+        }
+        if cfg.n_subspaces == 0 {
+            bail!("n_subspaces must be >= 1");
+        }
+        if data.len < 2 * cfg.n_subspaces {
+            bail!(
+                "series length {} too short for {} subspaces",
+                data.len,
+                cfg.n_subspaces
+            );
+        }
+        let mut rng = Rng::new(seed);
+
+        // Optional training subsample.
+        let train: Dataset = match cfg.train_subsample {
+            Some(cap) if cap < data.n_series() => {
+                let idx = rng.sample_indices(data.n_series(), cap);
+                data.subset(&idx)
+            }
+            _ => data.clone(),
+        };
+
+        let sub_len_base = data.len.div_ceil(cfg.n_subspaces);
+        let tail = match cfg.prealign {
+            Some(p) => ((p.tail_frac * sub_len_base as f64).round() as usize)
+                .min(sub_len_base.saturating_sub(1)),
+            None => 0,
+        };
+        let segmenter = match cfg.prealign {
+            Some(p) if tail > 0 => Segmenter::prealigned(cfg.n_subspaces, p.level, tail),
+            _ => Segmenter::fixed(cfg.n_subspaces),
+        };
+        let sub_len = segmenter.sub_len(data.len);
+        let window = if cfg.window_frac >= 1.0 {
+            None
+        } else {
+            Some(((cfg.window_frac * sub_len as f64).ceil() as usize).max(1))
+        };
+
+        // Segment all training series once: per-subspace row matrices.
+        let n = train.n_series();
+        let k = cfg.codebook_size.min(n);
+        let mut per_subspace_rows: Vec<Vec<Vec<f64>>> =
+            vec![Vec::with_capacity(n); cfg.n_subspaces];
+        for i in 0..n {
+            let segs = segmenter.segment(train.row(i));
+            for (m, s) in segs.into_iter().enumerate() {
+                per_subspace_rows[m].push(s);
+            }
+        }
+
+        // DBA-k-means per subspace (Algorithm 1 main loop).
+        let geo = match cfg.metric {
+            PqMetric::Dtw => KmeansGeometry::Dtw { window, dba_iters: cfg.dba_iters },
+            PqMetric::Euclidean => KmeansGeometry::Euclidean,
+        };
+        let mut per_subspace_centroids = Vec::with_capacity(cfg.n_subspaces);
+        for rows in &per_subspace_rows {
+            let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+            let res = kmeans(&refs, k, geo, cfg.kmeans_iters, &mut rng);
+            per_subspace_centroids.push(res.centroids);
+        }
+
+        let codebook = Codebook::build(per_subspace_centroids, sub_len, window, cfg.metric);
+        Ok(ProductQuantizer { config: *cfg, segmenter, codebook, series_len: data.len })
+    }
+
+    /// Cut a series into subspace vectors using the trained segmenter.
+    pub fn segment(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        self.segmenter.segment(x)
+    }
+
+    /// Encode one series (Algorithm 2). Returns the code word, the
+    /// per-subspace squared self bounds and the work counters.
+    pub fn encode(&self, x: &[f64]) -> (Vec<u16>, Vec<f64>, EncodeStats) {
+        assert_eq!(x.len(), self.series_len, "series length mismatch");
+        let subs = self.segment(x);
+        let mut scratch = DtwScratch::new(self.codebook.sub_len);
+        let mut stats = EncodeStats::default();
+        let mut codes = Vec::with_capacity(self.config.n_subspaces);
+        let mut lbs = Vec::with_capacity(self.config.n_subspaces);
+        for (m, q) in subs.iter().enumerate() {
+            let out = encode_subspace(q, m, &self.codebook, &mut scratch, &mut stats);
+            codes.push(out.code);
+            lbs.push(out.lb_self_sq);
+        }
+        (codes, lbs, stats)
+    }
+
+    /// Encode a whole dataset.
+    pub fn encode_dataset(&self, data: &Dataset) -> EncodedDataset {
+        let n = data.n_series();
+        let m = self.config.n_subspaces;
+        let mut codes = Vec::with_capacity(n * m);
+        let mut lb = Vec::with_capacity(n * m);
+        let mut stats = EncodeStats::default();
+        for i in 0..n {
+            let (c, l, s) = self.encode(data.row(i));
+            codes.extend_from_slice(&c);
+            lb.extend_from_slice(&l);
+            stats.merge(&s);
+        }
+        EncodedDataset {
+            codes,
+            lb_self_sq: lb,
+            n_subspaces: m,
+            labels: data.labels.clone(),
+            stats,
+        }
+    }
+
+    /// Symmetric PQ distance between two code words.
+    pub fn symmetric_distance(&self, cx: &[u16], cy: &[u16]) -> f64 {
+        pqdist::symmetric(&self.codebook, cx, cy)
+    }
+
+    /// Keogh-patched symmetric distance between encoded items `i`, `j`.
+    pub fn patched_distance(&self, enc: &EncodedDataset, i: usize, j: usize) -> f64 {
+        pqdist::patched_symmetric(
+            &self.codebook,
+            enc.code(i),
+            enc.code(j),
+            enc.lb_self(i),
+            enc.lb_self(j),
+        )
+    }
+
+    /// Asymmetric distance table for a raw query (`M×K` squared entries).
+    pub fn asymmetric_table(&self, y: &[f64]) -> Vec<f64> {
+        pqdist::asymmetric_table(&self.codebook, &self.segment(y))
+    }
+
+    /// Asymmetric distance of an encoded item against a query table.
+    pub fn asymmetric_distance(&self, table: &[f64], codes: &[u16]) -> f64 {
+        pqdist::asymmetric_sq(&self.codebook, table, codes).sqrt()
+    }
+
+    /// The paper's §3.4 memory model for this quantizer.
+    pub fn memory_model(&self) -> MemoryModel {
+        let d = self.series_len as u64;
+        let m = self.config.n_subspaces as u64;
+        let k = self.codebook.k as u64;
+        let l = self.codebook.sub_len as u64;
+        let code_bits = m * (64 - (k.max(2) - 1).leading_zeros() as u64).max(1);
+        let raw_bits = 32 * d;
+        MemoryModel {
+            raw_bits_per_series: raw_bits,
+            code_bits_per_series: code_bits,
+            compression_factor: raw_bits as f64 / code_bits as f64,
+            codebook_bits: 32 * m * k * l,
+            lut_bits: 32 * k * k * m,
+            envelope_bits: 2 * 32 * m * k * l,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::random_walk::RandomWalks;
+
+    fn train_toy(metric: PqMetric, prealign: Option<PrealignConfig>) -> (ProductQuantizer, Dataset) {
+        let data = RandomWalks::new(31).generate(40, 64);
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 8,
+            window_frac: 0.2,
+            metric,
+            prealign,
+            kmeans_iters: 5,
+            dba_iters: 2,
+            train_subsample: None,
+        };
+        (ProductQuantizer::train(&data, &cfg, 3).unwrap(), data)
+    }
+
+    #[test]
+    fn train_encode_roundtrip() {
+        let (pq, data) = train_toy(PqMetric::Dtw, None);
+        assert_eq!(pq.codebook.k, 8);
+        assert_eq!(pq.codebook.sub_len, 16);
+        let enc = pq.encode_dataset(&data);
+        assert_eq!(enc.n(), 40);
+        assert!(enc.codes.iter().all(|&c| (c as usize) < 8));
+    }
+
+    #[test]
+    fn symmetric_self_distance_zero() {
+        let (pq, data) = train_toy(PqMetric::Dtw, None);
+        let enc = pq.encode_dataset(&data);
+        for i in [0usize, 7, 23] {
+            assert_eq!(pq.symmetric_distance(enc.code(i), enc.code(i)), 0.0);
+        }
+    }
+
+    #[test]
+    fn patched_ge_symmetric() {
+        let (pq, data) = train_toy(PqMetric::Dtw, None);
+        let enc = pq.encode_dataset(&data);
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let s = pq.symmetric_distance(enc.code(i), enc.code(j));
+                let p = pq.patched_distance(&enc, i, j);
+                assert!(p >= s - 1e-12, "patched {p} < symmetric {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn asymmetric_consistent_with_encoding() {
+        let (pq, data) = train_toy(PqMetric::Dtw, None);
+        let enc = pq.encode_dataset(&data);
+        // The asymmetric distance from x to its own code must equal the
+        // encode-time distance (same table cells).
+        let x = data.row(5);
+        let table = pq.asymmetric_table(x);
+        let d = pq.asymmetric_distance(&table, enc.code(5));
+        // d² = Σ_m dist_sq(x^m, chosen centroid) = Σ encode dist
+        let (_, _, _) = pq.encode(x);
+        let subs = pq.segment(x);
+        let want: f64 = subs
+            .iter()
+            .enumerate()
+            .map(|(m, q)| {
+                crate::distance::dtw::dtw_sq(
+                    q,
+                    pq.codebook.centroid(m, enc.code(5)[m] as usize),
+                    pq.codebook.window,
+                )
+            })
+            .sum::<f64>()
+            .sqrt();
+        assert!((d - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prealigned_variant_trains() {
+        let (pq, data) = train_toy(PqMetric::Dtw, Some(PrealignConfig { level: 2, tail_frac: 0.2 }));
+        assert!(pq.segmenter.tail > 0);
+        assert_eq!(pq.codebook.sub_len, 16 + pq.segmenter.tail);
+        let enc = pq.encode_dataset(&data);
+        assert_eq!(enc.n(), 40);
+    }
+
+    #[test]
+    fn pq_ed_variant_trains() {
+        let (pq, data) = train_toy(PqMetric::Euclidean, None);
+        assert!(pq.codebook.envelopes.is_empty());
+        let enc = pq.encode_dataset(&data);
+        assert_eq!(enc.n(), 40);
+        // ED encoding never records keogh bounds
+        assert!(enc.lb_self_sq.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn codebook_size_clamped_to_n() {
+        let data = RandomWalks::new(5).generate(6, 32);
+        let cfg = PqConfig { n_subspaces: 2, codebook_size: 256, ..Default::default() };
+        let pq = ProductQuantizer::train(&data, &cfg, 1).unwrap();
+        assert_eq!(pq.codebook.k, 6);
+    }
+
+    #[test]
+    fn memory_model_matches_paper_example() {
+        // Paper §3.4: D=140, K=256, M=7 → compression 80×, aux ≈ 2.3 MB.
+        let data = RandomWalks::new(9).generate(300, 140);
+        let cfg = PqConfig {
+            n_subspaces: 7,
+            codebook_size: 256,
+            train_subsample: Some(256),
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&data, &cfg, 1).unwrap();
+        let mm = pq.memory_model();
+        assert_eq!(mm.code_bits_per_series, 7 * 8);
+        assert!((mm.compression_factor - 80.0).abs() < 1e-9);
+        // aux total: paper says ~2.3 MB with L = D/M = 20
+        let mb = mm.aux_bits() as f64 / 8.0 / 1024.0 / 1024.0;
+        assert!(mb > 1.5 && mb < 3.5, "aux = {mb} MB");
+    }
+
+    #[test]
+    fn errors_on_bad_config() {
+        let data = RandomWalks::new(2).generate(4, 16);
+        let cfg = PqConfig { n_subspaces: 0, ..Default::default() };
+        assert!(ProductQuantizer::train(&data, &cfg, 1).is_err());
+        let cfg = PqConfig { n_subspaces: 12, ..Default::default() };
+        assert!(ProductQuantizer::train(&data, &cfg, 1).is_err());
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let data = RandomWalks::new(77).generate(20, 48);
+        let cfg = PqConfig { n_subspaces: 3, codebook_size: 6, ..Default::default() };
+        let a = ProductQuantizer::train(&data, &cfg, 42).unwrap();
+        let b = ProductQuantizer::train(&data, &cfg, 42).unwrap();
+        assert_eq!(a.codebook.centroids, b.codebook.centroids);
+    }
+}

@@ -1,0 +1,7 @@
+//! Baseline segment/symbolic representations: PAA and SAX.
+
+pub mod paa;
+pub mod sax;
+
+pub use paa::paa;
+pub use sax::SaxEncoder;

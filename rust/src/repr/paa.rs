@@ -1,0 +1,74 @@
+//! Piecewise Aggregate Approximation (Keogh et al. 2001).
+//!
+//! PAA reduces a length-`n` series to `m` segment means. It underlies SAX
+//! and is a baseline dimensionality reduction in its own right. Handles
+//! `n % m != 0` with fractional segment boundaries (each sample's weight
+//! is split proportionally across the segments it overlaps).
+
+/// PAA of `xs` with `m` segments.
+pub fn paa(xs: &[f64], m: usize) -> Vec<f64> {
+    let n = xs.len();
+    assert!(m > 0 && n > 0, "paa: empty input");
+    if m >= n {
+        return xs.to_vec();
+    }
+    if n % m == 0 {
+        let w = n / m;
+        return xs.chunks_exact(w).map(|c| c.iter().sum::<f64>() / w as f64).collect();
+    }
+    // Fractional boundaries: segment k covers [k*n/m, (k+1)*n/m).
+    let mut out = vec![0.0; m];
+    let seg_len = n as f64 / m as f64;
+    for (k, o) in out.iter_mut().enumerate() {
+        let start = k as f64 * seg_len;
+        let end = start + seg_len;
+        let mut acc = 0.0;
+        let mut i = start.floor() as usize;
+        while (i as f64) < end && i < n {
+            let lo = (i as f64).max(start);
+            let hi = ((i + 1) as f64).min(end);
+            acc += xs[i] * (hi - lo);
+            i += 1;
+        }
+        *o = acc / seg_len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_division() {
+        let v = [1.0, 3.0, 5.0, 7.0, 2.0, 4.0];
+        assert_eq!(paa(&v, 3), vec![2.0, 6.0, 3.0]);
+    }
+
+    #[test]
+    fn identity_when_m_ge_n() {
+        let v = [1.0, 2.0, 3.0];
+        assert_eq!(paa(&v, 3), v.to_vec());
+        assert_eq!(paa(&v, 5), v.to_vec());
+    }
+
+    #[test]
+    fn fractional_boundaries_preserve_mean() {
+        // Total weighted mass must equal the series mean regardless of m.
+        let v: Vec<f64> = (0..7).map(|i| i as f64 * 1.3 - 2.0).collect();
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        for m in [2, 3, 4, 5] {
+            let p = paa(&v, m);
+            let pm = p.iter().sum::<f64>() / m as f64;
+            assert!((pm - mean).abs() < 1e-9, "m={m}");
+        }
+    }
+
+    #[test]
+    fn constant_series() {
+        let v = [4.2; 10];
+        for m in [1, 2, 3, 7] {
+            assert!(paa(&v, m).iter().all(|&x| (x - 4.2).abs() < 1e-12));
+        }
+    }
+}

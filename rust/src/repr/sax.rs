@@ -1,0 +1,154 @@
+//! Symbolic Aggregate approXimation (Lin et al. 2007).
+//!
+//! SAX converts a z-normalized series to a word over an alphabet of size
+//! `α` by (1) PAA-reducing it to `m` segments and (2) discretizing each
+//! segment mean with Gaussian-equiprobable breakpoints. Distances between
+//! words use MINDIST, which lower-bounds the Euclidean distance on the
+//! original series.
+//!
+//! The paper's settings: `α = 4`, segment length `l = 0.2·L`, i.e. `m = 5`
+//! segments for any series length.
+
+use super::paa::paa;
+
+/// Gaussian equiprobable breakpoints for alphabet sizes 2..=10 (standard
+/// SAX table; values are Φ⁻¹(k/α)).
+fn breakpoints(alpha: usize) -> Vec<f64> {
+    match alpha {
+        2 => vec![0.0],
+        3 => vec![-0.43, 0.43],
+        4 => vec![-0.67, 0.0, 0.67],
+        5 => vec![-0.84, -0.25, 0.25, 0.84],
+        6 => vec![-0.97, -0.43, 0.0, 0.43, 0.97],
+        7 => vec![-1.07, -0.57, -0.18, 0.18, 0.57, 1.07],
+        8 => vec![-1.15, -0.67, -0.32, 0.0, 0.32, 0.67, 1.15],
+        9 => vec![-1.22, -0.76, -0.43, -0.14, 0.14, 0.43, 0.76, 1.22],
+        10 => vec![-1.28, -0.84, -0.52, -0.25, 0.0, 0.25, 0.52, 0.84, 1.28],
+        _ => panic!("SAX alphabet size {alpha} unsupported (2..=10)"),
+    }
+}
+
+/// A SAX encoder for series of a fixed length.
+#[derive(Debug, Clone)]
+pub struct SaxEncoder {
+    /// Original series length.
+    pub series_len: usize,
+    /// Alphabet size α.
+    pub alphabet: usize,
+    /// Number of PAA segments.
+    pub n_segments: usize,
+    betas: Vec<f64>,
+}
+
+impl SaxEncoder {
+    /// Encoder for series of `series_len`, alphabet `alphabet`, segment
+    /// length `seg_frac · series_len` (the paper uses `seg_frac = 0.2`).
+    pub fn new(series_len: usize, alphabet: usize, seg_frac: f64) -> Self {
+        assert!(series_len > 0);
+        assert!(seg_frac > 0.0 && seg_frac <= 1.0);
+        let n_segments = ((1.0 / seg_frac).round() as usize).clamp(1, series_len);
+        SaxEncoder { series_len, alphabet, n_segments, betas: breakpoints(alphabet) }
+    }
+
+    /// Encode a (z-normalized) series into a SAX word.
+    pub fn encode(&self, xs: &[f64]) -> Vec<u8> {
+        let segments = paa(xs, self.n_segments);
+        segments
+            .iter()
+            .map(|&v| {
+                // Number of breakpoints below v == symbol id.
+                self.betas.iter().take_while(|&&b| v > b).count() as u8
+            })
+            .collect()
+    }
+
+    /// Symbol-pair cell of the MINDIST lookup: 0 for adjacent symbols,
+    /// otherwise the gap between the nearest breakpoints.
+    #[inline]
+    fn cell(&self, r: u8, c: u8) -> f64 {
+        let (r, c) = (r as usize, c as usize);
+        if r.abs_diff(c) <= 1 {
+            0.0
+        } else {
+            let (hi, lo) = if r > c { (r, c) } else { (c, r) };
+            self.betas[hi - 1] - self.betas[lo]
+        }
+    }
+
+    /// MINDIST between two SAX words (lower-bounds the Euclidean distance
+    /// between the original z-normalized series).
+    pub fn mindist(&self, a: &[u8], b: &[u8]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let scale = self.series_len as f64 / self.n_segments as f64;
+        let s: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| {
+                let c = self.cell(x, y);
+                c * c
+            })
+            .sum();
+        (scale * s).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::preprocess::znorm;
+    use crate::core::rng::Rng;
+    use crate::distance::euclidean::euclidean;
+
+    #[test]
+    fn symbols_in_alphabet() {
+        let mut rng = Rng::new(83);
+        let enc = SaxEncoder::new(50, 4, 0.2);
+        for _ in 0..20 {
+            let xs = znorm(&(0..50).map(|_| rng.normal()).collect::<Vec<_>>());
+            let w = enc.encode(&xs);
+            assert_eq!(w.len(), 5);
+            assert!(w.iter().all(|&s| s < 4));
+        }
+    }
+
+    #[test]
+    fn monotone_series_monotone_symbols() {
+        let xs = znorm(&(0..20).map(|i| i as f64).collect::<Vec<_>>());
+        let enc = SaxEncoder::new(20, 4, 0.2);
+        let w = enc.encode(&xs);
+        for k in 1..w.len() {
+            assert!(w[k] >= w[k - 1], "{w:?}");
+        }
+        assert_eq!(w[0], 0);
+        assert_eq!(*w.last().unwrap(), 3);
+    }
+
+    #[test]
+    fn identical_words_zero_distance() {
+        let enc = SaxEncoder::new(25, 4, 0.2);
+        let w = vec![0u8, 1, 2, 3, 2];
+        assert_eq!(enc.mindist(&w, &w), 0.0);
+    }
+
+    #[test]
+    fn mindist_lower_bounds_euclidean() {
+        let mut rng = Rng::new(89);
+        let enc = SaxEncoder::new(40, 4, 0.2);
+        for _ in 0..60 {
+            let a = znorm(&(0..40).map(|_| rng.normal()).collect::<Vec<_>>());
+            let b = znorm(&(0..40).map(|_| rng.normal()).collect::<Vec<_>>());
+            let lb = enc.mindist(&enc.encode(&a), &enc.encode(&b));
+            let ed = euclidean(&a, &b);
+            assert!(lb <= ed + 1e-9, "lb={lb} ed={ed}");
+        }
+    }
+
+    #[test]
+    fn adjacent_symbols_cost_zero() {
+        let enc = SaxEncoder::new(10, 4, 0.2);
+        assert_eq!(enc.cell(1, 2), 0.0);
+        assert_eq!(enc.cell(2, 1), 0.0);
+        assert!(enc.cell(0, 3) > 0.0);
+        assert!((enc.cell(0, 3) - (0.67 - (-0.67))).abs() < 1e-9);
+    }
+}

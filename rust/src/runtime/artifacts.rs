@@ -1,0 +1,153 @@
+//! Artifact manifest: what `python/compile/aot.py` produced and where.
+//!
+//! The manifest is a TSV (`kind\tp1\tp2\tp3\tp4\tfile`) rather than JSON
+//! so the default build needs no serialization dependency (the offline
+//! registry carries none).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// What a lowered graph computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `encode_series`: (M, L) subspaces + (M, K, L) codebooks →
+    /// codes (M,) i32 + dist_sq (M,) f32.
+    Encode,
+    /// `adc_table`: (M, L) + (M, K, L) → (M, K) f32.
+    Adc,
+    /// `pairwise_symmetric`: (N, M) i32 + (P, M) i32 + (M, K, K) f32 →
+    /// (N, P) f32.
+    PairSym,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Graph kind.
+    pub kind: ArtifactKind,
+    /// For Encode/Adc: `(M, K, L, window)`. For PairSym: `(N, P, M, K)`.
+    pub params: (usize, usize, usize, usize),
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+}
+
+/// Parsed manifest plus its base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifact directory.
+    pub dir: PathBuf,
+    /// Entries.
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut specs = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 6 {
+                bail!("{}:{}: expected 6 fields, got {}", path.display(), ln + 1, fields.len());
+            }
+            let kind = match fields[0] {
+                "encode" => ArtifactKind::Encode,
+                "adc" => ArtifactKind::Adc,
+                "pairsym" => ArtifactKind::PairSym,
+                other => bail!("{}:{}: unknown kind {other}", path.display(), ln + 1),
+            };
+            let p = |i: usize| -> Result<usize> {
+                fields[i]
+                    .parse()
+                    .with_context(|| format!("{}:{}: bad int", path.display(), ln + 1))
+            };
+            specs.push(ArtifactSpec {
+                kind,
+                params: (p(1)?, p(2)?, p(3)?, p(4)?),
+                file: fields[5].to_string(),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), specs })
+    }
+
+    /// Find an encode artifact for `(m, k, l, window)`.
+    pub fn find_encode(&self, m: usize, k: usize, l: usize, window: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.kind == ArtifactKind::Encode && s.params == (m, k, l, window))
+    }
+
+    /// Find an ADC artifact for `(m, k, l, window)`.
+    pub fn find_adc(&self, m: usize, k: usize, l: usize, window: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.kind == ArtifactKind::Adc && s.params == (m, k, l, window))
+    }
+
+    /// Absolute path of a spec's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// The default artifact directory (`$PQDTW_ARTIFACTS` or `artifacts/`
+    /// next to the current directory).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PQDTW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(content: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pqdtw_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), content).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = write_manifest(
+            "encode\t4\t16\t25\t5\tencode_a.hlo.txt\nadc\t4\t16\t25\t5\tadc_a.hlo.txt\npairsym\t8\t64\t4\t16\tp.hlo.txt\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.specs.len(), 3);
+        let e = m.find_encode(4, 16, 25, 5).unwrap();
+        assert_eq!(e.file, "encode_a.hlo.txt");
+        assert!(m.find_encode(4, 16, 25, 6).is_none());
+        assert!(m.find_adc(4, 16, 25, 5).is_some());
+        assert!(m.path_of(e).ends_with("encode_a.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let dir = write_manifest("encode\t4\t16\n");
+        assert!(Manifest::load(&dir).is_err());
+        let dir = write_manifest("what\t1\t2\t3\t4\tf\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must parse.
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.specs.is_empty());
+            for s in &m.specs {
+                assert!(m.path_of(s).exists(), "{} missing", s.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! PJRT client wrapper (feature `pjrt`): compile HLO-text artifacts once,
+//! execute many times. Adapted from /opt/xla-example/load_hlo.rs.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by
+/// artifact file name.
+pub struct PjrtRunner {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRunner {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRunner { client, compiled: HashMap::new() })
+    }
+
+    /// Platform string (e.g. "cpu"), for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file, memoized by its file name.
+    pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        if !self.compiled.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            self.compiled.insert(key.clone(), exe);
+        }
+        Ok(&self.compiled[&key])
+    }
+
+    /// Execute a compiled artifact on f32 inputs (each `(data, dims)`),
+    /// returning the flat output literals of the result tuple.
+    pub fn run_f32(
+        &mut self,
+        path: &Path,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(path)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        Self::exec(exe, &literals)
+    }
+
+    /// Execute with pre-built literals (mixed dtypes).
+    pub fn run_literals(&mut self, path: &Path, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(path)?;
+        Self::exec(exe, inputs)
+    }
+
+    fn exec(exe: &xla::PjRtLoadedExecutable, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}")).context("unpacking result")
+    }
+
+    /// Build an i32 literal of the given shape (for code matrices).
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+    }
+}

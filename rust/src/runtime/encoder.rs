@@ -1,0 +1,78 @@
+//! PJRT-backed subspace encoder (feature `pjrt`): runs the AOT-compiled
+//! `encode_series` graph as an alternative backend to the native Rust
+//! encoder, proving the three layers compose. The Rust side still owns
+//! segmentation/pre-alignment (O(D) preprocessing).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::Manifest;
+use super::client::PjrtRunner;
+use crate::pq::quantizer::ProductQuantizer;
+
+/// Encoder that executes the lowered JAX/Pallas encode graph via PJRT.
+pub struct PjrtEncoder {
+    runner: PjrtRunner,
+    encode_path: PathBuf,
+    /// Codebook flattened to f32 once (the graph takes it as an input so
+    /// one artifact serves any trained codebook of the same shape).
+    codebook_f32: Vec<f32>,
+    m: usize,
+    k: usize,
+    l: usize,
+}
+
+impl PjrtEncoder {
+    /// Build an encoder for a trained quantizer from the artifact set in
+    /// `dir`. Fails when no artifact matches the quantizer's shape.
+    pub fn new(pq: &ProductQuantizer, manifest: &Manifest) -> Result<Self> {
+        let (m, k, l) = (pq.codebook.n_subspaces, pq.codebook.k, pq.codebook.sub_len);
+        let window = pq.codebook.window.unwrap_or(l);
+        let spec = manifest.find_encode(m, k, l, window).with_context(|| {
+            format!("no encode artifact for (M={m}, K={k}, L={l}, w={window}); rerun `make artifacts` with this variant in aot.py")
+        })?;
+        let encode_path = manifest.path_of(spec);
+        if !encode_path.exists() {
+            bail!("artifact file missing: {}", encode_path.display());
+        }
+        let codebook_f32: Vec<f32> = pq.codebook.centroids.iter().map(|&v| v as f32).collect();
+        Ok(PjrtEncoder {
+            runner: PjrtRunner::cpu()?,
+            encode_path,
+            codebook_f32,
+            m,
+            k,
+            l,
+        })
+    }
+
+    /// Encode one series: segment natively, run the PJRT graph, return
+    /// the code word.
+    pub fn encode(&mut self, pq: &ProductQuantizer, x: &[f64]) -> Result<Vec<u16>> {
+        let subs = pq.segment(x);
+        let mut subs_f32 = Vec::with_capacity(self.m * self.l);
+        for s in &subs {
+            subs_f32.extend(s.iter().map(|&v| v as f32));
+        }
+        let outputs = self.runner.run_f32(
+            &self.encode_path,
+            &[
+                (&subs_f32, &[self.m as i64, self.l as i64]),
+                (&self.codebook_f32, &[self.m as i64, self.k as i64, self.l as i64]),
+            ],
+        )?;
+        if outputs.len() != 2 {
+            bail!("encode graph returned {} outputs, expected 2", outputs.len());
+        }
+        let codes: Vec<i32> = outputs[0]
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("codes literal: {e:?}"))?;
+        Ok(codes.into_iter().map(|c| c as u16).collect())
+    }
+
+    /// Shape tag for logs.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.m, self.k, self.l)
+    }
+}

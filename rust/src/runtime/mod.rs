@@ -1,0 +1,22 @@
+//! Runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client from
+//! the request path — the AOT bridge of the three-layer architecture.
+//!
+//! The artifact manifest ([`artifacts`]) parses without any heavyweight
+//! dependency; the PJRT client wrapper and the encoder backend are gated
+//! behind the `pjrt` feature so the default build (and CI test loop)
+//! stays free of the native XLA extension.
+
+pub mod artifacts;
+
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod encoder;
+
+pub use artifacts::{ArtifactKind, ArtifactSpec, Manifest};
+
+#[cfg(feature = "pjrt")]
+pub use client::PjrtRunner;
+#[cfg(feature = "pjrt")]
+pub use encoder::PjrtEncoder;

@@ -1,0 +1,102 @@
+//! Seeded property-testing harness (the offline registry carries no
+//! `proptest`, so the integration suite uses this instead).
+//!
+//! [`check`] runs a property over `n` generated cases and reports the
+//! seed of the first failing case, so failures reproduce exactly:
+//! `PQDTW_PROP_SEED=<seed> cargo test <name>`.
+
+use crate::core::rng::Rng;
+
+/// Number of cases per property (overridable via `PQDTW_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PQDTW_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded inputs. Each case gets an independent
+/// [`Rng`]; a returned `Err(msg)` fails the property with the seed.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("PQDTW_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_0001);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed} (case {case}): {msg}");
+        }
+    }
+}
+
+/// Generator: random series of length `n` (iid standard normal).
+pub fn gen_series(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Generator: random walk of length `n` (integrated normal steps).
+pub fn gen_walk(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let mut acc = 0.0;
+    (0..n)
+        .map(|_| {
+            acc += rng.normal();
+            acc
+        })
+        .collect()
+}
+
+/// Generator: random length in `[lo, hi]`.
+pub fn gen_len(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Assertion helper: `a ≈ b` within `tol`.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} !≈ {b} (tol {tol})"))
+    }
+}
+
+/// Assertion helper: `a ≤ b + tol`.
+pub fn leq(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if a <= b + tol {
+        Ok(())
+    } else {
+        Err(format!("{a} !<= {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 10, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure_with_seed() {
+        check("fails", 5, |_| Err("always".into()));
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut rng = Rng::new(1);
+        assert_eq!(gen_series(&mut rng, 17).len(), 17);
+        assert_eq!(gen_walk(&mut rng, 9).len(), 9);
+        let l = gen_len(&mut rng, 5, 10);
+        assert!((5..=10).contains(&l));
+    }
+}

@@ -1,0 +1,9 @@
+//! Maximal Overlap Discrete Wavelet Transform (Haar) and the structure-
+//! aware segmentation built on it (paper §3.5, following Hong et al.'s
+//! SSDTW segmentation).
+
+pub mod modwt;
+pub mod segment;
+
+pub use modwt::{modwt_scale, modwt_pyramid};
+pub use segment::{elastic_split_points, fixed_split_points, modwt_segment_points};

@@ -1,0 +1,124 @@
+//! Haar MODWT scale (smooth) coefficients.
+//!
+//! The Maximal Overlap DWT is the undecimated wavelet transform: unlike
+//! the ordinary DWT it is shift-invariant and produces coefficient vectors
+//! of the *same length* as the input at every level — exactly the
+//! property the pre-alignment step needs (paper §3.5).
+//!
+//! For the Haar scaling filter the MODWT pyramid recursion is
+//!
+//! `V_j[t] = ( V_{j-1}[t] + V_{j-1}[t - 2^(j-1)] ) / 2`,  `V_0 = x`,
+//!
+//! with circular boundary treatment (standard MODWT convention). `V_j` is
+//! then a weighted moving average over a window of `2^j` samples —
+//! "proportional to the mean of the raw time series data" as the paper
+//! puts it.
+
+/// Scale (smooth) coefficients `V_j` of the Haar MODWT at `level` `j ≥ 1`.
+/// Output has the same length as `x`.
+pub fn modwt_scale(x: &[f64], level: usize) -> Vec<f64> {
+    assert!(level >= 1, "modwt_scale: level must be >= 1");
+    let n = x.len();
+    let mut v = x.to_vec();
+    if n == 0 {
+        return v;
+    }
+    let mut next = vec![0.0; n];
+    for j in 1..=level {
+        let shift = 1usize << (j - 1);
+        for t in 0..n {
+            // circular boundary: index (t - shift) mod n
+            let s = (t + n - (shift % n)) % n;
+            next[t] = 0.5 * (v[t] + v[s]);
+        }
+        std::mem::swap(&mut v, &mut next);
+    }
+    v
+}
+
+/// All scale coefficient vectors `V_1..=V_level` (used by tests and the
+/// level-sweep benchmark).
+pub fn modwt_pyramid(x: &[f64], level: usize) -> Vec<Vec<f64>> {
+    let mut out = Vec::with_capacity(level);
+    let mut v = x.to_vec();
+    let n = x.len();
+    let mut next = vec![0.0; n];
+    for j in 1..=level {
+        let shift = 1usize << (j - 1);
+        for t in 0..n {
+            let s = (t + n - (shift % n)) % n;
+            next[t] = 0.5 * (v[t] + v[s]);
+        }
+        std::mem::swap(&mut v, &mut next);
+        out.push(v.clone());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::preprocess::mean;
+    use crate::core::rng::Rng;
+
+    #[test]
+    fn length_preserved() {
+        let x: Vec<f64> = (0..37).map(|i| i as f64).collect();
+        for j in 1..=4 {
+            assert_eq!(modwt_scale(&x, j).len(), 37);
+        }
+    }
+
+    #[test]
+    fn level1_is_pairwise_average() {
+        let x = [2.0, 4.0, 6.0, 8.0];
+        let v = modwt_scale(&x, 1);
+        // V_1[t] = (x[t] + x[t-1 mod n]) / 2
+        assert_eq!(v, vec![(2.0 + 8.0) / 2.0, 3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn mean_preserved_every_level() {
+        // Averaging filters preserve the series mean (circular boundary).
+        let mut rng = Rng::new(97);
+        let x: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let m0 = mean(&x);
+        for j in 1..=5 {
+            let v = modwt_scale(&x, j);
+            assert!((mean(&v) - m0).abs() < 1e-9, "level {j}");
+        }
+    }
+
+    #[test]
+    fn constant_series_fixed_point() {
+        let x = [3.3; 16];
+        for j in 1..=4 {
+            assert!(modwt_scale(&x, j).iter().all(|&v| (v - 3.3).abs() < 1e-12));
+        }
+    }
+
+    #[test]
+    fn smooths_monotonically_in_level() {
+        // Higher levels average over wider windows → lower variance.
+        let mut rng = Rng::new(101);
+        let x: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let mut last_var = f64::INFINITY;
+        for j in 1..=6 {
+            let v = modwt_scale(&x, j);
+            let m = mean(&v);
+            let var = v.iter().map(|a| (a - m) * (a - m)).sum::<f64>() / v.len() as f64;
+            assert!(var < last_var, "level {j}: {var} !< {last_var}");
+            last_var = var;
+        }
+    }
+
+    #[test]
+    fn pyramid_matches_direct() {
+        let mut rng = Rng::new(103);
+        let x: Vec<f64> = (0..48).map(|_| rng.normal()).collect();
+        let pyr = modwt_pyramid(&x, 4);
+        for (j, v) in pyr.iter().enumerate() {
+            assert_eq!(v, &modwt_scale(&x, j + 1));
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Structure-aware elastic segmentation (paper §3.5).
+//!
+//! Fixed-length partitioning can cut straight through a local structure
+//! (a peak, a valley), forcing DTW to align the two halves independently
+//! and inflating the approximate distance. The fix: smooth the series with
+//! the Haar MODWT, extract candidate segment points where `x - V_J`
+//! changes sign (the series crosses its own smoothing), and snap each
+//! fixed split point `l` to the right-most candidate inside the tail
+//! window `[l - t, l]`. Points without a candidate stay at `l`, so every
+//! series is still cut into exactly `M` segments.
+
+use super::modwt::modwt_scale;
+
+/// Fixed split points `l_k = k·(D/M)` for `k = 1..M` (segment *ends*,
+/// exclusive; the final boundary `D` is implicit).
+pub fn fixed_split_points(len: usize, n_subspaces: usize) -> Vec<usize> {
+    assert!(n_subspaces >= 1 && len >= n_subspaces);
+    (1..n_subspaces).map(|k| k * len / n_subspaces).collect()
+}
+
+/// MODWT segment candidates: indices `i ≥ 1` where the sign of
+/// `x[i] - V_J[i]` differs from the sign at `i - 1`. Zero diffs adopt the
+/// previous sign so flat stretches do not spray spurious points.
+pub fn modwt_segment_points(x: &[f64], level: usize) -> Vec<usize> {
+    if x.len() < 2 {
+        return Vec::new();
+    }
+    let smooth = modwt_scale(x, level);
+    let mut points = Vec::new();
+    let mut prev_sign = 0i8;
+    for i in 0..x.len() {
+        let d = x[i] - smooth[i];
+        let sign = if d > 0.0 {
+            1
+        } else if d < 0.0 {
+            -1
+        } else {
+            prev_sign
+        };
+        if i > 0 && sign != 0 && prev_sign != 0 && sign != prev_sign {
+            points.push(i);
+        }
+        if sign != 0 {
+            prev_sign = sign;
+        }
+    }
+    points
+}
+
+/// Elastic split points: each fixed point `l` is replaced by the
+/// right-most MODWT candidate in `[l - tail, l]` when one exists.
+/// Returns `M - 1` strictly increasing interior boundaries.
+pub fn elastic_split_points(
+    x: &[f64],
+    n_subspaces: usize,
+    level: usize,
+    tail: usize,
+) -> Vec<usize> {
+    let fixed = fixed_split_points(x.len(), n_subspaces);
+    if tail == 0 || n_subspaces <= 1 {
+        return fixed;
+    }
+    let candidates = modwt_segment_points(x, level);
+    let mut out = Vec::with_capacity(fixed.len());
+    let mut prev_boundary = 0usize;
+    for &l in &fixed {
+        let lo = l.saturating_sub(tail).max(prev_boundary + 1);
+        // Right-most candidate within [lo, l].
+        let snapped = candidates
+            .iter()
+            .rev()
+            .find(|&&c| c >= lo && c <= l)
+            .copied()
+            .unwrap_or(l);
+        // Keep boundaries strictly increasing and leave at least one
+        // sample for the next segment.
+        let b = snapped.max(prev_boundary + 1).min(x.len() - 1);
+        out.push(b);
+        prev_boundary = b;
+    }
+    out
+}
+
+/// Cut `x` at `boundaries` (interior, strictly increasing) into
+/// `boundaries.len() + 1` segments.
+pub fn cut_at<'a>(x: &'a [f64], boundaries: &[usize]) -> Vec<&'a [f64]> {
+    let mut segs = Vec::with_capacity(boundaries.len() + 1);
+    let mut start = 0usize;
+    for &b in boundaries {
+        segs.push(&x[start..b]);
+        start = b;
+    }
+    segs.push(&x[start..]);
+    segs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    #[test]
+    fn fixed_points_even_split() {
+        assert_eq!(fixed_split_points(100, 4), vec![25, 50, 75]);
+        assert_eq!(fixed_split_points(10, 1), Vec::<usize>::new());
+        assert_eq!(fixed_split_points(7, 3), vec![2, 4]);
+    }
+
+    #[test]
+    fn sine_crossings_found() {
+        // A sine crosses its smoothing roughly every half period.
+        let x: Vec<f64> = (0..128).map(|i| ((i as f64) * 0.2).sin()).collect();
+        let pts = modwt_segment_points(&x, 3);
+        assert!(pts.len() >= 4, "found {} points", pts.len());
+        // π / 0.2 ≈ 31.4 samples per half period
+        for w in pts.windows(2) {
+            assert!(w[1] - w[0] >= 10, "{pts:?}");
+        }
+    }
+
+    #[test]
+    fn constant_series_no_crossings() {
+        let x = [5.0; 64];
+        assert!(modwt_segment_points(&x, 2).is_empty());
+    }
+
+    #[test]
+    fn elastic_points_stay_in_tail_window() {
+        let mut rng = Rng::new(107);
+        let x: Vec<f64> = (0..120).map(|_| rng.normal()).collect();
+        let m = 4;
+        let tail = 8;
+        let fixed = fixed_split_points(x.len(), m);
+        let elastic = elastic_split_points(&x, m, 2, tail);
+        assert_eq!(elastic.len(), fixed.len());
+        for (e, f) in elastic.iter().zip(fixed.iter()) {
+            assert!(*e <= *f, "boundary moved right: {e} > {f}");
+            assert!(*e + tail >= *f, "boundary moved beyond tail: {e} < {f}-{tail}");
+        }
+    }
+
+    #[test]
+    fn elastic_points_strictly_increasing() {
+        let mut rng = Rng::new(109);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+            let pts = elastic_split_points(&x, 8, 1, 6);
+            for w in pts.windows(2) {
+                assert!(w[0] < w[1], "{pts:?}");
+            }
+            assert!(*pts.last().unwrap() < x.len());
+            assert!(pts[0] >= 1);
+        }
+    }
+
+    #[test]
+    fn zero_tail_is_fixed_partition() {
+        let x: Vec<f64> = (0..60).map(|i| (i as f64 * 0.5).cos()).collect();
+        assert_eq!(
+            elastic_split_points(&x, 5, 2, 0),
+            fixed_split_points(60, 5)
+        );
+    }
+
+    #[test]
+    fn cut_at_covers_series() {
+        let x: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let b = vec![7, 15, 22];
+        let segs = cut_at(&x, &b);
+        assert_eq!(segs.len(), 4);
+        let total: usize = segs.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 30);
+        assert_eq!(segs[0], &x[0..7]);
+        assert_eq!(segs[3], &x[22..30]);
+    }
+
+    #[test]
+    fn snaps_to_rightmost_candidate_in_window() {
+        // Spec check: every elastic boundary equals the right-most MODWT
+        // candidate inside [l - tail, l], or l itself when none exists.
+        let mut rng = Rng::new(113);
+        for _ in 0..20 {
+            let x: Vec<f64> = {
+                let mut acc = 0.0;
+                (0..96)
+                    .map(|_| {
+                        acc += rng.normal();
+                        acc
+                    })
+                    .collect()
+            };
+            let (m, level, tail) = (4, 2, 7);
+            let fixed = fixed_split_points(x.len(), m);
+            let candidates = modwt_segment_points(&x, level);
+            let elastic = elastic_split_points(&x, m, level, tail);
+            let mut prev = 0usize;
+            for (&e, &l) in elastic.iter().zip(fixed.iter()) {
+                let lo = l.saturating_sub(tail).max(prev + 1);
+                let want = candidates
+                    .iter()
+                    .rev()
+                    .find(|&&c| c >= lo && c <= l)
+                    .copied()
+                    .unwrap_or(l)
+                    .max(prev + 1)
+                    .min(x.len() - 1);
+                assert_eq!(e, want);
+                prev = e;
+            }
+        }
+    }
+
+    #[test]
+    fn peak_boundary_snaps_before_structure() {
+        // A distinctive bump rising just before the fixed split: the
+        // elastic boundary should move onto the sign-change at the bump's
+        // rise so the structure is not cut. A gentle sine baseline keeps
+        // x - smooth nonzero everywhere.
+        let mut x: Vec<f64> =
+            (0..64).map(|i| 0.1 * ((i as f64) * 0.11).sin()).collect();
+        // bump spanning the fixed split at 32
+        for (i, v) in [(29, 0.8), (30, 2.4), (31, 3.1), (32, 3.0), (33, 2.2), (34, 0.7)] {
+            x[i] += v;
+        }
+        let elastic = elastic_split_points(&x, 2, 2, 8);
+        // The rise crossing sits at the bump onset (~29); the boundary
+        // must have moved off the fixed point 32 and be at/before the rise
+        // of the bump's core.
+        assert!(elastic[0] < 32, "elastic={elastic:?}");
+        assert!(elastic[0] >= 24, "elastic={elastic:?}");
+    }
+}

@@ -1,0 +1,56 @@
+//! Cross-language golden tests — the same fixtures and expected values
+//! as python/tests/test_golden.py. Any drift between the Rust DTW/LB
+//! implementations and the Python reference/Pallas kernels fails one of
+//! the two suites.
+
+use pqdtw::distance::dtw::dtw_sq;
+use pqdtw::distance::envelope::Envelope;
+use pqdtw::distance::lower_bounds::lb_keogh_sq;
+use pqdtw::distance::pruned_dtw::pruned_dtw_sq;
+
+const GOLD_A: [f64; 10] =
+    [0.3, -1.04, 0.75, 0.94, -1.95, -1.3, 0.13, -0.32, -0.02, -0.85];
+const GOLD_B: [f64; 10] =
+    [0.88, 0.78, 0.07, 1.13, 0.47, -0.86, 0.37, -0.96, 0.88, -0.05];
+const GOLD_DTW_SQ: [(usize, f64); 4] = [(0, 12.1145), (1, 5.4631), (2, 5.4631), (10, 4.2112)];
+
+const GOLD_C: [f64; 8] = [1.0, -0.5, 2.5, 0.0, -1.5, 2.0, -0.5, 1.5];
+const GOLD_Q: [f64; 8] = [0.0, 2.0, -1.0, 3.0, 0.5, -2.0, 1.0, 0.0];
+const GOLD_ENV_W: usize = 2;
+const GOLD_ENV_UPPER: [f64; 8] = [2.5, 2.5, 2.5, 2.5, 2.5, 2.0, 2.0, 2.0];
+const GOLD_ENV_LOWER: [f64; 8] = [-0.5, -0.5, -1.5, -1.5, -1.5, -1.5, -1.5, -0.5];
+const GOLD_LB_SQ: f64 = 0.5;
+
+#[test]
+fn dtw_matches_golden() {
+    for (w, want) in GOLD_DTW_SQ {
+        let got = dtw_sq(&GOLD_A, &GOLD_B, Some(w));
+        assert!((got - want).abs() < 1e-9, "w={w}: {got} vs {want}");
+    }
+    // unconstrained == widest window here
+    assert!((dtw_sq(&GOLD_A, &GOLD_B, None) - 4.2112).abs() < 1e-9);
+}
+
+#[test]
+fn pruned_dtw_matches_golden() {
+    for (w, want) in GOLD_DTW_SQ {
+        let got = pruned_dtw_sq(&GOLD_A, &GOLD_B, Some(w), f64::INFINITY);
+        assert!((got - want).abs() < 1e-9, "w={w}: {got} vs {want}");
+    }
+}
+
+#[test]
+fn envelope_matches_golden() {
+    let env = Envelope::new(&GOLD_C, GOLD_ENV_W);
+    for i in 0..8 {
+        assert!((env.upper[i] - GOLD_ENV_UPPER[i]).abs() < 1e-12, "U[{i}]");
+        assert!((env.lower[i] - GOLD_ENV_LOWER[i]).abs() < 1e-12, "L[{i}]");
+    }
+}
+
+#[test]
+fn lb_keogh_matches_golden() {
+    let env = Envelope::new(&GOLD_C, GOLD_ENV_W);
+    let got = lb_keogh_sq(&GOLD_Q, &env, f64::INFINITY);
+    assert!((got - GOLD_LB_SQ).abs() < 1e-9, "{got}");
+}

@@ -1,0 +1,140 @@
+//! Application-level integration: 1-NN classification and hierarchical
+//! clustering across measures on the UCR-like suite — the paper's two
+//! evaluation tasks, shrunk to test size.
+
+use pqdtw::cluster::{agglomerative, compact_labels, rand_index, Linkage};
+use pqdtw::core::matrix::CondensedMatrix;
+use pqdtw::data::ucr_like::{ucr_like_by_name, ucr_like_suite};
+use pqdtw::distance::measure::Measure;
+use pqdtw::eval::stats::{friedman_test, average_ranks};
+use pqdtw::nn::knn::{nn_classify_pq, nn_classify_raw, nn_classify_sax, PqQueryMode};
+use pqdtw::pq::quantizer::{PqConfig, ProductQuantizer};
+
+#[test]
+fn all_measures_beat_chance_on_easy_dataset() {
+    let tt = ucr_like_by_name("DampedOsc", 101).unwrap();
+    let chance = 1.0 - 1.0 / tt.train.classes().len() as f64;
+    for measure in [
+        Measure::Euclidean,
+        Measure::Dtw,
+        Measure::CDtw { window_frac: 0.05 },
+        Measure::CDtw { window_frac: 0.10 },
+        Measure::Sbd,
+    ] {
+        let (err, _) = nn_classify_raw(&tt.train, &tt.test, measure);
+        assert!(err < chance, "{}: err={err} chance={chance}", measure.name());
+    }
+    let (err_sax, _) = nn_classify_sax(&tt.train, &tt.test, 4, 0.2);
+    assert!(err_sax <= chance + 0.05, "SAX err={err_sax}");
+}
+
+#[test]
+fn elastic_beats_lockstep_on_warped_dataset() {
+    // SpikePosition's class signal is *where* the spike is; within-class
+    // jitter means ED suffers while DTW locks on.
+    let tt = ucr_like_by_name("SpikePosition", 103).unwrap();
+    let (err_ed, _) = nn_classify_raw(&tt.train, &tt.test, Measure::Euclidean);
+    let (err_dtw, _) = nn_classify_raw(&tt.train, &tt.test, Measure::CDtw { window_frac: 0.1 });
+    assert!(
+        err_dtw <= err_ed + 0.02,
+        "cDTW ({err_dtw}) should not lose to ED ({err_ed}) here"
+    );
+}
+
+#[test]
+fn pqdtw_competitive_with_ed_on_suite_subset() {
+    // Paper's headline: no significant difference between PQDTW and ED.
+    // On a 5-dataset subset, mean error difference must be small.
+    let mut diffs = Vec::new();
+    for name in ["CBF", "SpikePosition", "Seasonal", "DampedOsc", "BumpCount"] {
+        let tt = ucr_like_by_name(name, 107).unwrap();
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 32,
+            window_frac: 0.2,
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&tt.train, &cfg, 13).unwrap();
+        let enc = pq.encode_dataset(&tt.train);
+        let (err_pq, _) = nn_classify_pq(&pq, &enc, &tt.test, PqQueryMode::Asymmetric);
+        let (err_ed, _) = nn_classify_raw(&tt.train, &tt.test, Measure::Euclidean);
+        diffs.push(err_pq - err_ed);
+    }
+    let mean = diffs.iter().sum::<f64>() / diffs.len() as f64;
+    assert!(mean < 0.15, "PQDTW much worse than ED: mean diff {mean} ({diffs:?})");
+}
+
+#[test]
+fn clustering_recovers_structure_with_pq_distances() {
+    let tt = ucr_like_by_name("Seasonal", 109).unwrap();
+    let cfg = PqConfig { n_subspaces: 4, codebook_size: 24, window_frac: 0.2, ..Default::default() };
+    let pq = ProductQuantizer::train(&tt.train, &cfg, 3).unwrap();
+    let enc = pq.encode_dataset(&tt.test);
+    let n = tt.test.n_series();
+    let m = CondensedMatrix::build(n, |i, j| pq.patched_distance(&enc, i, j));
+    let k = tt.test.classes().len();
+    let labels = agglomerative(&m, Linkage::Complete).cut(k);
+    let truth = compact_labels(&tt.test.labels);
+    let ri = rand_index(&labels, &truth);
+    // frequency classes are clusterable: well above random pairing
+    assert!(ri > 0.6, "RI={ri}");
+}
+
+#[test]
+fn clustering_linkages_all_execute() {
+    let tt = ucr_like_by_name("Waveforms", 113).unwrap();
+    let sub: Vec<usize> = (0..30).collect();
+    let test = tt.test.subset(&sub);
+    let n = test.n_series();
+    let m = CondensedMatrix::build(n, |i, j| {
+        Measure::Euclidean.dist(test.row(i), test.row(j))
+    });
+    for linkage in [Linkage::Single, Linkage::Average, Linkage::Complete] {
+        let labels = agglomerative(&m, linkage).cut(3);
+        assert_eq!(labels.len(), n);
+    }
+}
+
+#[test]
+fn friedman_pipeline_over_suite() {
+    // Run two cheap measures over the suite and push the scores through
+    // the statistical machinery end-to-end (shape check, not conclusions).
+    let suite = ucr_like_suite(211);
+    let mut scores = Vec::new();
+    for tt in suite.iter().take(6) {
+        let (e1, _) = nn_classify_raw(&tt.train, &tt.test, Measure::Euclidean);
+        let (e2, _) = nn_classify_sax(&tt.train, &tt.test, 4, 0.2);
+        scores.push(vec![e1, e2]);
+    }
+    let ranks = average_ranks(&scores);
+    assert_eq!(ranks.len(), 2);
+    let (chi2, dof, p) = friedman_test(&scores);
+    assert!(chi2 >= 0.0);
+    assert_eq!(dof, 1);
+    assert!((0.0..=1.0).contains(&p));
+}
+
+#[test]
+fn ucr_archive_path_used_when_available() {
+    // The loader integrates with the CLI path; simulate a tiny archive.
+    let dir = std::env::temp_dir().join("pqdtw_it_arch");
+    let ds = dir.join("Tiny");
+    std::fs::create_dir_all(&ds).unwrap();
+    let mk_rows = |offset: f64| {
+        (0..8)
+            .map(|i| {
+                let vals: Vec<String> =
+                    (0..16).map(|t| format!("{}", offset + (i * t) as f64 * 0.01)).collect();
+                format!("{}\t{}", i % 2 + 1, vals.join("\t"))
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    std::fs::write(ds.join("Tiny_TRAIN.tsv"), mk_rows(0.0)).unwrap();
+    std::fs::write(ds.join("Tiny_TEST.tsv"), mk_rows(0.1)).unwrap();
+    let tt = pqdtw::data::ucr_loader::load_ucr_dataset(&dir, "Tiny").unwrap();
+    assert_eq!(tt.train.n_series(), 8);
+    assert_eq!(tt.train.len, 16);
+    let (err, _) = nn_classify_raw(&tt.train, &tt.test, Measure::Euclidean);
+    assert!((0.0..=1.0).contains(&err));
+}

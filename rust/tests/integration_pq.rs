@@ -1,0 +1,172 @@
+//! End-to-end integration of the PQ pipeline: train → encode → distances,
+//! including the approximation-quality contract against true DTW.
+
+use pqdtw::core::matrix::CondensedMatrix;
+use pqdtw::data::random_walk::RandomWalks;
+use pqdtw::data::ucr_like::ucr_like_by_name;
+use pqdtw::distance::dtw::dtw;
+use pqdtw::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
+
+/// Spearman rank correlation between two equal-length slices.
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    fn ranks(v: &[f64]) -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&i, &j| v[i].partial_cmp(&v[j]).unwrap());
+        let mut r = vec![0.0; v.len()];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    }
+    let ra = ranks(a);
+    let rb = ranks(b);
+    let n = a.len() as f64;
+    let ma = ra.iter().sum::<f64>() / n;
+    let mb = rb.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..a.len() {
+        let xa = ra[i] - ma;
+        let xb = rb[i] - mb;
+        num += xa * xb;
+        da += xa * xa;
+        db += xb * xb;
+    }
+    num / (da.sqrt() * db.sqrt())
+}
+
+#[test]
+fn pq_distances_preserve_dtw_ranking() {
+    // The PQ approximation must preserve the *ordering* of DTW distances
+    // well — that's what 1-NN and clustering quality rest on.
+    let data = RandomWalks::new(3).generate(40, 96);
+    let cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 32,
+        window_frac: 0.2,
+        ..Default::default()
+    };
+    let pq = ProductQuantizer::train(&data, &cfg, 5).unwrap();
+    let enc = pq.encode_dataset(&data);
+    let mut approx = Vec::new();
+    let mut exact = Vec::new();
+    for i in 0..data.n_series() {
+        for j in (i + 1)..data.n_series() {
+            approx.push(pq.patched_distance(&enc, i, j));
+            exact.push(dtw(data.row(i), data.row(j), None));
+        }
+    }
+    let rho = spearman(&approx, &exact);
+    assert!(rho > 0.5, "rank correlation too low: {rho}");
+}
+
+#[test]
+fn prealignment_does_not_break_pipeline_and_helps_on_phase_data() {
+    let tt = ucr_like_by_name("SpikePosition", 71).unwrap();
+    let base = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 24,
+        window_frac: 0.2,
+        ..Default::default()
+    };
+    let pre = PqConfig {
+        prealign: Some(PrealignConfig { level: 2, tail_frac: 0.2 }),
+        ..base
+    };
+    for cfg in [base, pre] {
+        let pq = ProductQuantizer::train(&tt.train, &cfg, 9).unwrap();
+        let enc = pq.encode_dataset(&tt.train);
+        let (err, _) = pqdtw::nn::knn::nn_classify_pq(
+            &pq,
+            &enc,
+            &tt.test,
+            pqdtw::nn::knn::PqQueryMode::Asymmetric,
+        );
+        // both must beat chance clearly on this 2-class dataset
+        assert!(err < 0.4, "err={err} cfg={cfg:?}");
+    }
+}
+
+#[test]
+fn pq_ed_baseline_roundtrip() {
+    let tt = ucr_like_by_name("CBF", 73).unwrap();
+    let cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 24,
+        metric: PqMetric::Euclidean,
+        ..Default::default()
+    };
+    let pq = ProductQuantizer::train(&tt.train, &cfg, 3).unwrap();
+    let enc = pq.encode_dataset(&tt.train);
+    let (err, _) = pqdtw::nn::knn::nn_classify_pq(
+        &pq,
+        &enc,
+        &tt.test,
+        pqdtw::nn::knn::PqQueryMode::Asymmetric,
+    );
+    assert!(err < 0.5, "PQ_ED err={err}");
+}
+
+#[test]
+fn symmetric_matrix_is_valid_for_clustering() {
+    let data = RandomWalks::new(11).generate(24, 64);
+    let cfg = PqConfig { n_subspaces: 4, codebook_size: 12, ..Default::default() };
+    let pq = ProductQuantizer::train(&data, &cfg, 1).unwrap();
+    let enc = pq.encode_dataset(&data);
+    let n = data.n_series();
+    let m = CondensedMatrix::build(n, |i, j| pq.patched_distance(&enc, i, j));
+    // all finite, non-negative, and the matrix drives clustering end-to-end
+    for i in 0..n {
+        for j in 0..n {
+            let d = m.get(i, j);
+            assert!(d.is_finite() && d >= 0.0);
+        }
+    }
+    let dend = pqdtw::cluster::agglomerative(&m, pqdtw::cluster::Linkage::Complete);
+    let labels = dend.cut(3);
+    assert_eq!(labels.len(), n);
+    let distinct: std::collections::HashSet<_> = labels.iter().collect();
+    assert_eq!(distinct.len(), 3);
+}
+
+#[test]
+fn encoding_stats_show_cascade_pruning() {
+    // On realistic data the LB cascade must prune a substantial share of
+    // candidates (that's the paper's Fig. 5 speedup mechanism).
+    let data = RandomWalks::new(17).generate(60, 128);
+    let cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 32,
+        window_frac: 0.1,
+        ..Default::default()
+    };
+    let pq = ProductQuantizer::train(&data, &cfg, 2).unwrap();
+    let enc = pq.encode_dataset(&data);
+    let st = enc.stats;
+    let pruned_frac = (st.pruned_kim + st.pruned_keogh) as f64 / st.candidates() as f64;
+    assert!(
+        pruned_frac > 0.3,
+        "cascade pruned only {:.1}% ({:?})",
+        pruned_frac * 100.0,
+        st
+    );
+}
+
+#[test]
+fn memory_model_compression_matches_dataset() {
+    let data = RandomWalks::new(23).generate(300, 256);
+    let cfg = PqConfig {
+        n_subspaces: 8,
+        codebook_size: 256,
+        train_subsample: Some(64),
+        ..Default::default()
+    };
+    let pq = ProductQuantizer::train(&data, &cfg, 1).unwrap();
+    let mm = pq.memory_model();
+    // K clamps to the 64-series training subsample → 6-bit codes; the
+    // §3.4 formula generalizes to 32·D / (M·log2 K).
+    assert_eq!(pq.codebook.k, 64);
+    assert_eq!(mm.code_bits_per_series, 8 * 6);
+    assert!((mm.compression_factor - 32.0 * 256.0 / 48.0).abs() < 1e-9);
+}

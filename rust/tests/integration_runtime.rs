@@ -1,0 +1,118 @@
+//! Runtime integration: the AOT-compiled JAX/Pallas encode graph (via
+//! PJRT) must agree with the native Rust encoder — the cross-layer
+//! correctness contract of the three-layer architecture.
+//!
+//! These tests are gated on the `pjrt` feature and on `make artifacts`
+//! having produced the HLO files; without either they no-op so the
+//! default `cargo test` loop stays hermetic.
+
+use pqdtw::runtime::artifacts::Manifest;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+#[test]
+fn manifest_parses_when_built() {
+    if let Some(dir) = artifacts_dir() {
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.specs.is_empty());
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use pqdtw::data::random_walk::RandomWalks;
+    use pqdtw::pq::quantizer::{PqConfig, PqMetric, ProductQuantizer};
+    use pqdtw::runtime::encoder::PjrtEncoder;
+
+    /// Train a quantizer whose shape matches the first encode artifact
+    /// variant lowered by aot.py: M=4, K=16, L=25, window=5 (series
+    /// length 100).
+    fn matching_quantizer() -> (ProductQuantizer, pqdtw::core::series::Dataset) {
+        let data = RandomWalks::new(97).generate(64, 100);
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 16,
+            window_frac: 0.2, // ceil(0.2 * 25) = 5
+            metric: PqMetric::Dtw,
+            prealign: None,
+            kmeans_iters: 4,
+            dba_iters: 2,
+            train_subsample: None,
+        };
+        let pq = ProductQuantizer::train(&data, &cfg, 11).unwrap();
+        assert_eq!(pq.codebook.sub_len, 25);
+        assert_eq!(pq.codebook.window, Some(5));
+        (pq, data)
+    }
+
+    #[test]
+    fn pjrt_encoder_matches_native() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let (pq, data) = matching_quantizer();
+        let mut enc = PjrtEncoder::new(&pq, &manifest).expect("encoder");
+        assert_eq!(enc.shape(), (4, 16, 25));
+
+        let mut agree = 0usize;
+        let n = 32.min(data.n_series());
+        for i in 0..n {
+            let x = data.row(i);
+            let via_pjrt = enc.encode(&pq, x).unwrap();
+            let (native, _, _) = pq.encode(x);
+            assert_eq!(via_pjrt.len(), native.len());
+            // f32 vs f64 can flip near-exact ties; require the PJRT code
+            // to be as close to the subspace as the native one within
+            // float32 slack, and count exact agreement.
+            if via_pjrt == native {
+                agree += 1;
+            } else {
+                let subs = pq.segment(x);
+                for (m, s) in subs.iter().enumerate() {
+                    let d_pjrt = pqdtw::distance::dtw::dtw_sq(
+                        s,
+                        pq.codebook.centroid(m, via_pjrt[m] as usize),
+                        pq.codebook.window,
+                    );
+                    let d_native = pqdtw::distance::dtw::dtw_sq(
+                        s,
+                        pq.codebook.centroid(m, native[m] as usize),
+                        pq.codebook.window,
+                    );
+                    assert!(
+                        (d_pjrt - d_native).abs() <= 1e-3 * (1.0 + d_native),
+                        "series {i} subspace {m}: pjrt {d_pjrt} vs native {d_native}"
+                    );
+                }
+            }
+        }
+        assert!(
+            agree * 10 >= n * 9,
+            "only {agree}/{n} series encoded identically via PJRT"
+        );
+    }
+
+    #[test]
+    fn pjrt_missing_shape_is_reported() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let data = RandomWalks::new(1).generate(8, 64);
+        // Shape (2, 4, 32, w) has no artifact.
+        let cfg = PqConfig {
+            n_subspaces: 2,
+            codebook_size: 4,
+            window_frac: 0.1,
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&data, &cfg, 1).unwrap();
+        assert!(PjrtEncoder::new(&pq, &manifest).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Property-based invariant tests over the whole distance / PQ stack,
+//! via the seeded harness in `pqdtw::testutil` (proptest is unavailable
+//! in the offline crate set). Every failure message includes the seed to
+//! reproduce: `PQDTW_PROP_SEED=<seed> cargo test -p pqdtw --test proptests`.
+
+use pqdtw::core::preprocess::{reinterpolate, znorm};
+use pqdtw::core::rng::Rng;
+use pqdtw::core::series::Dataset;
+use pqdtw::distance::dtw::{dtw, dtw_sq};
+use pqdtw::distance::envelope::Envelope;
+use pqdtw::distance::euclidean::euclidean_sq;
+use pqdtw::distance::lower_bounds::{lb_cascade_sq, lb_keogh_sq, lb_kim_sq};
+use pqdtw::distance::pruned_dtw::pruned_dtw_sq;
+use pqdtw::distance::sbd::sbd;
+use pqdtw::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
+use pqdtw::repr::sax::SaxEncoder;
+use pqdtw::testutil::{check, close, default_cases, gen_len, gen_series, gen_walk, leq};
+use pqdtw::wavelet::modwt::modwt_scale;
+
+#[test]
+fn prop_dtw_identity_symmetry_nonneg() {
+    check("dtw axioms", default_cases(), |rng| {
+        let n = gen_len(rng, 2, 40);
+        let a = gen_walk(rng, n);
+        let b = gen_walk(rng, n);
+        let w = if rng.below(2) == 0 { None } else { Some(rng.below(n)) };
+        close(dtw_sq(&a, &a, w), 0.0, 1e-12)?;
+        let d_ab = dtw_sq(&a, &b, w);
+        let d_ba = dtw_sq(&b, &a, w);
+        if d_ab < 0.0 {
+            return Err(format!("negative distance {d_ab}"));
+        }
+        close(d_ab, d_ba, 1e-9)
+    });
+}
+
+#[test]
+fn prop_lower_bound_chain() {
+    // LB_Kim <= DTW_w, LB_Keogh <= DTW_w, DTW_w <= ED (equal lengths).
+    check("lb chain", default_cases(), |rng| {
+        let n = gen_len(rng, 2, 40);
+        let q = gen_walk(rng, n);
+        let c = gen_walk(rng, n);
+        let w = rng.below(n);
+        let env = Envelope::new(&c, w);
+        let d = dtw_sq(&q, &c, Some(w));
+        leq(lb_kim_sq(&q, &c), d, 1e-9)?;
+        leq(lb_keogh_sq(&q, &env, f64::INFINITY), d, 1e-9)?;
+        leq(lb_cascade_sq(&q, &c, &env, f64::INFINITY), d, 1e-9)?;
+        leq(d, euclidean_sq(&q, &c), 1e-9)
+    });
+}
+
+#[test]
+fn prop_pruned_dtw_is_exact() {
+    check("pruned == exact under valid ub", default_cases(), |rng| {
+        let n = gen_len(rng, 2, 35);
+        let a = gen_walk(rng, n);
+        let b = gen_walk(rng, n);
+        let w = if rng.below(2) == 0 { None } else { Some(1 + rng.below(n)) };
+        let ub = euclidean_sq(&a, &b) + 1e-9;
+        close(pruned_dtw_sq(&a, &b, w, ub), dtw_sq(&a, &b, w), 1e-9)
+    });
+}
+
+#[test]
+fn prop_window_monotone() {
+    check("window monotone", default_cases(), |rng| {
+        let n = gen_len(rng, 4, 30);
+        let a = gen_walk(rng, n);
+        let b = gen_walk(rng, n);
+        let mut last = f64::INFINITY;
+        for w in 0..n {
+            let d = dtw_sq(&a, &b, Some(w));
+            leq(d, last, 1e-9)?;
+            last = d;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_envelope_widens_with_window() {
+    check("envelope monotone in w", default_cases(), |rng| {
+        let n = gen_len(rng, 2, 50);
+        let c = gen_series(rng, n);
+        let mut prev = Envelope::new(&c, 0);
+        for w in 1..n.min(12) {
+            let e = Envelope::new(&c, w);
+            for i in 0..n {
+                leq(prev.upper[i], e.upper[i], 1e-12)?;
+                leq(e.lower[i], prev.lower[i], 1e-12)?;
+            }
+            prev = e;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sbd_range_and_self() {
+    check("sbd range", default_cases(), |rng| {
+        let n = 1 << (2 + rng.below(5));
+        let a = znorm(&gen_series(rng, n));
+        let b = znorm(&gen_series(rng, n));
+        let d = sbd(&a, &b);
+        if !(-1e-9..=2.0 + 1e-9).contains(&d) {
+            return Err(format!("sbd out of range: {d}"));
+        }
+        close(sbd(&a, &a), 0.0, 1e-9)
+    });
+}
+
+#[test]
+fn prop_sax_mindist_lower_bounds_ed() {
+    check("sax lb", default_cases(), |rng| {
+        let n = gen_len(rng, 10, 60);
+        let a = znorm(&gen_series(rng, n));
+        let b = znorm(&gen_series(rng, n));
+        let enc = SaxEncoder::new(n, 4, 0.2);
+        let lb = enc.mindist(&enc.encode(&a), &enc.encode(&b));
+        leq(lb, euclidean_sq(&a, &b).sqrt(), 1e-9)
+    });
+}
+
+#[test]
+fn prop_modwt_preserves_mean() {
+    check("modwt mean", default_cases(), |rng| {
+        let n = gen_len(rng, 4, 64);
+        let x = gen_series(rng, n);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        for level in 1..=4 {
+            close(mean(&modwt_scale(&x, level)), mean(&x), 1e-9)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reinterpolate_preserves_endpoints_and_range() {
+    check("reinterp", default_cases(), |rng| {
+        let n = gen_len(rng, 2, 40);
+        let x = gen_series(rng, n);
+        let target = gen_len(rng, 2, 60);
+        let y = reinterpolate(&x, target);
+        if y.len() != target {
+            return Err("length".into());
+        }
+        close(y[0], x[0], 1e-12)?;
+        close(*y.last().unwrap(), *x.last().unwrap(), 1e-12)?;
+        let (lo, hi) = x.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+        for &v in &y {
+            if v < lo - 1e-9 || v > hi + 1e-9 {
+                return Err(format!("interp escaped range: {v} not in [{lo}, {hi}]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pq_symmetric_distance_axioms() {
+    // Symmetry, zero-self, and non-negativity of the PQ symmetric
+    // distance; patched >= plain; asymmetric self-consistency.
+    check("pq distance axioms", 12, |rng| {
+        let n = 16 + rng.below(16);
+        let len = 48 + 4 * rng.below(8);
+        let mut values = Vec::with_capacity(n * len);
+        for _ in 0..n {
+            values.extend(gen_walk(rng, len));
+        }
+        let data = Dataset::from_flat(values, len);
+        let prealign = if rng.below(2) == 0 {
+            None
+        } else {
+            Some(PrealignConfig { level: 1 + rng.below(3), tail_frac: 0.15 })
+        };
+        let cfg = PqConfig {
+            n_subspaces: 2 + rng.below(3),
+            codebook_size: 4 + rng.below(8),
+            window_frac: 0.2,
+            metric: if rng.below(4) == 0 { PqMetric::Euclidean } else { PqMetric::Dtw },
+            prealign,
+            kmeans_iters: 3,
+            dba_iters: 2,
+            train_subsample: None,
+        };
+        let pq = ProductQuantizer::train(&data, &cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        let enc = pq.encode_dataset(&data);
+        for _ in 0..8 {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            let d_ij = pq.symmetric_distance(enc.code(i), enc.code(j));
+            let d_ji = pq.symmetric_distance(enc.code(j), enc.code(i));
+            close(d_ij, d_ji, 1e-9)?;
+            if d_ij < 0.0 {
+                return Err("negative".into());
+            }
+            close(pq.symmetric_distance(enc.code(i), enc.code(i)), 0.0, 1e-12)?;
+            let p = pq.patched_distance(&enc, i, j);
+            leq(d_ij, p, 1e-9)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encoded_codes_in_range() {
+    check("codes in range", 10, |rng| {
+        let n = 12 + rng.below(12);
+        let len = 40 + rng.below(40);
+        let mut values = Vec::with_capacity(n * len);
+        for _ in 0..n {
+            values.extend(gen_series(rng, len));
+        }
+        let data = Dataset::from_flat(values, len);
+        let cfg = PqConfig {
+            n_subspaces: 2 + rng.below(4),
+            codebook_size: 3 + rng.below(10),
+            window_frac: 0.3,
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&data, &cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        let enc = pq.encode_dataset(&data);
+        let k = pq.codebook.k as u16;
+        for &c in &enc.codes {
+            if c >= k {
+                return Err(format!("code {c} >= K {k}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dtw_triangle_violations_exist_but_bounded_scaling() {
+    // DTW is not a metric (no triangle inequality) — but sqrt-costs must
+    // still scale linearly under uniform scaling of inputs.
+    check("dtw scaling", default_cases(), |rng| {
+        let n = gen_len(rng, 2, 30);
+        let a = gen_walk(rng, n);
+        let b = gen_walk(rng, n);
+        let s = 0.5 + rng.uniform() * 3.0;
+        let a2: Vec<f64> = a.iter().map(|v| v * s).collect();
+        let b2: Vec<f64> = b.iter().map(|v| v * s).collect();
+        close(dtw(&a2, &b2, None), s * dtw(&a, &b, None), 1e-6)
+    });
+}
