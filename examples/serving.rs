@@ -2,12 +2,19 @@
 //!
 //! Builds an engine over a real (synthetic-UCR) workload, starts the
 //! threaded coordinator with dynamic batching, drives concurrent clients
-//! against it, and reports latency/throughput percentiles. With
+//! against it, and reports latency/throughput percentiles. The second
+//! phase exercises the top-k serving path in its three modes —
+//! exhaustive scan, IVF-probed, and DTW re-ranked — and reports the
+//! recall-vs-`nprobe` trade-off: probing fewer coarse cells scans a
+//! smaller fraction of the database (lower latency) at the cost of
+//! recall against the exhaustive scan, while probing all `nlist` cells
+//! reproduces it bit-for-bit. The re-ranked mode rescores the PQ
+//! candidates with true windowed DTW, so its distances are exact. With
 //! `--features pjrt` (and `make artifacts`), queries are additionally
 //! cross-checked through the AOT-compiled JAX/Pallas encode graph
 //! executed via PJRT — Python is never in the loop.
 //!
-//! Run: `cargo run --release --features pjrt --example serving`
+//! Run: `cargo run --release --example serving`
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -15,6 +22,7 @@ use std::time::Instant;
 use pqdtw::cli::Args;
 use pqdtw::coordinator::{BatcherConfig, Engine, Request, Response, Service, ServiceConfig};
 use pqdtw::data::ucr_like::ucr_like_by_name;
+use pqdtw::nn::ivf::CoarseMetric;
 use pqdtw::nn::knn::PqQueryMode;
 use pqdtw::pq::quantizer::{PqConfig, PqMetric};
 #[cfg(feature = "pjrt")]
@@ -26,6 +34,7 @@ fn main() -> anyhow::Result<()> {
     let n_clients = args.get_parsed("clients", 4usize);
     let per_client = args.get_parsed("requests", 100usize);
     let n_workers = args.get_parsed("workers", 2usize);
+    let k = args.get_parsed("topk", 5usize);
 
     // SpikePosition has length 100 = 4 × 25: matches the AOT artifact
     // variant (M=4, K=16, L=25, w=5) lowered by python/compile/aot.py.
@@ -38,7 +47,11 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     println!("building engine on {} ({} series)…", tt.name, tt.train.n_series());
-    let engine = Arc::new(Engine::build(&tt.train, &cfg, seed)?);
+    let mut engine = Engine::build(&tt.train, &cfg, seed)?;
+    engine.set_scan_threads(2);
+    engine.enable_ivf(8, CoarseMetric::Dtw { window: engine.full_window() }, seed);
+    let nlist = engine.ivf.as_ref().map(|ivf| ivf.nlist()).unwrap_or(1);
+    let engine = Arc::new(engine);
 
     // --- PJRT cross-check: the same encode through the AOT artifact ---
     #[cfg(feature = "pjrt")]
@@ -71,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     #[cfg(not(feature = "pjrt"))]
     println!("PJRT cross-check skipped (build with --features pjrt)");
 
-    // --- the serving run ---
+    // --- the serving run: mixed 1-NN load from concurrent clients ---
     let svc = Arc::new(Service::start(
         Arc::clone(&engine),
         ServiceConfig {
@@ -97,7 +110,11 @@ fn main() -> anyhow::Result<()> {
             for i in 0..per_client {
                 let idx = (c * per_client + i) % test.n_series();
                 let mode = if i % 2 == 0 { PqQueryMode::Symmetric } else { PqQueryMode::Asymmetric };
-                match svc.call(Request::NnQuery { series: test.row(idx).to_vec(), mode }) {
+                match svc.call(Request::NnQuery {
+                    series: test.row(idx).to_vec(),
+                    mode,
+                    nprobe: None,
+                }) {
                     Response::Nn { label, .. } => {
                         if label == Some(test.label(idx)) {
                             correct += 1;
@@ -114,7 +131,7 @@ fn main() -> anyhow::Result<()> {
     let m = svc.metrics();
 
     let total = (n_clients * per_client) as f64;
-    println!("== serving results ==");
+    println!("== serving results (1-NN load) ==");
     println!("requests      : {}", m.requests);
     println!("wall time     : {wall:?}");
     println!("throughput    : {:.0} req/s", total / wall.as_secs_f64());
@@ -124,5 +141,78 @@ fn main() -> anyhow::Result<()> {
     println!("mean batch    : {:.2}", m.mean_batch_size);
     println!("errors        : {}", m.errors);
     println!("1-NN accuracy : {:.3} (vs labels, online queries)", correct as f64 / total);
+
+    // --- top-k in three modes: the recall/latency dial ---
+    println!("\n== top-k serving modes (k={k}, nlist={nlist}) ==");
+    let n_queries = 40.min(test.n_series());
+    // exhaustive truth, then probed at increasing nprobe, then re-ranked
+    let mut truth = Vec::with_capacity(n_queries);
+    for i in 0..n_queries {
+        match svc.call(Request::TopKQuery {
+            series: test.row(i).to_vec(),
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: None,
+        }) {
+            Response::TopK(hits) => truth.push(hits),
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+    for nprobe in [1usize, (nlist / 4).max(1), nlist] {
+        let mut overlap = 0usize;
+        let t0 = Instant::now();
+        for (i, want) in truth.iter().enumerate() {
+            match svc.call(Request::TopKQuery {
+                series: test.row(i).to_vec(),
+                k,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: Some(nprobe),
+                rerank: None,
+            }) {
+                Response::TopK(hits) => {
+                    if nprobe == nlist {
+                        assert_eq!(&hits, want, "full probe must be bit-identical");
+                    }
+                    let t: std::collections::HashSet<usize> =
+                        want.iter().map(|h| h.index).collect();
+                    overlap += hits.iter().filter(|h| t.contains(&h.index)).count();
+                }
+                other => panic!("unexpected response: {other:?}"),
+            }
+        }
+        println!(
+            "nprobe {nprobe:>3}: recall@{k} {:.3}, mean latency {:.0} µs{}",
+            overlap as f64 / (n_queries * k) as f64,
+            1e6 * t0.elapsed().as_secs_f64() / n_queries as f64,
+            if nprobe == nlist { "  (bit-identical to exhaustive ✓)" } else { "" },
+        );
+    }
+    let t0 = Instant::now();
+    for i in 0..n_queries {
+        match svc.call(Request::TopKQuery {
+            series: test.row(i).to_vec(),
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: Some(4 * k),
+        }) {
+            Response::TopK(hits) => assert!(hits.len() <= k),
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+    println!(
+        "re-ranked : exact DTW distances, mean latency {:.0} µs (depth {})",
+        1e6 * t0.elapsed().as_secs_f64() / n_queries as f64,
+        4 * k
+    );
+
+    let m = svc.metrics();
+    println!("\nper-mode service counters:");
+    for c in &m.per_class {
+        if c.requests > 0 {
+            println!("  {:<16} {:>6} reqs, mean {:.0} µs", c.class.name(), c.requests, c.mean_latency_us);
+        }
+    }
     Ok(())
 }

@@ -1,6 +1,7 @@
 //! §Perf microbenchmarks — the hot paths the optimization pass iterates
 //! on: the DTW DP inner loop, the LB-cascade encoder, the O(M) symmetric
-//! distance, the asymmetric table, and the coordinator overhead.
+//! distance, the asymmetric table, the top-k serving scans (exhaustive /
+//! sharded / IVF-probed / DTW re-ranked), and the coordinator overhead.
 //!
 //! Prints ns/op style medians; EXPERIMENTS.md §Perf records before/after.
 //!
@@ -16,7 +17,9 @@ use pqdtw::distance::dtw::{dtw_sq_scratch, DtwScratch};
 use pqdtw::distance::euclidean::euclidean_sq;
 use pqdtw::distance::pruned_dtw::pruned_dtw_sq;
 use pqdtw::eval::report::median;
+use pqdtw::nn::ivf::{CoarseMetric, IvfIndex};
 use pqdtw::nn::knn::PqQueryMode;
+use pqdtw::nn::topk::{rerank_dtw, topk_scan_with, QueryLut};
 use pqdtw::pq::distance::{asymmetric_sq, asymmetric_table, symmetric_sq};
 use pqdtw::pq::quantizer::{PqConfig, ProductQuantizer};
 
@@ -141,13 +144,114 @@ fn main() {
         );
     }
 
+    // --- top-k serving scans on a large database ---
+    //
+    // The acceptance-relevant comparison: an IVF probe must beat the
+    // exhaustive LUT scan wall-clock on a multi-thousand-series database.
+    // The coarse quantizer is Euclidean here so the probe itself is
+    // O(nlist·D) — the classic IVF configuration for cheap cell
+    // selection; at nprobe = nlist the probed result is bit-identical to
+    // the exhaustive scan (asserted below).
+    {
+        let (n, len, k) = (16_384usize, 64usize, 10usize);
+        println!("\ntop-k serving scans (N={n}, len={len}, k={k}):");
+        let db = RandomWalks::new(97).generate(n, len);
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 32,
+            window_frac: 0.1,
+            kmeans_iters: 2,
+            dba_iters: 1,
+            train_subsample: Some(64),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let pq = ProductQuantizer::train(&db, &cfg, 5).unwrap();
+        let enc = pq.encode_dataset(&db);
+        println!("  (one-time train+encode: {:?})", t0.elapsed());
+        let t0 = Instant::now();
+        let ivf = IvfIndex::build(&db, 64, CoarseMetric::Euclidean, 7);
+        println!("  (one-time IVF build, nlist=64 ED-coarse: {:?})", t0.elapsed());
+
+        let q = RandomWalks::new(4242).generate(1, len);
+        let q = q.row(0);
+        let lut = QueryLut::build(&pq, q, PqQueryMode::Asymmetric);
+
+        let nprobe = 4;
+        // correctness guard before timing: full probe == exhaustive
+        assert_eq!(
+            topk_scan_with(&pq, &enc, &lut, k, 1),
+            ivf.query_topk_with(&pq, &enc, &lut, q, k, ivf.nlist()),
+            "full probe must be bit-identical to the exhaustive scan"
+        );
+
+        let t_exh = bench(31, || {
+            std::hint::black_box(topk_scan_with(&pq, &enc, &lut, k, 1));
+        });
+        let t_exh4 = bench(31, || {
+            std::hint::black_box(topk_scan_with(&pq, &enc, &lut, k, 4));
+        });
+        let t_probe = bench(31, || {
+            std::hint::black_box(ivf.query_topk_with(&pq, &enc, &lut, q, k, nprobe));
+        });
+        let frac = ivf.scan_fraction(q, nprobe);
+        println!(
+            "  exhaustive scan, 1 thread : {:9.1} µs",
+            t_exh * 1e6
+        );
+        println!(
+            "  exhaustive scan, 4 threads: {:9.1} µs (x{:.2} vs 1 thread)",
+            t_exh4 * 1e6,
+            t_exh / t_exh4
+        );
+        println!(
+            "  IVF probe nprobe={nprobe}/{}   : {:9.1} µs (x{:.2} vs exhaustive, scans {:.1}% of db)",
+            ivf.nlist(),
+            t_probe * 1e6,
+            t_exh / t_probe,
+            100.0 * frac
+        );
+        if t_probe >= t_exh {
+            println!("  WARNING: probed scan did not beat the exhaustive scan");
+        }
+        // end-to-end latency including the per-query table build
+        let t_exh_total = bench(31, || {
+            let lut = QueryLut::build(&pq, q, PqQueryMode::Asymmetric);
+            std::hint::black_box(topk_scan_with(&pq, &enc, &lut, k, 1));
+        });
+        let t_probe_total = bench(31, || {
+            let lut = QueryLut::build(&pq, q, PqQueryMode::Asymmetric);
+            std::hint::black_box(ivf.query_topk_with(&pq, &enc, &lut, q, k, nprobe));
+        });
+        println!(
+            "  incl. table build         : exhaustive {:9.1} µs | probed {:9.1} µs (x{:.2})",
+            t_exh_total * 1e6,
+            t_probe_total * 1e6,
+            t_exh_total / t_probe_total
+        );
+        // DTW re-rank of a 4k candidate pool
+        let cands = topk_scan_with(&pq, &enc, &lut, 4 * k, 1);
+        let t_rerank = bench(31, || {
+            std::hint::black_box(rerank_dtw(&db, q, &cands, k, Some(6)));
+        });
+        println!(
+            "  DTW re-rank depth {:3}     : {:9.1} µs (exact distances)",
+            4 * k,
+            t_rerank * 1e6
+        );
+    }
+
     // --- coordinator overhead: request round-trip minus compute ---
     {
         let tt = pqdtw::data::ucr_like::ucr_like_by_name("SpikePosition", 7).unwrap();
         let cfg = PqConfig { n_subspaces: 4, codebook_size: 16, window_frac: 0.2, ..Default::default() };
         let engine = Arc::new(Engine::build(&tt.train, &cfg, 1).unwrap());
         // direct engine call
-        let req = Request::NnQuery { series: tt.test.row(0).to_vec(), mode: PqQueryMode::Symmetric };
+        let req = Request::NnQuery {
+            series: tt.test.row(0).to_vec(),
+            mode: PqQueryMode::Symmetric,
+            nprobe: None,
+        };
         let t_direct = bench(31, || {
             std::hint::black_box(engine.handle(std::hint::black_box(&req)));
         });
@@ -157,11 +261,12 @@ fn main() {
             std::hint::black_box(svc.call(Request::NnQuery {
                 series: tt.test.row(0).to_vec(),
                 mode: PqQueryMode::Symmetric,
+                nprobe: None,
             }));
         });
         svc.shutdown();
         println!(
-            "engine direct: {:7.1} µs | via service: {:7.1} µs (overhead {:+.1} µs)",
+            "\nengine direct: {:7.1} µs | via service: {:7.1} µs (overhead {:+.1} µs)",
             t_direct * 1e6,
             t_svc * 1e6,
             (t_svc - t_direct) * 1e6

@@ -46,6 +46,13 @@ impl Args {
         self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Optional typed flag: `None` when absent or unparsable (used for
+    /// flags whose absence selects a different serving mode, e.g.
+    /// `--nprobe` / `--rerank`).
+    pub fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.flags.get(key).and_then(|v| v.parse().ok())
+    }
+
     /// Boolean switch.
     pub fn has(&self, key: &str) -> bool {
         self.flags.get(key).map(|v| v == "true").unwrap_or(false)
@@ -75,6 +82,14 @@ mod tests {
         let a = parse("selftest");
         assert_eq!(a.get("dataset", "CBF"), "CBF");
         assert_eq!(a.get_parsed("n", 10usize), 10);
+    }
+
+    #[test]
+    fn optional_flags() {
+        let a = parse("topk --nprobe 4");
+        assert_eq!(a.get_opt::<usize>("nprobe"), Some(4));
+        assert_eq!(a.get_opt::<usize>("rerank"), None);
+        assert_eq!(a.get_opt::<usize>("verbose"), None); // unparsable
     }
 
     #[test]

@@ -1,12 +1,27 @@
-//! Engine: the trained state (quantizer + encoded database) and the
-//! request vocabulary it serves.
+//! Engine: the trained state (quantizer + encoded database + optional
+//! IVF index + retained raw series) and the request vocabulary it
+//! serves.
+//!
+//! Serving modes for NN queries form a recall/latency dial:
+//!
+//! - **exhaustive** — scan every PQ code (optionally sharded over
+//!   `scan_threads` std threads); exact w.r.t. the PQ approximation.
+//! - **IVF-probed** — scan only the `nprobe` nearest coarse cells;
+//!   `nprobe = nlist` is bit-identical to the exhaustive scan, smaller
+//!   `nprobe` trades recall for latency.
+//! - **re-ranked** — rescore the PQ candidate pool with true windowed
+//!   DTW against the retained raw database, so returned distances are
+//!   exact DTW values, not approximations.
 
 use anyhow::Result;
 
 use crate::core::series::Dataset;
+use crate::nn::ivf::{CoarseMetric, IvfIndex};
 use crate::nn::knn::PqQueryMode;
-use crate::pq::distance as pqdist;
+use crate::nn::topk::{rerank_dtw, topk_scan_with, Neighbor, QueryLut};
 use crate::pq::quantizer::{EncodedDataset, PqConfig, ProductQuantizer};
+
+use super::metrics::RequestClass;
 
 /// A request to the similarity engine.
 #[derive(Debug, Clone)]
@@ -22,6 +37,26 @@ pub enum Request {
         series: Vec<f64>,
         /// Symmetric (encode + LUT) or asymmetric (table + LUT).
         mode: PqQueryMode,
+        /// Probe only the `n` nearest IVF cells instead of scanning all
+        /// items (requires an engine built with an IVF index).
+        nprobe: Option<usize>,
+    },
+    /// Top-k query against the encoded database.
+    TopKQuery {
+        /// The raw query series.
+        series: Vec<f64>,
+        /// Number of neighbours to return (`>= 1`; clamped to the
+        /// database size).
+        k: usize,
+        /// Symmetric (encode + LUT) or asymmetric (table + LUT).
+        mode: PqQueryMode,
+        /// Probe only the `n` nearest IVF cells instead of scanning all
+        /// items (requires an engine built with an IVF index).
+        nprobe: Option<usize>,
+        /// Re-rank: fetch this many PQ candidates (clamped to `>= k`),
+        /// rescore them with true windowed DTW against the raw database
+        /// and return the `k` best with exact distances.
+        rerank: Option<usize>,
     },
     /// Approximate distance between two database items by id.
     PairDist {
@@ -30,6 +65,33 @@ pub enum Request {
         /// Second item id.
         j: usize,
     },
+}
+
+impl Request {
+    /// Metrics class of this request (the serving mode it exercises).
+    pub fn class(&self) -> RequestClass {
+        match self {
+            Request::Encode { .. } => RequestClass::Encode,
+            Request::NnQuery { .. } => RequestClass::Nn,
+            Request::PairDist { .. } => RequestClass::PairDist,
+            Request::TopKQuery { nprobe, rerank, .. } => match (nprobe, rerank) {
+                (_, Some(_)) => RequestClass::TopKReranked,
+                (Some(_), None) => RequestClass::TopKProbed,
+                (None, None) => RequestClass::TopKExhaustive,
+            },
+        }
+    }
+}
+
+/// One ranked neighbour in a [`Response::TopK`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hit {
+    /// Database index of the neighbour.
+    pub index: usize,
+    /// Distance (PQ-approximate, or exact DTW after a re-rank).
+    pub distance: f64,
+    /// Label of the neighbour when the database is labeled.
+    pub label: Option<i64>,
 }
 
 /// A response from the engine.
@@ -46,29 +108,104 @@ pub enum Response {
         /// Label of the nearest item when the database is labeled.
         label: Option<i64>,
     },
+    /// Ranked top-k result, ascending by distance.
+    TopK(Vec<Hit>),
     /// Pairwise distance.
     Dist(f64),
     /// Request failed.
     Error(String),
 }
 
-/// Trained engine state: quantizer, encoded database, and the raw
-/// database retained for asymmetric re-ranking use cases.
+/// Trained engine state: quantizer, encoded database, the raw database
+/// retained for exact DTW re-ranking, and an optional IVF index for
+/// probed scans.
 pub struct Engine {
     /// Trained product quantizer.
     pub pq: ProductQuantizer,
     /// The encoded database.
     pub encoded: EncodedDataset,
+    /// The raw database (re-rank rescoring and IVF construction).
+    pub raw: Dataset,
+    /// Optional inverted-file index over the database.
+    pub ivf: Option<IvfIndex>,
     /// Number of database items.
     pub n_items: usize,
+    /// Threads used for exhaustive top-k scans (1 = sequential).
+    scan_threads: usize,
 }
 
 impl Engine {
-    /// Train a quantizer on `db` and encode it.
+    /// Train a quantizer on `db` and encode it. No IVF index is built;
+    /// attach one with [`Engine::enable_ivf`].
     pub fn build(db: &Dataset, cfg: &PqConfig, seed: u64) -> Result<Self> {
         let pq = ProductQuantizer::train(db, cfg, seed)?;
         let encoded = pq.encode_dataset(db);
-        Ok(Engine { pq, encoded, n_items: db.n_series() })
+        Ok(Engine {
+            pq,
+            encoded,
+            raw: db.clone(),
+            ivf: None,
+            n_items: db.n_series(),
+            scan_threads: 1,
+        })
+    }
+
+    /// Build an IVF index with `nlist` coarse cells over the retained
+    /// raw database, enabling `nprobe` requests.
+    pub fn enable_ivf(&mut self, nlist: usize, metric: CoarseMetric, seed: u64) {
+        self.ivf = Some(IvfIndex::build(&self.raw, nlist, metric, seed));
+    }
+
+    /// Shard exhaustive top-k scans over `n` threads (1 = sequential).
+    ///
+    /// Threads are spawned per query (no pool in the offline crate set),
+    /// which costs tens of µs per request — worthwhile only when the
+    /// database is large enough that the scan dominates that overhead
+    /// (see `benches/perf_hotpath.rs` for the crossover).
+    pub fn set_scan_threads(&mut self, n: usize) {
+        self.scan_threads = n.max(1);
+    }
+
+    /// Warping window for full-length DTW derived from the trained
+    /// config's window fraction (used by the re-rank stage and as the
+    /// natural coarse-DTW window).
+    pub fn full_window(&self) -> Option<usize> {
+        let frac = self.pq.config.window_frac;
+        if frac >= 1.0 {
+            None
+        } else {
+            Some(((frac * self.raw.len as f64).ceil() as usize).max(1))
+        }
+    }
+
+    /// PQ candidate pool for a query: IVF-probed when `nprobe` is set,
+    /// exhaustive (sharded) scan otherwise.
+    fn pq_candidates(
+        &self,
+        lut: &QueryLut,
+        series: &[f64],
+        k: usize,
+        nprobe: Option<usize>,
+    ) -> std::result::Result<Vec<Neighbor>, Response> {
+        match nprobe {
+            Some(np) => match &self.ivf {
+                Some(ivf) => {
+                    Ok(ivf.query_topk_with(&self.pq, &self.encoded, lut, series, k, np))
+                }
+                None => Err(Response::Error(
+                    "nprobe set but the engine has no IVF index (call enable_ivf)".into(),
+                )),
+            },
+            None => Ok(topk_scan_with(&self.pq, &self.encoded, lut, k, self.scan_threads)),
+        }
+    }
+
+    fn hit(&self, n: Neighbor) -> Hit {
+        Hit {
+            index: n.index,
+            distance: n.distance,
+            label: self.encoded.labels.get(n.index).copied(),
+        }
     }
 
     /// Serve one request.
@@ -85,7 +222,7 @@ impl Engine {
                 let (codes, _, _) = self.pq.encode(series);
                 Response::Codes(codes)
             }
-            Request::NnQuery { series, mode } => {
+            Request::NnQuery { series, mode, nprobe } => {
                 if series.len() != self.pq.series_len {
                     return Response::Error(format!(
                         "series length {} != trained length {}",
@@ -96,43 +233,49 @@ impl Engine {
                 if self.n_items == 0 {
                     return Response::Error("empty database".into());
                 }
-                let (best_j, best_sq) = match mode {
-                    PqQueryMode::Symmetric => {
-                        let (codes, _, _) = self.pq.encode(series);
-                        let mut best = (0usize, f64::INFINITY);
-                        for j in 0..self.n_items {
-                            let d = pqdist::symmetric_sq(
-                                &self.pq.codebook,
-                                &codes,
-                                self.encoded.code(j),
-                            );
-                            if d < best.1 {
-                                best = (j, d);
-                            }
-                        }
-                        best
-                    }
-                    PqQueryMode::Asymmetric => {
-                        let table = self.pq.asymmetric_table(series);
-                        let mut best = (0usize, f64::INFINITY);
-                        for j in 0..self.n_items {
-                            let d = pqdist::asymmetric_sq(
-                                &self.pq.codebook,
-                                &table,
-                                self.encoded.code(j),
-                            );
-                            if d < best.1 {
-                                best = (j, d);
-                            }
-                        }
-                        best
-                    }
+                let lut = QueryLut::build(&self.pq, series, *mode);
+                let hits = match self.pq_candidates(&lut, series, 1, *nprobe) {
+                    Ok(hits) => hits,
+                    Err(resp) => return resp,
                 };
-                Response::Nn {
-                    index: best_j,
-                    distance: best_sq.sqrt(),
-                    label: self.encoded.labels.get(best_j).copied(),
+                match hits.first() {
+                    Some(&n) => {
+                        let h = self.hit(n);
+                        Response::Nn { index: h.index, distance: h.distance, label: h.label }
+                    }
+                    None => Response::Error("probed cells were empty".into()),
                 }
+            }
+            Request::TopKQuery { series, k, mode, nprobe, rerank } => {
+                if series.len() != self.pq.series_len {
+                    return Response::Error(format!(
+                        "series length {} != trained length {}",
+                        series.len(),
+                        self.pq.series_len
+                    ));
+                }
+                if self.n_items == 0 {
+                    return Response::Error("empty database".into());
+                }
+                if *k == 0 {
+                    return Response::Error("k must be >= 1".into());
+                }
+                let k = (*k).min(self.n_items);
+                // candidate depth: k, widened when a re-rank follows
+                let depth = match rerank {
+                    Some(r) => (*r).max(k).min(self.n_items),
+                    None => k,
+                };
+                let lut = QueryLut::build(&self.pq, series, *mode);
+                let cands = match self.pq_candidates(&lut, series, depth, *nprobe) {
+                    Ok(c) => c,
+                    Err(resp) => return resp,
+                };
+                let ranked = match rerank {
+                    Some(_) => rerank_dtw(&self.raw, series, &cands, k, self.full_window()),
+                    None => cands,
+                };
+                Response::TopK(ranked.into_iter().map(|n| self.hit(n)).collect())
             }
             Request::PairDist { i, j } => {
                 if *i >= self.n_items || *j >= self.n_items {
@@ -174,7 +317,11 @@ mod tests {
     fn nn_query_modes() {
         let (engine, test) = toy_engine();
         for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
-            match engine.handle(&Request::NnQuery { series: test.row(0).to_vec(), mode }) {
+            match engine.handle(&Request::NnQuery {
+                series: test.row(0).to_vec(),
+                mode,
+                nprobe: None,
+            }) {
                 Response::Nn { index, distance, label } => {
                     assert!(index < engine.n_items);
                     assert!(distance.is_finite());
@@ -183,6 +330,138 @@ mod tests {
                 other => panic!("unexpected {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn topk_exhaustive_matches_nn_at_k1() {
+        let (mut engine, test) = toy_engine();
+        engine.set_scan_threads(2);
+        for i in 0..5 {
+            let q = test.row(i).to_vec();
+            let nn = engine.handle(&Request::NnQuery {
+                series: q.clone(),
+                mode: PqQueryMode::Asymmetric,
+                nprobe: None,
+            });
+            let topk = engine.handle(&Request::TopKQuery {
+                series: q,
+                k: 1,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: None,
+                rerank: None,
+            });
+            match (nn, topk) {
+                (Response::Nn { index, distance, .. }, Response::TopK(hits)) => {
+                    assert_eq!(hits.len(), 1);
+                    assert_eq!(hits[0].index, index);
+                    assert_eq!(hits[0].distance, distance);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn topk_probed_full_matches_exhaustive_bitwise() {
+        let (mut engine, test) = toy_engine();
+        engine.enable_ivf(6, CoarseMetric::Dtw { window: engine.full_window() }, 5);
+        let nlist = engine.ivf.as_ref().unwrap().nlist();
+        for i in 0..5 {
+            let q = test.row(i).to_vec();
+            let exhaustive = engine.handle(&Request::TopKQuery {
+                series: q.clone(),
+                k: 7,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: None,
+                rerank: None,
+            });
+            let probed = engine.handle(&Request::TopKQuery {
+                series: q,
+                k: 7,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: Some(nlist),
+                rerank: None,
+            });
+            assert_eq!(exhaustive, probed, "query {i}");
+            assert!(matches!(exhaustive, Response::TopK(ref h) if h.len() == 7));
+        }
+    }
+
+    #[test]
+    fn topk_reranked_returns_true_dtw() {
+        use crate::distance::dtw::dtw_sq;
+        let (engine, test) = toy_engine();
+        let q = test.row(1).to_vec();
+        match engine.handle(&Request::TopKQuery {
+            series: q.clone(),
+            k: 3,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: Some(15),
+        }) {
+            Response::TopK(hits) => {
+                assert_eq!(hits.len(), 3);
+                for h in &hits {
+                    let want = dtw_sq(&q, engine.raw.row(h.index), engine.full_window()).sqrt();
+                    assert!(
+                        (h.distance - want).abs() < 1e-9,
+                        "index {}: {} vs {}",
+                        h.index,
+                        h.distance,
+                        want
+                    );
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_classes_reflect_serving_mode() {
+        let q = vec![0.0; 4];
+        let base = Request::TopKQuery {
+            series: q.clone(),
+            k: 1,
+            mode: PqQueryMode::Symmetric,
+            nprobe: None,
+            rerank: None,
+        };
+        assert_eq!(base.class(), RequestClass::TopKExhaustive);
+        let probed = Request::TopKQuery {
+            series: q.clone(),
+            k: 1,
+            mode: PqQueryMode::Symmetric,
+            nprobe: Some(2),
+            rerank: None,
+        };
+        assert_eq!(probed.class(), RequestClass::TopKProbed);
+        let reranked = Request::TopKQuery {
+            series: q.clone(),
+            k: 1,
+            mode: PqQueryMode::Symmetric,
+            nprobe: Some(2),
+            rerank: Some(8),
+        };
+        assert_eq!(reranked.class(), RequestClass::TopKReranked);
+        assert_eq!(
+            Request::NnQuery { series: q, mode: PqQueryMode::Symmetric, nprobe: None }.class(),
+            RequestClass::Nn
+        );
+    }
+
+    #[test]
+    fn probe_without_ivf_is_an_error() {
+        let (engine, test) = toy_engine();
+        assert!(matches!(
+            engine.handle(&Request::TopKQuery {
+                series: test.row(0).to_vec(),
+                k: 2,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: Some(4),
+                rerank: None,
+            }),
+            Response::Error(_)
+        ));
     }
 
     #[test]
@@ -198,6 +477,16 @@ mod tests {
         ));
         assert!(matches!(
             engine.handle(&Request::Encode { series: vec![0.0; 3] }),
+            Response::Error(_)
+        ));
+        assert!(matches!(
+            engine.handle(&Request::TopKQuery {
+                series: vec![0.0; 3],
+                k: 0,
+                mode: PqQueryMode::Symmetric,
+                nprobe: None,
+                rerank: None,
+            }),
             Response::Error(_)
         ));
     }

@@ -1,11 +1,70 @@
-//! Lock-free service metrics: request counters, latency histogram and
-//! batch-size accounting.
+//! Lock-free service metrics: request counters, latency histogram,
+//! batch-size accounting, and per-request-class (serving mode) latency
+//! counters so the recall/latency dial of the top-k path is observable.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Log-spaced latency buckets in microseconds (upper bounds).
 const BUCKETS_US: [u64; 12] =
     [10, 25, 50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 50_000, u64::MAX];
+
+/// Request families tracked with separate throughput/latency counters.
+/// The three top-k classes are the serving modes of the recall/latency
+/// dial: exhaustive scan, IVF-probed, and DTW re-ranked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestClass {
+    /// Encode a raw series into a code word.
+    Encode,
+    /// 1-NN query (linear or probed).
+    Nn,
+    /// Pairwise distance between database items.
+    PairDist,
+    /// Top-k via exhaustive (possibly sharded) scan.
+    TopKExhaustive,
+    /// Top-k via IVF cell probing.
+    TopKProbed,
+    /// Top-k with an exact DTW re-rank stage (probed or exhaustive).
+    TopKReranked,
+}
+
+/// Number of tracked request classes.
+pub const N_REQUEST_CLASSES: usize = 6;
+
+impl RequestClass {
+    /// All classes, index-aligned with the per-class metric arrays.
+    pub const ALL: [RequestClass; N_REQUEST_CLASSES] = [
+        RequestClass::Encode,
+        RequestClass::Nn,
+        RequestClass::PairDist,
+        RequestClass::TopKExhaustive,
+        RequestClass::TopKProbed,
+        RequestClass::TopKReranked,
+    ];
+
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::Encode => "encode",
+            RequestClass::Nn => "nn",
+            RequestClass::PairDist => "pair_dist",
+            RequestClass::TopKExhaustive => "topk_exhaustive",
+            RequestClass::TopKProbed => "topk_probed",
+            RequestClass::TopKReranked => "topk_reranked",
+        }
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        match self {
+            RequestClass::Encode => 0,
+            RequestClass::Nn => 1,
+            RequestClass::PairDist => 2,
+            RequestClass::TopKExhaustive => 3,
+            RequestClass::TopKProbed => 4,
+            RequestClass::TopKReranked => 5,
+        }
+    }
+}
 
 /// Concurrent metrics sink.
 #[derive(Debug, Default)]
@@ -16,6 +75,19 @@ pub struct Metrics {
     batched_items: AtomicU64,
     latency_sum_us: AtomicU64,
     latency_buckets: [AtomicU64; 12],
+    class_requests: [AtomicU64; N_REQUEST_CLASSES],
+    class_latency_us: [AtomicU64; N_REQUEST_CLASSES],
+}
+
+/// Per-class slice of a [`MetricsSnapshot`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassSnapshot {
+    /// The request class.
+    pub class: RequestClass,
+    /// Requests served in this class.
+    pub requests: u64,
+    /// Mean latency (µs) within the class.
+    pub mean_latency_us: f64,
 }
 
 /// A point-in-time copy of the metrics.
@@ -33,6 +105,9 @@ pub struct MetricsSnapshot {
     pub mean_latency_us: f64,
     /// Latency histogram (bucket upper bound µs, count).
     pub histogram: Vec<(u64, u64)>,
+    /// Per-request-class counters, index-aligned with
+    /// [`RequestClass::ALL`].
+    pub per_class: Vec<ClassSnapshot>,
 }
 
 impl MetricsSnapshot {
@@ -53,6 +128,11 @@ impl MetricsSnapshot {
         }
         u64::MAX
     }
+
+    /// Counters for one request class.
+    pub fn class(&self, class: RequestClass) -> ClassSnapshot {
+        self.per_class[class.idx()]
+    }
 }
 
 impl Metrics {
@@ -61,8 +141,8 @@ impl Metrics {
         Self::default()
     }
 
-    /// Record one served request with its latency.
-    pub fn record_request(&self, latency_us: u64, is_error: bool) {
+    /// Record one served request of the given class with its latency.
+    pub fn record_request(&self, class: RequestClass, latency_us: u64, is_error: bool) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         if is_error {
             self.errors.fetch_add(1, Ordering::Relaxed);
@@ -70,6 +150,8 @@ impl Metrics {
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
         let idx = BUCKETS_US.iter().position(|&ub| latency_us <= ub).unwrap();
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.class_requests[class.idx()].fetch_add(1, Ordering::Relaxed);
+        self.class_latency_us[class.idx()].fetch_add(latency_us, Ordering::Relaxed);
     }
 
     /// Record one executed batch of `size` items.
@@ -84,6 +166,18 @@ impl Metrics {
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
         let lat_sum = self.latency_sum_us.load(Ordering::Relaxed);
+        let per_class = RequestClass::ALL
+            .iter()
+            .map(|&class| {
+                let n = self.class_requests[class.idx()].load(Ordering::Relaxed);
+                let lat = self.class_latency_us[class.idx()].load(Ordering::Relaxed);
+                ClassSnapshot {
+                    class,
+                    requests: n,
+                    mean_latency_us: if n > 0 { lat as f64 / n as f64 } else { 0.0 },
+                }
+            })
+            .collect();
         MetricsSnapshot {
             requests,
             errors: self.errors.load(Ordering::Relaxed),
@@ -95,6 +189,7 @@ impl Metrics {
                 .zip(self.latency_buckets.iter())
                 .map(|(&ub, c)| (ub, c.load(Ordering::Relaxed)))
                 .collect(),
+            per_class,
         }
     }
 }
@@ -106,8 +201,8 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_request(30, false);
-        m.record_request(700, true);
+        m.record_request(RequestClass::Nn, 30, false);
+        m.record_request(RequestClass::TopKProbed, 700, true);
         m.record_batch(2);
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
@@ -121,12 +216,29 @@ mod tests {
     }
 
     #[test]
+    fn per_class_latency_split() {
+        let m = Metrics::new();
+        m.record_request(RequestClass::TopKExhaustive, 100, false);
+        m.record_request(RequestClass::TopKExhaustive, 300, false);
+        m.record_request(RequestClass::TopKProbed, 10, false);
+        let s = m.snapshot();
+        let exh = s.class(RequestClass::TopKExhaustive);
+        assert_eq!(exh.requests, 2);
+        assert!((exh.mean_latency_us - 200.0).abs() < 1e-9);
+        let probed = s.class(RequestClass::TopKProbed);
+        assert_eq!(probed.requests, 1);
+        assert!((probed.mean_latency_us - 10.0).abs() < 1e-9);
+        assert_eq!(s.class(RequestClass::TopKReranked).requests, 0);
+        assert_eq!(s.per_class.len(), N_REQUEST_CLASSES);
+    }
+
+    #[test]
     fn percentiles_from_histogram() {
         let m = Metrics::new();
         for _ in 0..99 {
-            m.record_request(20, false);
+            m.record_request(RequestClass::Nn, 20, false);
         }
-        m.record_request(40_000, false);
+        m.record_request(RequestClass::Nn, 40_000, false);
         let s = m.snapshot();
         assert_eq!(s.percentile_us(0.5), 25);
         assert_eq!(s.percentile_us(0.999), 50_000);
@@ -141,13 +253,15 @@ mod tests {
             let m = Arc::clone(&m);
             hs.push(std::thread::spawn(move || {
                 for _ in 0..1000 {
-                    m.record_request(100, false);
+                    m.record_request(RequestClass::Encode, 100, false);
                 }
             }));
         }
         for h in hs {
             h.join().unwrap();
         }
-        assert_eq!(m.snapshot().requests, 4000);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4000);
+        assert_eq!(s.class(RequestClass::Encode).requests, 4000);
     }
 }

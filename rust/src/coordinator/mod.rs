@@ -3,10 +3,17 @@
 //!
 //! The paper's contribution is an algorithm, so per the architecture rule
 //! this layer is a driver in the spirit of a model-serving router: it owns
-//! the trained quantizer state, accepts concurrent encode / 1-NN / distance
-//! requests, groups them through a size-or-deadline dynamic batcher and
-//! executes them on a pool of workers, recording latency and batch-size
-//! metrics. Python is never on this path.
+//! the trained quantizer state, accepts concurrent encode / 1-NN / top-k /
+//! distance requests, groups them through a size-or-deadline dynamic
+//! batcher and executes them on a pool of workers, recording latency and
+//! batch-size metrics per serving mode. Python is never on this path.
+//!
+//! Top-k queries expose a recall/latency dial: an exhaustive (optionally
+//! multi-threaded) scan over all PQ codes, an IVF-probed scan over the
+//! `nprobe` nearest coarse cells (`nprobe = nlist` reproduces the
+//! exhaustive result bit-for-bit), and an exact re-rank stage that
+//! rescores the PQ candidates with true windowed DTW against the raw
+//! database.
 
 pub mod batcher;
 pub mod engine;
@@ -14,6 +21,6 @@ pub mod metrics;
 pub mod service;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use engine::{Engine, Request, Response};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use engine::{Engine, Hit, Request, Response};
+pub use metrics::{ClassSnapshot, Metrics, MetricsSnapshot, RequestClass};
 pub use service::{Service, ServiceConfig};

@@ -54,10 +54,11 @@ impl Service {
                 while let Some(batch) = batcher.next_batch() {
                     metrics.record_batch(batch.len());
                     for job in batch {
+                        let class = job.request.class();
                         let resp = engine.handle(&job.request);
                         let is_err = matches!(resp, Response::Error(_));
                         let latency = job.submitted.elapsed().as_micros() as u64;
-                        metrics.record_request(latency, is_err);
+                        metrics.record_request(class, latency, is_err);
                         // Receiver may have given up; that's fine.
                         let _ = job.reply.send(resp);
                     }
@@ -144,6 +145,7 @@ mod tests {
             match svc.call(Request::NnQuery {
                 series: test.row(i).to_vec(),
                 mode: PqQueryMode::Symmetric,
+                nprobe: None,
             }) {
                 Response::Nn { distance, .. } => assert!(distance.is_finite()),
                 other => panic!("unexpected {other:?}"),
@@ -153,6 +155,7 @@ mod tests {
         assert_eq!(m.requests, 5);
         assert_eq!(m.errors, 0);
         assert!(m.batches >= 1);
+        assert_eq!(m.class(crate::coordinator::metrics::RequestClass::Nn).requests, 5);
     }
 
     #[test]

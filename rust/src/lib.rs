@@ -23,15 +23,25 @@
 //! - [`repr`] — baseline symbolic/segment representations (PAA, SAX).
 //! - [`wavelet`] — Haar MODWT and structure-aware segmentation.
 //! - [`pq`] — the paper's contribution: codebook learning (DBA k-means),
-//!   LB-cascade encoding, symmetric/asymmetric distances, pre-alignment.
-//! - [`nn`] — 1-NN classification over any measure, with LB pruning.
+//!   LB-cascade encoding, symmetric/asymmetric distances (single and
+//!   batch-scan forms), pre-alignment.
+//! - [`nn`] — 1-NN classification over any measure with LB pruning, plus
+//!   the serving-scale search stack: bounded-heap top-k collection with a
+//!   deterministic `(distance, index)` order, sharded multi-threaded
+//!   scans, an IVF inverted-file index with `nprobe` cell probing, and an
+//!   exact DTW re-rank stage over the raw database.
 //! - [`cluster`] — agglomerative hierarchical clustering + Rand/ARI.
 //! - [`data`] — synthetic workloads (random walks, a UCR-like suite) and
 //!   a UCR `.tsv` loader.
 //! - [`eval`] — cross-validation, hyper-parameter search, Friedman /
 //!   Nemenyi statistics, report formatting.
 //! - [`coordinator`] — the serving layer: engine state, dynamic batcher,
-//!   threaded worker service, metrics.
+//!   threaded worker service, per-mode metrics. Top-k requests dial
+//!   recall against latency: exhaustive scans are exact w.r.t. the PQ
+//!   approximation, IVF probing with `nprobe < nlist` scans a fraction
+//!   of the database (and `nprobe = nlist` is bit-identical to the
+//!   exhaustive scan), and the re-rank stage returns true windowed DTW
+//!   distances.
 //! - [`runtime`] — (feature `pjrt`) loads AOT-lowered HLO artifacts
 //!   produced by `python/compile/aot.py` and executes them via PJRT.
 //!
@@ -47,6 +57,13 @@
 //! let codes = pq.encode_dataset(&train);
 //! let d = pq.symmetric_distance(codes.code(0), codes.code(1));
 //! assert!(d >= 0.0);
+//!
+//! // Top-3 neighbours of a query, exhaustive scan (see `nn::topk` and
+//! // `coordinator` for IVF probing and DTW re-ranking behind a service).
+//! use pqdtw::nn::{topk_scan, PqQueryMode};
+//! let hits = topk_scan(&pq, &codes, train.row(0), 3, PqQueryMode::Asymmetric, 1);
+//! assert_eq!(hits.len(), 3);
+//! assert!(hits[0].distance <= hits[2].distance); // ascending
 //! ```
 
 pub mod cli;

@@ -1,12 +1,13 @@
-//! `pqdtw` — leader binary: train / encode / query / cluster / serve /
-//! selftest over the PQDTW library.
+//! `pqdtw` — leader binary: train / encode / query / topk / cluster /
+//! serve / selftest over the PQDTW library.
 //!
 //! Examples:
 //!   pqdtw selftest
 //!   pqdtw train --dataset CBF --subspaces 4 --codebook 32
 //!   pqdtw query --dataset CBF --mode asymmetric --queries 50
+//!   pqdtw topk --dataset CBF --topk 5 --nlist 16 --nprobe 4 --rerank 20
 //!   pqdtw cluster --dataset Waveforms --linkage complete
-//!   pqdtw serve --workers 4 --requests 200
+//!   pqdtw serve --workers 4 --requests 200 --topk 5 --nprobe 4
 //!   pqdtw info
 
 use std::sync::Arc;
@@ -18,6 +19,7 @@ use pqdtw::cluster::{agglomerative, compact_labels, rand_index, Linkage};
 use pqdtw::coordinator::{Engine, Request, Response, Service, ServiceConfig};
 use pqdtw::core::matrix::CondensedMatrix;
 use pqdtw::data::ucr_like::{ucr_like_by_name, TrainTest};
+use pqdtw::nn::ivf::CoarseMetric;
 use pqdtw::nn::knn::{nn_classify_pq, nn_classify_raw, PqQueryMode};
 use pqdtw::distance::measure::Measure;
 use pqdtw::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
@@ -136,7 +138,21 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let seed = a.get_parsed("seed", 7u64);
     let tt = load_dataset(&a.get("dataset", "SpikePosition"), seed)?;
     let cfg = config_from_args(a);
-    let engine = Arc::new(Engine::build(&tt.train, &cfg, seed)?);
+    let topk: usize = a.get_parsed("topk", 0usize); // 0 = classic 1-NN requests
+    let nprobe: Option<usize> = a.get_opt("nprobe");
+    let rerank: Option<usize> = a.get_opt("rerank");
+    let mut engine = Engine::build(&tt.train, &cfg, seed)?;
+    engine.set_scan_threads(a.get_parsed("scan-threads", 1usize));
+    if nprobe.is_some() {
+        let nlist = a.get_parsed("nlist", 16usize);
+        let metric = if a.get("coarse", "dtw") == "ed" {
+            CoarseMetric::Euclidean
+        } else {
+            CoarseMetric::Dtw { window: engine.full_window() }
+        };
+        engine.enable_ivf(nlist, metric, seed);
+    }
+    let engine = Arc::new(engine);
     let svc = Service::start(
         engine,
         ServiceConfig {
@@ -148,8 +164,19 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let t0 = Instant::now();
     for i in 0..n_requests {
         let q = tt.test.row(i % tt.test.n_series()).to_vec();
-        match svc.call(Request::NnQuery { series: q, mode: PqQueryMode::Symmetric }) {
-            Response::Nn { .. } => {}
+        let req = if topk > 0 {
+            Request::TopKQuery {
+                series: q,
+                k: topk,
+                mode: PqQueryMode::Asymmetric,
+                nprobe,
+                rerank,
+            }
+        } else {
+            Request::NnQuery { series: q, mode: PqQueryMode::Symmetric, nprobe }
+        };
+        match svc.call(req) {
+            Response::Nn { .. } | Response::TopK(_) => {}
             other => bail!("unexpected response {other:?}"),
         }
     }
@@ -157,6 +184,91 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let m = svc.shutdown();
     println!("served {} requests in {dt:?} ({:.0} req/s)", m.requests, m.requests as f64 / dt.as_secs_f64());
     println!("mean latency {:.0}µs, p50 ≤{}µs, p99 ≤{}µs, mean batch {:.1}", m.mean_latency_us, m.percentile_us(0.5), m.percentile_us(0.99), m.mean_batch_size);
+    for c in &m.per_class {
+        if c.requests > 0 {
+            println!("  {:<16} {:>6} reqs, mean {:.0}µs", c.class.name(), c.requests, c.mean_latency_us);
+        }
+    }
+    Ok(())
+}
+
+/// Offline top-k driver: one engine, the three serving modes side by
+/// side, with recall of the probed scan against the exhaustive one.
+fn cmd_topk(a: &Args) -> Result<()> {
+    let seed = a.get_parsed("seed", 7u64);
+    let tt = load_dataset(&a.get("dataset", "CBF"), seed)?;
+    let cfg = config_from_args(a);
+    let k = a.get_parsed("topk", 5usize).max(1);
+    let nlist = a.get_parsed("nlist", 16usize);
+    let mut engine = Engine::build(&tt.train, &cfg, seed)?;
+    engine.set_scan_threads(a.get_parsed("scan-threads", 1usize));
+    let metric = if a.get("coarse", "dtw") == "ed" {
+        CoarseMetric::Euclidean
+    } else {
+        CoarseMetric::Dtw { window: engine.full_window() }
+    };
+    engine.enable_ivf(nlist, metric, seed);
+    let nlist = engine.ivf.as_ref().map(|ivf| ivf.nlist()).unwrap_or(1);
+    let nprobe = a.get_opt("nprobe").unwrap_or_else(|| (nlist / 4).max(1));
+    let rerank = a.get_opt("rerank").unwrap_or(4 * k);
+    let n_queries = a.get_parsed("queries", 30usize).min(tt.test.n_series());
+
+    println!(
+        "top-k serving on {} (n={}, k={k}, nlist={nlist}, nprobe={nprobe}, rerank depth {rerank})",
+        tt.name,
+        engine.n_items
+    );
+    let mut overlap = 0usize;
+    let mut t_exh = 0.0f64;
+    let mut t_probe = 0.0f64;
+    let mut t_rerank = 0.0f64;
+    for i in 0..n_queries {
+        let q = tt.test.row(i).to_vec();
+        let t0 = Instant::now();
+        let exh = engine.handle(&Request::TopKQuery {
+            series: q.clone(),
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: None,
+        });
+        t_exh += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let probed = engine.handle(&Request::TopKQuery {
+            series: q.clone(),
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: Some(nprobe),
+            rerank: None,
+        });
+        t_probe += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let reranked = engine.handle(&Request::TopKQuery {
+            series: q,
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: Some(rerank),
+        });
+        t_rerank += t0.elapsed().as_secs_f64();
+        match (exh, probed, reranked) {
+            (Response::TopK(e), Response::TopK(p), Response::TopK(_)) => {
+                let truth: std::collections::HashSet<usize> =
+                    e.iter().map(|h| h.index).collect();
+                overlap += p.iter().filter(|h| truth.contains(&h.index)).count();
+            }
+            other => bail!("unexpected responses {other:?}"),
+        }
+    }
+    let denom = (n_queries * k) as f64;
+    println!("recall@{k} of probed vs exhaustive: {:.3}", overlap as f64 / denom);
+    println!(
+        "mean latency: exhaustive {:.0}µs | probed {:.0}µs | reranked {:.0}µs",
+        1e6 * t_exh / n_queries as f64,
+        1e6 * t_probe / n_queries as f64,
+        1e6 * t_rerank / n_queries as f64,
+    );
+    println!("(probing all {nlist} cells reproduces the exhaustive scan bit-for-bit)");
     Ok(())
 }
 
@@ -173,11 +285,41 @@ fn cmd_selftest(a: &Args) -> Result<()> {
     let (err, _) = nn_classify_pq(&pq, &enc, &tt.test, PqQueryMode::Asymmetric);
     anyhow::ensure!(err < 0.67, "PQDTW no better than chance: {err}");
 
-    println!("[3/4] service round-trip…");
-    let engine = Arc::new(Engine::build(&tt.train, &cfg, seed)?);
+    println!("[3/4] service round-trip (1-NN + top-k, probed and re-ranked)…");
+    let mut engine = Engine::build(&tt.train, &cfg, seed)?;
+    engine.enable_ivf(8, CoarseMetric::Dtw { window: engine.full_window() }, seed);
+    let nlist = engine.ivf.as_ref().map(|ivf| ivf.nlist()).unwrap_or(1);
+    let engine = Arc::new(engine);
     let svc = Service::start(engine, ServiceConfig::default());
-    let r = svc.call(Request::NnQuery { series: tt.test.row(0).to_vec(), mode: PqQueryMode::Symmetric });
+    let r = svc.call(Request::NnQuery {
+        series: tt.test.row(0).to_vec(),
+        mode: PqQueryMode::Symmetric,
+        nprobe: None,
+    });
     anyhow::ensure!(matches!(r, Response::Nn { .. }), "service response");
+    let exh = svc.call(Request::TopKQuery {
+        series: tt.test.row(0).to_vec(),
+        k: 3,
+        mode: PqQueryMode::Asymmetric,
+        nprobe: None,
+        rerank: None,
+    });
+    let probed_full = svc.call(Request::TopKQuery {
+        series: tt.test.row(0).to_vec(),
+        k: 3,
+        mode: PqQueryMode::Asymmetric,
+        nprobe: Some(nlist),
+        rerank: None,
+    });
+    anyhow::ensure!(exh == probed_full, "full probe must match exhaustive scan");
+    let reranked = svc.call(Request::TopKQuery {
+        series: tt.test.row(0).to_vec(),
+        k: 3,
+        mode: PqQueryMode::Asymmetric,
+        nprobe: None,
+        rerank: Some(12),
+    });
+    anyhow::ensure!(matches!(reranked, Response::TopK(ref h) if h.len() == 3), "re-rank");
     svc.shutdown();
 
     #[cfg(feature = "pjrt")]
@@ -221,10 +363,11 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "query" => cmd_query(&args),
+        "topk" => cmd_topk(&args),
         "cluster" => cmd_cluster(&args),
         "serve" => cmd_serve(&args),
         "selftest" => cmd_selftest(&args),
         "info" | "" => cmd_info(),
-        other => bail!("unknown command '{other}' (train|query|cluster|serve|selftest|info)"),
+        other => bail!("unknown command '{other}' (train|query|topk|cluster|serve|selftest|info)"),
     }
 }

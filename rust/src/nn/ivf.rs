@@ -3,20 +3,45 @@
 //! The paper (§4.1) notes that a linear scan over PQ codes is still O(N)
 //! and defers to the original PQ paper's inverted-index system for
 //! million-scale search. This module implements that extension under
-//! DTW: a coarse DBA-k-means quantizer over whole series partitions the
+//! DTW: a coarse k-means quantizer over whole series partitions the
 //! database into `nlist` inverted lists; a query probes only the
 //! `nprobe` nearest coarse cells and scans their members with the
 //! PQ code distances.
 //!
-//! Recall/latency trade-off is controlled by `nprobe` (probing all lists
-//! degrades to the exact linear scan over codes).
+//! Recall/latency trade-off is controlled by `nprobe`: probing all lists
+//! visits every item exactly once and is therefore *bit-identical* to
+//! the exhaustive scan (the [`TopKCollector`]'s `(distance, index)`
+//! total order makes the result independent of visit order). The coarse
+//! metric is selectable: windowed DTW is paper-faithful but costs
+//! `nlist` full-length DTWs per probe; Euclidean is the classic IVF
+//! choice and makes the probe `O(nlist·D)` — cheap enough that probing
+//! beats the exhaustive LUT scan wall-clock on multi-thousand-series
+//! databases (see `benches/perf_hotpath.rs`).
 
 use crate::core::rng::Rng;
 use crate::core::series::Dataset;
 use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
-use crate::pq::distance::{asymmetric_sq, asymmetric_table};
+use crate::distance::euclidean::euclidean_sq;
 use crate::pq::kmeans::{kmeans, KmeansGeometry};
 use crate::pq::quantizer::{EncodedDataset, ProductQuantizer};
+
+use super::knn::PqQueryMode;
+use super::topk::{Neighbor, QueryLut, TopKCollector};
+
+/// Distance used for coarse clustering and cell probing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CoarseMetric {
+    /// Windowed DTW with DBA centroids (paper-faithful; a probe costs
+    /// `nlist` full-length DTW evaluations).
+    Dtw {
+        /// Sakoe-Chiba half-width for coarse assignment (`None` =
+        /// unconstrained).
+        window: Option<usize>,
+    },
+    /// Plain Euclidean (the classic IVF coarse quantizer; a probe costs
+    /// `nlist × D` flops).
+    Euclidean,
+}
 
 /// An inverted-file index over PQ-encoded series.
 pub struct IvfIndex {
@@ -24,33 +49,31 @@ pub struct IvfIndex {
     coarse: Vec<f64>,
     /// Series length.
     dim: usize,
-    /// Warping window for coarse assignment.
-    window: Option<usize>,
+    /// Coarse assignment/probe metric.
+    metric: CoarseMetric,
     /// Member ids per inverted list.
     lists: Vec<Vec<usize>>,
 }
 
 impl IvfIndex {
-    /// Build an index over an encoded database. `nlist` coarse cells;
-    /// coarse clustering runs DTW k-means over the raw series.
-    pub fn build(
-        db: &Dataset,
-        _encoded: &EncodedDataset,
-        nlist: usize,
-        window: Option<usize>,
-        seed: u64,
-    ) -> Self {
+    /// Build an index over a raw database: `nlist` coarse cells learned
+    /// by k-means under the chosen coarse metric. (The PQ codes are not
+    /// needed to build the lists — they are only read at query time.)
+    pub fn build(db: &Dataset, nlist: usize, metric: CoarseMetric, seed: u64) -> Self {
         let n = db.n_series();
         let nlist = nlist.min(n).max(1);
         let rows: Vec<&[f64]> = (0..n).map(|i| db.row(i)).collect();
         let mut rng = Rng::new(seed);
-        let geo = KmeansGeometry::Dtw { window, dba_iters: 2 };
+        let geo = match metric {
+            CoarseMetric::Dtw { window } => KmeansGeometry::Dtw { window, dba_iters: 2 },
+            CoarseMetric::Euclidean => KmeansGeometry::Euclidean,
+        };
         let res = kmeans(&rows, nlist, geo, 5, &mut rng);
         let mut lists = vec![Vec::new(); res.k()];
         for (i, &a) in res.assignment.iter().enumerate() {
             lists[a].push(i);
         }
-        IvfIndex { coarse: res.centroids, dim: db.len, window, lists }
+        IvfIndex { coarse: res.centroids, dim: db.len, metric, lists }
     }
 
     /// Number of inverted lists.
@@ -63,17 +86,64 @@ impl IvfIndex {
         self.lists.iter().map(|l| l.len()).collect()
     }
 
-    /// The `nprobe` coarse cells nearest to the query under windowed DTW.
-    fn probe_order(&self, q: &[f64], nprobe: usize) -> Vec<usize> {
+    /// Squared coarse distance of `q` to centroid `c`.
+    fn coarse_dist_sq(&self, q: &[f64], c: usize, scratch: &mut DtwScratch) -> f64 {
+        let cent = &self.coarse[c * self.dim..(c + 1) * self.dim];
+        match self.metric {
+            CoarseMetric::Dtw { window } => {
+                dtw_sq_scratch(q, cent, window, f64::INFINITY, scratch)
+            }
+            CoarseMetric::Euclidean => euclidean_sq(q, cent),
+        }
+    }
+
+    /// The `nprobe` coarse cells nearest to the query under the coarse
+    /// metric, nearest first. Total-order sort: NaN distances (from
+    /// pathological inputs) sink to the end instead of panicking.
+    pub fn probe_order(&self, q: &[f64], nprobe: usize) -> Vec<usize> {
         let mut scratch = DtwScratch::new(self.dim);
         let mut dists: Vec<(usize, f64)> = (0..self.nlist())
-            .map(|c| {
-                let cent = &self.coarse[c * self.dim..(c + 1) * self.dim];
-                (c, dtw_sq_scratch(q, cent, self.window, f64::INFINITY, &mut scratch))
-            })
+            .map(|c| (c, self.coarse_dist_sq(q, c, &mut scratch)))
             .collect();
-        dists.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        dists.sort_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
         dists.into_iter().take(nprobe).map(|(c, _)| c).collect()
+    }
+
+    /// Top-k over the `nprobe` nearest cells with PQ code distances in
+    /// the given query mode. At `nprobe >= nlist` this visits every item
+    /// exactly once and is bit-identical to the exhaustive scan.
+    pub fn query_topk(
+        &self,
+        pq: &ProductQuantizer,
+        encoded: &EncodedDataset,
+        q: &[f64],
+        k: usize,
+        nprobe: usize,
+        mode: PqQueryMode,
+    ) -> Vec<Neighbor> {
+        let lut = QueryLut::build(pq, q, mode);
+        self.query_topk_with(pq, encoded, &lut, q, k, nprobe)
+    }
+
+    /// [`IvfIndex::query_topk`] with the query-side LUT already built
+    /// (shared with an exhaustive scan or a re-rank pipeline).
+    pub fn query_topk_with(
+        &self,
+        pq: &ProductQuantizer,
+        encoded: &EncodedDataset,
+        lut: &QueryLut,
+        q: &[f64],
+        k: usize,
+        nprobe: usize,
+    ) -> Vec<Neighbor> {
+        let cells = self.probe_order(q, nprobe.max(1));
+        let mut coll = TopKCollector::new(k.max(1));
+        for c in cells {
+            for &id in &self.lists[c] {
+                coll.offer(id, lut.dist_sq(&pq.codebook, encoded.code(id)));
+            }
+        }
+        coll.into_sorted()
     }
 
     /// Approximate 1-NN via asymmetric PQ distances over the probed
@@ -86,18 +156,9 @@ impl IvfIndex {
         q: &[f64],
         nprobe: usize,
     ) -> Option<(usize, f64)> {
-        let cells = self.probe_order(q, nprobe.max(1));
-        let table = asymmetric_table(&pq.codebook, &pq.segment(q));
-        let mut best: Option<(usize, f64)> = None;
-        for c in cells {
-            for &id in &self.lists[c] {
-                let d = asymmetric_sq(&pq.codebook, &table, encoded.code(id));
-                if best.map(|(_, bd)| d < bd).unwrap_or(true) {
-                    best = Some((id, d));
-                }
-            }
-        }
-        best.map(|(i, d)| (i, d.sqrt()))
+        self.query_topk(pq, encoded, q, 1, nprobe, PqQueryMode::Asymmetric)
+            .first()
+            .map(|n| (n.index, n.distance))
     }
 
     /// Fraction of the database scanned when probing `nprobe` lists for
@@ -120,6 +181,7 @@ impl IvfIndex {
 mod tests {
     use super::*;
     use crate::data::random_walk::RandomWalks;
+    use crate::nn::topk::topk_scan;
     use crate::pq::quantizer::PqConfig;
 
     fn setup() -> (Dataset, ProductQuantizer, EncodedDataset, IvfIndex) {
@@ -134,7 +196,7 @@ mod tests {
         };
         let pq = ProductQuantizer::train(&db, &cfg, 1).unwrap();
         let enc = pq.encode_dataset(&db);
-        let ivf = IvfIndex::build(&db, &enc, 8, Some(6), 2);
+        let ivf = IvfIndex::build(&db, 8, CoarseMetric::Dtw { window: Some(6) }, 2);
         (db, pq, enc, ivf)
     }
 
@@ -155,12 +217,42 @@ mod tests {
         let table = pq.asymmetric_table(q);
         let (lin_id, lin_d) = (0..enc.n())
             .map(|j| (j, pq.asymmetric_distance(&table, enc.code(j))))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         assert!((ivf_d - lin_d).abs() < 1e-9);
         if ivf_id != lin_id {
             assert!((ivf_d - lin_d).abs() < 1e-12); // tie
         }
+    }
+
+    #[test]
+    fn full_probe_topk_bitidentical_to_exhaustive() {
+        let (db, pq, enc, ivf) = setup();
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            for qi in [0usize, 7, 33] {
+                let q = db.row(qi);
+                let exhaustive = topk_scan(&pq, &enc, q, 10, mode, 1);
+                let probed = ivf.query_topk(&pq, &enc, q, 10, ivf.nlist(), mode);
+                // bit-identical: same indices AND same f64 distances
+                assert_eq!(exhaustive, probed, "mode {mode:?} query {qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn euclidean_coarse_variant_probes() {
+        let (db, pq, enc, _) = setup();
+        let ivf = IvfIndex::build(&db, 8, CoarseMetric::Euclidean, 9);
+        let q = db.row(5);
+        let exhaustive = topk_scan(&pq, &enc, q, 5, PqQueryMode::Asymmetric, 1);
+        let probed = ivf.query_topk(&pq, &enc, q, 5, ivf.nlist(), PqQueryMode::Asymmetric);
+        assert_eq!(exhaustive, probed);
+        // narrow probe returns at most k hits, drawn from the probed
+        // cell only (which may legitimately be small)
+        let narrow = ivf.query_topk(&pq, &enc, q, 5, 1, PqQueryMode::Asymmetric);
+        assert!(narrow.len() <= 5);
+        let probed_total: usize = ivf.list_sizes().iter().sum();
+        assert_eq!(probed_total, db.n_series());
     }
 
     #[test]
@@ -174,6 +266,18 @@ mod tests {
     }
 
     #[test]
+    fn probe_order_total_and_stable() {
+        let (db, _, _, ivf) = setup();
+        let q = db.row(0);
+        let all = ivf.probe_order(q, ivf.nlist());
+        assert_eq!(all.len(), ivf.nlist());
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ivf.nlist(), "probe order must be a permutation");
+    }
+
+    #[test]
     fn recall_improves_with_nprobe() {
         let (db, pq, enc, ivf) = setup();
         // ground truth by linear scan; recall@1 over queries
@@ -184,7 +288,7 @@ mod tests {
             let table = pq.asymmetric_table(q);
             let truth = (0..enc.n())
                 .map(|j| (j, pq.asymmetric_distance(&table, enc.code(j))))
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap();
             for (ri, nprobe) in [(0usize, 1usize), (1, ivf.nlist())] {
                 if let Some((id, d)) = ivf.query(&pq, &enc, q, nprobe) {

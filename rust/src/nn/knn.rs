@@ -66,13 +66,22 @@ impl<'a> RawNnSearcher<'a> {
             }
             Measure::Dtw => {
                 // PrunedDTW: the running best-so-far is the upper bound.
+                // While no candidate has completed, seed the bound with
+                // ED (a valid DTW upper bound); the epsilon keeps
+                // boundary-equal costs from being pruned spuriously.
                 for i in 0..n {
                     let r = self.train.row(i);
-                    // seed the bound with ED on the first candidate
-                    let ub = if best_sq.is_infinite() { euclidean_sq(q, r) } else { best_sq };
+                    let ub = if best_sq.is_infinite() {
+                        euclidean_sq(q, r) + 1e-12
+                    } else {
+                        best_sq
+                    };
                     let d = pruned_dtw_sq(q, r, None, ub);
-                    let d = if d.is_finite() { d } else { ub };
-                    if d < best_sq {
+                    // An aborted (infinite) result only proves the true
+                    // DTW exceeds `ub` — skip the candidate; recording
+                    // the bound would report an ED value as a DTW
+                    // distance.
+                    if d.is_finite() && d < best_sq {
                         best_sq = d;
                         best_i = i;
                     }
@@ -276,6 +285,44 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn dtw_searcher_distance_is_true_dtw_regression() {
+        // Regression for the aborted-candidate bug: when `pruned_dtw_sq`
+        // early-abandons, the searcher must skip the candidate, never
+        // record its ED upper bound as a DTW distance. Checked by exact
+        // agreement with an unpruned brute-force scan across many seeded
+        // random databases/queries.
+        use crate::core::series::Dataset;
+        use crate::distance::dtw::dtw_sq;
+        use crate::testutil::{check, gen_walk};
+        check("dtw 1-NN exactness", 25, |rng| {
+            let len = 8 + rng.below(24);
+            let n = 3 + rng.below(10);
+            let mut values = Vec::with_capacity(n * len);
+            for _ in 0..n {
+                values.extend(gen_walk(rng, len));
+            }
+            let train = Dataset::from_flat(values, len);
+            let searcher = RawNnSearcher::new(&train, Measure::Dtw);
+            let q = gen_walk(rng, len);
+            let got = searcher.query(&q);
+            let (want_i, want_sq) = (0..n)
+                .map(|j| (j, dtw_sq(&q, train.row(j), None)))
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .unwrap();
+            if (got.distance - want_sq.sqrt()).abs() > 1e-9 {
+                return Err(format!(
+                    "distance {} != true DTW {} (index {} vs {})",
+                    got.distance,
+                    want_sq.sqrt(),
+                    got.index,
+                    want_i
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,9 +1,13 @@
-//! Nearest-neighbour search and 1-NN classification (paper §4.1).
+//! Nearest-neighbour search and 1-NN classification (paper §4.1), plus
+//! the serving-scale extensions: bounded-heap top-k collection, sharded
+//! multi-threaded scans, IVF cell probing and exact DTW re-ranking.
 
 pub mod ivf;
 pub mod knn;
+pub mod topk;
 
-pub use ivf::IvfIndex;
+pub use ivf::{CoarseMetric, IvfIndex};
 pub use knn::{
     nn_classify_pq, nn_classify_raw, nn_classify_sax, NnIndex, PqQueryMode, RawNnSearcher,
 };
+pub use topk::{rerank_dtw, topk_scan, topk_scan_with, Neighbor, QueryLut, TopKCollector};

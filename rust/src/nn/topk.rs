@@ -1,0 +1,445 @@
+//! Top-k nearest-neighbour search over PQ codes (paper §4.1, scaled up).
+//!
+//! The serving primitives the coordinator builds on:
+//!
+//! - [`TopKCollector`] — a bounded max-heap over squared distances with a
+//!   deterministic `(distance, index)` total order, so the k best
+//!   candidates are independent of visit order. That is what makes an
+//!   IVF probe over all cells *bit-identical* to the exhaustive scan and
+//!   a sharded scan identical to the sequential one.
+//! - [`QueryLut`] — the per-query precomputation shared by every scan
+//!   mode: the encoded query code word (symmetric) or the `M×K`
+//!   asymmetric table; either way each database item then costs `O(M)`
+//!   lookups.
+//! - [`topk_scan`] — exhaustive scan, optionally sharded over
+//!   `std::thread` workers in contiguous chunks of the flat code array.
+//! - [`rerank_dtw`] — the exact re-rank stage: rescore the PQ-approximate
+//!   candidate list with true windowed DTW against the raw database,
+//!   early-abandoning against the running k-th best.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::core::series::Dataset;
+use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
+use crate::pq::codebook::Codebook;
+use crate::pq::distance as pqdist;
+use crate::pq::quantizer::{EncodedDataset, ProductQuantizer};
+
+use super::knn::PqQueryMode;
+
+/// One ranked neighbour: database index and (non-squared) distance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Index of the database series.
+    pub index: usize,
+    /// Distance to it (same units as the underlying measure).
+    pub distance: f64,
+}
+
+/// Internal heap entry ordered by `(distance, index)` under
+/// `f64::total_cmp` — a total order, so NaN cannot panic a sort and ties
+/// resolve to the smaller index regardless of visit order.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    d_sq: f64,
+    index: usize,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.d_sq
+            .total_cmp(&other.d_sq)
+            .then_with(|| self.index.cmp(&other.index))
+    }
+}
+
+/// A bounded max-heap collecting the k smallest squared distances seen.
+///
+/// `offer` is `O(log k)` and a no-op once the candidate is worse than the
+/// current k-th best, so a full scan is `O(N log k)` worst case and close
+/// to `O(N)` on shuffled data.
+#[derive(Debug, Clone)]
+pub struct TopKCollector {
+    k: usize,
+    heap: BinaryHeap<Entry>,
+}
+
+impl TopKCollector {
+    /// Collector for the `k` nearest candidates (`k >= 1`).
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "top-k requires k >= 1");
+        TopKCollector { k, heap: BinaryHeap::with_capacity(k + 1) }
+    }
+
+    /// Number of candidates currently held (`<= k`).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no candidate has been accepted yet.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current admission bound (squared): `INFINITY` until the collector
+    /// is full, then the k-th smallest squared distance. Any candidate
+    /// with a strictly larger squared distance cannot enter — which is
+    /// exactly the early-abandon bound for a re-rank DTW.
+    pub fn threshold_sq(&self) -> f64 {
+        if self.heap.len() < self.k {
+            f64::INFINITY
+        } else {
+            self.heap.peek().map(|e| e.d_sq).unwrap_or(f64::INFINITY)
+        }
+    }
+
+    /// Offer one candidate.
+    pub fn offer(&mut self, index: usize, d_sq: f64) {
+        let e = Entry { d_sq, index };
+        if self.heap.len() < self.k {
+            self.heap.push(e);
+        } else if let Some(&worst) = self.heap.peek() {
+            if e < worst {
+                self.heap.pop();
+                self.heap.push(e);
+            }
+        }
+    }
+
+    /// Fold another collector in (the merge step of a sharded scan).
+    pub fn merge(&mut self, other: TopKCollector) {
+        for e in other.heap {
+            self.offer(e.index, e.d_sq);
+        }
+    }
+
+    /// Finish: neighbours ascending by `(distance, index)`, with the
+    /// square root applied.
+    pub fn into_sorted(self) -> Vec<Neighbor> {
+        let mut entries = self.heap.into_vec();
+        entries.sort_unstable();
+        entries
+            .into_iter()
+            .map(|e| Neighbor { index: e.index, distance: e.d_sq.sqrt() })
+            .collect()
+    }
+}
+
+/// Per-query precomputed lookup state for a PQ code scan. Build once,
+/// then every database item is `O(M)` table lookups in either mode.
+#[derive(Debug, Clone)]
+pub enum QueryLut {
+    /// Encoded query code word (symmetric mode: LUT-vs-LUT lookups).
+    Symmetric(Vec<u16>),
+    /// Query-specific `M×K` squared-distance table (asymmetric mode).
+    Asymmetric(Vec<f64>),
+}
+
+impl QueryLut {
+    /// Precompute the query side of a scan in the given mode.
+    pub fn build(pq: &ProductQuantizer, q: &[f64], mode: PqQueryMode) -> Self {
+        match mode {
+            PqQueryMode::Symmetric => {
+                let (codes, _, _) = pq.encode(q);
+                QueryLut::Symmetric(codes)
+            }
+            PqQueryMode::Asymmetric => QueryLut::Asymmetric(pq.asymmetric_table(q)),
+        }
+    }
+
+    /// Squared PQ distance of the query to one encoded item.
+    #[inline]
+    pub fn dist_sq(&self, cb: &Codebook, code: &[u16]) -> f64 {
+        match self {
+            QueryLut::Symmetric(cx) => pqdist::symmetric_sq(cb, cx, code),
+            QueryLut::Asymmetric(table) => pqdist::asymmetric_sq(cb, table, code),
+        }
+    }
+}
+
+/// Scan items `[start, end)` of the encoded database into a fresh
+/// collector, in blocks through the batch LUT helpers.
+fn scan_range(
+    cb: &Codebook,
+    enc: &EncodedDataset,
+    lut: &QueryLut,
+    k: usize,
+    start: usize,
+    end: usize,
+) -> TopKCollector {
+    const BLOCK: usize = 512;
+    let m = enc.n_subspaces;
+    let mut coll = TopKCollector::new(k);
+    let mut buf: Vec<f64> = Vec::with_capacity(BLOCK);
+    let mut i = start;
+    while i < end {
+        let hi = (i + BLOCK).min(end);
+        let codes = &enc.codes[i * m..hi * m];
+        buf.clear();
+        match lut {
+            QueryLut::Symmetric(cx) => pqdist::symmetric_sq_batch(cb, cx, codes, &mut buf),
+            QueryLut::Asymmetric(t) => pqdist::asymmetric_sq_batch(cb, t, codes, &mut buf),
+        }
+        for (off, &d) in buf.iter().enumerate() {
+            coll.offer(i + off, d);
+        }
+        i = hi;
+    }
+    coll
+}
+
+/// Exhaustive top-k scan of an encoded database, sharded over
+/// `n_threads` std threads in contiguous chunks (1 = sequential). The
+/// result is independent of `n_threads` thanks to the collector's
+/// deterministic total order.
+pub fn topk_scan(
+    pq: &ProductQuantizer,
+    enc: &EncodedDataset,
+    q: &[f64],
+    k: usize,
+    mode: PqQueryMode,
+    n_threads: usize,
+) -> Vec<Neighbor> {
+    let lut = QueryLut::build(pq, q, mode);
+    topk_scan_with(pq, enc, &lut, k, n_threads)
+}
+
+/// [`topk_scan`] with the query-side precomputation already done (lets a
+/// caller compare probing strategies on one query without rebuilding the
+/// table, and the engine reuse it across a re-rank pipeline).
+pub fn topk_scan_with(
+    pq: &ProductQuantizer,
+    enc: &EncodedDataset,
+    lut: &QueryLut,
+    k: usize,
+    n_threads: usize,
+) -> Vec<Neighbor> {
+    let n = enc.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let cb = &pq.codebook;
+    let threads = n_threads.max(1).min(n);
+    if threads == 1 {
+        return scan_range(cb, enc, lut, k, 0, n).into_sorted();
+    }
+    let chunk = n.div_ceil(threads);
+    let acc = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let start = t * chunk;
+            if start >= n {
+                break;
+            }
+            let end = ((t + 1) * chunk).min(n);
+            handles.push(s.spawn(move || scan_range(cb, enc, lut, k, start, end)));
+        }
+        let mut acc = TopKCollector::new(k);
+        for h in handles {
+            acc.merge(h.join().expect("top-k scan worker panicked"));
+        }
+        acc
+    });
+    acc.into_sorted()
+}
+
+/// Exact re-rank: rescore PQ-approximate `candidates` with true windowed
+/// DTW against the raw database and keep the `k` best. Early-abandons
+/// each DTW against the running k-th best, which is lossless for the
+/// final top-k (an abandoned candidate provably cannot enter it).
+///
+/// Returned distances are true DTW values, not PQ approximations.
+pub fn rerank_dtw(
+    db: &Dataset,
+    q: &[f64],
+    candidates: &[Neighbor],
+    k: usize,
+    window: Option<usize>,
+) -> Vec<Neighbor> {
+    let mut coll = TopKCollector::new(k.max(1));
+    let mut scratch = DtwScratch::new(db.len);
+    for c in candidates {
+        let ub = coll.threshold_sq();
+        let d = dtw_sq_scratch(q, db.row(c.index), window, ub, &mut scratch);
+        if d.is_finite() {
+            coll.offer(c.index, d);
+        }
+    }
+    coll.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ucr_like::ucr_like_by_name;
+    use crate::distance::dtw::dtw_sq;
+    use crate::nn::knn::nn_classify_pq;
+    use crate::pq::quantizer::PqConfig;
+
+    fn toy() -> (ProductQuantizer, EncodedDataset, Dataset, Dataset) {
+        let tt = ucr_like_by_name("CBF", 907).unwrap();
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 16,
+            window_frac: 0.2,
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&tt.train, &cfg, 3).unwrap();
+        let enc = pq.encode_dataset(&tt.train);
+        (pq, enc, tt.train, tt.test)
+    }
+
+    #[test]
+    fn collector_keeps_k_smallest_with_index_ties() {
+        let mut c = TopKCollector::new(3);
+        for (i, d) in [(5usize, 4.0), (1, 1.0), (9, 1.0), (2, 9.0), (7, 0.5), (3, 4.0)] {
+            c.offer(i, d);
+        }
+        let out = c.into_sorted();
+        let got: Vec<(usize, f64)> = out.iter().map(|n| (n.index, n.distance * n.distance)).collect();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].0, 7);
+        assert_eq!(got[1].0, 1);
+        assert_eq!(got[2].0, 9); // the (1.0, 9) tie beats (4.0, _)
+        assert!((got[0].1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collector_threshold_tracks_kth_best() {
+        let mut c = TopKCollector::new(2);
+        assert!(c.threshold_sq().is_infinite());
+        c.offer(0, 3.0);
+        assert!(c.threshold_sq().is_infinite());
+        c.offer(1, 1.0);
+        assert_eq!(c.threshold_sq(), 3.0);
+        c.offer(2, 2.0);
+        assert_eq!(c.threshold_sq(), 2.0);
+        c.offer(3, 10.0); // rejected
+        assert_eq!(c.threshold_sq(), 2.0);
+    }
+
+    #[test]
+    fn collector_ignores_nan_gracefully() {
+        let mut c = TopKCollector::new(2);
+        c.offer(0, f64::NAN);
+        c.offer(1, 1.0);
+        c.offer(2, 2.0);
+        let out = c.into_sorted();
+        assert_eq!(out[0].index, 1);
+        assert_eq!(out[1].index, 2);
+    }
+
+    #[test]
+    fn scan_matches_bruteforce_both_modes() {
+        let (pq, enc, _, test) = toy();
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            for qi in 0..5 {
+                let q = test.row(qi);
+                let hits = topk_scan(&pq, &enc, q, 4, mode, 1);
+                // brute force over the same per-item distance
+                let lut = QueryLut::build(&pq, q, mode);
+                let mut all: Vec<(usize, f64)> = (0..enc.n())
+                    .map(|j| (j, lut.dist_sq(&pq.codebook, enc.code(j))))
+                    .collect();
+                all.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+                assert_eq!(hits.len(), 4);
+                for (h, want) in hits.iter().zip(all.iter()) {
+                    assert_eq!(h.index, want.0, "mode {mode:?} query {qi}");
+                    assert!((h.distance - want.1.sqrt()).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_scan_identical_to_sequential() {
+        let (pq, enc, _, test) = toy();
+        for qi in 0..5 {
+            let q = test.row(qi);
+            let seq = topk_scan(&pq, &enc, q, 7, PqQueryMode::Asymmetric, 1);
+            for threads in [2, 3, 8] {
+                let par = topk_scan(&pq, &enc, q, 7, PqQueryMode::Asymmetric, threads);
+                assert_eq!(seq, par, "threads={threads} query {qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk1_agrees_with_nn_classify_pq() {
+        let (pq, enc, _, test) = toy();
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            let (_, preds) = nn_classify_pq(&pq, &enc, &test, mode);
+            for i in 0..test.n_series() {
+                let hits = topk_scan(&pq, &enc, test.row(i), 1, mode, 2);
+                assert_eq!(hits.len(), 1);
+                assert_eq!(
+                    enc.labels[hits[0].index],
+                    preds[i],
+                    "mode {mode:?} query {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rerank_yields_true_dtw_distances_and_exact_topk() {
+        let (pq, enc, train, test) = toy();
+        let window = Some(6);
+        let q = test.row(2);
+        // generous PQ candidate pool, then exact re-rank to k=5
+        let cands = topk_scan(&pq, &enc, q, 30, PqQueryMode::Asymmetric, 1);
+        let hits = rerank_dtw(&train, q, &cands, 5, window);
+        assert_eq!(hits.len(), 5);
+        // 1. distances are true DTW values
+        for h in &hits {
+            let want = dtw_sq(q, train.row(h.index), window).sqrt();
+            assert!(
+                (h.distance - want).abs() < 1e-9,
+                "index {}: {} vs true {}",
+                h.index,
+                h.distance,
+                want
+            );
+        }
+        // 2. exactly the 5 best of the candidate pool under true DTW
+        let mut truth: Vec<(usize, f64)> = cands
+            .iter()
+            .map(|c| (c.index, dtw_sq(q, train.row(c.index), window)))
+            .collect();
+        truth.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        for (h, want) in hits.iter().zip(truth.iter()) {
+            assert_eq!(h.index, want.0);
+        }
+        // 3. ascending order
+        for w in hits.windows(2) {
+            assert!(w[0].distance <= w[1].distance + 1e-12);
+        }
+    }
+
+    #[test]
+    fn k_larger_than_db_returns_everything() {
+        let (pq, enc, _, test) = toy();
+        let n = enc.n();
+        let hits = topk_scan(&pq, &enc, test.row(0), n + 50, PqQueryMode::Symmetric, 2);
+        assert_eq!(hits.len(), n);
+        let mut seen: Vec<usize> = hits.iter().map(|h| h.index).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), n);
+    }
+}

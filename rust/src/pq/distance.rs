@@ -103,6 +103,32 @@ pub fn asymmetric_sq(cb: &Codebook, table: &[f64], codes: &[u16]) -> f64 {
     s
 }
 
+/// Batch variant of [`symmetric_sq`]: squared distances of `cx` against
+/// every code word in the flat block `codes` (`codes.len() / M` items,
+/// row-major), appended to `out`. The scan hot loop of the top-k path —
+/// one tight pass over a contiguous code slice, no per-item call setup.
+pub fn symmetric_sq_batch(cb: &Codebook, cx: &[u16], codes: &[u16], out: &mut Vec<f64>) {
+    let m = cb.n_subspaces;
+    debug_assert_eq!(codes.len() % m, 0, "ragged code block");
+    out.reserve(codes.len() / m);
+    for cy in codes.chunks_exact(m) {
+        out.push(symmetric_sq(cb, cx, cy));
+    }
+}
+
+/// Batch variant of [`asymmetric_sq`] over a flat block of code words,
+/// appended to `out`. Computes exactly the same f64 values as the
+/// per-item call (the IVF-vs-exhaustive equivalence tests rely on
+/// bit-identical results between the two paths).
+pub fn asymmetric_sq_batch(cb: &Codebook, table: &[f64], codes: &[u16], out: &mut Vec<f64>) {
+    let m = cb.n_subspaces;
+    debug_assert_eq!(codes.len() % m, 0, "ragged code block");
+    out.reserve(codes.len() / m);
+    for cy in codes.chunks_exact(m) {
+        out.push(asymmetric_sq(cb, table, cy));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +225,32 @@ mod tests {
         let codes = vec![1u16, 0, 7, 4];
         let want: f64 = (0..4).map(|m| table[m * cb.k + codes[m] as usize]).sum();
         assert!((asymmetric_sq(&cb, &table, &codes) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_helpers_match_per_item_calls() {
+        let cb = toy_codebook();
+        let mut rng = Rng::new(263);
+        // a flat block of 5 random code words
+        let codes: Vec<u16> = (0..5 * cb.n_subspaces)
+            .map(|_| (rng.normal().abs() * 1e3) as u16 % cb.k as u16)
+            .collect();
+        let cx = vec![1u16, 3, 0, 7];
+        let mut out = Vec::new();
+        symmetric_sq_batch(&cb, &cx, &codes, &mut out);
+        assert_eq!(out.len(), 5);
+        for (i, cy) in codes.chunks_exact(cb.n_subspaces).enumerate() {
+            assert_eq!(out[i], symmetric_sq(&cb, &cx, cy), "sym item {i}");
+        }
+        let subs: Vec<Vec<f64>> = (0..cb.n_subspaces)
+            .map(|_| (0..cb.sub_len).map(|_| rng.normal()).collect())
+            .collect();
+        let table = asymmetric_table(&cb, &subs);
+        let mut out = Vec::new();
+        asymmetric_sq_batch(&cb, &table, &codes, &mut out);
+        for (i, cy) in codes.chunks_exact(cb.n_subspaces).enumerate() {
+            assert_eq!(out[i], asymmetric_sq(&cb, &table, cy), "asym item {i}");
+        }
     }
 
     #[test]

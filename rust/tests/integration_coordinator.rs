@@ -1,11 +1,15 @@
 //! Coordinator integration: the full service stack under concurrent load,
-//! prediction-consistency with the library path, and backpressure
-//! behaviour.
+//! prediction-consistency with the library path, the three top-k serving
+//! modes end-to-end, and backpressure behaviour.
 
 use std::sync::Arc;
 
-use pqdtw::coordinator::{BatcherConfig, Engine, Request, Response, Service, ServiceConfig};
+use pqdtw::coordinator::{
+    BatcherConfig, Engine, Request, RequestClass, Response, Service, ServiceConfig,
+};
 use pqdtw::data::ucr_like::ucr_like_by_name;
+use pqdtw::distance::dtw::dtw_sq;
+use pqdtw::nn::ivf::CoarseMetric;
 use pqdtw::nn::knn::{nn_classify_pq, PqQueryMode};
 use pqdtw::pq::quantizer::PqConfig;
 
@@ -35,6 +39,7 @@ fn service_predictions_match_library_path() {
         match svc.call(Request::NnQuery {
             series: test.row(i).to_vec(),
             mode: PqQueryMode::Asymmetric,
+            nprobe: None,
         }) {
             Response::Nn { label, .. } => {
                 assert_eq!(label, Some(want_preds[i]), "query {i}");
@@ -70,6 +75,7 @@ fn concurrent_load_with_batching() {
                 match svc.call(Request::NnQuery {
                     series: test.row(idx).to_vec(),
                     mode: PqQueryMode::Symmetric,
+                    nprobe: None,
                 }) {
                     Response::Nn { .. } => ok += 1,
                     other => panic!("{other:?}"),
@@ -85,6 +91,109 @@ fn concurrent_load_with_batching() {
     assert_eq!(m.errors, 0);
     assert!(m.batches <= 90, "batching should group at least sometimes");
     assert!(m.mean_latency_us > 0.0);
+}
+
+#[test]
+fn topk_three_modes_end_to_end() {
+    // The acceptance contract: a TopKQuery served end-to-end through the
+    // threaded Service in all three modes — exhaustive scan, IVF-probed,
+    // DTW re-ranked — with the full probe bit-identical to the
+    // exhaustive scan and re-ranked distances equal to true DTW.
+    let tt = ucr_like_by_name("CBF", 401).unwrap();
+    let cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 16,
+        window_frac: 0.2,
+        ..Default::default()
+    };
+    let mut engine = Engine::build(&tt.train, &cfg, 11).unwrap();
+    engine.set_scan_threads(2);
+    engine.enable_ivf(6, CoarseMetric::Dtw { window: engine.full_window() }, 5);
+    let nlist = engine.ivf.as_ref().unwrap().nlist();
+    let window = engine.full_window();
+    let train = engine.raw.clone();
+    let engine = Arc::new(engine);
+    let svc = Service::start(
+        Arc::clone(&engine),
+        ServiceConfig { n_workers: 2, batcher: BatcherConfig::default() },
+    );
+
+    let k = 5;
+    for i in 0..8 {
+        let q = tt.test.row(i).to_vec();
+
+        // mode 1: exhaustive (sharded) scan
+        let exhaustive = svc.call(Request::TopKQuery {
+            series: q.clone(),
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: None,
+        });
+        let Response::TopK(ref exh_hits) = exhaustive else {
+            panic!("unexpected {exhaustive:?}");
+        };
+        assert_eq!(exh_hits.len(), k);
+        for w in exh_hits.windows(2) {
+            assert!(w[0].distance <= w[1].distance + 1e-12, "ascending order");
+        }
+        for h in exh_hits {
+            assert!(h.label.is_some(), "labels attached");
+        }
+
+        // mode 2: IVF-probed; at nprobe = nlist it must be bit-identical
+        let probed_full = svc.call(Request::TopKQuery {
+            series: q.clone(),
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: Some(nlist),
+            rerank: None,
+        });
+        assert_eq!(exhaustive, probed_full, "query {i}: full probe != exhaustive");
+        // a narrow probe still returns ranked hits from the probed cells
+        let probed_narrow = svc.call(Request::TopKQuery {
+            series: q.clone(),
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: Some(1),
+            rerank: None,
+        });
+        let Response::TopK(ref narrow_hits) = probed_narrow else {
+            panic!("unexpected {probed_narrow:?}");
+        };
+        // the probed cell may hold fewer than k members
+        assert!(narrow_hits.len() <= k);
+
+        // mode 3: re-ranked — distances must be true windowed DTW
+        let reranked = svc.call(Request::TopKQuery {
+            series: q.clone(),
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: Some(4 * k),
+        });
+        let Response::TopK(ref rr_hits) = reranked else {
+            panic!("unexpected {reranked:?}");
+        };
+        assert_eq!(rr_hits.len(), k);
+        for h in rr_hits {
+            let want = dtw_sq(&q, train.row(h.index), window).sqrt();
+            assert!(
+                (h.distance - want).abs() < 1e-9,
+                "query {i} index {}: re-ranked {} != true DTW {}",
+                h.index,
+                h.distance,
+                want
+            );
+        }
+    }
+
+    // per-mode latency counters saw each serving mode
+    let m = svc.shutdown();
+    assert_eq!(m.class(RequestClass::TopKExhaustive).requests, 8);
+    assert_eq!(m.class(RequestClass::TopKProbed).requests, 16);
+    assert_eq!(m.class(RequestClass::TopKReranked).requests, 8);
+    assert_eq!(m.errors, 0);
 }
 
 #[test]
@@ -120,8 +229,12 @@ fn queue_depth_visible_under_burst() {
     for i in 0..10 {
         let q = test.row(i % test.n_series()).to_vec();
         rxs.push(
-            svc.submit(Request::NnQuery { series: q, mode: PqQueryMode::Symmetric })
-                .unwrap(),
+            svc.submit(Request::NnQuery {
+                series: q,
+                mode: PqQueryMode::Symmetric,
+                nprobe: None,
+            })
+            .unwrap(),
         );
     }
     // At least some requests should still be queued at this instant.
