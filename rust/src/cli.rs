@@ -11,6 +11,10 @@ pub struct Args {
     pub command: String,
     /// `--key value` pairs; bare `--switch` maps to "true".
     pub flags: HashMap<String, String>,
+    /// Tokens that were neither a `--flag` nor a flag's value — usually
+    /// a single-dash typo like `-nprobe`. Rejected by [`Args::validate`]
+    /// (previously they were silently dropped).
+    pub stray: Vec<String>,
 }
 
 impl Args {
@@ -19,6 +23,7 @@ impl Args {
         let mut it = args.into_iter().peekable();
         let command = it.next().unwrap_or_default();
         let mut flags = HashMap::new();
+        let mut stray = Vec::new();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 let value = match it.peek() {
@@ -26,9 +31,11 @@ impl Args {
                     _ => "true".to_string(),
                 };
                 flags.insert(key.to_string(), value);
+            } else {
+                stray.push(a);
             }
         }
-        Args { command, flags }
+        Args { command, flags, stray }
     }
 
     /// Parse the process arguments.
@@ -57,6 +64,54 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.get(key).map(|v| v == "true").unwrap_or(false)
     }
+
+    /// Validate the parsed command line against a spec table: an
+    /// unknown subcommand, or any flag the matched subcommand does not
+    /// accept, is an error listing the valid options. Without this, a
+    /// typo like `--nporbe` was silently ignored and quietly degraded
+    /// results to the defaults.
+    pub fn validate(&self, specs: &[CommandSpec]) -> Result<(), String> {
+        let spec = match specs.iter().find(|s| s.name == self.command) {
+            Some(s) => s,
+            None => {
+                let names: Vec<&str> = specs.iter().map(|s| s.name).collect();
+                return Err(format!(
+                    "unknown command '{}' (valid: {})",
+                    self.command,
+                    names.join("|")
+                ));
+            }
+        };
+        if let Some(first) = self.stray.first() {
+            return Err(format!(
+                "unexpected argument '{first}' (flags are spelled --name; values follow their flag)"
+            ));
+        }
+        let mut unknown: Vec<&str> =
+            self.flags.keys().map(|k| k.as_str()).filter(|k| !spec.flags.contains(k)).collect();
+        unknown.sort_unstable();
+        if let Some(first) = unknown.first() {
+            let mut valid: Vec<&str> = spec.flags.to_vec();
+            valid.sort_unstable();
+            let valid: Vec<String> = valid.iter().map(|f| format!("--{f}")).collect();
+            return Err(format!(
+                "unknown flag --{first} for '{}' (valid: {})",
+                spec.name,
+                valid.join(" ")
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One subcommand and the exact flag set it accepts (used by
+/// [`Args::validate`]).
+#[derive(Debug, Clone, Copy)]
+pub struct CommandSpec {
+    /// Subcommand name.
+    pub name: &'static str,
+    /// Accepted flag names, without the `--` prefix.
+    pub flags: &'static [&'static str],
 }
 
 #[cfg(test)]
@@ -96,5 +151,45 @@ mod tests {
     fn empty_args() {
         let a = Args::parse(Vec::<String>::new());
         assert_eq!(a.command, "");
+    }
+
+    const SPECS: &[CommandSpec] = &[
+        CommandSpec { name: "topk", flags: &["nprobe", "topk", "dataset"] },
+        CommandSpec { name: "info", flags: &["index"] },
+    ];
+
+    #[test]
+    fn validate_accepts_known_flags() {
+        assert!(parse("topk --nprobe 4 --topk 5").validate(SPECS).is_ok());
+        assert!(parse("info").validate(SPECS).is_ok());
+        assert!(parse("info --index x.pqx").validate(SPECS).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_misspelled_flag_listing_valid_ones() {
+        let err = parse("topk --nporbe 4").validate(SPECS).unwrap_err();
+        assert!(err.contains("--nporbe"), "{err}");
+        assert!(err.contains("--nprobe"), "{err}");
+        assert!(err.contains("'topk'"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_unknown_command_listing_valid_ones() {
+        let err = parse("frobnicate --x 1").validate(SPECS).unwrap_err();
+        assert!(err.contains("frobnicate"), "{err}");
+        assert!(err.contains("topk"), "{err}");
+        assert!(err.contains("info"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_single_dash_and_positional_strays() {
+        // `-nprobe` is not parsed as a flag; before stray tracking it
+        // (and its value) vanished silently.
+        let err = parse("topk -nprobe 4").validate(SPECS).unwrap_err();
+        assert!(err.contains("-nprobe"), "{err}");
+        let err = parse("topk extra").validate(SPECS).unwrap_err();
+        assert!(err.contains("extra"), "{err}");
+        // flag values are consumed by their flag, not treated as stray
+        assert!(parse("topk --nprobe 4").validate(SPECS).is_ok());
     }
 }

@@ -13,6 +13,8 @@
 //!   DTW against the retained raw database, so returned distances are
 //!   exact DTW values, not approximations.
 
+use std::path::Path;
+
 use anyhow::Result;
 
 use crate::core::series::Dataset;
@@ -154,6 +156,30 @@ impl Engine {
     /// raw database, enabling `nprobe` requests.
     pub fn enable_ivf(&mut self, nlist: usize, metric: CoarseMetric, seed: u64) {
         self.ivf = Some(IvfIndex::build(&self.raw, nlist, metric, seed));
+    }
+
+    /// Persist the full serving state — quantizer, encoded database,
+    /// raw database, optional IVF index — to a versioned index file
+    /// (see [`crate::store`] and `docs/index-format.md`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::store::save_index(path, &self.pq, &self.encoded, &self.raw, self.ivf.as_ref())
+    }
+
+    /// Reopen a saved index without retraining. The loaded engine
+    /// answers every request bit-identically to the engine that was
+    /// saved (scan threads reset to 1 — call
+    /// [`Engine::set_scan_threads`] to re-shard).
+    pub fn open(path: &Path) -> Result<Self> {
+        let idx = crate::store::load_index(path)?;
+        let n_items = idx.encoded.n();
+        Ok(Engine {
+            pq: idx.pq,
+            encoded: idx.encoded,
+            raw: idx.raw,
+            ivf: idx.ivf,
+            n_items,
+            scan_threads: 1,
+        })
     }
 
     /// Shard exhaustive top-k scans over `n` threads (1 = sequential).
@@ -462,6 +488,62 @@ mod tests {
             }),
             Response::Error(_)
         ));
+    }
+
+    #[test]
+    fn save_open_roundtrip_is_bit_identical() {
+        let (mut engine, test) = toy_engine();
+        engine.enable_ivf(5, CoarseMetric::Dtw { window: engine.full_window() }, 9);
+        let nlist = engine.ivf.as_ref().unwrap().nlist();
+        let dir = crate::testutil::unique_temp_dir("engine_store");
+        let path = dir.join("index.pqx");
+        engine.save(&path).unwrap();
+        let reopened = Engine::open(&path).unwrap();
+        assert_eq!(reopened.n_items, engine.n_items);
+        for i in 0..5 {
+            let q = test.row(i).to_vec();
+            for req in [
+                Request::NnQuery {
+                    series: q.clone(),
+                    mode: PqQueryMode::Asymmetric,
+                    nprobe: None,
+                },
+                Request::TopKQuery {
+                    series: q.clone(),
+                    k: 4,
+                    mode: PqQueryMode::Asymmetric,
+                    nprobe: None,
+                    rerank: None,
+                },
+                Request::TopKQuery {
+                    series: q.clone(),
+                    k: 4,
+                    mode: PqQueryMode::Symmetric,
+                    nprobe: Some(nlist),
+                    rerank: None,
+                },
+                Request::TopKQuery {
+                    series: q,
+                    k: 3,
+                    mode: PqQueryMode::Asymmetric,
+                    nprobe: Some(2),
+                    rerank: Some(9),
+                },
+            ] {
+                assert_eq!(engine.handle(&req), reopened.handle(&req), "query {i}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_rejects_missing_and_garbage_files() {
+        let dir = crate::testutil::unique_temp_dir("engine_store_bad");
+        assert!(Engine::open(&dir.join("missing.pqx")).is_err());
+        let garbage = dir.join("garbage.pqx");
+        std::fs::write(&garbage, b"definitely not an index").unwrap();
+        assert!(Engine::open(&garbage).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

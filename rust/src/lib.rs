@@ -30,6 +30,12 @@
 //!   deterministic `(distance, index)` order, sharded multi-threaded
 //!   scans, an IVF inverted-file index with `nprobe` cell probing, and an
 //!   exact DTW re-rank stage over the raw database.
+//! - [`store`] — the versioned on-disk index format (magic / version /
+//!   length-prefixed sections / checksum, explicit little-endian over
+//!   `std` only): `save`/`load` of the full serving state — quantizer,
+//!   codes, raw database, IVF lists — so serving processes open a
+//!   prebuilt index in milliseconds instead of retraining, and answer
+//!   queries bit-identically to the engine that was saved.
 //! - [`cluster`] — agglomerative hierarchical clustering + Rand/ARI.
 //! - [`data`] — synthetic workloads (random walks, a UCR-like suite) and
 //!   a UCR `.tsv` loader.
@@ -76,6 +82,7 @@ pub mod nn;
 pub mod cluster;
 pub mod data;
 pub mod eval;
+pub mod store;
 pub mod coordinator;
 pub mod runtime;
 pub mod testutil;

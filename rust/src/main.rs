@@ -1,5 +1,5 @@
 //! `pqdtw` — leader binary: train / encode / query / topk / cluster /
-//! serve / selftest over the PQDTW library.
+//! build-index / serve / selftest over the PQDTW library.
 //!
 //! Examples:
 //!   pqdtw selftest
@@ -7,24 +7,91 @@
 //!   pqdtw query --dataset CBF --mode asymmetric --queries 50
 //!   pqdtw topk --dataset CBF --topk 5 --nlist 16 --nprobe 4 --rerank 20
 //!   pqdtw cluster --dataset Waveforms --linkage complete
-//!   pqdtw serve --workers 4 --requests 200 --topk 5 --nprobe 4
-//!   pqdtw info
+//!   pqdtw build-index --dataset RandomWalk-4096x128 --nlist 32 --out rw.pqx
+//!   pqdtw serve --index rw.pqx --dataset RandomWalk-4096x128 --topk 5 --nprobe 4
+//!   pqdtw topk --index rw.pqx --dataset RandomWalk-4096x128 --nlist 32 --verify
+//!   pqdtw info --index rw.pqx
+//!
+//! The build-once / serve-many split: `build-index` trains, encodes and
+//! persists the full serving state; `serve --index` / `topk --index`
+//! reopen it without retraining and answer bit-identically to the
+//! in-memory engine it was saved from. Unknown subcommands and flags
+//! are hard errors listing the valid options (a typo like `--nporbe`
+//! must never silently degrade results).
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use pqdtw::cluster::{agglomerative, compact_labels, rand_index, Linkage};
 use pqdtw::coordinator::{Engine, Request, Response, Service, ServiceConfig};
 use pqdtw::core::matrix::CondensedMatrix;
+use pqdtw::data::random_walk::RandomWalks;
 use pqdtw::data::ucr_like::{ucr_like_by_name, TrainTest};
+use pqdtw::distance::measure::Measure;
 use pqdtw::nn::ivf::CoarseMetric;
 use pqdtw::nn::knn::{nn_classify_pq, nn_classify_raw, PqQueryMode};
-use pqdtw::distance::measure::Measure;
 use pqdtw::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
 
-use pqdtw::cli::Args;
+use pqdtw::cli::{Args, CommandSpec};
+
+/// Common dataset/quantizer flags shared by every training command.
+macro_rules! pq_flags {
+    ($($extra:literal),*) => {
+        &[
+            "dataset", "seed", "subspaces", "codebook", "window", "metric", "tail",
+            "level", "kmeans-iters", "dba-iters", $($extra),*
+        ]
+    };
+}
+
+/// Every subcommand with the exact flag set it accepts; anything else
+/// is rejected by [`Args::validate`] before dispatch.
+const SPECS: &[CommandSpec] = &[
+    CommandSpec { name: "train", flags: pq_flags!() },
+    CommandSpec { name: "query", flags: pq_flags!("mode", "queries") },
+    CommandSpec {
+        name: "topk",
+        flags: pq_flags!(
+            "topk", "nlist", "nprobe", "rerank", "coarse", "scan-threads", "queries",
+            "index", "verify"
+        ),
+    },
+    CommandSpec { name: "cluster", flags: pq_flags!("linkage") },
+    CommandSpec {
+        name: "serve",
+        flags: pq_flags!(
+            "workers", "requests", "topk", "nprobe", "rerank", "nlist", "coarse",
+            "scan-threads", "index"
+        ),
+    },
+    CommandSpec { name: "build-index", flags: pq_flags!("out", "nlist", "coarse") },
+    CommandSpec { name: "selftest", flags: &["seed"] },
+    CommandSpec { name: "info", flags: &["index"] },
+];
+
+/// `RandomWalk` or `RandomWalk-<n>x<len>`: an unlabeled synthetic
+/// random-walk corpus (the paper's §6.1 scaling workload), generated
+/// deterministically from the seed — usable anywhere a named dataset
+/// is, including `build-index` and the CI store smoke test.
+fn random_walk_tt(name: &str, seed: u64) -> Option<TrainTest> {
+    let rest = name.strip_prefix("RandomWalk")?;
+    let (n, len) = if rest.is_empty() {
+        (256usize, 128usize)
+    } else {
+        let (a, b) = rest.strip_prefix('-')?.split_once('x')?;
+        (a.parse().ok()?, b.parse().ok()?)
+    };
+    if n == 0 || len == 0 {
+        return None;
+    }
+    let train = RandomWalks::new(seed).generate(n, len);
+    let test = RandomWalks::new(seed.wrapping_add(0x9E37_79B9_7F4A_7C15))
+        .generate(n.div_ceil(4), len);
+    Some(TrainTest { name: format!("RandomWalk(n={n},len={len})"), train, test })
+}
 
 fn load_dataset(name: &str, seed: u64) -> Result<TrainTest> {
     // Real UCR archive takes precedence when available.
@@ -33,6 +100,9 @@ fn load_dataset(name: &str, seed: u64) -> Result<TrainTest> {
         if dir.join(name).exists() {
             return pqdtw::data::ucr_loader::load_ucr_dataset(&dir, name);
         }
+    }
+    if let Some(tt) = random_walk_tt(name, seed) {
+        return Ok(tt);
     }
     ucr_like_by_name(name, seed)
         .with_context(|| format!("unknown dataset '{name}' (and no UCR_ARCHIVE_DIR)"))
@@ -52,6 +122,61 @@ fn config_from_args(a: &Args) -> PqConfig {
         kmeans_iters: a.get_parsed("kmeans-iters", 8usize),
         dba_iters: a.get_parsed("dba-iters", 3usize),
         train_subsample: None,
+    }
+}
+
+/// Flags that describe how to *build* an engine and therefore conflict
+/// with `--index` (the index file carries its own configuration —
+/// accepting and ignoring them would be exactly the silent degradation
+/// `Args::validate` exists to prevent).
+const BUILD_FLAGS: &[&str] = &[
+    "subspaces",
+    "codebook",
+    "window",
+    "metric",
+    "tail",
+    "level",
+    "kmeans-iters",
+    "dba-iters",
+    "nlist",
+    "coarse",
+];
+
+/// Error out when a build-shape flag is combined with `--index`.
+fn reject_build_flags_with_index(a: &Args) -> Result<()> {
+    let mut set: Vec<&str> =
+        BUILD_FLAGS.iter().copied().filter(|f| a.flags.contains_key(*f)).collect();
+    set.sort_unstable();
+    if let Some(first) = set.first() {
+        bail!(
+            "--{first} has no effect with --index: the index file carries its own \
+             configuration (drop the flag, or rebuild it with build-index)"
+        );
+    }
+    Ok(())
+}
+
+/// Open an index file and check it against the query dataset (shared
+/// by `serve --index` and `topk --index`).
+fn open_index(path: &str, tt: &TrainTest) -> Result<Engine> {
+    let engine = Engine::open(Path::new(path))?;
+    ensure!(
+        engine.pq.series_len == tt.test.len,
+        "index {path} was built for series of length {}, but dataset {} has length {}",
+        engine.pq.series_len,
+        tt.name,
+        tt.test.len
+    );
+    println!("loaded index {path} (no retraining)");
+    Ok(engine)
+}
+
+/// Coarse IVF metric from the `--coarse` flag (DTW unless `ed`).
+fn coarse_metric(a: &Args, engine: &Engine) -> CoarseMetric {
+    if a.get("coarse", "dtw") == "ed" {
+        CoarseMetric::Euclidean
+    } else {
+        CoarseMetric::Dtw { window: engine.full_window() }
     }
 }
 
@@ -87,6 +212,11 @@ fn cmd_train(a: &Args) -> Result<()> {
 fn cmd_query(a: &Args) -> Result<()> {
     let seed = a.get_parsed("seed", 7u64);
     let tt = load_dataset(&a.get("dataset", "CBF"), seed)?;
+    ensure!(
+        tt.train.is_labeled(),
+        "dataset {} is unlabeled; 1-NN classification needs labels",
+        tt.name
+    );
     let cfg = config_from_args(a);
     let mode = if a.get("mode", "asymmetric") == "symmetric" {
         PqQueryMode::Symmetric
@@ -111,6 +241,11 @@ fn cmd_query(a: &Args) -> Result<()> {
 fn cmd_cluster(a: &Args) -> Result<()> {
     let seed = a.get_parsed("seed", 7u64);
     let tt = load_dataset(&a.get("dataset", "Waveforms"), seed)?;
+    ensure!(
+        tt.test.is_labeled(),
+        "dataset {} is unlabeled; clustering evaluation needs labels",
+        tt.name
+    );
     let cfg = config_from_args(a);
     let linkage = match a.get("linkage", "complete").as_str() {
         "single" => Linkage::Single,
@@ -134,24 +269,77 @@ fn cmd_cluster(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Offline build phase of the build-once / serve-many split: train,
+/// encode, optionally build the IVF index, and persist everything as
+/// one index file that `serve --index` / `topk --index` reopen without
+/// retraining.
+fn cmd_build_index(a: &Args) -> Result<()> {
+    let seed = a.get_parsed("seed", 7u64);
+    let tt = load_dataset(&a.get("dataset", "CBF"), seed)?;
+    let cfg = config_from_args(a);
+    let out = a.get("out", "index.pqx");
+    let nlist: usize = a.get_parsed("nlist", 16usize);
+    let t0 = Instant::now();
+    let mut engine = Engine::build(&tt.train, &cfg, seed)?;
+    if nlist > 0 {
+        let metric = coarse_metric(a, &engine);
+        engine.enable_ivf(nlist, metric, seed);
+    }
+    let build_t = t0.elapsed();
+    let t0 = Instant::now();
+    engine.save(Path::new(&out))?;
+    let save_t = t0.elapsed();
+    let file_bytes = std::fs::metadata(&out)?.len();
+    let mm = engine.pq.memory_model();
+    println!("dataset     : {} (n={}, D={})", tt.name, engine.n_items, tt.train.len);
+    println!("build time  : {build_t:?} (train + encode + IVF), save {save_t:?}");
+    println!(
+        "index file  : {out} ({file_bytes} bytes = {:.2} MB on disk)",
+        file_bytes as f64 / 1024.0 / 1024.0
+    );
+    println!(
+        "memory model: {} code bits/series × {} series + {:.2} MB aux (analytic, f32)",
+        mm.code_bits_per_series,
+        engine.n_items,
+        mm.aux_bits() as f64 / 8.0 / 1024.0 / 1024.0
+    );
+    match engine.ivf.as_ref() {
+        Some(ivf) => println!("ivf         : {} coarse cells", ivf.nlist()),
+        None => println!("ivf         : none (--nlist 0)"),
+    }
+    // Cold-start proof: reopening must serve without retraining.
+    let t0 = Instant::now();
+    let _reopened = Engine::open(Path::new(&out))?;
+    println!("reopen time : {:?} (vs {build_t:?} to rebuild from scratch)", t0.elapsed());
+    Ok(())
+}
+
 fn cmd_serve(a: &Args) -> Result<()> {
     let seed = a.get_parsed("seed", 7u64);
     let tt = load_dataset(&a.get("dataset", "SpikePosition"), seed)?;
-    let cfg = config_from_args(a);
     let topk: usize = a.get_parsed("topk", 0usize); // 0 = classic 1-NN requests
     let nprobe: Option<usize> = a.get_opt("nprobe");
     let rerank: Option<usize> = a.get_opt("rerank");
-    let mut engine = Engine::build(&tt.train, &cfg, seed)?;
-    engine.set_scan_threads(a.get_parsed("scan-threads", 1usize));
-    if nprobe.is_some() {
-        let nlist = a.get_parsed("nlist", 16usize);
-        let metric = if a.get("coarse", "dtw") == "ed" {
-            CoarseMetric::Euclidean
-        } else {
-            CoarseMetric::Dtw { window: engine.full_window() }
-        };
-        engine.enable_ivf(nlist, metric, seed);
+    let mut engine = match a.flags.get("index") {
+        Some(path) => {
+            reject_build_flags_with_index(a)?;
+            open_index(path, &tt)?
+        }
+        None => {
+            let cfg = config_from_args(a);
+            let mut engine = Engine::build(&tt.train, &cfg, seed)?;
+            if nprobe.is_some() {
+                let nlist = a.get_parsed("nlist", 16usize);
+                let metric = coarse_metric(a, &engine);
+                engine.enable_ivf(nlist, metric, seed);
+            }
+            engine
+        }
+    };
+    if nprobe.is_some() && engine.ivf.is_none() {
+        bail!("--nprobe requires an IVF index (rebuild the index with --nlist > 0)");
     }
+    engine.set_scan_threads(a.get_parsed("scan-threads", 1usize));
     let engine = Arc::new(engine);
     let svc = Service::start(
         engine,
@@ -192,26 +380,106 @@ fn cmd_serve(a: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Offline top-k driver: one engine, the three serving modes side by
-/// side, with recall of the probed scan against the exhaustive one.
+/// Offline top-k driver: one engine (trained in memory or reopened
+/// from an index file), the three serving modes side by side, with
+/// recall of the probed scan against the exhaustive one. With
+/// `--index --verify`, additionally retrains an in-memory engine from
+/// the same flags and asserts the loaded index answers bit-identically
+/// (the CI smoke test's diff).
 fn cmd_topk(a: &Args) -> Result<()> {
     let seed = a.get_parsed("seed", 7u64);
     let tt = load_dataset(&a.get("dataset", "CBF"), seed)?;
     let cfg = config_from_args(a);
     let k = a.get_parsed("topk", 5usize).max(1);
-    let nlist = a.get_parsed("nlist", 16usize);
-    let mut engine = Engine::build(&tt.train, &cfg, seed)?;
-    engine.set_scan_threads(a.get_parsed("scan-threads", 1usize));
-    let metric = if a.get("coarse", "dtw") == "ed" {
-        CoarseMetric::Euclidean
-    } else {
-        CoarseMetric::Dtw { window: engine.full_window() }
+    let index_path = a.flags.get("index").cloned();
+    ensure!(
+        index_path.is_some() || !a.has("verify"),
+        "--verify compares a loaded index against a fresh engine and needs --index <path>"
+    );
+    let mut engine = match &index_path {
+        Some(path) => {
+            // With --verify the build flags are *used* (they configure
+            // the in-memory reference engine); without it they would be
+            // silently ignored, so reject them.
+            if !a.has("verify") {
+                reject_build_flags_with_index(a)?;
+            }
+            let engine = open_index(path, &tt)?;
+            ensure!(
+                engine.ivf.is_some(),
+                "index {path} has no IVF section; rebuild with `build-index --nlist > 0`"
+            );
+            engine
+        }
+        None => {
+            let mut engine = Engine::build(&tt.train, &cfg, seed)?;
+            let nlist = a.get_parsed("nlist", 16usize);
+            let metric = coarse_metric(a, &engine);
+            engine.enable_ivf(nlist, metric, seed);
+            engine
+        }
     };
-    engine.enable_ivf(nlist, metric, seed);
+    engine.set_scan_threads(a.get_parsed("scan-threads", 1usize));
     let nlist = engine.ivf.as_ref().map(|ivf| ivf.nlist()).unwrap_or(1);
     let nprobe = a.get_opt("nprobe").unwrap_or_else(|| (nlist / 4).max(1));
     let rerank = a.get_opt("rerank").unwrap_or(4 * k);
     let n_queries = a.get_parsed("queries", 30usize).min(tt.test.n_series());
+
+    if index_path.is_some() && a.has("verify") {
+        // Rebuild the engine in memory from the same dataset/config
+        // flags and diff every serving mode. Training is deterministic
+        // per seed, so the answers must be bit-identical as long as the
+        // flags match the ones `build-index` ran with.
+        let mut reference = Engine::build(&tt.train, &cfg, seed)?;
+        let nlist_flag = a.get_parsed("nlist", 16usize);
+        ensure!(nlist_flag > 0, "--verify needs --nlist matching the build (got 0)");
+        let metric = coarse_metric(a, &reference);
+        reference.enable_ivf(nlist_flag, metric, seed);
+        let ref_nlist = reference.ivf.as_ref().map(|ivf| ivf.nlist()).unwrap_or(1);
+        ensure!(
+            ref_nlist == nlist,
+            "in-memory IVF has {ref_nlist} cells but the index has {nlist} — \
+             do the flags match the ones build-index ran with?"
+        );
+        for i in 0..n_queries {
+            let q = tt.test.row(i).to_vec();
+            for req in [
+                Request::TopKQuery {
+                    series: q.clone(),
+                    k,
+                    mode: PqQueryMode::Asymmetric,
+                    nprobe: None,
+                    rerank: None,
+                },
+                Request::TopKQuery {
+                    series: q.clone(),
+                    k,
+                    mode: PqQueryMode::Asymmetric,
+                    nprobe: Some(nprobe),
+                    rerank: None,
+                },
+                Request::TopKQuery {
+                    series: q,
+                    k,
+                    mode: PqQueryMode::Asymmetric,
+                    nprobe: None,
+                    rerank: Some(rerank),
+                },
+            ] {
+                let got = engine.handle(&req);
+                let want = reference.handle(&req);
+                ensure!(
+                    got == want,
+                    "loaded index diverges from the in-memory engine on query {i}: \
+                     {got:?} vs {want:?}"
+                );
+            }
+        }
+        println!(
+            "verify: {n_queries} queries × 3 modes bit-identical between the loaded \
+             index and a freshly trained engine ✓"
+        );
+    }
 
     println!(
         "top-k serving on {} (n={}, k={k}, nlist={nlist}, nprobe={nprobe}, rerank depth {rerank})",
@@ -346,10 +614,25 @@ fn cmd_selftest(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(a: &Args) -> Result<()> {
+    if let Some(path) = a.flags.get("index") {
+        let h = pqdtw::store::read_header(Path::new(path))?;
+        println!("index    : {path}");
+        println!("format   : version {} ({} bytes on disk)", h.version, h.file_bytes);
+        println!(
+            "quantizer: M={} K={} L={} window={:?} metric={:?}",
+            h.n_subspaces, h.codebook_size, h.sub_len, h.window, h.metric
+        );
+        println!("database : {} series × {} samples", h.n_series, h.series_len);
+        match h.ivf_nlist {
+            Some(nlist) => println!("ivf      : {nlist} coarse cells"),
+            None => println!("ivf      : none (exhaustive scans only)"),
+        }
+        return Ok(());
+    }
     println!("pqdtw {} — Elastic Product Quantization for Time Series", env!("CARGO_PKG_VERSION"));
     println!("features : pjrt={}", cfg!(feature = "pjrt"));
-    println!("datasets : synthetic UCR-like suite of 16 (or UCR_ARCHIVE_DIR)");
+    println!("datasets : synthetic UCR-like suite of 16, RandomWalk[-<n>x<len>] (or UCR_ARCHIVE_DIR)");
     let dir = pqdtw::runtime::artifacts::Manifest::default_dir();
     match pqdtw::runtime::artifacts::Manifest::load(&dir) {
         Ok(m) => println!("artifacts: {} in {}", m.specs.len(), dir.display()),
@@ -359,15 +642,20 @@ fn cmd_info() -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
+    let mut args = Args::from_env();
+    if args.command.is_empty() {
+        args.command = "info".to_string();
+    }
+    args.validate(SPECS).map_err(anyhow::Error::msg)?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "query" => cmd_query(&args),
         "topk" => cmd_topk(&args),
         "cluster" => cmd_cluster(&args),
+        "build-index" => cmd_build_index(&args),
         "serve" => cmd_serve(&args),
         "selftest" => cmd_selftest(&args),
-        "info" | "" => cmd_info(),
-        other => bail!("unknown command '{other}' (train|query|topk|cluster|serve|selftest|info)"),
+        "info" => cmd_info(&args),
+        other => bail!("unknown command '{other}'"), // unreachable after validate
     }
 }

@@ -81,6 +81,23 @@ impl IvfIndex {
         self.lists.len()
     }
 
+    /// Decompose into raw parts for the on-disk store (crate-internal):
+    /// `(coarse centroids, dim, metric, inverted lists)`.
+    pub(crate) fn to_parts(&self) -> (&[f64], usize, CoarseMetric, &[Vec<usize>]) {
+        (self.coarse.as_slice(), self.dim, self.metric, self.lists.as_slice())
+    }
+
+    /// Reassemble from parts loaded from the store (crate-internal).
+    /// The store's decoder validates shapes before calling this.
+    pub(crate) fn from_parts(
+        coarse: Vec<f64>,
+        dim: usize,
+        metric: CoarseMetric,
+        lists: Vec<Vec<usize>>,
+    ) -> Self {
+        IvfIndex { coarse, dim, metric, lists }
+    }
+
     /// Occupancy of each list (diagnostics).
     pub fn list_sizes(&self) -> Vec<usize> {
         self.lists.iter().map(|l| l.len()).collect()

@@ -110,8 +110,10 @@ mod tests {
     use super::*;
 
     fn write_manifest(content: &str) -> PathBuf {
-        let dir = std::env::temp_dir().join(format!("pqdtw_manifest_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        // Each call gets its own directory: `parses_manifest` and
+        // `rejects_malformed` run concurrently in one test process and
+        // previously clobbered a shared `pqdtw_manifest_{pid}` dir.
+        let dir = crate::testutil::unique_temp_dir("manifest");
         std::fs::write(dir.join("manifest.tsv"), content).unwrap();
         dir
     }

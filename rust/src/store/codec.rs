@@ -1,0 +1,350 @@
+//! Encoders/decoders for the serving-state types over the byte-layout
+//! primitives in [`super::format`].
+//!
+//! Every decoder validates shapes and value ranges before constructing
+//! state, so a tampered or corrupt file fails with an `Err` at load
+//! time instead of panicking (or overflowing) deep inside a query hot
+//! loop later. Notably: centroid/LUT/envelope buffer sizes must agree
+//! with `M`/`K`/`L`, code ids must be `< K`, IVF lists must be an exact
+//! partition of the database, and warping windows are bounded by the
+//! vector length they apply to (an unbounded window would overflow the
+//! `i + w` band arithmetic in the DTW kernels).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::core::series::Dataset;
+use crate::distance::envelope::Envelope;
+use crate::nn::ivf::{CoarseMetric, IvfIndex};
+use crate::pq::codebook::{Codebook, PqMetric};
+use crate::pq::encode::EncodeStats;
+use crate::pq::prealign::Segmenter;
+use crate::pq::quantizer::{EncodedDataset, PqConfig, PrealignConfig, ProductQuantizer};
+
+use super::format::{ByteReader, ByteWriter};
+
+/// On-disk tag of a [`PqMetric`].
+pub(crate) fn metric_tag(m: PqMetric) -> u8 {
+    match m {
+        PqMetric::Dtw => 0,
+        PqMetric::Euclidean => 1,
+    }
+}
+
+/// [`PqMetric`] from its on-disk tag.
+pub(crate) fn metric_from(tag: u8) -> Result<PqMetric> {
+    match tag {
+        0 => Ok(PqMetric::Dtw),
+        1 => Ok(PqMetric::Euclidean),
+        other => bail!("store: unknown metric tag {other}"),
+    }
+}
+
+/// Serialize a trained quantizer: config, segmenter, series length and
+/// the codebook with its precomputed envelopes and symmetric LUT.
+pub fn put_quantizer(w: &mut ByteWriter, pq: &ProductQuantizer) {
+    let cfg = &pq.config;
+    w.usize(cfg.n_subspaces);
+    w.usize(cfg.codebook_size);
+    w.f64(cfg.window_frac);
+    w.u8(metric_tag(cfg.metric));
+    match cfg.prealign {
+        Some(p) => {
+            w.u8(1);
+            w.usize(p.level);
+            w.f64(p.tail_frac);
+        }
+        None => w.u8(0),
+    }
+    w.usize(cfg.kmeans_iters);
+    w.usize(cfg.dba_iters);
+    w.opt_usize(cfg.train_subsample);
+    w.usize(pq.segmenter.n_subspaces);
+    w.usize(pq.segmenter.level);
+    w.usize(pq.segmenter.tail);
+    w.usize(pq.series_len);
+    let cb = &pq.codebook;
+    w.usize(cb.n_subspaces);
+    w.usize(cb.k);
+    w.usize(cb.sub_len);
+    w.opt_usize(cb.window);
+    w.u8(metric_tag(cb.metric));
+    w.vec_f64(&cb.centroids);
+    w.usize(cb.envelopes.len());
+    for e in &cb.envelopes {
+        w.vec_f64(&e.upper);
+        w.vec_f64(&e.lower);
+    }
+    w.vec_f64(&cb.lut_sq);
+}
+
+/// Deserialize and validate a quantizer section.
+pub fn get_quantizer(payload: &[u8]) -> Result<ProductQuantizer> {
+    let mut r = ByteReader::new(payload);
+    let n_subspaces = r.usize()?;
+    let codebook_size = r.usize()?;
+    let window_frac = r.f64()?;
+    let metric = metric_from(r.u8()?)?;
+    let prealign = match r.u8()? {
+        0 => None,
+        1 => Some(PrealignConfig { level: r.usize()?, tail_frac: r.f64()? }),
+        other => bail!("store: bad prealign flag {other}"),
+    };
+    let kmeans_iters = r.usize()?;
+    let dba_iters = r.usize()?;
+    let train_subsample = r.opt_usize()?;
+    let config = PqConfig {
+        n_subspaces,
+        codebook_size,
+        window_frac,
+        metric,
+        prealign,
+        kmeans_iters,
+        dba_iters,
+        train_subsample,
+    };
+    let segmenter = Segmenter {
+        n_subspaces: r.usize()?,
+        level: r.usize()?,
+        tail: r.usize()?,
+    };
+    let series_len = r.usize()?;
+    let m = r.usize()?;
+    let k = r.usize()?;
+    let sub_len = r.usize()?;
+    let window = r.opt_usize()?;
+    let cb_metric = metric_from(r.u8()?)?;
+    let centroids = r.vec_f64()?;
+    let n_env = r.usize()?;
+    // Each envelope holds at least its two length prefixes, so any
+    // count claiming more envelopes than the remaining bytes could
+    // possibly encode is corrupt — reject before reserving capacity.
+    ensure!(
+        n_env.saturating_mul(16) <= r.remaining(),
+        "store: envelope count {n_env} exceeds remaining section bytes"
+    );
+    let mut envelopes = Vec::with_capacity(n_env);
+    for _ in 0..n_env {
+        let upper = r.vec_f64()?;
+        let lower = r.vec_f64()?;
+        ensure!(
+            upper.len() == sub_len && lower.len() == sub_len,
+            "store: envelope length != L = {sub_len}"
+        );
+        envelopes.push(Envelope { upper, lower });
+    }
+    let lut_sq = r.vec_f64()?;
+    ensure!(r.is_exhausted(), "store: trailing bytes in quantizer section");
+
+    ensure!(
+        n_subspaces >= 1 && m == n_subspaces && segmenter.n_subspaces == n_subspaces,
+        "store: inconsistent subspace counts (config {n_subspaces}, codebook {m}, segmenter {})",
+        segmenter.n_subspaces
+    );
+    ensure!(k >= 1 && sub_len >= 1, "store: degenerate codebook (K={k}, L={sub_len})");
+    let mk = m.checked_mul(k).context("store: M*K overflows")?;
+    let mkl = mk.checked_mul(sub_len).context("store: M*K*L overflows")?;
+    ensure!(
+        centroids.len() == mkl,
+        "store: centroid buffer holds {} values, expected M*K*L = {mkl}",
+        centroids.len()
+    );
+    let mkk = mk.checked_mul(k).context("store: M*K*K overflows")?;
+    ensure!(
+        lut_sq.len() == mkk,
+        "store: LUT buffer holds {} values, expected M*K*K = {mkk}",
+        lut_sq.len()
+    );
+    match cb_metric {
+        PqMetric::Dtw => ensure!(
+            envelopes.len() == mk,
+            "store: expected {mk} envelopes under DTW, got {}",
+            envelopes.len()
+        ),
+        PqMetric::Euclidean => {
+            ensure!(envelopes.is_empty(), "store: ED codebook carries envelopes")
+        }
+    }
+    if let Some(w) = window {
+        ensure!(w <= sub_len, "store: quantization window {w} exceeds L = {sub_len}");
+    }
+    ensure!(
+        series_len >= 2 * n_subspaces,
+        "store: series length {series_len} too short for {n_subspaces} subspaces"
+    );
+    // MODWT level and tail feed `segment()` on the query path: an
+    // out-of-range level would panic (or spin) inside `modwt_scale`,
+    // and an absurd tail would overflow the sub-length arithmetic —
+    // reject both here instead. (Any legitimately trained segmenter
+    // has 1 <= level <= 64; `Segmenter::fixed` uses level 1.)
+    ensure!(
+        (1..=64).contains(&segmenter.level),
+        "store: MODWT level {} out of range [1, 64]",
+        segmenter.level
+    );
+    let want_sub_len = series_len
+        .div_ceil(n_subspaces)
+        .checked_add(segmenter.tail)
+        .context("store: segmenter tail overflows the sub-length")?;
+    ensure!(
+        want_sub_len == sub_len,
+        "store: segmenter sub-length {want_sub_len} disagrees with codebook L = {sub_len}"
+    );
+
+    let codebook = Codebook {
+        n_subspaces: m,
+        k,
+        sub_len,
+        window,
+        metric: cb_metric,
+        centroids,
+        envelopes,
+        lut_sq,
+    };
+    Ok(ProductQuantizer { config, segmenter, codebook, series_len })
+}
+
+/// Serialize an encoded database: codes, self bounds, labels, counters.
+pub fn put_encoded(w: &mut ByteWriter, enc: &EncodedDataset) {
+    w.usize(enc.n_subspaces);
+    w.vec_u16(&enc.codes);
+    w.vec_f64(&enc.lb_self_sq);
+    w.vec_i64(&enc.labels);
+    w.usize(enc.stats.pruned_kim);
+    w.usize(enc.stats.pruned_keogh);
+    w.usize(enc.stats.dtw_evals);
+    w.usize(enc.stats.dtw_abandoned);
+}
+
+/// Deserialize and validate an encoded-database section against the
+/// already-loaded quantizer.
+pub fn get_encoded(payload: &[u8], pq: &ProductQuantizer) -> Result<EncodedDataset> {
+    let mut r = ByteReader::new(payload);
+    let m = r.usize()?;
+    let codes = r.vec_u16()?;
+    let lb_self_sq = r.vec_f64()?;
+    let labels = r.vec_i64()?;
+    let stats = EncodeStats {
+        pruned_kim: r.usize()?,
+        pruned_keogh: r.usize()?,
+        dtw_evals: r.usize()?,
+        dtw_abandoned: r.usize()?,
+    };
+    ensure!(r.is_exhausted(), "store: trailing bytes in encoded section");
+    ensure!(
+        m == pq.config.n_subspaces,
+        "store: encoded M = {m} != quantizer M = {}",
+        pq.config.n_subspaces
+    );
+    ensure!(codes.len() % m == 0, "store: ragged code buffer ({} codes, M = {m})", codes.len());
+    let n = codes.len() / m;
+    ensure!(
+        lb_self_sq.len() == codes.len(),
+        "store: self-bound buffer ({}) disagrees with codes ({})",
+        lb_self_sq.len(),
+        codes.len()
+    );
+    ensure!(
+        labels.is_empty() || labels.len() == n,
+        "store: label count {} != series count {n}",
+        labels.len()
+    );
+    let k = pq.codebook.k;
+    ensure!(
+        codes.iter().all(|&c| (c as usize) < k),
+        "store: code id out of range (K = {k})"
+    );
+    Ok(EncodedDataset { codes, lb_self_sq, n_subspaces: m, labels, stats })
+}
+
+/// Serialize a raw dataset (retained for exact DTW re-ranking).
+pub fn put_dataset(w: &mut ByteWriter, ds: &Dataset) {
+    w.usize(ds.len);
+    w.vec_f64(&ds.values);
+    w.vec_i64(&ds.labels);
+    w.string(&ds.name);
+}
+
+/// Deserialize and validate a raw-dataset section.
+pub fn get_dataset(payload: &[u8]) -> Result<Dataset> {
+    let mut r = ByteReader::new(payload);
+    let len = r.usize()?;
+    let values = r.vec_f64()?;
+    let labels = r.vec_i64()?;
+    let name = r.string()?;
+    ensure!(r.is_exhausted(), "store: trailing bytes in raw-dataset section");
+    ensure!(len >= 1, "store: zero series length in raw dataset");
+    ensure!(
+        values.len() % len == 0,
+        "store: ragged dataset buffer ({} values, length {len})",
+        values.len()
+    );
+    let n = values.len() / len;
+    ensure!(
+        labels.is_empty() || labels.len() == n,
+        "store: dataset label count {} != series count {n}",
+        labels.len()
+    );
+    Ok(Dataset { values, len, labels, name })
+}
+
+/// Serialize an IVF index: coarse centroids, metric, inverted lists.
+pub fn put_ivf(w: &mut ByteWriter, ivf: &IvfIndex) {
+    let (coarse, dim, metric, lists) = ivf.to_parts();
+    w.usize(dim);
+    match metric {
+        CoarseMetric::Dtw { window } => {
+            w.u8(0);
+            w.opt_usize(window);
+        }
+        CoarseMetric::Euclidean => w.u8(1),
+    }
+    w.usize(lists.len());
+    for l in lists {
+        w.vec_usize(l);
+    }
+    w.vec_f64(coarse);
+}
+
+/// Deserialize and validate an IVF section: the lists must be an exact
+/// partition of the `n_items`-item database and the coarse geometry
+/// must match the series length.
+pub fn get_ivf(payload: &[u8], series_len: usize, n_items: usize) -> Result<IvfIndex> {
+    let mut r = ByteReader::new(payload);
+    let dim = r.usize()?;
+    let metric = match r.u8()? {
+        0 => CoarseMetric::Dtw { window: r.opt_usize()? },
+        1 => CoarseMetric::Euclidean,
+        other => bail!("store: unknown coarse metric tag {other}"),
+    };
+    if let CoarseMetric::Dtw { window: Some(w) } = metric {
+        ensure!(w <= dim, "store: coarse DTW window {w} exceeds series length {dim}");
+    }
+    let nlist = r.usize()?;
+    ensure!(nlist >= 1, "store: IVF index with zero lists");
+    ensure!(nlist <= n_items, "store: nlist {nlist} exceeds database size {n_items}");
+    let mut lists = Vec::with_capacity(nlist);
+    let mut seen = vec![false; n_items];
+    for _ in 0..nlist {
+        let l = r.vec_usize()?;
+        for &id in &l {
+            ensure!(id < n_items, "store: IVF member id {id} out of range ({n_items} items)");
+            ensure!(!seen[id], "store: IVF lists assign item {id} twice");
+            seen[id] = true;
+        }
+        lists.push(l);
+    }
+    let coarse = r.vec_f64()?;
+    ensure!(r.is_exhausted(), "store: trailing bytes in IVF section");
+    ensure!(dim == series_len, "store: IVF dim {dim} != series length {series_len}");
+    let want = nlist.checked_mul(dim).context("store: nlist*dim overflows")?;
+    ensure!(
+        coarse.len() == want,
+        "store: coarse buffer holds {} values, expected nlist*dim = {want}",
+        coarse.len()
+    );
+    ensure!(
+        seen.iter().all(|&s| s),
+        "store: IVF lists do not cover every database item"
+    );
+    Ok(IvfIndex::from_parts(coarse, dim, metric, lists))
+}

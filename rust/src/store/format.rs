@@ -1,0 +1,371 @@
+//! Low-level byte-layout primitives for the on-disk index format.
+//!
+//! Everything is explicit little-endian, hand-rolled over `std` — the
+//! offline registry carries no serialization crate and the format must
+//! not depend on one. Reading is slice-based and bounds-checked: every
+//! length prefix is validated against the bytes actually present
+//! *before* any allocation, so truncated or hostile inputs return
+//! `Err` instead of panicking or triggering a huge allocation.
+
+use anyhow::{bail, Context, Result};
+
+/// Magic bytes at offset 0 of every index file.
+pub const MAGIC: [u8; 8] = *b"PQDTWIDX";
+
+/// Current format version (see `docs/index-format.md` for the bump
+/// policy: any layout change increments this and readers reject files
+/// they were not built to parse).
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit hash — the file's dependency-free corruption check.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only little-endian byte sink.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Consume the writer, returning its buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Raw bytes, verbatim.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// One byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// `u32`, little-endian.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `u64`, little-endian.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize`, stored as a little-endian `u64`.
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// `f64` as its IEEE-754 bit pattern, little-endian (bit-exact
+    /// round-trip, NaN payloads included).
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `Option<usize>` as a presence byte plus the value.
+    pub fn opt_usize(&mut self, v: Option<usize>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.usize(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    /// Length-prefixed `f64` buffer.
+    pub fn vec_f64(&mut self, v: &[f64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    /// Length-prefixed `u16` buffer.
+    pub fn vec_u16(&mut self, v: &[u16]) {
+        self.usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed `i64` buffer.
+    pub fn vec_i64(&mut self, v: &[i64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed `usize` buffer (elements as `u64`).
+    pub fn vec_usize(&mut self, v: &[usize]) {
+        self.usize(v.len());
+        for &x in v {
+            self.usize(x);
+        }
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn string(&mut self, s: &str) {
+        self.usize(s.len());
+        self.bytes(s.as_bytes());
+    }
+
+    /// Append `payload` as a tagged, length-prefixed section.
+    pub fn section(&mut self, tag: u8, payload: &[u8]) {
+        self.u8(tag);
+        self.usize(payload.len());
+        self.bytes(payload);
+    }
+}
+
+/// Bounds-checked little-endian slice reader. A failed read consumes
+/// nothing, and no read ever reaches past the slice.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Reader over `buf`, positioned at its start.
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when every byte has been consumed.
+    pub fn is_exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Borrow the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "store: need {n} bytes but only {} remain (truncated file?)",
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// One byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// `u32`, little-endian.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// `u64`, little-endian.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// `f64` from its little-endian bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// `usize` from a little-endian `u64`.
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).context("store: stored value exceeds usize")
+    }
+
+    /// `Option<usize>` from a presence byte plus the value.
+    pub fn opt_usize(&mut self) -> Result<Option<usize>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.usize()?)),
+            other => bail!("store: bad option flag {other}"),
+        }
+    }
+
+    /// Element count for `elem_size`-byte items, validated against the
+    /// bytes actually remaining — a hostile length prefix can therefore
+    /// never trigger a huge allocation.
+    fn checked_count(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.usize()?;
+        match n.checked_mul(elem_size) {
+            Some(total) if total <= self.remaining() => Ok(n),
+            _ => bail!(
+                "store: section claims {n} elements of {elem_size} B but only {} bytes remain",
+                self.remaining()
+            ),
+        }
+    }
+
+    /// Length-prefixed `f64` buffer.
+    pub fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let n = self.checked_count(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    /// Length-prefixed `u16` buffer.
+    pub fn vec_u16(&mut self) -> Result<Vec<u16>> {
+        let n = self.checked_count(2)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(u16::from_le_bytes(self.take(2)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+
+    /// Length-prefixed `i64` buffer.
+    pub fn vec_i64(&mut self) -> Result<Vec<i64>> {
+        let n = self.checked_count(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(i64::from_le_bytes(self.take(8)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+
+    /// Length-prefixed `usize` buffer (elements as `u64`).
+    pub fn vec_usize(&mut self) -> Result<Vec<usize>> {
+        let n = self.checked_count(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.usize()?);
+        }
+        Ok(v)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn string(&mut self) -> Result<String> {
+        let n = self.checked_count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("store: invalid UTF-8 in string")
+    }
+
+    /// Read one section header, returning `(tag, payload)`.
+    pub fn section(&mut self) -> Result<(u8, &'a [u8])> {
+        let tag = self.u8()?;
+        let len = self.checked_count(1)?;
+        let payload = self.take(len)?;
+        Ok((tag, payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_roundtrip_is_bit_exact() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xdead_beef);
+        w.u64(u64::MAX - 1);
+        w.f64(-0.0);
+        w.f64(f64::NAN);
+        w.opt_usize(None);
+        w.opt_usize(Some(42));
+        w.vec_f64(&[1.5, -2.5]);
+        w.vec_u16(&[1, 65535]);
+        w.vec_i64(&[-9, 9]);
+        w.vec_usize(&[3, 1, 2]);
+        w.string("héllo");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.f64().unwrap().is_nan());
+        assert_eq!(r.opt_usize().unwrap(), None);
+        assert_eq!(r.opt_usize().unwrap(), Some(42));
+        assert_eq!(r.vec_f64().unwrap(), vec![1.5, -2.5]);
+        assert_eq!(r.vec_u16().unwrap(), vec![1, 65535]);
+        assert_eq!(r.vec_i64().unwrap(), vec![-9, 9]);
+        assert_eq!(r.vec_usize().unwrap(), vec![3, 1, 2]);
+        assert_eq!(r.string().unwrap(), "héllo");
+        assert!(r.is_exhausted());
+    }
+
+    #[test]
+    fn oversized_count_is_rejected_without_allocating() {
+        let mut w = ByteWriter::new();
+        w.u64(u64::MAX); // claims u64::MAX 8-byte elements
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).vec_f64().is_err());
+        let mut w = ByteWriter::new();
+        w.u64(1 << 60); // plausible-looking but larger than the file
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).vec_usize().is_err());
+    }
+
+    #[test]
+    fn short_reads_error_and_consume_nothing() {
+        let mut r = ByteReader::new(&[1, 2, 3]);
+        assert!(r.u64().is_err());
+        assert_eq!(r.remaining(), 3);
+        assert_eq!(r.u8().unwrap(), 1);
+    }
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        assert_eq!(fnv1a(b"hello"), fnv1a(b"hello"));
+        assert_ne!(fnv1a(b"hello"), fnv1a(b"hellp"));
+        // Known FNV-1a 64 offset basis: hash of the empty input.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn sections_carry_tag_and_payload() {
+        let mut w = ByteWriter::new();
+        w.section(9, &[1, 2, 3]);
+        w.section(10, &[]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let (t, p) = r.section().unwrap();
+        assert_eq!((t, p), (9, &[1u8, 2, 3][..]));
+        let (t, p) = r.section().unwrap();
+        assert_eq!(t, 10);
+        assert!(p.is_empty());
+        assert!(r.is_exhausted());
+    }
+
+    #[test]
+    fn invalid_option_flag_errors() {
+        let mut r = ByteReader::new(&[2]);
+        assert!(r.opt_usize().is_err());
+    }
+}

@@ -1,0 +1,430 @@
+//! `store` — the versioned on-disk index format: build once, serve many.
+//!
+//! Until this subsystem existed, every serving process re-trained
+//! codebooks, re-encoded the database and rebuilt the IVF index from
+//! scratch, so cold-start cost scaled with *training* rather than with
+//! *load*. The store persists the full serving state — the trained
+//! [`ProductQuantizer`] (codebooks, centroid envelopes, precomputed
+//! elastic LUTs, config), the [`EncodedDataset`] (codes + self lower
+//! bounds), the optional [`IvfIndex`] (coarse centroids + posting lists
+//! + metric), and the raw [`Dataset`] needed for exact DTW re-ranking —
+//! as one self-describing binary file, and reconstructs an engine that
+//! answers queries **bit-identically** to the one that was saved.
+//!
+//! ## File layout (version 1)
+//!
+//! ```text
+//! magic    8 B   "PQDTWIDX"
+//! version  4 B   u32 LE
+//! sections       tag u8 · length u64 LE · payload
+//!                (header, quantizer, encoded, raw, [ivf]) in order
+//! checksum 8 B   FNV-1a 64 of every preceding byte, u64 LE
+//! ```
+//!
+//! Everything is explicit little-endian and hand-rolled over `std` —
+//! no serialization dependency. `f64` values round-trip via their IEEE
+//! bit patterns, which is what makes reloaded answers bit-identical.
+//! Corrupt inputs (truncation, bad magic, wrong version, flipped bits,
+//! hostile section lengths) are rejected with `anyhow` errors before
+//! any state is constructed — never a panic, never an unbounded
+//! allocation. See `docs/index-format.md` for the full specification
+//! and the version-bump policy.
+
+pub mod codec;
+pub mod format;
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::core::series::Dataset;
+use crate::nn::ivf::IvfIndex;
+use crate::pq::codebook::PqMetric;
+use crate::pq::quantizer::{EncodedDataset, ProductQuantizer};
+
+use self::format::{fnv1a, ByteReader, ByteWriter, MAGIC, VERSION};
+
+/// Section tags, in required file order.
+const SEC_HEADER: u8 = 1;
+const SEC_QUANTIZER: u8 = 2;
+const SEC_ENCODED: u8 = 3;
+const SEC_RAW: u8 = 4;
+const SEC_IVF: u8 = 5;
+
+/// The full serving state reconstructed from disk.
+pub struct StoredIndex {
+    /// Trained product quantizer.
+    pub pq: ProductQuantizer,
+    /// Encoded database.
+    pub encoded: EncodedDataset,
+    /// Raw database (exact DTW re-ranking).
+    pub raw: Dataset,
+    /// Optional inverted-file index.
+    pub ivf: Option<IvfIndex>,
+}
+
+/// Summary of an index file — the `info --index` view, readable without
+/// reconstructing the index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreHeader {
+    /// Format version.
+    pub version: u32,
+    /// Number of subspaces `M`.
+    pub n_subspaces: usize,
+    /// Codebook size `K` (post-clamping, i.e. the trained value).
+    pub codebook_size: usize,
+    /// Subspace vector length `L`.
+    pub sub_len: usize,
+    /// Quantization warping window (`None` = unconstrained).
+    pub window: Option<usize>,
+    /// Quantizer metric.
+    pub metric: PqMetric,
+    /// Series length the quantizer was trained for.
+    pub series_len: usize,
+    /// Number of encoded database series.
+    pub n_series: usize,
+    /// IVF coarse-cell count, when an IVF section is present.
+    pub ivf_nlist: Option<usize>,
+    /// Total file size in bytes.
+    pub file_bytes: u64,
+}
+
+fn put_header(w: &mut ByteWriter, pq: &ProductQuantizer, n_series: usize, ivf: Option<&IvfIndex>) {
+    w.usize(pq.config.n_subspaces);
+    w.usize(pq.codebook.k);
+    w.usize(pq.codebook.sub_len);
+    w.opt_usize(pq.codebook.window);
+    w.u8(codec::metric_tag(pq.codebook.metric));
+    w.usize(pq.series_len);
+    w.usize(n_series);
+    w.opt_usize(ivf.map(|i| i.nlist()));
+}
+
+fn get_header(payload: &[u8], version: u32, file_bytes: u64) -> Result<StoreHeader> {
+    let mut r = ByteReader::new(payload);
+    let h = StoreHeader {
+        version,
+        n_subspaces: r.usize()?,
+        codebook_size: r.usize()?,
+        sub_len: r.usize()?,
+        window: r.opt_usize()?,
+        metric: codec::metric_from(r.u8()?)?,
+        series_len: r.usize()?,
+        n_series: r.usize()?,
+        ivf_nlist: r.opt_usize()?,
+        file_bytes,
+    };
+    ensure!(r.is_exhausted(), "store: trailing bytes in header section");
+    Ok(h)
+}
+
+/// Serialize the full serving state to the version-1 byte format.
+pub fn encode_index(
+    pq: &ProductQuantizer,
+    encoded: &EncodedDataset,
+    raw: &Dataset,
+    ivf: Option<&IvfIndex>,
+) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.bytes(&MAGIC);
+    w.u32(VERSION);
+    let mut s = ByteWriter::new();
+    put_header(&mut s, pq, encoded.n(), ivf);
+    w.section(SEC_HEADER, &s.into_bytes());
+    let mut s = ByteWriter::new();
+    codec::put_quantizer(&mut s, pq);
+    w.section(SEC_QUANTIZER, &s.into_bytes());
+    let mut s = ByteWriter::new();
+    codec::put_encoded(&mut s, encoded);
+    w.section(SEC_ENCODED, &s.into_bytes());
+    let mut s = ByteWriter::new();
+    codec::put_dataset(&mut s, raw);
+    w.section(SEC_RAW, &s.into_bytes());
+    if let Some(ivf) = ivf {
+        let mut s = ByteWriter::new();
+        codec::put_ivf(&mut s, ivf);
+        w.section(SEC_IVF, &s.into_bytes());
+    }
+    let mut buf = w.into_bytes();
+    let sum = fnv1a(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+/// Validate framing — size, magic, version, checksum — and return a
+/// reader positioned at the first section.
+fn checked_body(bytes: &[u8]) -> Result<ByteReader<'_>> {
+    const MIN: usize = 8 + 4 + 8; // magic + version + checksum
+    ensure!(
+        bytes.len() >= MIN,
+        "store: file of {} bytes is too small to be a pqdtw index",
+        bytes.len()
+    );
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let mut r = ByteReader::new(body);
+    let magic = r.take(8)?;
+    ensure!(magic == &MAGIC[..], "store: bad magic {magic:02x?} (not a pqdtw index)");
+    let version = r.u32()?;
+    ensure!(
+        version == VERSION,
+        "store: unsupported format version {version} (this build reads version {VERSION})"
+    );
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let computed = fnv1a(body);
+    ensure!(
+        computed == stored,
+        "store: checksum mismatch ({stored:016x} on disk, {computed:016x} computed)"
+    );
+    Ok(r)
+}
+
+/// Deserialize and fully validate an index from its byte form.
+pub fn decode_index(bytes: &[u8]) -> Result<StoredIndex> {
+    let mut r = checked_body(bytes)?;
+    let (tag, payload) = r.section()?;
+    ensure!(tag == SEC_HEADER, "store: expected header section, found tag {tag}");
+    let header = get_header(payload, VERSION, bytes.len() as u64)?;
+    let (tag, payload) = r.section()?;
+    ensure!(tag == SEC_QUANTIZER, "store: expected quantizer section, found tag {tag}");
+    let pq = codec::get_quantizer(payload)?;
+    let (tag, payload) = r.section()?;
+    ensure!(tag == SEC_ENCODED, "store: expected encoded section, found tag {tag}");
+    let encoded = codec::get_encoded(payload, &pq)?;
+    let (tag, payload) = r.section()?;
+    ensure!(tag == SEC_RAW, "store: expected raw-dataset section, found tag {tag}");
+    let raw = codec::get_dataset(payload)?;
+    ensure!(
+        raw.len == pq.series_len,
+        "store: raw series length {} != quantizer length {}",
+        raw.len,
+        pq.series_len
+    );
+    ensure!(
+        raw.n_series() == encoded.n(),
+        "store: raw count {} != encoded count {}",
+        raw.n_series(),
+        encoded.n()
+    );
+    let ivf = if r.is_exhausted() {
+        None
+    } else {
+        let (tag, payload) = r.section()?;
+        ensure!(tag == SEC_IVF, "store: expected IVF section, found tag {tag}");
+        Some(codec::get_ivf(payload, pq.series_len, encoded.n())?)
+    };
+    ensure!(r.is_exhausted(), "store: trailing bytes after final section");
+    ensure!(
+        header.n_subspaces == pq.config.n_subspaces
+            && header.codebook_size == pq.codebook.k
+            && header.sub_len == pq.codebook.sub_len
+            && header.window == pq.codebook.window
+            && header.metric == pq.codebook.metric
+            && header.series_len == pq.series_len
+            && header.n_series == encoded.n()
+            && header.ivf_nlist == ivf.as_ref().map(|i| i.nlist()),
+        "store: header summary disagrees with section contents"
+    );
+    Ok(StoredIndex { pq, encoded, raw, ivf })
+}
+
+/// Write the full serving state to `path`, atomically: the bytes go to
+/// a sibling `<path>.tmp` first and are renamed into place, so an
+/// interrupted save can never destroy a previously good index (the
+/// index file is the long-lived artifact of the build-once /
+/// serve-many split).
+pub fn save_index(
+    path: &Path,
+    pq: &ProductQuantizer,
+    encoded: &EncodedDataset,
+    raw: &Dataset,
+    ivf: Option<&IvfIndex>,
+) -> Result<()> {
+    let bytes = encode_index(pq, encoded, raw, ivf);
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("store: writing index to {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("store: moving {} into place", tmp.display()))
+}
+
+/// Read and fully validate the index at `path`.
+pub fn load_index(path: &Path) -> Result<StoredIndex> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("store: reading index from {}", path.display()))?;
+    decode_index(&bytes).with_context(|| format!("store: decoding {}", path.display()))
+}
+
+/// Read only the summary header of the index at `path` (checksum still
+/// verified — a corrupt file must not present a plausible header).
+pub fn read_header(path: &Path) -> Result<StoreHeader> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("store: reading index from {}", path.display()))?;
+    let mut r = checked_body(&bytes)?;
+    let (tag, payload) = r.section()?;
+    ensure!(tag == SEC_HEADER, "store: expected header section, found tag {tag}");
+    get_header(payload, VERSION, bytes.len() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::random_walk::RandomWalks;
+    use crate::nn::ivf::CoarseMetric;
+    use crate::pq::quantizer::PqConfig;
+
+    fn tiny_state() -> (ProductQuantizer, EncodedDataset, Dataset, IvfIndex) {
+        let db = RandomWalks::new(17).generate(12, 24);
+        let cfg = PqConfig {
+            n_subspaces: 3,
+            codebook_size: 4,
+            window_frac: 0.3,
+            kmeans_iters: 2,
+            dba_iters: 1,
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&db, &cfg, 7).unwrap();
+        let enc = pq.encode_dataset(&db);
+        let ivf = IvfIndex::build(&db, 3, CoarseMetric::Euclidean, 5);
+        (pq, enc, db, ivf)
+    }
+
+    fn tiny_bytes() -> Vec<u8> {
+        let (pq, enc, db, ivf) = tiny_state();
+        encode_index(&pq, &enc, &db, Some(&ivf))
+    }
+
+    fn restamp_checksum(bytes: &mut [u8]) {
+        let n = bytes.len() - 8;
+        let sum = fnv1a(&bytes[..n]);
+        bytes[n..].copy_from_slice(&sum.to_le_bytes());
+    }
+
+    #[test]
+    fn roundtrip_reconstructs_state_bit_exactly() {
+        let (pq, enc, db, ivf) = tiny_state();
+        let bytes = encode_index(&pq, &enc, &db, Some(&ivf));
+        let idx = decode_index(&bytes).unwrap();
+        assert_eq!(idx.pq.config, pq.config);
+        assert_eq!(idx.pq.segmenter, pq.segmenter);
+        assert_eq!(idx.pq.series_len, pq.series_len);
+        assert_eq!(idx.pq.codebook.centroids, pq.codebook.centroids);
+        assert_eq!(idx.pq.codebook.envelopes, pq.codebook.envelopes);
+        assert_eq!(idx.pq.codebook.lut_sq, pq.codebook.lut_sq);
+        assert_eq!(idx.pq.codebook.window, pq.codebook.window);
+        assert_eq!(idx.encoded.codes, enc.codes);
+        assert_eq!(idx.encoded.lb_self_sq, enc.lb_self_sq);
+        assert_eq!(idx.encoded.labels, enc.labels);
+        assert_eq!(idx.encoded.stats, enc.stats);
+        assert_eq!(idx.raw.values, db.values);
+        assert_eq!(idx.raw.len, db.len);
+        assert_eq!(idx.raw.name, db.name);
+        let r = idx.ivf.expect("IVF section present");
+        assert_eq!(r.nlist(), ivf.nlist());
+        assert_eq!(r.list_sizes(), ivf.list_sizes());
+    }
+
+    #[test]
+    fn roundtrip_without_ivf() {
+        let (pq, enc, db, _) = tiny_state();
+        let bytes = encode_index(&pq, &enc, &db, None);
+        let idx = decode_index(&bytes).unwrap();
+        assert!(idx.ivf.is_none());
+    }
+
+    #[test]
+    fn header_summarizes_index_file() {
+        let (pq, enc, db, ivf) = tiny_state();
+        let bytes = encode_index(&pq, &enc, &db, Some(&ivf));
+        let dir = crate::testutil::unique_temp_dir("store_header");
+        let path = dir.join("idx.pqx");
+        std::fs::write(&path, &bytes).unwrap();
+        let h = read_header(&path).unwrap();
+        assert_eq!(h.version, VERSION);
+        assert_eq!(h.n_subspaces, 3);
+        assert_eq!(h.codebook_size, 4);
+        assert_eq!(h.sub_len, pq.codebook.sub_len);
+        assert_eq!(h.window, pq.codebook.window);
+        assert_eq!(h.series_len, 24);
+        assert_eq!(h.n_series, 12);
+        assert_eq!(h.ivf_nlist, Some(ivf.nlist()));
+        assert_eq!(h.file_bytes, bytes.len() as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_inputs_error_without_panicking() {
+        let good = tiny_bytes();
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xff;
+        restamp_checksum(&mut bad_magic);
+
+        // Re-stamp the checksum so the *version* check fires, not the
+        // checksum check.
+        let mut wrong_version = good.clone();
+        wrong_version[8..12].copy_from_slice(&999u32.to_le_bytes());
+        restamp_checksum(&mut wrong_version);
+
+        let mut flipped_checksum = good.clone();
+        let last = flipped_checksum.len() - 1;
+        flipped_checksum[last] ^= 0x01;
+
+        // First section's length prefix lives at bytes [13, 21): claim
+        // an absurd section length — must be rejected without a huge
+        // allocation.
+        let mut oversized = good.clone();
+        oversized[13..21].copy_from_slice(&u64::MAX.to_le_bytes());
+        restamp_checksum(&mut oversized);
+
+        let cases: Vec<(&str, Vec<u8>)> = vec![
+            ("empty", Vec::new()),
+            ("below minimum size", good[..10].to_vec()),
+            ("truncated to half", good[..good.len() / 2].to_vec()),
+            ("truncated by one byte", good[..good.len() - 1].to_vec()),
+            ("bad magic", bad_magic),
+            ("wrong version", wrong_version),
+            ("flipped checksum byte", flipped_checksum),
+            ("oversized section length", oversized),
+        ];
+        for (name, bytes) in cases {
+            assert!(decode_index(&bytes).is_err(), "case '{name}' must fail");
+        }
+    }
+
+    #[test]
+    fn wrong_version_error_names_the_version() {
+        let mut bytes = tiny_bytes();
+        bytes[8..12].copy_from_slice(&7u32.to_le_bytes());
+        restamp_checksum(&mut bytes);
+        let err = decode_index(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version 7"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn every_prefix_truncation_errors() {
+        let good = tiny_bytes();
+        for n in 0..good.len() {
+            assert!(decode_index(&good[..n]).is_err(), "prefix of {n} bytes must fail");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_errors() {
+        // The checksum covers the body and the trailing checksum bytes
+        // protect themselves: any single-byte corruption must be caught.
+        let good = tiny_bytes();
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x40;
+            assert!(decode_index(&bad).is_err(), "flip at byte {i} must fail");
+        }
+    }
+
+    #[test]
+    fn missing_file_errors_with_path() {
+        let err = load_index(Path::new("/nonexistent/pqdtw.idx")).unwrap_err();
+        assert!(format!("{err:#}").contains("nonexistent"));
+    }
+}

@@ -55,6 +55,20 @@ pub fn gen_len(rng: &mut Rng, lo: usize, hi: usize) -> usize {
     lo + rng.below(hi - lo + 1)
 }
 
+/// A fresh, collision-free temp directory for one test: pid plus a
+/// per-process atomic counter, so tests running concurrently inside one
+/// test binary (or across binaries) can never clobber each other's
+/// files. The directory is created before returning; callers that care
+/// about cleanup remove it themselves.
+pub fn unique_temp_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("pqdtw_{tag}_{}_{n}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("creating unique temp dir");
+    dir
+}
+
 /// Assertion helper: `a ≈ b` within `tol`.
 pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
     if (a - b).abs() <= tol {
@@ -89,6 +103,16 @@ mod tests {
     #[should_panic(expected = "property 'fails'")]
     fn check_reports_failure_with_seed() {
         check("fails", 5, |_| Err("always".into()));
+    }
+
+    #[test]
+    fn unique_temp_dirs_do_not_collide() {
+        let a = unique_temp_dir("selftest");
+        let b = unique_temp_dir("selftest");
+        assert_ne!(a, b);
+        assert!(a.is_dir() && b.is_dir());
+        std::fs::remove_dir_all(&a).ok();
+        std::fs::remove_dir_all(&b).ok();
     }
 
     #[test]

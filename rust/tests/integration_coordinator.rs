@@ -197,6 +197,68 @@ fn topk_three_modes_end_to_end() {
 }
 
 #[test]
+fn saved_index_serves_identically_through_service() {
+    // The build-once / serve-many contract end-to-end: an engine saved
+    // to disk and reopened (no retraining) must answer every request
+    // bit-identically to the original — through the threaded Service,
+    // in all serving modes.
+    let tt = ucr_like_by_name("CBF", 409).unwrap();
+    let cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 16,
+        window_frac: 0.2,
+        ..Default::default()
+    };
+    let mut engine = Engine::build(&tt.train, &cfg, 13).unwrap();
+    engine.enable_ivf(6, CoarseMetric::Dtw { window: engine.full_window() }, 13);
+    let nlist = engine.ivf.as_ref().unwrap().nlist();
+
+    let dir = pqdtw::testutil::unique_temp_dir("coord_store");
+    let path = dir.join("cbf.pqx");
+    engine.save(&path).unwrap();
+    let reopened = Engine::open(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let svc_mem = Service::start(Arc::new(engine), ServiceConfig::default());
+    let svc_disk = Service::start(Arc::new(reopened), ServiceConfig::default());
+    for i in 0..10 {
+        let q = tt.test.row(i).to_vec();
+        for req in [
+            Request::NnQuery {
+                series: q.clone(),
+                mode: PqQueryMode::Asymmetric,
+                nprobe: Some(2),
+            },
+            Request::TopKQuery {
+                series: q.clone(),
+                k: 5,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: None,
+                rerank: None,
+            },
+            Request::TopKQuery {
+                series: q.clone(),
+                k: 5,
+                mode: PqQueryMode::Symmetric,
+                nprobe: Some(nlist),
+                rerank: None,
+            },
+            Request::TopKQuery {
+                series: q,
+                k: 3,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: Some(2),
+                rerank: Some(12),
+            },
+        ] {
+            assert_eq!(svc_mem.call(req.clone()), svc_disk.call(req), "query {i}");
+        }
+    }
+    svc_mem.shutdown();
+    svc_disk.shutdown();
+}
+
+#[test]
 fn mixed_request_types() {
     let (engine, test) = build_engine(307);
     let svc = Service::start(engine, ServiceConfig::default());

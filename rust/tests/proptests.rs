@@ -3,6 +3,7 @@
 //! in the offline crate set). Every failure message includes the seed to
 //! reproduce: `PQDTW_PROP_SEED=<seed> cargo test -p pqdtw --test proptests`.
 
+use pqdtw::coordinator::{Engine, Request};
 use pqdtw::core::preprocess::{reinterpolate, znorm};
 use pqdtw::core::rng::Rng;
 use pqdtw::core::series::Dataset;
@@ -12,9 +13,13 @@ use pqdtw::distance::euclidean::euclidean_sq;
 use pqdtw::distance::lower_bounds::{lb_cascade_sq, lb_keogh_sq, lb_kim_sq};
 use pqdtw::distance::pruned_dtw::pruned_dtw_sq;
 use pqdtw::distance::sbd::sbd;
+use pqdtw::nn::ivf::CoarseMetric;
+use pqdtw::nn::knn::PqQueryMode;
 use pqdtw::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
 use pqdtw::repr::sax::SaxEncoder;
-use pqdtw::testutil::{check, close, default_cases, gen_len, gen_series, gen_walk, leq};
+use pqdtw::testutil::{
+    check, close, default_cases, gen_len, gen_series, gen_walk, leq, unique_temp_dir,
+};
 use pqdtw::wavelet::modwt::modwt_scale;
 
 #[test]
@@ -228,6 +233,84 @@ fn prop_encoded_codes_in_range() {
         for &c in &enc.codes {
             if c >= k {
                 return Err(format!("code {c} >= K {k}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_store_roundtrip_serves_bit_identically() {
+    // `Engine::open(save(engine))` must answer every serving mode —
+    // exhaustive, probed, re-ranked, 1-NN — bit-identically to the
+    // in-memory engine it was saved from, across random datasets,
+    // configs, metrics, pre-alignment and optional IVF indexes.
+    check("store roundtrip", 5, |rng| {
+        let n = 12 + rng.below(10);
+        let len = 32 + 4 * rng.below(6);
+        let mut values = Vec::with_capacity(n * len);
+        for _ in 0..n {
+            values.extend(gen_walk(rng, len));
+        }
+        let data = Dataset::from_flat(values, len);
+        let cfg = PqConfig {
+            n_subspaces: 2 + rng.below(3),
+            codebook_size: 4 + rng.below(6),
+            window_frac: 0.25,
+            metric: if rng.below(3) == 0 { PqMetric::Euclidean } else { PqMetric::Dtw },
+            prealign: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(PrealignConfig { level: 2, tail_frac: 0.15 })
+            },
+            kmeans_iters: 2,
+            dba_iters: 1,
+            train_subsample: None,
+        };
+        let mut engine = Engine::build(&data, &cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        if rng.below(2) == 0 {
+            engine.enable_ivf(1 + rng.below(5), CoarseMetric::Euclidean, rng.next_u64());
+        }
+        let dir = unique_temp_dir("store_prop");
+        let path = dir.join("index.pqx");
+        engine.save(&path).map_err(|e| e.to_string())?;
+        let reopened = Engine::open(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_dir_all(&dir).ok();
+        let nlist = engine.ivf.as_ref().map(|ivf| ivf.nlist());
+        for _ in 0..4 {
+            let q = gen_walk(rng, len);
+            let k = 1 + rng.below(5);
+            let mode = if rng.below(2) == 0 {
+                PqQueryMode::Symmetric
+            } else {
+                PqQueryMode::Asymmetric
+            };
+            let mut reqs = vec![
+                Request::TopKQuery { series: q.clone(), k, mode, nprobe: None, rerank: None },
+                Request::TopKQuery {
+                    series: q.clone(),
+                    k,
+                    mode,
+                    nprobe: None,
+                    rerank: Some(k + 4),
+                },
+                Request::NnQuery { series: q.clone(), mode, nprobe: None },
+            ];
+            if let Some(nl) = nlist {
+                reqs.push(Request::TopKQuery {
+                    series: q,
+                    k,
+                    mode,
+                    nprobe: Some(1 + rng.below(nl)),
+                    rerank: None,
+                });
+            }
+            for req in reqs {
+                let a = engine.handle(&req);
+                let b = reopened.handle(&req);
+                if a != b {
+                    return Err(format!("divergent responses for {req:?}: {a:?} vs {b:?}"));
+                }
             }
         }
         Ok(())
