@@ -65,6 +65,12 @@ impl Args {
         self.flags.get(key).map(|v| v == "true").unwrap_or(false)
     }
 
+    /// Required string flag: an error naming the flag when absent (for
+    /// flags like `--connect` that have no sensible default).
+    pub fn require(&self, key: &str) -> Result<String, String> {
+        self.flags.get(key).cloned().ok_or_else(|| format!("missing required flag --{key}"))
+    }
+
     /// Validate the parsed command line against a spec table: an
     /// unknown subcommand, or any flag the matched subcommand does not
     /// accept, is an error listing the valid options. Without this, a
@@ -151,6 +157,14 @@ mod tests {
     fn empty_args() {
         let a = Args::parse(Vec::<String>::new());
         assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn require_names_the_missing_flag() {
+        let a = parse("stats --connect 127.0.0.1:9000");
+        assert_eq!(a.require("connect").unwrap(), "127.0.0.1:9000");
+        let err = parse("stats").require("connect").unwrap_err();
+        assert!(err.contains("--connect"), "{err}");
     }
 
     const SPECS: &[CommandSpec] = &[

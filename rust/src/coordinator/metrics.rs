@@ -10,7 +10,9 @@ const BUCKETS_US: [u64; 12] =
 
 /// Request families tracked with separate throughput/latency counters.
 /// The three top-k classes are the serving modes of the recall/latency
-/// dial: exhaustive scan, IVF-probed, and DTW re-ranked.
+/// dial: exhaustive scan, IVF-probed, and DTW re-ranked. `Ping` and
+/// `Stats` are served by the network plane without touching the engine
+/// but share the same sink so a remote `stats` call sees all traffic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestClass {
     /// Encode a raw series into a code word.
@@ -25,10 +27,14 @@ pub enum RequestClass {
     TopKProbed,
     /// Top-k with an exact DTW re-rank stage (probed or exhaustive).
     TopKReranked,
+    /// Liveness ping answered by the network plane.
+    Ping,
+    /// Metrics snapshot served by the network plane.
+    Stats,
 }
 
 /// Number of tracked request classes.
-pub const N_REQUEST_CLASSES: usize = 6;
+pub const N_REQUEST_CLASSES: usize = 8;
 
 impl RequestClass {
     /// All classes, index-aligned with the per-class metric arrays.
@@ -39,6 +45,8 @@ impl RequestClass {
         RequestClass::TopKExhaustive,
         RequestClass::TopKProbed,
         RequestClass::TopKReranked,
+        RequestClass::Ping,
+        RequestClass::Stats,
     ];
 
     /// Stable display name.
@@ -50,6 +58,8 @@ impl RequestClass {
             RequestClass::TopKExhaustive => "topk_exhaustive",
             RequestClass::TopKProbed => "topk_probed",
             RequestClass::TopKReranked => "topk_reranked",
+            RequestClass::Ping => "ping",
+            RequestClass::Stats => "stats",
         }
     }
 
@@ -62,6 +72,8 @@ impl RequestClass {
             RequestClass::TopKExhaustive => 3,
             RequestClass::TopKProbed => 4,
             RequestClass::TopKReranked => 5,
+            RequestClass::Ping => 6,
+            RequestClass::Stats => 7,
         }
     }
 }
@@ -77,6 +89,27 @@ pub struct Metrics {
     latency_buckets: [AtomicU64; 12],
     class_requests: [AtomicU64; N_REQUEST_CLASSES],
     class_latency_us: [AtomicU64; N_REQUEST_CLASSES],
+    class_latency_buckets: [[AtomicU64; 12]; N_REQUEST_CLASSES],
+}
+
+/// Approximate percentile over a `(bucket upper bound µs, count)`
+/// histogram: the upper bound of the bucket containing the percentile.
+/// `p = 0.0` lands on the first non-empty bucket, `p = 1.0` on the last
+/// non-empty one; an empty histogram reports `0`.
+fn histogram_percentile(hist: &[(u64, u64)], p: f64) -> u64 {
+    let total: u64 = hist.iter().map(|(_, c)| c).sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((p * total as f64).ceil() as u64).clamp(1, total);
+    let mut acc = 0;
+    for &(ub, c) in hist {
+        acc += c;
+        if acc >= target {
+            return ub;
+        }
+    }
+    u64::MAX
 }
 
 /// Per-class slice of a [`MetricsSnapshot`].
@@ -88,6 +121,11 @@ pub struct ClassSnapshot {
     pub requests: u64,
     /// Mean latency (µs) within the class.
     pub mean_latency_us: f64,
+    /// Median latency (µs) within the class (histogram upper bound).
+    pub p50_us: u64,
+    /// 99th-percentile latency (µs) within the class (histogram upper
+    /// bound).
+    pub p99_us: u64,
 }
 
 /// A point-in-time copy of the metrics.
@@ -112,21 +150,11 @@ pub struct MetricsSnapshot {
 
 impl MetricsSnapshot {
     /// Approximate latency percentile (µs) from the histogram (upper
-    /// bound of the bucket containing the percentile).
+    /// bound of the bucket containing the percentile). `p = 0.0` is the
+    /// first non-empty bucket, `p = 1.0` the last non-empty one; an
+    /// empty histogram reports `0`.
     pub fn percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self.histogram.iter().map(|(_, c)| c).sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (p * total as f64).ceil() as u64;
-        let mut acc = 0;
-        for &(ub, c) in &self.histogram {
-            acc += c;
-            if acc >= target {
-                return ub;
-            }
-        }
-        u64::MAX
+        histogram_percentile(&self.histogram, p)
     }
 
     /// Counters for one request class.
@@ -152,6 +180,7 @@ impl Metrics {
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.class_requests[class.idx()].fetch_add(1, Ordering::Relaxed);
         self.class_latency_us[class.idx()].fetch_add(latency_us, Ordering::Relaxed);
+        self.class_latency_buckets[class.idx()][idx].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one executed batch of `size` items.
@@ -171,10 +200,17 @@ impl Metrics {
             .map(|&class| {
                 let n = self.class_requests[class.idx()].load(Ordering::Relaxed);
                 let lat = self.class_latency_us[class.idx()].load(Ordering::Relaxed);
+                let hist: Vec<(u64, u64)> = BUCKETS_US
+                    .iter()
+                    .zip(self.class_latency_buckets[class.idx()].iter())
+                    .map(|(&ub, c)| (ub, c.load(Ordering::Relaxed)))
+                    .collect();
                 ClassSnapshot {
                     class,
                     requests: n,
                     mean_latency_us: if n > 0 { lat as f64 / n as f64 } else { 0.0 },
+                    p50_us: histogram_percentile(&hist, 0.5),
+                    p99_us: histogram_percentile(&hist, 0.99),
                 }
             })
             .collect();
@@ -242,6 +278,63 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.percentile_us(0.5), 25);
         assert_eq!(s.percentile_us(0.999), 50_000);
+    }
+
+    #[test]
+    fn percentile_of_empty_histogram_is_zero() {
+        let s = Metrics::new().snapshot();
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(s.percentile_us(p), 0, "p = {p}");
+        }
+        // per-class percentiles are zero too
+        for c in &s.per_class {
+            assert_eq!((c.p50_us, c.p99_us), (0, 0), "{:?}", c.class);
+        }
+    }
+
+    #[test]
+    fn percentile_extremes_land_on_non_empty_buckets() {
+        let m = Metrics::new();
+        m.record_request(RequestClass::Nn, 20, false); // ≤25 bucket
+        m.record_request(RequestClass::Nn, 700, false); // ≤1000 bucket
+        let s = m.snapshot();
+        // p = 0.0 must be the first non-empty bucket, not histogram[0]
+        assert_eq!(s.percentile_us(0.0), 25);
+        // p = 1.0 must be the last non-empty bucket, not u64::MAX
+        assert_eq!(s.percentile_us(1.0), 1_000);
+    }
+
+    #[test]
+    fn percentile_with_all_counts_in_one_bucket() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_request(RequestClass::TopKProbed, 60, false); // ≤100 bucket
+        }
+        let s = m.snapshot();
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(s.percentile_us(p), 100, "p = {p}");
+        }
+        let c = s.class(RequestClass::TopKProbed);
+        assert_eq!((c.p50_us, c.p99_us), (100, 100));
+    }
+
+    #[test]
+    fn per_class_percentiles_are_independent() {
+        let m = Metrics::new();
+        for _ in 0..98 {
+            m.record_request(RequestClass::TopKExhaustive, 20, false);
+        }
+        m.record_request(RequestClass::TopKExhaustive, 40_000, false);
+        m.record_request(RequestClass::TopKExhaustive, 40_000, false);
+        m.record_request(RequestClass::Ping, 5, false);
+        let s = m.snapshot();
+        let exh = s.class(RequestClass::TopKExhaustive);
+        // rank ⌈0.99·100⌉ = 99 falls past the 98 fast requests
+        assert_eq!(exh.p50_us, 25);
+        assert_eq!(exh.p99_us, 50_000);
+        let ping = s.class(RequestClass::Ping);
+        assert_eq!((ping.p50_us, ping.p99_us), (10, 10));
+        assert_eq!(s.class(RequestClass::Stats).requests, 0);
     }
 
     #[test]

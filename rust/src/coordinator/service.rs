@@ -91,6 +91,18 @@ impl Service {
         self.metrics.snapshot()
     }
 
+    /// Record a request served outside the engine path — e.g. the
+    /// network plane's ping/stats frames — into the same metrics sink,
+    /// so a remote `stats` call accounts for every request class.
+    pub fn record_external(
+        &self,
+        class: super::metrics::RequestClass,
+        latency_us: u64,
+        is_error: bool,
+    ) {
+        self.metrics.record_request(class, latency_us, is_error);
+    }
+
     /// Queue depth (backpressure signal).
     pub fn queue_depth(&self) -> usize {
         self.batcher.depth()
@@ -108,6 +120,11 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
+        // Close *and join*: merely closing the batcher would let worker
+        // threads race process exit, silently dropping in-flight
+        // replies (`drop_delivers_in_flight_replies` is the regression
+        // test). `shutdown()` drains `workers`, so a second pass here
+        // is a no-op.
         self.batcher.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -189,6 +206,39 @@ mod tests {
         assert!(matches!(r, Response::Error(_)));
         let m = svc.shutdown();
         assert_eq!(m.errors, 1);
+    }
+
+    #[test]
+    fn drop_delivers_in_flight_replies() {
+        // Teardown regression: dropping the service must close the
+        // batcher AND join the workers, so every request submitted
+        // before the drop still gets its reply (workers drain the queue
+        // before exiting). Without the joins, replies race process
+        // teardown and are silently lost.
+        let (svc, test) = toy_service(2);
+        let mut pending = Vec::new();
+        for i in 0..6 {
+            let rx = svc
+                .submit(Request::Encode { series: test.row(i).to_vec() })
+                .expect("service accepts requests before drop");
+            pending.push(rx);
+        }
+        drop(svc);
+        for (i, rx) in pending.into_iter().enumerate() {
+            let resp = rx.recv().unwrap_or_else(|_| {
+                panic!("request {i}: reply dropped — workers not joined on drop")
+            });
+            assert!(matches!(resp, Response::Codes(_)), "request {i}: {resp:?}");
+        }
+    }
+
+    #[test]
+    fn external_requests_share_the_metrics_sink() {
+        let (svc, _) = toy_service(1);
+        svc.record_external(crate::coordinator::metrics::RequestClass::Ping, 3, false);
+        let m = svc.shutdown();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.class(crate::coordinator::metrics::RequestClass::Ping).requests, 1);
     }
 
     #[test]

@@ -48,6 +48,11 @@
 //!   of the database (and `nprobe = nlist` is bit-identical to the
 //!   exhaustive scan), and the re-rank stage returns true windowed DTW
 //!   distances.
+//! - [`net`] — the network serving plane: a versioned length-prefixed
+//!   binary wire protocol (`docs/wire-protocol.md`), a std-only TCP
+//!   server feeding concurrent connections into the coordinator's
+//!   batcher, and a blocking client — remote queries answer
+//!   bit-identically to the in-process engine.
 //! - [`runtime`] — (feature `pjrt`) loads AOT-lowered HLO artifacts
 //!   produced by `python/compile/aot.py` and executes them via PJRT.
 //!
@@ -84,5 +89,6 @@ pub mod data;
 pub mod eval;
 pub mod store;
 pub mod coordinator;
+pub mod net;
 pub mod runtime;
 pub mod testutil;

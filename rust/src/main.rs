@@ -1,5 +1,6 @@
 //! `pqdtw` — leader binary: train / encode / query / topk / cluster /
-//! build-index / serve / selftest over the PQDTW library.
+//! build-index / serve / stats / shutdown / selftest over the PQDTW
+//! library.
 //!
 //! Examples:
 //!   pqdtw selftest
@@ -9,15 +10,22 @@
 //!   pqdtw cluster --dataset Waveforms --linkage complete
 //!   pqdtw build-index --dataset RandomWalk-4096x128 --nlist 32 --out rw.pqx
 //!   pqdtw serve --index rw.pqx --dataset RandomWalk-4096x128 --topk 5 --nprobe 4
+//!   pqdtw serve --listen 127.0.0.1:7447 --index rw.pqx
+//!   pqdtw query --connect 127.0.0.1:7447 --dataset RandomWalk-4096x128 --topk 5 --nprobe 4
+//!   pqdtw stats --connect 127.0.0.1:7447
+//!   pqdtw shutdown --connect 127.0.0.1:7447
 //!   pqdtw topk --index rw.pqx --dataset RandomWalk-4096x128 --nlist 32 --verify
 //!   pqdtw info --index rw.pqx
 //!
 //! The build-once / serve-many split: `build-index` trains, encodes and
 //! persists the full serving state; `serve --index` / `topk --index`
 //! reopen it without retraining and answer bit-identically to the
-//! in-memory engine it was saved from. Unknown subcommands and flags
-//! are hard errors listing the valid options (a typo like `--nporbe`
-//! must never silently degrade results).
+//! in-memory engine it was saved from. `serve --listen` exposes that
+//! engine to remote clients over the wire protocol
+//! (`docs/wire-protocol.md`); networked queries are bit-identical to
+//! in-process ones. Unknown subcommands and flags are hard errors
+//! listing the valid options (a typo like `--nporbe` must never
+//! silently degrade results).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -31,6 +39,7 @@ use pqdtw::core::matrix::CondensedMatrix;
 use pqdtw::data::random_walk::RandomWalks;
 use pqdtw::data::ucr_like::{ucr_like_by_name, TrainTest};
 use pqdtw::distance::measure::Measure;
+use pqdtw::net::{Client, ClientConfig, NetServer, ServerConfig};
 use pqdtw::nn::ivf::CoarseMetric;
 use pqdtw::nn::knn::{nn_classify_pq, nn_classify_raw, PqQueryMode};
 use pqdtw::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
@@ -51,7 +60,10 @@ macro_rules! pq_flags {
 /// is rejected by [`Args::validate`] before dispatch.
 const SPECS: &[CommandSpec] = &[
     CommandSpec { name: "train", flags: pq_flags!() },
-    CommandSpec { name: "query", flags: pq_flags!("mode", "queries") },
+    CommandSpec {
+        name: "query",
+        flags: pq_flags!("mode", "queries", "connect", "topk", "nprobe", "rerank"),
+    },
     CommandSpec {
         name: "topk",
         flags: pq_flags!(
@@ -64,10 +76,12 @@ const SPECS: &[CommandSpec] = &[
         name: "serve",
         flags: pq_flags!(
             "workers", "requests", "topk", "nprobe", "rerank", "nlist", "coarse",
-            "scan-threads", "index"
+            "scan-threads", "index", "listen", "port-file", "max-conns"
         ),
     },
     CommandSpec { name: "build-index", flags: pq_flags!("out", "nlist", "coarse") },
+    CommandSpec { name: "stats", flags: &["connect"] },
+    CommandSpec { name: "shutdown", flags: &["connect"] },
     CommandSpec { name: "selftest", flags: &["seed"] },
     CommandSpec { name: "info", flags: &["index"] },
 ];
@@ -142,18 +156,25 @@ const BUILD_FLAGS: &[&str] = &[
     "coarse",
 ];
 
-/// Error out when a build-shape flag is combined with `--index`.
-fn reject_build_flags_with_index(a: &Args) -> Result<()> {
-    let mut set: Vec<&str> =
-        BUILD_FLAGS.iter().copied().filter(|f| a.flags.contains_key(*f)).collect();
+/// Error out when any of `flags` is present: each would be a silent
+/// no-op in the current mode, which `Args::validate` exists to prevent.
+fn reject_flags(a: &Args, flags: &[&str], why: &str) -> Result<()> {
+    let mut set: Vec<&str> = flags.iter().copied().filter(|f| a.flags.contains_key(*f)).collect();
     set.sort_unstable();
     if let Some(first) = set.first() {
-        bail!(
-            "--{first} has no effect with --index: the index file carries its own \
-             configuration (drop the flag, or rebuild it with build-index)"
-        );
+        bail!("--{first} {why}");
     }
     Ok(())
+}
+
+/// Error out when a build-shape flag is combined with `--index`.
+fn reject_build_flags_with_index(a: &Args) -> Result<()> {
+    reject_flags(
+        a,
+        BUILD_FLAGS,
+        "has no effect with --index: the index file carries its own \
+         configuration (drop the flag, or rebuild it with build-index)",
+    )
 }
 
 /// Open an index file and check it against the query dataset (shared
@@ -209,7 +230,62 @@ fn cmd_train(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Remote retrieval driver: generate queries from the dataset's test
+/// split and run them against a `serve --listen` process. The serving
+/// mode (top-k / probed / re-ranked) is chosen per request by flags.
+fn cmd_query_remote(a: &Args, addr: &str) -> Result<()> {
+    reject_flags(
+        a,
+        BUILD_FLAGS,
+        "has no effect with --connect: the server's engine was configured when it \
+         was built (see `build-index` / `serve`)",
+    )?;
+    let seed = a.get_parsed("seed", 7u64);
+    let tt = load_dataset(&a.get("dataset", "CBF"), seed)?;
+    let mode = if a.get("mode", "asymmetric") == "symmetric" {
+        PqQueryMode::Symmetric
+    } else {
+        PqQueryMode::Asymmetric
+    };
+    let k = a.get_parsed("topk", 5usize).max(1);
+    let nprobe: Option<usize> = a.get_opt("nprobe");
+    let rerank: Option<usize> = a.get_opt("rerank");
+    let n_queries = a.get_parsed("queries", 10usize).min(tt.test.n_series()).max(1);
+    let mut client = Client::connect(addr, ClientConfig::default())?;
+    let t0 = Instant::now();
+    let mut n_hits = 0usize;
+    for i in 0..n_queries {
+        let hits = client.topk(tt.test.row(i), k, mode, nprobe, rerank)?;
+        ensure!(!hits.is_empty(), "server returned no hits for query {i}");
+        n_hits += hits.len();
+        if i == 0 {
+            println!("query 0 top-{k} ({mode:?}, nprobe={nprobe:?}, rerank={rerank:?}):");
+            for h in &hits {
+                match h.label {
+                    Some(l) => println!("  #{:<8} d={:.6} label={l}", h.index, h.distance),
+                    None => println!("  #{:<8} d={:.6}", h.index, h.distance),
+                }
+            }
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n_queries} remote queries to {addr} in {dt:?} ({:.0} req/s, {n_hits} hits)",
+        n_queries as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}
+
 fn cmd_query(a: &Args) -> Result<()> {
+    if let Some(addr) = a.flags.get("connect") {
+        return cmd_query_remote(a, addr);
+    }
+    reject_flags(
+        a,
+        &["topk", "nprobe", "rerank"],
+        "has no effect without --connect: local `query` is the 1-NN classification \
+         driver (use `topk` for ranked retrieval, or `query --connect` against a server)",
+    )?;
     let seed = a.get_parsed("seed", 7u64);
     let tt = load_dataset(&a.get("dataset", "CBF"), seed)?;
     ensure!(
@@ -314,7 +390,109 @@ fn cmd_build_index(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Network serving: cold-start an engine (straight from an index file,
+/// or trained from dataset flags), put the threaded service behind a
+/// TCP listener, and run until a client sends a `Shutdown` frame.
+fn cmd_serve_listen(a: &Args, listen: &str) -> Result<()> {
+    reject_flags(
+        a,
+        &["requests", "topk", "nprobe", "rerank"],
+        "has no effect with --listen: serving modes are chosen per request by the \
+         connecting clients",
+    )?;
+    let seed = a.get_parsed("seed", 7u64);
+    let mut engine = match a.flags.get("index") {
+        Some(path) => {
+            reject_build_flags_with_index(a)?;
+            reject_flags(
+                a,
+                &["dataset"],
+                "has no effect with --listen --index: queries come from the network, \
+                 and the index file carries its own database",
+            )?;
+            let engine = Engine::open(Path::new(path))?;
+            println!(
+                "loaded index {path}: {} series × {} samples, ivf={:?} (no retraining)",
+                engine.n_items,
+                engine.pq.series_len,
+                engine.ivf.as_ref().map(|ivf| ivf.nlist())
+            );
+            engine
+        }
+        None => {
+            let tt = load_dataset(&a.get("dataset", "SpikePosition"), seed)?;
+            let cfg = config_from_args(a);
+            let mut engine = Engine::build(&tt.train, &cfg, seed)?;
+            let nlist = a.get_parsed("nlist", 0usize);
+            if nlist > 0 {
+                let metric = coarse_metric(a, &engine);
+                engine.enable_ivf(nlist, metric, seed);
+            }
+            engine
+        }
+    };
+    engine.set_scan_threads(a.get_parsed("scan-threads", 1usize));
+    let svc = Arc::new(Service::start(
+        Arc::new(engine),
+        ServiceConfig {
+            n_workers: a.get_parsed("workers", 2usize),
+            batcher: Default::default(),
+        },
+    ));
+    let server = NetServer::start(
+        listen,
+        Arc::clone(&svc),
+        ServerConfig {
+            max_connections: a.get_parsed("max-conns", 64usize),
+            ..Default::default()
+        },
+    )?;
+    let addr = server.local_addr();
+    if let Some(port_file) = a.flags.get("port-file") {
+        // Written only after the listener is live, so a supervisor (or
+        // the CI smoke step) can poll this file to learn the bound
+        // ephemeral port.
+        std::fs::write(port_file, addr.to_string())
+            .with_context(|| format!("writing --port-file {port_file}"))?;
+    }
+    println!("listening on {addr} (stop with `pqdtw shutdown --connect {addr}`)");
+    server.wait();
+    let m = svc.metrics();
+    println!(
+        "shutdown: served {} requests ({} errors), {} batches (mean size {:.1})",
+        m.requests, m.errors, m.batches, m.mean_batch_size
+    );
+    println!(
+        "latency : mean {:.0}µs, p50 ≤{}µs, p99 ≤{}µs",
+        m.mean_latency_us,
+        m.percentile_us(0.5),
+        m.percentile_us(0.99)
+    );
+    for c in &m.per_class {
+        if c.requests > 0 {
+            println!(
+                "  {:<16} {:>8} reqs, mean {:>7.0}µs, p50 ≤{}µs, p99 ≤{}µs",
+                c.class.name(),
+                c.requests,
+                c.mean_latency_us,
+                c.p50_us,
+                c.p99_us
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_serve(a: &Args) -> Result<()> {
+    if let Some(listen) = a.flags.get("listen") {
+        return cmd_serve_listen(a, listen);
+    }
+    reject_flags(
+        a,
+        &["port-file", "max-conns"],
+        "has no effect without --listen: the local synthetic load loop binds no \
+         socket (add --listen <addr> to serve over TCP)",
+    )?;
     let seed = a.get_parsed("seed", 7u64);
     let tt = load_dataset(&a.get("dataset", "SpikePosition"), seed)?;
     let topk: usize = a.get_parsed("topk", 0usize); // 0 = classic 1-NN requests
@@ -374,9 +552,48 @@ fn cmd_serve(a: &Args) -> Result<()> {
     println!("mean latency {:.0}µs, p50 ≤{}µs, p99 ≤{}µs, mean batch {:.1}", m.mean_latency_us, m.percentile_us(0.5), m.percentile_us(0.99), m.mean_batch_size);
     for c in &m.per_class {
         if c.requests > 0 {
-            println!("  {:<16} {:>6} reqs, mean {:.0}µs", c.class.name(), c.requests, c.mean_latency_us);
+            println!(
+                "  {:<16} {:>6} reqs, mean {:.0}µs, p50 ≤{}µs, p99 ≤{}µs",
+                c.class.name(),
+                c.requests,
+                c.mean_latency_us,
+                c.p50_us,
+                c.p99_us
+            );
         }
     }
+    Ok(())
+}
+
+/// Print a remote server's metrics snapshot.
+fn cmd_stats(a: &Args) -> Result<()> {
+    let addr = a.require("connect").map_err(anyhow::Error::msg)?;
+    let mut client = Client::connect(&addr, ClientConfig::default())?;
+    let s = client.stats()?;
+    println!("server   : {addr}");
+    println!("requests : {} ({} errors)", s.requests, s.errors);
+    println!("batches  : {} (mean size {:.1})", s.batches, s.mean_batch_size);
+    println!(
+        "latency  : mean {:.0}µs, p50 ≤{}µs, p99 ≤{}µs",
+        s.mean_latency_us, s.p50_us, s.p99_us
+    );
+    for c in &s.per_class {
+        if c.requests > 0 {
+            println!(
+                "  {:<16} {:>8} reqs, mean {:>7.0}µs, p50 ≤{}µs, p99 ≤{}µs",
+                c.name, c.requests, c.mean_latency_us, c.p50_us, c.p99_us
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Ask a remote server to drain and exit.
+fn cmd_shutdown(a: &Args) -> Result<()> {
+    let addr = a.require("connect").map_err(anyhow::Error::msg)?;
+    let mut client = Client::connect(&addr, ClientConfig::default())?;
+    client.shutdown()?;
+    println!("server {addr} acknowledged shutdown and is draining");
     Ok(())
 }
 
@@ -654,6 +871,8 @@ fn main() -> Result<()> {
         "cluster" => cmd_cluster(&args),
         "build-index" => cmd_build_index(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
+        "shutdown" => cmd_shutdown(&args),
         "selftest" => cmd_selftest(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown command '{other}'"), // unreachable after validate

@@ -1,0 +1,169 @@
+//! Blocking client for the `pqdtw` wire protocol: one TCP connection,
+//! strict request/response alternation, connect and I/O timeouts.
+//!
+//! Server-side failures arrive as `Error` frames and surface as `Err`
+//! from every method, so callers never have to pattern-match transport
+//! failures apart from application ones.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::Hit;
+use crate::nn::knn::PqQueryMode;
+
+use super::protocol::{self, NetRequest, NetResponse, WireStats};
+
+/// Client-side timeouts.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientConfig {
+    /// TCP connect timeout (per resolved address).
+    pub connect_timeout: Duration,
+    /// Read/write timeout per frame.
+    pub io_timeout: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A connected `pqdtw` client.
+pub struct Client {
+    stream: TcpStream,
+    max_frame_bytes: usize,
+    /// Set after any transport-level failure (timeout, torn frame,
+    /// unexpected EOF): the stream may no longer be on a frame
+    /// boundary, and a late-arriving reply would be misattributed to
+    /// the next request — so every further call fails fast instead.
+    poisoned: bool,
+}
+
+impl Client {
+    /// Connect to `addr` (host:port; tries each resolved address with
+    /// the configured connect timeout).
+    pub fn connect(addr: &str, cfg: ClientConfig) -> Result<Client> {
+        let addrs: Vec<_> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("net: resolving {addr}"))?
+            .collect();
+        let mut last_err = None;
+        for sa in &addrs {
+            match TcpStream::connect_timeout(sa, cfg.connect_timeout) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    stream
+                        .set_read_timeout(Some(cfg.io_timeout))
+                        .context("net: setting read timeout")?;
+                    stream
+                        .set_write_timeout(Some(cfg.io_timeout))
+                        .context("net: setting write timeout")?;
+                    return Ok(Client {
+                        stream,
+                        max_frame_bytes: protocol::MAX_FRAME_BYTES,
+                        poisoned: false,
+                    });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        match last_err {
+            Some(e) => Err(e).with_context(|| format!("net: connecting to {addr}")),
+            None => bail!("net: {addr} resolved to no addresses"),
+        }
+    }
+
+    /// One request/response round trip. A transport failure poisons
+    /// the connection: a reply that arrives after a timeout would
+    /// otherwise be read as the answer to the *next* request.
+    fn call(&mut self, req: &NetRequest) -> Result<NetResponse> {
+        ensure!(
+            !self.poisoned,
+            "net: connection unusable after an earlier transport error (reconnect)"
+        );
+        if let Err(e) = protocol::write_frame(&mut self.stream, &protocol::encode_request(req)) {
+            self.poisoned = true;
+            return Err(e).context("net: sending request");
+        }
+        match protocol::read_frame(&mut self.stream, self.max_frame_bytes) {
+            // A fully-read frame leaves the stream on a frame boundary
+            // even if the payload fails to decode.
+            Ok(Some((tag, payload))) => protocol::decode_response(tag, &payload),
+            Ok(None) => {
+                self.poisoned = true;
+                bail!("net: server closed the connection")
+            }
+            Err(e) => {
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// Liveness round trip.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(&NetRequest::Ping)? {
+            NetResponse::Pong => Ok(()),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Remote 1-NN query; answers bit-identically to the server
+    /// engine's in-process `NnQuery`.
+    pub fn nn(
+        &mut self,
+        series: &[f64],
+        mode: PqQueryMode,
+        nprobe: Option<usize>,
+    ) -> Result<(usize, f64, Option<i64>)> {
+        let req = NetRequest::Nn { series: series.to_vec(), mode, nprobe };
+        match self.call(&req)? {
+            NetResponse::Nn { index, distance, label } => Ok((index, distance, label)),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Remote top-k query across the full serving-mode dial
+    /// (exhaustive / IVF-probed / DTW re-ranked); answers
+    /// bit-identically to the server engine's in-process `TopKQuery`.
+    pub fn topk(
+        &mut self,
+        series: &[f64],
+        k: usize,
+        mode: PqQueryMode,
+        nprobe: Option<usize>,
+        rerank: Option<usize>,
+    ) -> Result<Vec<Hit>> {
+        let req = NetRequest::TopK { series: series.to_vec(), k, mode, nprobe, rerank };
+        match self.call(&req)? {
+            NetResponse::TopK(hits) => Ok(hits),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch the server's metrics snapshot.
+    pub fn stats(&mut self) -> Result<WireStats> {
+        match self.call(&NetRequest::Stats)? {
+            NetResponse::Stats(stats) => Ok(stats),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Ask the server to drain and exit; returns once acknowledged.
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(&NetRequest::Shutdown)? {
+            NetResponse::ShutdownAck => Ok(()),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+}

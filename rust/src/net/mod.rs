@@ -1,0 +1,38 @@
+//! `net` — the network serving plane: remote PQDTW queries over a
+//! versioned binary wire protocol, std-only (`std::net` + threads; no
+//! external runtime — see `docs/DESIGN.md` §3).
+//!
+//! Until this subsystem existed every query had to run inside the
+//! `pqdtw` process: `serve` drove a synthetic in-process loop, so the
+//! batcher, IVF probing and the on-disk index store were unreachable
+//! from any other program. The net plane turns the reproduction into a
+//! service: a long-lived server amortizes one index load across many
+//! clients, and concurrent connections feed the same
+//! [`DynamicBatcher`](crate::coordinator::DynamicBatcher), so
+//! cross-connection batching happens for free.
+//!
+//! - [`protocol`] — length-prefixed little-endian frames (magic,
+//!   version, tag, payload) reusing the store's codec primitives and
+//!   its hardening discipline; hostile frames yield error responses or
+//!   clean disconnects, never panics or unbounded allocations. Byte
+//!   layout and version-bump policy: `docs/wire-protocol.md`.
+//! - [`server`] — `TcpListener` accept loop, per-connection
+//!   reader/writer threads over the shared
+//!   [`Service`](crate::coordinator::Service), connection cap, bounded
+//!   per-connection pipelining, graceful drain on shutdown.
+//! - [`client`] — blocking client with connect/request timeouts; the
+//!   `query --connect` / `stats --connect` / `shutdown --connect` CLI
+//!   verbs are thin wrappers around it.
+//!
+//! A networked query answers **bit-identically** to the in-process
+//! engine across all serving modes (exhaustive, IVF-probed, DTW
+//! re-ranked) — f64 values cross the wire as IEEE-754 bit patterns,
+//! exactly like the index store.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{Client, ClientConfig};
+pub use protocol::{NetRequest, NetResponse, WireClassStats, WireStats};
+pub use server::{NetServer, ServerConfig};

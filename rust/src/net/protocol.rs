@@ -1,0 +1,717 @@
+//! The `pqdtw` wire protocol: versioned, length-prefixed little-endian
+//! frames over TCP (see `docs/wire-protocol.md` for the byte-level
+//! specification and the version-bump policy).
+//!
+//! Every frame — request or response — is self-describing:
+//!
+//! ```text
+//! magic    8 B   "PQDTWNET"
+//! version  4 B   u32 LE (currently 1)
+//! tag      1 B   frame kind
+//! length   8 B   payload length in bytes, u64 LE
+//! payload  …     tag-specific, encoded with the store's codec primitives
+//! ```
+//!
+//! The payloads reuse [`crate::store::format`]'s `ByteWriter` /
+//! `ByteReader`, inheriting its hardening discipline: every length
+//! prefix is validated against the bytes actually present before any
+//! allocation, so hostile frames (truncation, bit flips, `u64::MAX`
+//! lengths, unknown tags, over-limit query lengths) yield `Err` —
+//! never a panic, never an unbounded allocation. Unlike the on-disk
+//! index there is no application checksum: TCP already protects frame
+//! integrity in transit, and a flipped payload byte that still decodes
+//! is indistinguishable from a different (valid) request, which the
+//! engine answers or rejects like any other.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::Hit;
+use crate::nn::knn::PqQueryMode;
+use crate::store::format::{ByteReader, ByteWriter};
+
+/// Magic bytes at offset 0 of every frame.
+pub const NET_MAGIC: [u8; 8] = *b"PQDTWNET";
+
+/// Current protocol version (any layout change increments this; peers
+/// reject frames of versions they were not built to parse).
+pub const NET_VERSION: u32 = 1;
+
+/// Frame header size: magic + version + tag + payload length.
+pub const HEADER_BYTES: usize = 8 + 4 + 1 + 8;
+
+/// Default ceiling on one frame's payload, bounding what a hostile
+/// length prefix can make a peer allocate (servers may configure a
+/// smaller limit).
+pub const MAX_FRAME_BYTES: usize = 8 << 20;
+
+/// Semantic ceiling on query length in samples, far above any trained
+/// series length — a request over this limit is rejected at decode
+/// time, before the engine sees it.
+pub const MAX_QUERY_LEN: usize = 1 << 20;
+
+/// Request tags (1..=5).
+pub const TAG_PING: u8 = 1;
+/// 1-NN query.
+pub const TAG_NN: u8 = 2;
+/// Top-k query.
+pub const TAG_TOPK: u8 = 3;
+/// Metrics snapshot request.
+pub const TAG_STATS: u8 = 4;
+/// Graceful server shutdown request.
+pub const TAG_SHUTDOWN: u8 = 5;
+
+/// Response tags (64..).
+pub const TAG_PONG: u8 = 64;
+/// 1-NN result.
+pub const TAG_NN_RESULT: u8 = 65;
+/// Top-k result.
+pub const TAG_TOPK_RESULT: u8 = 66;
+/// Metrics snapshot.
+pub const TAG_STATS_RESULT: u8 = 67;
+/// Shutdown acknowledged; the server is draining.
+pub const TAG_SHUTDOWN_ACK: u8 = 68;
+/// Request failed; payload is a human-readable message.
+pub const TAG_ERROR: u8 = 127;
+
+/// A client-to-server frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetRequest {
+    /// Liveness check.
+    Ping,
+    /// 1-NN query against the server's database.
+    Nn {
+        /// Raw query series (must match the index's trained length).
+        series: Vec<f64>,
+        /// Symmetric or asymmetric PQ distance.
+        mode: PqQueryMode,
+        /// Probe only the `n` nearest IVF cells.
+        nprobe: Option<usize>,
+    },
+    /// Top-k query against the server's database.
+    TopK {
+        /// Raw query series.
+        series: Vec<f64>,
+        /// Neighbours to return.
+        k: usize,
+        /// Symmetric or asymmetric PQ distance.
+        mode: PqQueryMode,
+        /// Probe only the `n` nearest IVF cells.
+        nprobe: Option<usize>,
+        /// Re-rank this many PQ candidates with exact windowed DTW.
+        rerank: Option<usize>,
+    },
+    /// Request the server's metrics snapshot.
+    Stats,
+    /// Ask the server to drain connections and exit.
+    Shutdown,
+}
+
+/// One request class in a [`WireStats`] frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireClassStats {
+    /// Index into [`crate::coordinator::RequestClass::ALL`].
+    pub class: u8,
+    /// Stable display name (self-describing across class additions).
+    pub name: String,
+    /// Requests served in this class.
+    pub requests: u64,
+    /// Mean latency (µs).
+    pub mean_latency_us: f64,
+    /// Median latency (µs, histogram bucket upper bound).
+    pub p50_us: u64,
+    /// 99th-percentile latency (µs, histogram bucket upper bound).
+    pub p99_us: u64,
+}
+
+/// The server metrics snapshot as it crosses the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireStats {
+    /// Total requests served.
+    pub requests: u64,
+    /// Requests that returned an error.
+    pub errors: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Mean batch size.
+    pub mean_batch_size: f64,
+    /// Mean latency (µs) across all classes.
+    pub mean_latency_us: f64,
+    /// Median latency (µs) across all classes.
+    pub p50_us: u64,
+    /// 99th-percentile latency (µs) across all classes.
+    pub p99_us: u64,
+    /// Per-request-class counters.
+    pub per_class: Vec<WireClassStats>,
+}
+
+/// A server-to-client frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetResponse {
+    /// Liveness reply.
+    Pong,
+    /// 1-NN result.
+    Nn {
+        /// Database index of the nearest item.
+        index: usize,
+        /// Distance to it.
+        distance: f64,
+        /// Its label, when the database is labeled.
+        label: Option<i64>,
+    },
+    /// Ranked top-k result, ascending by distance.
+    TopK(Vec<Hit>),
+    /// Metrics snapshot.
+    Stats(WireStats),
+    /// Shutdown acknowledged; the connection closes after this frame.
+    ShutdownAck,
+    /// Request failed.
+    Error(String),
+}
+
+/// On-wire tag of a [`PqQueryMode`].
+fn mode_tag(m: PqQueryMode) -> u8 {
+    match m {
+        PqQueryMode::Symmetric => 0,
+        PqQueryMode::Asymmetric => 1,
+    }
+}
+
+/// [`PqQueryMode`] from its on-wire tag.
+fn mode_from(tag: u8) -> Result<PqQueryMode> {
+    match tag {
+        0 => Ok(PqQueryMode::Symmetric),
+        1 => Ok(PqQueryMode::Asymmetric),
+        other => bail!("net: unknown query-mode tag {other}"),
+    }
+}
+
+fn put_opt_i64(w: &mut ByteWriter, v: Option<i64>) {
+    match v {
+        Some(x) => {
+            w.u8(1);
+            w.bytes(&x.to_le_bytes());
+        }
+        None => w.u8(0),
+    }
+}
+
+fn get_i64(r: &mut ByteReader) -> Result<i64> {
+    Ok(i64::from_le_bytes(r.take(8)?.try_into().unwrap()))
+}
+
+fn get_opt_i64(r: &mut ByteReader) -> Result<Option<i64>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(get_i64(r)?)),
+        other => bail!("net: bad option flag {other}"),
+    }
+}
+
+/// Frame a payload: header (magic, version, tag, length) + payload.
+pub fn encode_frame(tag: u8, payload: &[u8]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.bytes(&NET_MAGIC);
+    w.u32(NET_VERSION);
+    w.u8(tag);
+    w.usize(payload.len());
+    w.bytes(payload);
+    w.into_bytes()
+}
+
+/// Serialize a request into one wire frame.
+pub fn encode_request(req: &NetRequest) -> Vec<u8> {
+    let mut p = ByteWriter::new();
+    let tag = match req {
+        NetRequest::Ping => TAG_PING,
+        NetRequest::Nn { series, mode, nprobe } => {
+            p.u8(mode_tag(*mode));
+            p.opt_usize(*nprobe);
+            p.vec_f64(series);
+            TAG_NN
+        }
+        NetRequest::TopK { series, k, mode, nprobe, rerank } => {
+            p.usize(*k);
+            p.u8(mode_tag(*mode));
+            p.opt_usize(*nprobe);
+            p.opt_usize(*rerank);
+            p.vec_f64(series);
+            TAG_TOPK
+        }
+        NetRequest::Stats => TAG_STATS,
+        NetRequest::Shutdown => TAG_SHUTDOWN,
+    };
+    encode_frame(tag, &p.into_bytes())
+}
+
+/// Query series with the semantic length limit applied (the byte-level
+/// count-vs-remaining check lives in `ByteReader::vec_f64`).
+fn get_query_series(r: &mut ByteReader) -> Result<Vec<f64>> {
+    let series = r.vec_f64()?;
+    ensure!(
+        series.len() <= MAX_QUERY_LEN,
+        "net: query of {} samples exceeds the {MAX_QUERY_LEN}-sample limit",
+        series.len()
+    );
+    ensure!(!series.is_empty(), "net: empty query series");
+    Ok(series)
+}
+
+/// Deserialize and validate a request payload.
+pub fn decode_request(tag: u8, payload: &[u8]) -> Result<NetRequest> {
+    let mut r = ByteReader::new(payload);
+    let req = match tag {
+        TAG_PING => NetRequest::Ping,
+        TAG_NN => {
+            let mode = mode_from(r.u8()?)?;
+            let nprobe = r.opt_usize()?;
+            let series = get_query_series(&mut r)?;
+            NetRequest::Nn { series, mode, nprobe }
+        }
+        TAG_TOPK => {
+            let k = r.usize()?;
+            ensure!(k >= 1, "net: k must be >= 1");
+            let mode = mode_from(r.u8()?)?;
+            let nprobe = r.opt_usize()?;
+            let rerank = r.opt_usize()?;
+            let series = get_query_series(&mut r)?;
+            NetRequest::TopK { series, k, mode, nprobe, rerank }
+        }
+        TAG_STATS => NetRequest::Stats,
+        TAG_SHUTDOWN => NetRequest::Shutdown,
+        other => bail!("net: unknown request tag {other}"),
+    };
+    ensure!(r.is_exhausted(), "net: trailing bytes in request payload");
+    Ok(req)
+}
+
+fn put_stats(w: &mut ByteWriter, s: &WireStats) {
+    w.u64(s.requests);
+    w.u64(s.errors);
+    w.u64(s.batches);
+    w.f64(s.mean_batch_size);
+    w.f64(s.mean_latency_us);
+    w.u64(s.p50_us);
+    w.u64(s.p99_us);
+    w.usize(s.per_class.len());
+    for c in &s.per_class {
+        w.u8(c.class);
+        w.string(&c.name);
+        w.u64(c.requests);
+        w.f64(c.mean_latency_us);
+        w.u64(c.p50_us);
+        w.u64(c.p99_us);
+    }
+}
+
+fn get_stats(r: &mut ByteReader) -> Result<WireStats> {
+    let requests = r.u64()?;
+    let errors = r.u64()?;
+    let batches = r.u64()?;
+    let mean_batch_size = r.f64()?;
+    let mean_latency_us = r.f64()?;
+    let p50_us = r.u64()?;
+    let p99_us = r.u64()?;
+    let n = r.usize()?;
+    // Each class entry holds at least tag + name length + counters, so
+    // any count claiming more than the remaining bytes could encode is
+    // hostile — reject before reserving capacity.
+    ensure!(
+        n.saturating_mul(41) <= r.remaining(),
+        "net: stats class count {n} exceeds remaining frame bytes"
+    );
+    let mut per_class = Vec::with_capacity(n);
+    for _ in 0..n {
+        per_class.push(WireClassStats {
+            class: r.u8()?,
+            name: r.string()?,
+            requests: r.u64()?,
+            mean_latency_us: r.f64()?,
+            p50_us: r.u64()?,
+            p99_us: r.u64()?,
+        });
+    }
+    Ok(WireStats {
+        requests,
+        errors,
+        batches,
+        mean_batch_size,
+        mean_latency_us,
+        p50_us,
+        p99_us,
+        per_class,
+    })
+}
+
+/// Serialize a response into one wire frame.
+pub fn encode_response(resp: &NetResponse) -> Vec<u8> {
+    let mut p = ByteWriter::new();
+    let tag = match resp {
+        NetResponse::Pong => TAG_PONG,
+        NetResponse::Nn { index, distance, label } => {
+            p.usize(*index);
+            p.f64(*distance);
+            put_opt_i64(&mut p, *label);
+            TAG_NN_RESULT
+        }
+        NetResponse::TopK(hits) => {
+            p.usize(hits.len());
+            for h in hits {
+                p.usize(h.index);
+                p.f64(h.distance);
+                put_opt_i64(&mut p, h.label);
+            }
+            TAG_TOPK_RESULT
+        }
+        NetResponse::Stats(s) => {
+            put_stats(&mut p, s);
+            TAG_STATS_RESULT
+        }
+        NetResponse::ShutdownAck => TAG_SHUTDOWN_ACK,
+        NetResponse::Error(msg) => {
+            p.string(msg);
+            TAG_ERROR
+        }
+    };
+    encode_frame(tag, &p.into_bytes())
+}
+
+/// Deserialize and validate a response payload.
+pub fn decode_response(tag: u8, payload: &[u8]) -> Result<NetResponse> {
+    let mut r = ByteReader::new(payload);
+    let resp = match tag {
+        TAG_PONG => NetResponse::Pong,
+        TAG_NN_RESULT => {
+            let index = r.usize()?;
+            let distance = r.f64()?;
+            let label = get_opt_i64(&mut r)?;
+            NetResponse::Nn { index, distance, label }
+        }
+        TAG_TOPK_RESULT => {
+            let n = r.usize()?;
+            // index + distance + label presence byte = ≥ 17 B per hit
+            ensure!(
+                n.saturating_mul(17) <= r.remaining(),
+                "net: hit count {n} exceeds remaining frame bytes"
+            );
+            let mut hits = Vec::with_capacity(n);
+            for _ in 0..n {
+                let index = r.usize()?;
+                let distance = r.f64()?;
+                let label = get_opt_i64(&mut r)?;
+                hits.push(Hit { index, distance, label });
+            }
+            NetResponse::TopK(hits)
+        }
+        TAG_STATS_RESULT => NetResponse::Stats(get_stats(&mut r)?),
+        TAG_SHUTDOWN_ACK => NetResponse::ShutdownAck,
+        TAG_ERROR => NetResponse::Error(r.string()?),
+        other => bail!("net: unknown response tag {other}"),
+    };
+    ensure!(r.is_exhausted(), "net: trailing bytes in response payload");
+    Ok(resp)
+}
+
+/// Read one frame from a stream. `Ok(None)` means a clean EOF at a
+/// frame boundary (the peer closed between frames). A malformed header
+/// or an over-limit length is an `Err`; the stream can no longer be
+/// assumed frame-synchronized and the caller should drop it.
+pub fn read_frame(r: &mut impl Read, max_frame_bytes: usize) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut header = [0u8; HEADER_BYTES];
+    // Read the first byte separately so EOF at a frame boundary is
+    // distinguishable from a frame torn mid-header.
+    let n = loop {
+        match r.read(&mut header[..1]) {
+            Ok(n) => break n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("net: reading frame header"),
+        }
+    };
+    if n == 0 {
+        return Ok(None);
+    }
+    r.read_exact(&mut header[1..]).context("net: truncated frame header")?;
+    let mut h = ByteReader::new(&header);
+    let magic = h.take(8).expect("header buffer holds the magic");
+    ensure!(
+        magic == &NET_MAGIC[..],
+        "net: bad frame magic {magic:02x?} (not a pqdtw peer?)"
+    );
+    let version = h.u32().expect("header buffer holds the version");
+    ensure!(
+        version == NET_VERSION,
+        "net: unsupported protocol version {version} (this build speaks {NET_VERSION})"
+    );
+    let tag = h.u8().expect("header buffer holds the tag");
+    let len = h.u64().expect("header buffer holds the length");
+    ensure!(
+        len <= max_frame_bytes as u64,
+        "net: frame of {len} bytes exceeds the {max_frame_bytes}-byte limit"
+    );
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("net: truncated frame payload")?;
+    Ok(Some((tag, payload)))
+}
+
+/// Write one pre-encoded frame and flush it.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> std::io::Result<()> {
+    w.write_all(frame)?;
+    w.flush()
+}
+
+/// Decode a request from a complete, exact frame byte buffer (the
+/// hostile-frame sweep drives this; live connections use
+/// [`read_frame`] + [`decode_request`]).
+pub fn decode_request_bytes(bytes: &[u8]) -> Result<NetRequest> {
+    let mut cursor = std::io::Cursor::new(bytes);
+    match read_frame(&mut cursor, MAX_FRAME_BYTES)? {
+        None => bail!("net: empty frame buffer"),
+        Some((tag, payload)) => {
+            ensure!(
+                cursor.position() as usize == bytes.len(),
+                "net: trailing bytes after frame"
+            );
+            decode_request(tag, &payload)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_requests() -> Vec<NetRequest> {
+        vec![
+            NetRequest::Ping,
+            NetRequest::Stats,
+            NetRequest::Shutdown,
+            NetRequest::Nn {
+                series: vec![0.25, -1.5, f64::NAN, 3.0],
+                mode: PqQueryMode::Symmetric,
+                nprobe: Some(4),
+            },
+            NetRequest::TopK {
+                series: vec![1.0; 16],
+                k: 5,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: None,
+                rerank: Some(20),
+            },
+        ]
+    }
+
+    fn sample_responses() -> Vec<NetResponse> {
+        vec![
+            NetResponse::Pong,
+            NetResponse::ShutdownAck,
+            NetResponse::Error("nope".into()),
+            NetResponse::Nn { index: 7, distance: 1.25, label: Some(-3) },
+            NetResponse::TopK(vec![
+                Hit { index: 0, distance: 0.5, label: None },
+                Hit { index: 9, distance: 0.75, label: Some(2) },
+            ]),
+            NetResponse::Stats(WireStats {
+                requests: 10,
+                errors: 1,
+                batches: 4,
+                mean_batch_size: 2.5,
+                mean_latency_us: 120.0,
+                p50_us: 100,
+                p99_us: 1000,
+                per_class: vec![WireClassStats {
+                    class: 3,
+                    name: "topk_exhaustive".into(),
+                    requests: 10,
+                    mean_latency_us: 120.0,
+                    p50_us: 100,
+                    p99_us: 1000,
+                }],
+            }),
+        ]
+    }
+
+    fn roundtrip_request(req: &NetRequest) -> NetRequest {
+        decode_request_bytes(&encode_request(req)).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrip_is_exact() {
+        for req in sample_requests() {
+            let back = roundtrip_request(&req);
+            // NaN breaks PartialEq; compare the NaN-carrying request by
+            // bit pattern instead.
+            if let (
+                NetRequest::Nn { series: a, .. },
+                NetRequest::Nn { series: b, .. },
+            ) = (&req, &back)
+            {
+                let a: Vec<u64> = a.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u64> = b.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b);
+            } else {
+                assert_eq!(req, back);
+            }
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_is_exact() {
+        for resp in sample_responses() {
+            let frame = encode_response(&resp);
+            let mut cursor = std::io::Cursor::new(&frame[..]);
+            let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+            assert_eq!(decode_response(tag, &payload).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_torn_header_is_err() {
+        let mut empty: &[u8] = &[];
+        assert!(read_frame(&mut empty, MAX_FRAME_BYTES).unwrap().is_none());
+        let frame = encode_request(&NetRequest::Ping);
+        let mut torn = &frame[..HEADER_BYTES - 3];
+        assert!(read_frame(&mut torn, MAX_FRAME_BYTES).is_err());
+    }
+
+    #[test]
+    fn bad_magic_version_tag_and_length_are_rejected() {
+        let good = encode_request(&NetRequest::Ping);
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(decode_request_bytes(&bad_magic).is_err());
+
+        let mut bad_version = good.clone();
+        bad_version[8..12].copy_from_slice(&999u32.to_le_bytes());
+        let err = decode_request_bytes(&bad_version).unwrap_err().to_string();
+        assert!(err.contains("version 999"), "{err}");
+
+        let mut bad_tag = good.clone();
+        bad_tag[12] = 200;
+        assert!(decode_request_bytes(&bad_tag).is_err());
+
+        // A u64::MAX length claim must be rejected by the frame-size
+        // limit before any allocation happens.
+        let mut huge_len = good;
+        huge_len[13..21].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode_request_bytes(&huge_len).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn over_limit_query_length_is_rejected() {
+        // Forge a TopK payload claiming MAX_QUERY_LEN + 1 samples. The
+        // byte-level count check fires first (the frame cannot back the
+        // claim), which is exactly the no-unbounded-allocation property.
+        let mut p = ByteWriter::new();
+        p.usize(3); // k
+        p.u8(1); // asymmetric
+        p.u8(0); // nprobe: None
+        p.u8(0); // rerank: None
+        p.usize(MAX_QUERY_LEN + 1); // series length prefix, no data
+        let frame = encode_frame(TAG_TOPK, &p.into_bytes());
+        assert!(decode_request_bytes(&frame).is_err());
+    }
+
+    #[test]
+    fn empty_query_and_zero_k_are_rejected() {
+        let mut p = ByteWriter::new();
+        p.u8(0); // symmetric
+        p.u8(0); // nprobe: None
+        p.usize(0); // empty series
+        let frame = encode_frame(TAG_NN, &p.into_bytes());
+        assert!(decode_request_bytes(&frame).is_err());
+
+        let mut p = ByteWriter::new();
+        p.usize(0); // k = 0
+        p.u8(0);
+        p.u8(0);
+        p.u8(0);
+        p.usize(0);
+        let frame = encode_frame(TAG_TOPK, &p.into_bytes());
+        assert!(decode_request_bytes(&frame).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut frame = encode_request(&NetRequest::Ping);
+        frame.push(0);
+        assert!(decode_request_bytes(&frame).is_err());
+    }
+
+    #[test]
+    fn hostile_sweep_never_panics_or_overallocates() {
+        // Every prefix truncation and every single-byte flip of a valid
+        // request frame must decode to Err or to some in-limit request —
+        // never panic, never allocate beyond the frame limit. (A payload
+        // flip can legitimately decode to a *different* valid request;
+        // TCP checksums own in-transit integrity.)
+        let good = encode_request(&NetRequest::TopK {
+            series: vec![0.5; 24],
+            k: 3,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: Some(2),
+            rerank: Some(9),
+        });
+        for n in 0..good.len() {
+            let _ = decode_request_bytes(&good[..n]);
+        }
+        for i in 0..good.len() {
+            for bit in [0x01u8, 0x40, 0x80] {
+                let mut bad = good.clone();
+                bad[i] ^= bit;
+                if let Ok(req) = decode_request_bytes(&bad) {
+                    match req {
+                        NetRequest::Nn { series, .. }
+                        | NetRequest::TopK { series, .. } => {
+                            assert!(series.len() <= MAX_QUERY_LEN)
+                        }
+                        NetRequest::Ping | NetRequest::Stats | NetRequest::Shutdown => {}
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn response_sweep_never_panics() {
+        for resp in sample_responses() {
+            let good = encode_response(&resp);
+            for n in 0..good.len() {
+                let mut cursor = std::io::Cursor::new(&good[..n]);
+                if let Ok(Some((tag, payload))) = read_frame(&mut cursor, MAX_FRAME_BYTES) {
+                    let _ = decode_response(tag, &payload);
+                }
+            }
+            for i in 0..good.len() {
+                let mut bad = good.clone();
+                bad[i] ^= 0x40;
+                let mut cursor = std::io::Cursor::new(&bad[..]);
+                if let Ok(Some((tag, payload))) = read_frame(&mut cursor, MAX_FRAME_BYTES) {
+                    let _ = decode_response(tag, &payload);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_stats_and_hit_counts_are_rejected_without_allocating() {
+        let mut p = ByteWriter::new();
+        p.usize(usize::MAX); // hit count
+        let frame = encode_frame(TAG_TOPK_RESULT, &p.into_bytes());
+        let mut cursor = std::io::Cursor::new(&frame[..]);
+        let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+        assert!(decode_response(tag, &payload).is_err());
+
+        let mut p = ByteWriter::new();
+        for _ in 0..7 {
+            p.u64(0); // counters through p99
+        }
+        p.usize(1 << 60); // class count
+        let frame = encode_frame(TAG_STATS_RESULT, &p.into_bytes());
+        let mut cursor = std::io::Cursor::new(&frame[..]);
+        let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+        assert!(decode_response(tag, &payload).is_err());
+    }
+}

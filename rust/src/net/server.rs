@@ -1,0 +1,432 @@
+//! The TCP serving plane: an accept loop feeding per-connection reader
+//! threads into the shared [`Service`], so concurrent clients get
+//! cross-connection dynamic batching for free.
+//!
+//! Std-only by design (`std::net` + threads; no tokio — see
+//! `docs/DESIGN.md` §3). Each connection runs a reader thread (frames
+//! in, requests submitted to the service) and a writer thread (replies
+//! out, in request order); a bounded channel between them caps the
+//! pipelined in-flight requests per connection, giving natural
+//! backpressure. Hostile input never kills the process: malformed
+//! payloads get an error frame on a still-synchronized stream, torn or
+//! over-limit headers get a best-effort error frame and a disconnect.
+//!
+//! Shutdown is a drain: a `Shutdown` frame (or [`NetServer::shutdown`])
+//! stops the accept loop, half-closes every connection's read side so
+//! in-flight requests still get their replies, and joins every thread.
+
+use std::collections::HashMap;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{MetricsSnapshot, Request, RequestClass, Response, Service};
+
+use super::protocol::{self, NetRequest, NetResponse, WireClassStats, WireStats};
+
+/// Serving-plane limits.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Maximum concurrent client connections; excess connects receive
+    /// an error frame and are closed.
+    pub max_connections: usize,
+    /// Per-frame payload ceiling for incoming requests.
+    pub max_frame_bytes: usize,
+    /// Maximum pipelined requests in flight per connection; the reader
+    /// blocks (TCP backpressure) once the writer is this far behind.
+    pub max_in_flight: usize,
+    /// Write timeout per response frame, bounding how long a drained
+    /// shutdown can be held up by a client that stops reading.
+    pub write_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_connections: 64,
+            max_frame_bytes: protocol::MAX_FRAME_BYTES,
+            max_in_flight: 32,
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Shared {
+    service: Arc<Service>,
+    cfg: ServerConfig,
+    local_addr: SocketAddr,
+    stop: AtomicBool,
+    active: AtomicUsize,
+    next_conn: AtomicU64,
+    /// Stream clones per live connection, so shutdown can half-close
+    /// their read sides and unblock the reader threads.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+    done: (Mutex<bool>, Condvar),
+}
+
+impl Shared {
+    /// Begin the drain exactly once: stop accepting, wake the accept
+    /// loop, half-close every connection's read side (their writers
+    /// still flush in-flight replies), and release [`NetServer::wait`].
+    fn trigger(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the accept loop with a throwaway connection to ourselves.
+        let mut wake = self.local_addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        for stream in self.conns.lock().unwrap().values() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        let (lock, cv) = &self.done;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+}
+
+/// A running TCP server over a [`Service`]. Dropping it (or calling
+/// [`NetServer::shutdown`]) drains connections and joins every thread.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections over the shared service.
+    pub fn start(addr: &str, service: Arc<Service>, cfg: ServerConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("net: binding {addr}"))?;
+        let local_addr = listener.local_addr().context("net: reading bound address")?;
+        let shared = Arc::new(Shared {
+            service,
+            cfg,
+            local_addr,
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            next_conn: AtomicU64::new(0),
+            conns: Mutex::new(HashMap::new()),
+            conn_threads: Mutex::new(Vec::new()),
+            done: (Mutex::new(false), Condvar::new()),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(NetServer { shared, accept_thread: Some(accept_thread) })
+    }
+
+    /// The address the server actually bound (resolves `:0` ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    /// Live client connections right now.
+    pub fn active_connections(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// Block until a client's `Shutdown` frame stops the server, then
+    /// drain and join every thread.
+    pub fn wait(mut self) {
+        {
+            let (lock, cv) = &self.shared.done;
+            let mut done = lock.lock().unwrap();
+            while !*done {
+                done = cv.wait(done).unwrap();
+            }
+        }
+        self.finish();
+    }
+
+    /// Stop the server from this side: drain connections, join threads.
+    pub fn shutdown(mut self) {
+        self.shared.trigger();
+        self.finish();
+    }
+
+    fn finish(&mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.shared.conn_threads.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shared.trigger();
+        self.finish();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                // Accept failures can be persistent (e.g. EMFILE when
+                // the fd limit is hit); back off briefly instead of
+                // busy-spinning the accept thread. `stop` is re-checked
+                // at the top of the next pass.
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+        if shared.active.load(Ordering::SeqCst) >= shared.cfg.max_connections {
+            let mut stream = stream;
+            let frame = protocol::encode_response(&NetResponse::Error(format!(
+                "server at its {}-connection capacity",
+                shared.cfg.max_connections
+            )));
+            let _ = protocol::write_frame(&mut stream, &frame);
+            let _ = stream.shutdown(Shutdown::Both);
+            continue;
+        }
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        let id = shared.next_conn.fetch_add(1, Ordering::SeqCst);
+        {
+            // Register under the conns lock so a concurrent `trigger`
+            // either sees this connection (and half-closes it) or its
+            // `stop` store is visible here (and we half-close it
+            // ourselves) — never neither, which would leave the reader
+            // thread blocked forever and hang the shutdown joins.
+            let mut conns = shared.conns.lock().unwrap();
+            if let Ok(clone) = stream.try_clone() {
+                conns.insert(id, clone);
+            }
+            if shared.stop.load(Ordering::SeqCst) {
+                let _ = stream.shutdown(Shutdown::Read);
+            }
+        }
+        let conn_shared = Arc::clone(&shared);
+        let handle = std::thread::spawn(move || handle_connection(stream, id, conn_shared));
+        let mut threads = shared.conn_threads.lock().unwrap();
+        // Compact handles of connections that already finished (joining
+        // a finished thread is instant, but the Vec should not grow
+        // with the connection churn of a long-lived server).
+        threads.retain(|t| !t.is_finished());
+        threads.push(handle);
+    }
+}
+
+/// One queued reply on a connection: either already materialized at the
+/// net layer (ping/stats/errors) or pending from a service worker.
+enum Outgoing {
+    Ready(NetResponse),
+    Pending(mpsc::Receiver<Response>),
+}
+
+fn handle_connection(stream: TcpStream, id: u64, shared: Arc<Shared>) {
+    let saw_shutdown = serve_connection(&stream, &shared);
+    shared.conns.lock().unwrap().remove(&id);
+    shared.active.fetch_sub(1, Ordering::SeqCst);
+    let _ = stream.shutdown(Shutdown::Both);
+    if saw_shutdown {
+        // Trigger *after* the writer flushed the ShutdownAck, and from
+        // this thread (trigger never joins, so no self-join deadlock).
+        shared.trigger();
+    }
+}
+
+/// Reader half of a connection; returns whether a `Shutdown` frame was
+/// served (the caller then triggers the server-wide drain).
+fn serve_connection(stream: &TcpStream, shared: &Shared) -> bool {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    let (tx, rx) = mpsc::sync_channel::<Outgoing>(shared.cfg.max_in_flight.max(1));
+    let writer = std::thread::spawn(move || write_loop(writer_stream, rx));
+    let mut saw_shutdown = false;
+    loop {
+        match protocol::read_frame(&mut reader, shared.cfg.max_frame_bytes) {
+            Ok(None) => break, // client closed between frames
+            Ok(Some((tag, payload))) => match protocol::decode_request(tag, &payload) {
+                Ok(req) => {
+                    saw_shutdown = matches!(req, NetRequest::Shutdown);
+                    let out = dispatch(req, shared);
+                    if tx.send(out).is_err() || saw_shutdown {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    // The payload was length-delimited and fully read,
+                    // so the stream is still frame-synchronized: report
+                    // and keep serving this connection.
+                    let out = Outgoing::Ready(NetResponse::Error(format!("{e:#}")));
+                    if tx.send(out).is_err() {
+                        break;
+                    }
+                }
+            },
+            Err(e) => {
+                // Torn header, bad magic/version, or over-limit length:
+                // the stream can no longer be trusted to be on a frame
+                // boundary. Best-effort error frame, then disconnect.
+                let _ = tx.send(Outgoing::Ready(NetResponse::Error(format!("{e:#}"))));
+                drain_best_effort(&mut reader);
+                break;
+            }
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+    saw_shutdown
+}
+
+/// Bounded best-effort drain after a framing error: consuming what the
+/// peer already sent lets the close that follows end with FIN instead
+/// of RST (an RST while an oversized payload sits unread could destroy
+/// the error frame in the peer's receive buffer before it reads it).
+/// Both the byte cap and the read timeout keep a hostile peer from
+/// holding the connection open.
+fn drain_best_effort(stream: &mut TcpStream) {
+    use std::io::Read;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut scratch = [0u8; 4096];
+    let mut drained = 0usize;
+    while drained < 256 * 1024 {
+        match stream.read(&mut scratch) {
+            Ok(0) => break,
+            Ok(n) => drained += n,
+            Err(_) => break,
+        }
+    }
+}
+
+/// Map one decoded request to its (possibly pending) reply, recording
+/// net-plane classes into the shared metrics sink. Engine-bound
+/// requests are metered by the service workers themselves.
+fn dispatch(req: NetRequest, shared: &Shared) -> Outgoing {
+    match req {
+        NetRequest::Ping => {
+            shared.service.record_external(RequestClass::Ping, 0, false);
+            Outgoing::Ready(NetResponse::Pong)
+        }
+        NetRequest::Stats => {
+            let t0 = Instant::now();
+            let stats = wire_stats(&shared.service.metrics());
+            shared.service.record_external(
+                RequestClass::Stats,
+                t0.elapsed().as_micros() as u64,
+                false,
+            );
+            Outgoing::Ready(NetResponse::Stats(stats))
+        }
+        NetRequest::Shutdown => Outgoing::Ready(NetResponse::ShutdownAck),
+        NetRequest::Nn { series, mode, nprobe } => {
+            submit(shared, Request::NnQuery { series, mode, nprobe })
+        }
+        NetRequest::TopK { series, k, mode, nprobe, rerank } => {
+            submit(shared, Request::TopKQuery { series, k, mode, nprobe, rerank })
+        }
+    }
+}
+
+fn submit(shared: &Shared, req: Request) -> Outgoing {
+    match shared.service.submit(req) {
+        Some(rx) => Outgoing::Pending(rx),
+        None => Outgoing::Ready(NetResponse::Error("service closed".into())),
+    }
+}
+
+/// Writer half of a connection: replies go out strictly in request
+/// order, draining whatever is still queued when the reader stops.
+fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
+    while let Ok(out) = rx.recv() {
+        let resp = match out {
+            Outgoing::Ready(resp) => resp,
+            Outgoing::Pending(reply) => match reply.recv() {
+                Ok(resp) => engine_to_net(resp),
+                Err(_) => NetResponse::Error("worker dropped request".into()),
+            },
+        };
+        let frame = protocol::encode_response(&resp);
+        if protocol::write_frame(&mut stream, &frame).is_err() {
+            break; // client gone; reader notices via the closed channel
+        }
+    }
+}
+
+fn engine_to_net(resp: Response) -> NetResponse {
+    match resp {
+        Response::Nn { index, distance, label } => NetResponse::Nn { index, distance, label },
+        Response::TopK(hits) => NetResponse::TopK(hits),
+        Response::Error(msg) => NetResponse::Error(msg),
+        // The wire vocabulary deliberately has no encode/pair-dist
+        // verbs, so the engine cannot produce these for a net request.
+        Response::Codes(_) | Response::Dist(_) => {
+            NetResponse::Error("unexpected engine response".into())
+        }
+    }
+}
+
+/// Project a [`MetricsSnapshot`] onto the wire stats frame.
+pub fn wire_stats(m: &MetricsSnapshot) -> WireStats {
+    WireStats {
+        requests: m.requests,
+        errors: m.errors,
+        batches: m.batches,
+        mean_batch_size: m.mean_batch_size,
+        mean_latency_us: m.mean_latency_us,
+        p50_us: m.percentile_us(0.5),
+        p99_us: m.percentile_us(0.99),
+        per_class: m
+            .per_class
+            .iter()
+            .enumerate()
+            .map(|(i, c)| WireClassStats {
+                class: i as u8,
+                name: c.class.name().to_string(),
+                requests: c.requests,
+                mean_latency_us: c.mean_latency_us,
+                p50_us: c.p50_us,
+                p99_us: c.p99_us,
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+
+    #[test]
+    fn wire_stats_projects_every_class() {
+        let m = Metrics::new();
+        m.record_request(RequestClass::TopKProbed, 120, false);
+        m.record_request(RequestClass::Ping, 1, false);
+        let s = wire_stats(&m.snapshot());
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.per_class.len(), crate::coordinator::metrics::N_REQUEST_CLASSES);
+        let probed = s.per_class.iter().find(|c| c.name == "topk_probed").unwrap();
+        assert_eq!(probed.requests, 1);
+        assert!(probed.p50_us >= 100);
+        let ping = s.per_class.iter().find(|c| c.name == "ping").unwrap();
+        assert_eq!(ping.requests, 1);
+    }
+}
