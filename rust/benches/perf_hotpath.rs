@@ -19,7 +19,9 @@ use pqdtw::distance::pruned_dtw::pruned_dtw_sq;
 use pqdtw::eval::report::median;
 use pqdtw::nn::ivf::{CoarseMetric, IvfIndex};
 use pqdtw::nn::knn::PqQueryMode;
-use pqdtw::nn::topk::{rerank_dtw, topk_scan_with, QueryLut};
+use pqdtw::nn::topk::{
+    rerank_dtw, topk_scan_blocked_opts, topk_scan_scalar, topk_scan_with, QueryLut,
+};
 use pqdtw::pq::distance::{asymmetric_sq, asymmetric_table, symmetric_sq};
 use pqdtw::pq::quantizer::{PqConfig, ProductQuantizer};
 
@@ -170,40 +172,76 @@ fn main() {
         let enc = pq.encode_dataset(&db);
         println!("  (one-time train+encode: {:?})", t0.elapsed());
         let t0 = Instant::now();
-        let ivf = IvfIndex::build(&db, 64, CoarseMetric::Euclidean, 7);
+        let blocks = enc.to_blocks(pq.codebook.k);
+        println!("  (one-time code-block transpose: {:?})", t0.elapsed());
+        let t0 = Instant::now();
+        let mut ivf = IvfIndex::build(&db, 64, CoarseMetric::Euclidean, 7);
+        ivf.attach_blocks(&enc, pq.codebook.k);
         println!("  (one-time IVF build, nlist=64 ED-coarse: {:?})", t0.elapsed());
 
         let q = RandomWalks::new(4242).generate(1, len);
         let q = q.row(0);
         let lut = QueryLut::build(&pq, q, PqQueryMode::Asymmetric);
+        let clut = lut.collapse(&pq.codebook);
 
         let nprobe = 4;
-        // correctness guard before timing: full probe == exhaustive
+        // correctness guards before timing: every variant bit-identical
+        let want = topk_scan_scalar(&pq, &enc, &lut, k);
         assert_eq!(
-            topk_scan_with(&pq, &enc, &lut, k, 1),
+            want,
+            topk_scan_blocked_opts(&blocks, &clut, k, 1, false),
+            "blocked scan must be bit-identical to the scalar scan"
+        );
+        assert_eq!(
+            want,
+            topk_scan_blocked_opts(&blocks, &clut, k, 1, true),
+            "pruned scan must be bit-identical to the scalar scan"
+        );
+        assert_eq!(
+            want,
             ivf.query_topk_with(&pq, &enc, &lut, q, k, ivf.nlist()),
             "full probe must be bit-identical to the exhaustive scan"
         );
 
+        // the scan-kernel ladder: scalar -> blocked -> blocked+pruned
+        let t_scalar = bench(31, || {
+            std::hint::black_box(topk_scan_scalar(&pq, &enc, &lut, k));
+        });
+        let t_blocked = bench(31, || {
+            std::hint::black_box(topk_scan_blocked_opts(&blocks, &clut, k, 1, false));
+        });
         let t_exh = bench(31, || {
-            std::hint::black_box(topk_scan_with(&pq, &enc, &lut, k, 1));
+            std::hint::black_box(topk_scan_blocked_opts(&blocks, &clut, k, 1, true));
         });
         let t_exh4 = bench(31, || {
-            std::hint::black_box(topk_scan_with(&pq, &enc, &lut, k, 4));
+            std::hint::black_box(topk_scan_blocked_opts(&blocks, &clut, k, 4, true));
         });
         let t_probe = bench(31, || {
             std::hint::black_box(ivf.query_topk_with(&pq, &enc, &lut, q, k, nprobe));
         });
         let frac = ivf.scan_fraction(q, nprobe);
         println!(
-            "  exhaustive scan, 1 thread : {:9.1} µs",
-            t_exh * 1e6
+            "  scalar scan (full LUT)    : {:9.1} µs",
+            t_scalar * 1e6
         );
         println!(
-            "  exhaustive scan, 4 threads: {:9.1} µs (x{:.2} vs 1 thread)",
+            "  blocked scan, no pruning  : {:9.1} µs (x{:.2} vs scalar)",
+            t_blocked * 1e6,
+            t_scalar / t_blocked
+        );
+        println!(
+            "  blocked+pruned, 1 thread  : {:9.1} µs (x{:.2} vs scalar)",
+            t_exh * 1e6,
+            t_scalar / t_exh
+        );
+        println!(
+            "  blocked+pruned, 4 threads : {:9.1} µs (x{:.2} vs 1 thread)",
             t_exh4 * 1e6,
             t_exh / t_exh4
         );
+        if t_exh >= t_scalar {
+            println!("  WARNING: blocked+pruned scan did not beat the scalar scan");
+        }
         println!(
             "  IVF probe nprobe={nprobe}/{}   : {:9.1} µs (x{:.2} vs exhaustive, scans {:.1}% of db)",
             ivf.nlist(),
@@ -214,10 +252,12 @@ fn main() {
         if t_probe >= t_exh {
             println!("  WARNING: probed scan did not beat the exhaustive scan");
         }
-        // end-to-end latency including the per-query table build
+        // end-to-end latency including the per-query table build +
+        // collapse (the engine's actual serving path over cached blocks)
         let t_exh_total = bench(31, || {
             let lut = QueryLut::build(&pq, q, PqQueryMode::Asymmetric);
-            std::hint::black_box(topk_scan_with(&pq, &enc, &lut, k, 1));
+            let clut = lut.collapse(&pq.codebook);
+            std::hint::black_box(topk_scan_blocked_opts(&blocks, &clut, k, 1, true));
         });
         let t_probe_total = bench(31, || {
             let lut = QueryLut::build(&pq, q, PqQueryMode::Asymmetric);

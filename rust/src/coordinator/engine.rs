@@ -4,8 +4,10 @@
 //!
 //! Serving modes for NN queries form a recall/latency dial:
 //!
-//! - **exhaustive** — scan every PQ code (optionally sharded over
-//!   `scan_threads` std threads); exact w.r.t. the PQ approximation.
+//! - **exhaustive** — scan every PQ code through the blocked kernel
+//!   (query-collapsed LUT + segment-major blocks + pruning cascade,
+//!   `docs/DESIGN.md` §6; optionally sharded over `scan_threads` std
+//!   threads); exact w.r.t. the PQ approximation.
 //! - **IVF-probed** — scan only the `nprobe` nearest coarse cells;
 //!   `nprobe = nlist` is bit-identical to the exhaustive scan, smaller
 //!   `nprobe` trades recall for latency.
@@ -20,7 +22,8 @@ use anyhow::Result;
 use crate::core::series::Dataset;
 use crate::nn::ivf::{CoarseMetric, IvfIndex};
 use crate::nn::knn::PqQueryMode;
-use crate::nn::topk::{rerank_dtw, topk_scan_with, Neighbor, QueryLut};
+use crate::nn::topk::{rerank_dtw, topk_scan_blocked, Neighbor, QueryLut};
+use crate::pq::encode::CodeBlocks;
 use crate::pq::quantizer::{EncodedDataset, PqConfig, ProductQuantizer};
 
 use super::metrics::RequestClass;
@@ -132,6 +135,10 @@ pub struct Engine {
     pub ivf: Option<IvfIndex>,
     /// Number of database items.
     pub n_items: usize,
+    /// Blocked segment-major copy of the codes for the scan kernel —
+    /// derived from `encoded` on build/open, never persisted
+    /// (`docs/DESIGN.md` §6).
+    blocks: CodeBlocks,
     /// Threads used for exhaustive top-k scans (1 = sequential).
     scan_threads: usize,
 }
@@ -142,20 +149,25 @@ impl Engine {
     pub fn build(db: &Dataset, cfg: &PqConfig, seed: u64) -> Result<Self> {
         let pq = ProductQuantizer::train(db, cfg, seed)?;
         let encoded = pq.encode_dataset(db);
+        let blocks = encoded.to_blocks(pq.codebook.k);
         Ok(Engine {
             pq,
             encoded,
             raw: db.clone(),
             ivf: None,
             n_items: db.n_series(),
+            blocks,
             scan_threads: 1,
         })
     }
 
     /// Build an IVF index with `nlist` coarse cells over the retained
-    /// raw database, enabling `nprobe` requests.
+    /// raw database, enabling `nprobe` requests. The blocked code copy
+    /// for the kernel probe path is attached immediately.
     pub fn enable_ivf(&mut self, nlist: usize, metric: CoarseMetric, seed: u64) {
-        self.ivf = Some(IvfIndex::build(&self.raw, nlist, metric, seed));
+        let mut ivf = IvfIndex::build(&self.raw, nlist, metric, seed);
+        ivf.attach_blocks(&self.encoded, self.pq.codebook.k);
+        self.ivf = Some(ivf);
     }
 
     /// Persist the full serving state — quantizer, encoded database,
@@ -168,16 +180,24 @@ impl Engine {
     /// Reopen a saved index without retraining. The loaded engine
     /// answers every request bit-identically to the engine that was
     /// saved (scan threads reset to 1 — call
-    /// [`Engine::set_scan_threads`] to re-shard).
+    /// [`Engine::set_scan_threads`] to re-shard). The kernel's blocked
+    /// code layouts are derived state and rebuilt here from the
+    /// persisted row-major codes — the on-disk format is unchanged.
     pub fn open(path: &Path) -> Result<Self> {
         let idx = crate::store::load_index(path)?;
         let n_items = idx.encoded.n();
+        let blocks = idx.encoded.to_blocks(idx.pq.codebook.k);
+        let mut ivf = idx.ivf;
+        if let Some(ivf) = ivf.as_mut() {
+            ivf.attach_blocks(&idx.encoded, idx.pq.codebook.k);
+        }
         Ok(Engine {
             pq: idx.pq,
             encoded: idx.encoded,
             raw: idx.raw,
-            ivf: idx.ivf,
+            ivf,
             n_items,
+            blocks,
             scan_threads: 1,
         })
     }
@@ -222,7 +242,10 @@ impl Engine {
                     "nprobe set but the engine has no IVF index (call enable_ivf)".into(),
                 )),
             },
-            None => Ok(topk_scan_with(&self.pq, &self.encoded, lut, k, self.scan_threads)),
+            None => {
+                let clut = lut.collapse(&self.pq.codebook);
+                Ok(topk_scan_blocked(&self.blocks, &clut, k, self.scan_threads))
+            }
         }
     }
 

@@ -15,6 +15,7 @@
 //!   pqdtw stats --connect 127.0.0.1:7447
 //!   pqdtw shutdown --connect 127.0.0.1:7447
 //!   pqdtw topk --index rw.pqx --dataset RandomWalk-4096x128 --nlist 32 --verify
+//!   pqdtw bench-scan --json --out BENCH_scan.json
 //!   pqdtw info --index rw.pqx
 //!
 //! The build-once / serve-many split: `build-index` trains, encodes and
@@ -80,6 +81,13 @@ const SPECS: &[CommandSpec] = &[
         ),
     },
     CommandSpec { name: "build-index", flags: pq_flags!("out", "nlist", "coarse") },
+    CommandSpec {
+        name: "bench-scan",
+        flags: &[
+            "n", "len", "seed", "subspaces", "codebook", "topk", "reps", "threads", "json",
+            "out",
+        ],
+    },
     CommandSpec { name: "stats", flags: &["connect"] },
     CommandSpec { name: "shutdown", flags: &["connect"] },
     CommandSpec { name: "selftest", flags: &["seed"] },
@@ -387,6 +395,141 @@ fn cmd_build_index(a: &Args) -> Result<()> {
     let t0 = Instant::now();
     let _reopened = Engine::open(Path::new(&out))?;
     println!("reopen time : {:?} (vs {build_t:?} to rebuild from scratch)", t0.elapsed());
+    Ok(())
+}
+
+/// Scan-kernel benchmark: scalar vs blocked vs blocked+pruned top-k
+/// scans over a RandomWalk database, in both query modes, with a
+/// machine-readable `--json` output (optionally written to `--out`) so
+/// CI can archive the perf trajectory as `BENCH_scan.json`. Results are
+/// correctness-guarded: every blocked variant is asserted bit-identical
+/// to the scalar reference before anything is timed.
+fn cmd_bench_scan(a: &Args) -> Result<()> {
+    use pqdtw::nn::topk::{topk_scan_blocked_opts, topk_scan_scalar, QueryLut};
+
+    let n: usize = a.get_parsed("n", 16_384usize);
+    let len: usize = a.get_parsed("len", 64usize);
+    let k: usize = a.get_parsed("topk", 10usize).max(1);
+    let reps: usize = a.get_parsed("reps", 21usize).max(1);
+    let threads: usize = a.get_parsed("threads", 4usize).max(1);
+    let seed = a.get_parsed("seed", 97u64);
+    ensure!(n >= 64 && len >= 16, "bench-scan needs --n >= 64 and --len >= 16");
+    let db = RandomWalks::new(seed).generate(n, len);
+    let cfg = PqConfig {
+        n_subspaces: a.get_parsed("subspaces", 4usize),
+        codebook_size: a.get_parsed("codebook", 32usize),
+        window_frac: 0.1,
+        kmeans_iters: 2,
+        dba_iters: 1,
+        train_subsample: Some(64.min(n)),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let pq = ProductQuantizer::train(&db, &cfg, seed)?;
+    let enc = pq.encode_dataset(&db);
+    let blocks = enc.to_blocks(pq.codebook.k);
+    let setup = t0.elapsed();
+    let queries = RandomWalks::new(seed ^ 0xB1_0C55).generate(1, len);
+    let q = queries.row(0);
+
+    fn median_us(reps: usize, mut f: impl FnMut()) -> f64 {
+        f(); // warmup
+        let mut ts: Vec<f64> = (0..reps)
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed().as_secs_f64() * 1e6
+            })
+            .collect();
+        ts.sort_by(f64::total_cmp);
+        ts[ts.len() / 2]
+    }
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for (mode_name, mode) in [
+        ("symmetric", PqQueryMode::Symmetric),
+        ("asymmetric", PqQueryMode::Asymmetric),
+    ] {
+        let lut = QueryLut::build(&pq, q, mode);
+        let clut = lut.collapse(&pq.codebook);
+        let want = topk_scan_scalar(&pq, &enc, &lut, k);
+        for (variant, th, prune) in
+            [("blocked", 1usize, false), ("pruned", 1, true), ("pruned_mt", threads, true)]
+        {
+            let got = topk_scan_blocked_opts(&blocks, &clut, k, th, prune);
+            ensure!(
+                got == want,
+                "{variant} scan diverged from the scalar reference ({mode_name})"
+            );
+        }
+        results.push((
+            format!("scalar_{mode_name}"),
+            median_us(reps, || {
+                std::hint::black_box(topk_scan_scalar(&pq, &enc, &lut, k));
+            }),
+        ));
+        results.push((
+            format!("blocked_{mode_name}"),
+            median_us(reps, || {
+                std::hint::black_box(topk_scan_blocked_opts(&blocks, &clut, k, 1, false));
+            }),
+        ));
+        results.push((
+            format!("blocked_pruned_{mode_name}"),
+            median_us(reps, || {
+                std::hint::black_box(topk_scan_blocked_opts(&blocks, &clut, k, 1, true));
+            }),
+        ));
+        results.push((
+            format!("blocked_pruned_{threads}threads_{mode_name}"),
+            median_us(reps, || {
+                std::hint::black_box(topk_scan_blocked_opts(&blocks, &clut, k, threads, true));
+            }),
+        ));
+    }
+
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"scan\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n},\n  \"len\": {len},\n  \"m\": {},\n  \"k\": {},\n  \"topk\": {k},\n",
+        cfg.n_subspaces, pq.codebook.k
+    ));
+    json.push_str(&format!(
+        "  \"block\": {},\n  \"u8_lanes\": {},\n  \"reps\": {reps},\n",
+        pqdtw::pq::SCAN_BLOCK,
+        blocks.uses_u8()
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, (name, us)) in results.iter().enumerate() {
+        let sep = if i + 1 < results.len() { "," } else { "" };
+        json.push_str(&format!("    {{\"name\": \"{name}\", \"us\": {us:.3}}}{sep}\n"));
+    }
+    json.push_str("  ]\n}\n");
+
+    if let Some(out) = a.flags.get("out") {
+        std::fs::write(out, &json).with_context(|| format!("writing --out {out}"))?;
+        println!("wrote {out}");
+    }
+    if a.has("json") {
+        println!("{json}");
+    } else {
+        println!("scan kernel bench: N={n} len={len} M={} K={} top-{k} (medians of {reps})",
+            cfg.n_subspaces, pq.codebook.k);
+        println!("(one-time train+encode+transpose: {setup:?})");
+        for (name, us) in &results {
+            println!("  {name:<32} {us:10.1} µs");
+        }
+        for mode_name in ["symmetric", "asymmetric"] {
+            let scalar_name = format!("scalar_{mode_name}");
+            let pruned_name = format!("blocked_pruned_{mode_name}");
+            let find = |want: &String| {
+                results.iter().find(|(name, _)| name == want).map(|(_, us)| *us)
+            };
+            if let (Some(s), Some(p)) = (find(&scalar_name), find(&pruned_name)) {
+                println!("  speedup blocked+pruned vs scalar ({mode_name}): x{:.2}", s / p);
+            }
+        }
+    }
     Ok(())
 }
 
@@ -870,6 +1013,7 @@ fn main() -> Result<()> {
         "topk" => cmd_topk(&args),
         "cluster" => cmd_cluster(&args),
         "build-index" => cmd_build_index(&args),
+        "bench-scan" => cmd_bench_scan(&args),
         "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
         "shutdown" => cmd_shutdown(&args),

@@ -22,11 +22,12 @@ use crate::core::rng::Rng;
 use crate::core::series::Dataset;
 use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
 use crate::distance::euclidean::euclidean_sq;
+use crate::pq::encode::CodeBlocks;
 use crate::pq::kmeans::{kmeans, KmeansGeometry};
 use crate::pq::quantizer::{EncodedDataset, ProductQuantizer};
 
 use super::knn::PqQueryMode;
-use super::topk::{Neighbor, QueryLut, TopKCollector};
+use super::topk::{scan_blocks_into, Neighbor, QueryLut, TopKCollector};
 
 /// Distance used for coarse clustering and cell probing.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -44,6 +45,13 @@ pub enum CoarseMetric {
 }
 
 /// An inverted-file index over PQ-encoded series.
+///
+/// Posting lists are stored flattened in CSR form — one offsets array
+/// plus one flat id array — so probing walks contiguous memory instead
+/// of chasing one heap allocation per list. When the blocked code copy
+/// is attached ([`IvfIndex::attach_blocks`]), probed cells are scanned
+/// through the same kernel as the exhaustive path, pruning cascade
+/// included.
 pub struct IvfIndex {
     /// Coarse centroids, flat `nlist × D`.
     coarse: Vec<f64>,
@@ -51,14 +59,23 @@ pub struct IvfIndex {
     dim: usize,
     /// Coarse assignment/probe metric.
     metric: CoarseMetric,
-    /// Member ids per inverted list.
-    lists: Vec<Vec<usize>>,
+    /// CSR offsets: list `c` owns `list_ids[list_offsets[c]..list_offsets[c + 1]]`.
+    list_offsets: Vec<usize>,
+    /// Member ids of every list, concatenated in list order.
+    list_ids: Vec<usize>,
+    /// Blocked copy of the member codes *in CSR order*, so each posting
+    /// list is a contiguous position range for the scan kernel. Built
+    /// by [`IvfIndex::attach_blocks`]; probing falls back to per-id
+    /// gathers (bit-identical results) when absent.
+    blocks: Option<CodeBlocks>,
 }
 
 impl IvfIndex {
     /// Build an index over a raw database: `nlist` coarse cells learned
     /// by k-means under the chosen coarse metric. (The PQ codes are not
-    /// needed to build the lists — they are only read at query time.)
+    /// needed to build the lists — they are only read at query time;
+    /// call [`IvfIndex::attach_blocks`] once they exist to enable the
+    /// kernel-blocked probe path.)
     pub fn build(db: &Dataset, nlist: usize, metric: CoarseMetric, seed: u64) -> Self {
         let n = db.n_series();
         let nlist = nlist.min(n).max(1);
@@ -69,38 +86,89 @@ impl IvfIndex {
             CoarseMetric::Euclidean => KmeansGeometry::Euclidean,
         };
         let res = kmeans(&rows, nlist, geo, 5, &mut rng);
-        let mut lists = vec![Vec::new(); res.k()];
-        for (i, &a) in res.assignment.iter().enumerate() {
-            lists[a].push(i);
+        // Counting sort of the assignment into CSR form; ids stay
+        // ascending within each list.
+        let mut counts = vec![0usize; res.k()];
+        for &a in &res.assignment {
+            counts[a] += 1;
         }
-        IvfIndex { coarse: res.centroids, dim: db.len, metric, lists }
+        let mut list_offsets = Vec::with_capacity(res.k() + 1);
+        let mut acc = 0usize;
+        list_offsets.push(0);
+        for &c in &counts {
+            acc += c;
+            list_offsets.push(acc);
+        }
+        let mut cursor: Vec<usize> = list_offsets[..res.k()].to_vec();
+        let mut list_ids = vec![0usize; res.assignment.len()];
+        for (i, &a) in res.assignment.iter().enumerate() {
+            list_ids[cursor[a]] = i;
+            cursor[a] += 1;
+        }
+        IvfIndex {
+            coarse: res.centroids,
+            dim: db.len,
+            metric,
+            list_offsets,
+            list_ids,
+            blocks: None,
+        }
     }
 
     /// Number of inverted lists.
     pub fn nlist(&self) -> usize {
-        self.lists.len()
+        self.list_offsets.len() - 1
+    }
+
+    /// Build the blocked, CSR-ordered copy of the member codes that the
+    /// scan kernel streams at probe time (`k` is the codebook size).
+    /// Derived state: rebuilt on `Engine::open`, never persisted. Self
+    /// bounds are omitted — probes only run the symmetric/asymmetric
+    /// modes, which never read them.
+    pub fn attach_blocks(&mut self, encoded: &EncodedDataset, k: usize) {
+        let m = encoded.n_subspaces;
+        let mut codes = Vec::with_capacity(self.list_ids.len() * m);
+        for &id in &self.list_ids {
+            codes.extend_from_slice(encoded.code(id));
+        }
+        self.blocks = Some(CodeBlocks::build(&codes, &[], m, k));
     }
 
     /// Decompose into raw parts for the on-disk store (crate-internal):
-    /// `(coarse centroids, dim, metric, inverted lists)`.
-    pub(crate) fn to_parts(&self) -> (&[f64], usize, CoarseMetric, &[Vec<usize>]) {
-        (self.coarse.as_slice(), self.dim, self.metric, self.lists.as_slice())
+    /// `(coarse centroids, dim, metric, inverted lists)`. The per-list
+    /// id vectors are materialized from the CSR layout so the on-disk
+    /// shape is unchanged.
+    pub(crate) fn to_parts(&self) -> (&[f64], usize, CoarseMetric, Vec<Vec<usize>>) {
+        let lists: Vec<Vec<usize>> = (0..self.nlist())
+            .map(|c| self.list_ids[self.list_offsets[c]..self.list_offsets[c + 1]].to_vec())
+            .collect();
+        (self.coarse.as_slice(), self.dim, self.metric, lists)
     }
 
     /// Reassemble from parts loaded from the store (crate-internal).
-    /// The store's decoder validates shapes before calling this.
+    /// The store's decoder validates shapes before calling this; the
+    /// blocked code copy is attached separately by the engine.
     pub(crate) fn from_parts(
         coarse: Vec<f64>,
         dim: usize,
         metric: CoarseMetric,
         lists: Vec<Vec<usize>>,
     ) -> Self {
-        IvfIndex { coarse, dim, metric, lists }
+        let mut list_offsets = Vec::with_capacity(lists.len() + 1);
+        list_offsets.push(0usize);
+        let mut list_ids = Vec::with_capacity(lists.iter().map(|l| l.len()).sum());
+        for l in &lists {
+            list_ids.extend_from_slice(l);
+            list_offsets.push(list_ids.len());
+        }
+        IvfIndex { coarse, dim, metric, list_offsets, list_ids, blocks: None }
     }
 
     /// Occupancy of each list (diagnostics).
     pub fn list_sizes(&self) -> Vec<usize> {
-        self.lists.iter().map(|l| l.len()).collect()
+        (0..self.nlist())
+            .map(|c| self.list_offsets[c + 1] - self.list_offsets[c])
+            .collect()
     }
 
     /// Squared coarse distance of `q` to centroid `c`.
@@ -143,7 +211,12 @@ impl IvfIndex {
     }
 
     /// [`IvfIndex::query_topk`] with the query-side LUT already built
-    /// (shared with an exhaustive scan or a re-rank pipeline).
+    /// (shared with an exhaustive scan or a re-rank pipeline). With the
+    /// blocked code copy attached, each probed cell's CSR range is
+    /// streamed through the scan kernel with the pruning cascade; the
+    /// fallback gathers per id. Both paths produce bit-identical
+    /// results (same collapsed-LUT values, same `(distance, index)`
+    /// total order).
     pub fn query_topk_with(
         &self,
         pq: &ProductQuantizer,
@@ -155,9 +228,28 @@ impl IvfIndex {
     ) -> Vec<Neighbor> {
         let cells = self.probe_order(q, nprobe.max(1));
         let mut coll = TopKCollector::new(k.max(1));
-        for c in cells {
-            for &id in &self.lists[c] {
-                coll.offer(id, lut.dist_sq(&pq.codebook, encoded.code(id)));
+        match &self.blocks {
+            Some(blocks) => {
+                let clut = lut.collapse(&pq.codebook);
+                for c in cells {
+                    scan_blocks_into(
+                        &clut,
+                        blocks,
+                        self.list_offsets[c],
+                        self.list_offsets[c + 1],
+                        Some(&self.list_ids),
+                        true,
+                        &mut coll,
+                    );
+                }
+            }
+            None => {
+                for c in cells {
+                    let ids = &self.list_ids[self.list_offsets[c]..self.list_offsets[c + 1]];
+                    for &id in ids {
+                        coll.offer(id, lut.dist_sq(&pq.codebook, encoded.code(id)));
+                    }
+                }
             }
         }
         coll.into_sorted()
@@ -181,14 +273,14 @@ impl IvfIndex {
     /// Fraction of the database scanned when probing `nprobe` lists for
     /// this query (work model; diagnostics for the recall/latency curve).
     pub fn scan_fraction(&self, q: &[f64], nprobe: usize) -> f64 {
-        let total: usize = self.lists.iter().map(|l| l.len()).sum();
+        let total = self.list_ids.len();
         if total == 0 {
             return 0.0;
         }
         let scanned: usize = self
             .probe_order(q, nprobe)
             .into_iter()
-            .map(|c| self.lists[c].len())
+            .map(|c| self.list_offsets[c + 1] - self.list_offsets[c])
             .sum();
         scanned as f64 / total as f64
     }
@@ -254,6 +346,41 @@ mod tests {
                 assert_eq!(exhaustive, probed, "mode {mode:?} query {qi}");
             }
         }
+    }
+
+    #[test]
+    fn attached_blocks_probe_bitidentical_to_gather_path() {
+        let (db, pq, enc, mut ivf) = setup();
+        let nlist = ivf.nlist();
+        // Narrow and full probes on the per-id gather path first…
+        let mut plain = Vec::new();
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            for qi in [1usize, 12, 40] {
+                for nprobe in [1usize, 3, nlist] {
+                    plain.push(ivf.query_topk(&pq, &enc, db.row(qi), 6, nprobe, mode));
+                }
+            }
+        }
+        // …then the same probes through the blocked kernel.
+        ivf.attach_blocks(&enc, pq.codebook.k);
+        let mut it = plain.into_iter();
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            for qi in [1usize, 12, 40] {
+                for nprobe in [1usize, 3, nlist] {
+                    let blocked = ivf.query_topk(&pq, &enc, db.row(qi), 6, nprobe, mode);
+                    assert_eq!(
+                        it.next().unwrap(),
+                        blocked,
+                        "mode {mode:?} query {qi} nprobe {nprobe}"
+                    );
+                }
+            }
+        }
+        // And the full blocked probe still reproduces the exhaustive scan.
+        let q = db.row(7);
+        let exhaustive = topk_scan(&pq, &enc, q, 10, PqQueryMode::Asymmetric, 1);
+        let probed = ivf.query_topk(&pq, &enc, q, 10, nlist, PqQueryMode::Asymmetric);
+        assert_eq!(exhaustive, probed);
     }
 
     #[test]

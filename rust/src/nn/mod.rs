@@ -10,4 +10,7 @@ pub use ivf::{CoarseMetric, IvfIndex};
 pub use knn::{
     nn_classify_pq, nn_classify_raw, nn_classify_sax, NnIndex, PqQueryMode, RawNnSearcher,
 };
-pub use topk::{rerank_dtw, topk_scan, topk_scan_with, Neighbor, QueryLut, TopKCollector};
+pub use topk::{
+    rerank_dtw, topk_scan, topk_scan_blocked, topk_scan_blocked_opts, topk_scan_scalar,
+    topk_scan_with, Neighbor, QueryLut, TopKCollector,
+};

@@ -9,10 +9,17 @@
 //!   a sharded scan identical to the sequential one.
 //! - [`QueryLut`] — the per-query precomputation shared by every scan
 //!   mode: the encoded query code word (symmetric) or the `M×K`
-//!   asymmetric table; either way each database item then costs `O(M)`
-//!   lookups.
-//! - [`topk_scan`] — exhaustive scan, optionally sharded over
-//!   `std::thread` workers in contiguous chunks of the flat code array.
+//!   asymmetric table; [`QueryLut::collapse`] lowers either into the
+//!   blocked kernel's compact `M×K` form (`pq::scan`,
+//!   `docs/DESIGN.md` §6).
+//! - [`topk_scan_blocked`] — the serving hot path: the blocked kernel
+//!   over prebuilt [`CodeBlocks`], threading the collector's admission
+//!   bound into the kernel's exact pruning cascade, optionally sharded
+//!   over `std::thread` workers in block-aligned chunks.
+//! - [`topk_scan`] / [`topk_scan_with`] — one-shot conveniences that
+//!   build the blocks per call; [`topk_scan_scalar`] is the unblocked
+//!   per-item reference loop kept as the bit-identity oracle and bench
+//!   baseline.
 //! - [`rerank_dtw`] — the exact re-rank stage: rescore the PQ-approximate
 //!   candidate list with true windowed DTW against the raw database,
 //!   early-abandoning against the running k-th best.
@@ -24,7 +31,9 @@ use crate::core::series::Dataset;
 use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
 use crate::pq::codebook::Codebook;
 use crate::pq::distance as pqdist;
+use crate::pq::encode::{CodeBlocks, SCAN_BLOCK};
 use crate::pq::quantizer::{EncodedDataset, ProductQuantizer};
+use crate::pq::scan::{scan_block, CollapsedLut};
 
 use super::knn::PqQueryMode;
 
@@ -170,43 +179,60 @@ impl QueryLut {
             QueryLut::Asymmetric(table) => pqdist::asymmetric_sq(cb, table, code),
         }
     }
+
+    /// Lower the query-side state into the blocked kernel's compact
+    /// `M×K` form. For the symmetric mode this slices the query's rows
+    /// out of the full `M×K²` LUT (shrinking the per-scan working set
+    /// by a factor of K); the asymmetric table already has the right
+    /// shape. Distances computed through the result are bit-identical
+    /// to [`QueryLut::dist_sq`].
+    pub fn collapse(&self, cb: &Codebook) -> CollapsedLut {
+        match self {
+            QueryLut::Symmetric(cx) => CollapsedLut::symmetric(cb, cx),
+            QueryLut::Asymmetric(table) => CollapsedLut::asymmetric(cb, table),
+        }
+    }
 }
 
-/// Scan items `[start, end)` of the encoded database into a fresh
-/// collector, in blocks through the batch LUT helpers.
-fn scan_range(
-    cb: &Codebook,
-    enc: &EncodedDataset,
-    lut: &QueryLut,
-    k: usize,
+/// Scan item positions `[start, end)` of the blocked codes into `coll`
+/// through the kernel, re-reading the collector's admission threshold
+/// once per block (when `prune` is set) so hopeless items are abandoned
+/// mid-accumulation — lossless for the final top-k, since only items
+/// whose partial sum already exceeds the bound are dropped. `ids` maps
+/// a block position to the database id it represents (the CSR-permuted
+/// IVF layout); `None` means positions are ids.
+pub(crate) fn scan_blocks_into(
+    lut: &CollapsedLut,
+    blocks: &CodeBlocks,
     start: usize,
     end: usize,
-) -> TopKCollector {
-    const BLOCK: usize = 512;
-    let m = enc.n_subspaces;
-    let mut coll = TopKCollector::new(k);
-    let mut buf: Vec<f64> = Vec::with_capacity(BLOCK);
-    let mut i = start;
-    while i < end {
-        let hi = (i + BLOCK).min(end);
-        let codes = &enc.codes[i * m..hi * m];
-        buf.clear();
-        match lut {
-            QueryLut::Symmetric(cx) => pqdist::symmetric_sq_batch(cb, cx, codes, &mut buf),
-            QueryLut::Asymmetric(t) => pqdist::asymmetric_sq_batch(cb, t, codes, &mut buf),
-        }
-        for (off, &d) in buf.iter().enumerate() {
-            coll.offer(i + off, d);
-        }
-        i = hi;
+    ids: Option<&[usize]>,
+    prune: bool,
+    coll: &mut TopKCollector,
+) {
+    let end = end.min(blocks.n());
+    let mut pos = start;
+    while pos < end {
+        let block = pos / SCAN_BLOCK;
+        let base = block * SCAN_BLOCK;
+        let lo = pos - base;
+        let hi = (end - base).min(SCAN_BLOCK);
+        let thr = if prune { coll.threshold_sq() } else { f64::INFINITY };
+        scan_block(lut, blocks, block, lo, hi, thr, |lane, d| {
+            let p = base + lane;
+            let id = match ids {
+                Some(ids) => ids[p],
+                None => p,
+            };
+            coll.offer(id, d);
+        });
+        pos = base + hi;
     }
-    coll
 }
 
 /// Exhaustive top-k scan of an encoded database, sharded over
-/// `n_threads` std threads in contiguous chunks (1 = sequential). The
-/// result is independent of `n_threads` thanks to the collector's
-/// deterministic total order.
+/// `n_threads` std threads (1 = sequential). The result is independent
+/// of `n_threads` thanks to the collector's deterministic total order.
 pub fn topk_scan(
     pq: &ProductQuantizer,
     enc: &EncodedDataset,
@@ -219,9 +245,10 @@ pub fn topk_scan(
     topk_scan_with(pq, enc, &lut, k, n_threads)
 }
 
-/// [`topk_scan`] with the query-side precomputation already done (lets a
-/// caller compare probing strategies on one query without rebuilding the
-/// table, and the engine reuse it across a re-rank pipeline).
+/// [`topk_scan`] with the query-side precomputation already done. A
+/// one-shot convenience: it transposes the codes into their blocked
+/// form per call. A serving loop should build [`CodeBlocks`] once and
+/// call [`topk_scan_blocked`] instead (the engine does).
 pub fn topk_scan_with(
     pq: &ProductQuantizer,
     enc: &EncodedDataset,
@@ -229,25 +256,61 @@ pub fn topk_scan_with(
     k: usize,
     n_threads: usize,
 ) -> Vec<Neighbor> {
-    let n = enc.n();
+    if enc.n() == 0 {
+        return Vec::new();
+    }
+    let blocks = enc.to_blocks(pq.codebook.k);
+    let clut = lut.collapse(&pq.codebook);
+    topk_scan_blocked(&blocks, &clut, k, n_threads)
+}
+
+/// The serving hot path: exhaustive blocked top-k scan over prebuilt
+/// code blocks with the pruning cascade on. Sharded over `n_threads`
+/// std threads in block-aligned chunks (1 = sequential); bit-identical
+/// to the scalar reference ([`topk_scan_scalar`]) for any thread count.
+pub fn topk_scan_blocked(
+    blocks: &CodeBlocks,
+    lut: &CollapsedLut,
+    k: usize,
+    n_threads: usize,
+) -> Vec<Neighbor> {
+    topk_scan_blocked_opts(blocks, lut, k, n_threads, true)
+}
+
+/// [`topk_scan_blocked`] with the pruning cascade selectable (`prune =
+/// false` streams every item — the bench's pruned-vs-unpruned axis; the
+/// final top-k is identical either way).
+pub fn topk_scan_blocked_opts(
+    blocks: &CodeBlocks,
+    lut: &CollapsedLut,
+    k: usize,
+    n_threads: usize,
+    prune: bool,
+) -> Vec<Neighbor> {
+    let n = blocks.n();
     if n == 0 {
         return Vec::new();
     }
-    let cb = &pq.codebook;
     let threads = n_threads.max(1).min(n);
     if threads == 1 {
-        return scan_range(cb, enc, lut, k, 0, n).into_sorted();
+        let mut coll = TopKCollector::new(k);
+        scan_blocks_into(lut, blocks, 0, n, None, prune, &mut coll);
+        return coll.into_sorted();
     }
-    let chunk = n.div_ceil(threads);
+    // Block-aligned shards: no two workers ever touch the same block.
+    let blocks_per_shard = blocks.n_blocks().div_ceil(threads).max(1);
+    let chunk = blocks_per_shard * SCAN_BLOCK;
     let acc = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(threads);
-        for t in 0..threads {
-            let start = t * chunk;
-            if start >= n {
-                break;
-            }
-            let end = ((t + 1) * chunk).min(n);
-            handles.push(s.spawn(move || scan_range(cb, enc, lut, k, start, end)));
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            handles.push(s.spawn(move || {
+                let mut coll = TopKCollector::new(k);
+                scan_blocks_into(lut, blocks, start, end, None, prune, &mut coll);
+                coll
+            }));
+            start = end;
         }
         let mut acc = TopKCollector::new(k);
         for h in handles {
@@ -256,6 +319,23 @@ pub fn topk_scan_with(
         acc
     });
     acc.into_sorted()
+}
+
+/// Scalar reference scan: one full-LUT lookup chain per item over the
+/// row-major codes, no blocking, no pruning — the pre-kernel hot loop,
+/// kept as the bit-identity oracle for the kernel tests and the
+/// baseline for `benches/perf_hotpath.rs` / `bench-scan`.
+pub fn topk_scan_scalar(
+    pq: &ProductQuantizer,
+    enc: &EncodedDataset,
+    lut: &QueryLut,
+    k: usize,
+) -> Vec<Neighbor> {
+    let mut coll = TopKCollector::new(k);
+    for i in 0..enc.n() {
+        coll.offer(i, lut.dist_sq(&pq.codebook, enc.code(i)));
+    }
+    coll.into_sorted()
 }
 
 /// Exact re-rank: rescore PQ-approximate `candidates` with true windowed
@@ -361,6 +441,29 @@ mod tests {
                 for (h, want) in hits.iter().zip(all.iter()) {
                     assert_eq!(h.index, want.0, "mode {mode:?} query {qi}");
                     assert!((h.distance - want.1.sqrt()).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_scan_bit_identical_to_scalar_reference() {
+        let (pq, enc, _, test) = toy();
+        let blocks = enc.to_blocks(pq.codebook.k);
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            for qi in 0..4 {
+                let q = test.row(qi);
+                let lut = QueryLut::build(&pq, q, mode);
+                let clut = lut.collapse(&pq.codebook);
+                let scalar = topk_scan_scalar(&pq, &enc, &lut, 6);
+                for prune in [false, true] {
+                    for threads in [1usize, 3] {
+                        let got = topk_scan_blocked_opts(&blocks, &clut, 6, threads, prune);
+                        assert_eq!(
+                            scalar, got,
+                            "mode {mode:?} q{qi} prune={prune} threads={threads}"
+                        );
+                    }
                 }
             }
         }

@@ -11,6 +11,7 @@
 //!   is `O(M)` lookups into it.
 
 use super::codebook::{Codebook, PqMetric};
+use super::scan::CollapsedLut;
 use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
 use crate::distance::euclidean::euclidean_sq;
 
@@ -105,28 +106,29 @@ pub fn asymmetric_sq(cb: &Codebook, table: &[f64], codes: &[u16]) -> f64 {
 
 /// Batch variant of [`symmetric_sq`]: squared distances of `cx` against
 /// every code word in the flat block `codes` (`codes.len() / M` items,
-/// row-major), appended to `out`. The scan hot loop of the top-k path —
-/// one tight pass over a contiguous code slice, no per-item call setup.
+/// row-major), appended to `out`. A thin wrapper over the collapsed-LUT
+/// kernel ([`CollapsedLut`]): the output is sized once and written
+/// through a slice (no per-item reserve/push), and the per-item values
+/// are bit-identical to the per-item call.
 pub fn symmetric_sq_batch(cb: &Codebook, cx: &[u16], codes: &[u16], out: &mut Vec<f64>) {
     let m = cb.n_subspaces;
     debug_assert_eq!(codes.len() % m, 0, "ragged code block");
-    out.reserve(codes.len() / m);
-    for cy in codes.chunks_exact(m) {
-        out.push(symmetric_sq(cb, cx, cy));
-    }
+    let start = out.len();
+    out.resize(start + codes.len() / m, 0.0);
+    CollapsedLut::symmetric(cb, cx).dist_sq_rows(codes, &[], &mut out[start..]);
 }
 
 /// Batch variant of [`asymmetric_sq`] over a flat block of code words,
-/// appended to `out`. Computes exactly the same f64 values as the
-/// per-item call (the IVF-vs-exhaustive equivalence tests rely on
-/// bit-identical results between the two paths).
+/// appended to `out`. Same wrapper shape as [`symmetric_sq_batch`];
+/// computes exactly the same f64 values as the per-item call (the
+/// IVF-vs-exhaustive equivalence tests rely on bit-identical results
+/// between the two paths).
 pub fn asymmetric_sq_batch(cb: &Codebook, table: &[f64], codes: &[u16], out: &mut Vec<f64>) {
     let m = cb.n_subspaces;
     debug_assert_eq!(codes.len() % m, 0, "ragged code block");
-    out.reserve(codes.len() / m);
-    for cy in codes.chunks_exact(m) {
-        out.push(asymmetric_sq(cb, table, cy));
-    }
+    let start = out.len();
+    out.resize(start + codes.len() / m, 0.0);
+    CollapsedLut::asymmetric(cb, table).dist_sq_rows(codes, &[], &mut out[start..]);
 }
 
 #[cfg(test)]

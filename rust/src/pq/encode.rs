@@ -114,6 +114,124 @@ pub fn encode_subspace(
     SubspaceCode { code: best_k as u16, dist_sq: best_sq, lb_self_sq }
 }
 
+/// Items per scan block of a [`CodeBlocks`] layout. 64 items × one code
+/// byte per subspace keeps a whole block's segment row in a single
+/// cache line on the `u8` path, and the per-block `f64` accumulator at
+/// 512 B — comfortably register/L1-resident (`docs/DESIGN.md` §6).
+pub const SCAN_BLOCK: usize = 64;
+
+/// Codes transposed into fixed-size *segment-major* blocks: within each
+/// block of [`SCAN_BLOCK`] items, all first-subspace codes are stored
+/// contiguously, then all second-subspace codes, and so on. The scan
+/// kernel ([`crate::pq::scan`]) therefore streams one contiguous lane
+/// of code bytes per subspace instead of striding through row-major
+/// `N × M` code words.
+///
+/// Codes are narrowed to `u8` when `K <= 256` (the common case — the
+/// paper uses `K = 256`), halving the bytes the inner loop streams vs
+/// the row-major `u16` layout; a `u16` lane path covers larger
+/// codebooks. The per-item squared self bounds can ride along in the
+/// same blocked layout so the Keogh-patched symmetric mode resolves its
+/// diagonal substitution without leaving the block — they are opt-in
+/// (pass an empty slice to skip them), because the plain symmetric and
+/// asymmetric scan paths never read them and the bounds cost `N·M·8`
+/// bytes, eight times the `u8` code lanes they accompany.
+///
+/// The trailing partial block is zero-padded; padded lanes are never
+/// read because every scan is bounded by [`CodeBlocks::n`]. This is
+/// derived state: it is rebuilt from the row-major codes on
+/// `Engine::build`/`Engine::open` and never persisted.
+#[derive(Debug, Clone)]
+pub struct CodeBlocks {
+    /// Number of encoded items.
+    n: usize,
+    /// Subspace count `M`.
+    m: usize,
+    /// Codebook size `K` (decides the lane width).
+    k: usize,
+    /// `u8` code lanes (`K <= 256`); empty on the `u16` path.
+    pub(crate) lanes8: Vec<u8>,
+    /// `u16` code lanes (`K > 256`); empty on the `u8` path.
+    pub(crate) lanes16: Vec<u16>,
+    /// Squared self bounds in the same blocked layout; empty when the
+    /// blocks were built without bounds (symmetric/asymmetric only).
+    pub(crate) lb: Vec<f64>,
+}
+
+impl CodeBlocks {
+    /// Transpose row-major codes (`n × m`, one `u16` per subspace) into
+    /// the blocked layout. Every code must be `< k` (guaranteed by the
+    /// encoder and validated by the store). `lb_self_sq` may be empty —
+    /// only Keogh-patched scans read the self bounds, so the plain
+    /// scan paths skip the allocation entirely; pass the full `n × m`
+    /// bound buffer to enable patched scans over the result.
+    pub fn build(codes: &[u16], lb_self_sq: &[f64], m: usize, k: usize) -> Self {
+        assert!(m >= 1, "CodeBlocks requires at least one subspace");
+        assert!(k >= 1, "CodeBlocks requires a non-empty codebook");
+        assert_eq!(codes.len() % m, 0, "ragged code buffer");
+        assert!(
+            lb_self_sq.is_empty() || lb_self_sq.len() == codes.len(),
+            "self-bound buffer disagrees with codes"
+        );
+        let n = codes.len() / m;
+        let cells = n.div_ceil(SCAN_BLOCK) * m * SCAN_BLOCK;
+        let narrow = k <= 256;
+        let with_bounds = !lb_self_sq.is_empty();
+        let mut lanes8 = vec![0u8; if narrow { cells } else { 0 }];
+        let mut lanes16 = vec![0u16; if narrow { 0 } else { cells }];
+        let mut lb = vec![0.0f64; if with_bounds { cells } else { 0 }];
+        for i in 0..n {
+            let block = i / SCAN_BLOCK;
+            let lane = i % SCAN_BLOCK;
+            for s in 0..m {
+                let c = codes[i * m + s];
+                assert!((c as usize) < k, "code {c} out of range (K = {k})");
+                let cell = (block * m + s) * SCAN_BLOCK + lane;
+                if narrow {
+                    lanes8[cell] = c as u8;
+                } else {
+                    lanes16[cell] = c;
+                }
+                if with_bounds {
+                    lb[cell] = lb_self_sq[i * m + s];
+                }
+            }
+        }
+        CodeBlocks { n, m, k, lanes8, lanes16, lb }
+    }
+
+    /// True when the blocked self bounds are present (required by the
+    /// Keogh-patched scan mode).
+    pub fn has_bounds(&self) -> bool {
+        !self.lb.is_empty()
+    }
+
+    /// Number of items held.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Subspace count `M`.
+    pub fn n_subspaces(&self) -> usize {
+        self.m
+    }
+
+    /// Codebook size `K` the lanes were sized for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// True when the narrow `u8` lane path is in use (`K <= 256`).
+    pub fn uses_u8(&self) -> bool {
+        self.k <= 256
+    }
+
+    /// Number of blocks (the last one may be partial).
+    pub fn n_blocks(&self) -> usize {
+        self.n.div_ceil(SCAN_BLOCK)
+    }
+}
+
 /// Brute-force nearest centroid (no bounds) — the correctness oracle for
 /// [`encode_subspace`], also used by tests.
 pub fn encode_subspace_bruteforce(q: &[f64], m: usize, cb: &Codebook) -> (u16, f64) {
@@ -227,6 +345,71 @@ mod tests {
                 assert!(d < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn code_blocks_transpose_roundtrips_u8() {
+        let mut rng = Rng::new(307);
+        let (m, k) = (3usize, 16usize);
+        for n in [1usize, SCAN_BLOCK - 1, SCAN_BLOCK, SCAN_BLOCK + 1, 2 * SCAN_BLOCK + 7] {
+            let codes: Vec<u16> = (0..n * m).map(|_| rng.below(k) as u16).collect();
+            let lb: Vec<f64> = (0..n * m).map(|_| rng.uniform()).collect();
+            let blocks = CodeBlocks::build(&codes, &lb, m, k);
+            assert!(blocks.uses_u8());
+            assert_eq!(blocks.n(), n);
+            assert_eq!(blocks.n_subspaces(), m);
+            assert_eq!(blocks.n_blocks(), n.div_ceil(SCAN_BLOCK));
+            assert_eq!(blocks.lanes8.len(), blocks.n_blocks() * m * SCAN_BLOCK);
+            assert!(blocks.lanes16.is_empty());
+            for i in 0..n {
+                let (b, lane) = (i / SCAN_BLOCK, i % SCAN_BLOCK);
+                for s in 0..m {
+                    let cell = (b * m + s) * SCAN_BLOCK + lane;
+                    assert_eq!(blocks.lanes8[cell] as u16, codes[i * m + s], "item {i} seg {s}");
+                    assert_eq!(blocks.lb[cell], lb[i * m + s]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn code_blocks_wide_codebooks_use_u16_lanes() {
+        let (m, k, n) = (2usize, 300usize, SCAN_BLOCK + 5);
+        let codes: Vec<u16> = (0..n * m).map(|i| (i % k) as u16).collect();
+        let lb = vec![0.0; n * m];
+        let blocks = CodeBlocks::build(&codes, &lb, m, k);
+        assert!(!blocks.uses_u8());
+        assert!(blocks.lanes8.is_empty());
+        assert_eq!(blocks.lanes16.len(), blocks.n_blocks() * m * SCAN_BLOCK);
+        for i in 0..n {
+            let (b, lane) = (i / SCAN_BLOCK, i % SCAN_BLOCK);
+            for s in 0..m {
+                let cell = (b * m + s) * SCAN_BLOCK + lane;
+                assert_eq!(blocks.lanes16[cell], codes[i * m + s]);
+            }
+        }
+    }
+
+    #[test]
+    fn code_blocks_without_bounds_skip_the_lb_allocation() {
+        let mut rng = Rng::new(311);
+        let (m, k, n) = (4usize, 16usize, SCAN_BLOCK + 10);
+        let codes: Vec<u16> = (0..n * m).map(|_| rng.below(k) as u16).collect();
+        let blocks = CodeBlocks::build(&codes, &[], m, k);
+        assert!(!blocks.has_bounds());
+        assert!(blocks.lb.is_empty());
+        assert_eq!(blocks.n(), n);
+        // bounds-carrying build over the same codes reports has_bounds
+        let lb = vec![0.5; n * m];
+        assert!(CodeBlocks::build(&codes, &lb, m, k).has_bounds());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn code_blocks_reject_out_of_range_codes() {
+        let codes = vec![9u16, 1];
+        let lb = vec![0.0; 2];
+        CodeBlocks::build(&codes, &lb, 2, 8);
     }
 
     #[test]

@@ -13,6 +13,9 @@
 //! 5. [`distance`] computes symmetric / asymmetric / Keogh-patched
 //!    approximate distances between codes.
 //! 6. [`quantizer`] is the user-facing API tying it together.
+//! 7. [`scan`] is the blocked scan kernel for the top-k hot path:
+//!    query-collapsed `M×K` LUTs over segment-major code blocks with an
+//!    exact pruning cascade (`docs/DESIGN.md` §6).
 
 pub mod codebook;
 pub mod dba;
@@ -21,6 +24,9 @@ pub mod encode;
 pub mod kmeans;
 pub mod prealign;
 pub mod quantizer;
+pub mod scan;
 
 pub use codebook::Codebook;
+pub use encode::{CodeBlocks, SCAN_BLOCK};
 pub use quantizer::{EncodedDataset, PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
+pub use scan::CollapsedLut;

@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 use super::codebook::Codebook;
 pub use super::codebook::PqMetric;
 use super::distance as pqdist;
-use super::encode::{encode_subspace, EncodeStats};
+use super::encode::{encode_subspace, CodeBlocks, EncodeStats};
 use super::kmeans::{kmeans, KmeansGeometry};
 use super::prealign::Segmenter;
 use crate::core::rng::Rng;
@@ -100,6 +100,17 @@ impl EncodedDataset {
     #[inline]
     pub fn lb_self(&self, i: usize) -> &[f64] {
         &self.lb_self_sq[i * self.n_subspaces..(i + 1) * self.n_subspaces]
+    }
+
+    /// Blocked segment-major copy of the codes for the scan kernel
+    /// (`k` is the codebook size, deciding the `u8`/`u16` lane width —
+    /// see [`CodeBlocks`]). Derived state: build once per database,
+    /// scan many. The blocked self bounds are omitted — they are only
+    /// read by the Keogh-patched scan mode, which the serving paths
+    /// never use; call [`CodeBlocks::build`] with `lb_self_sq` directly
+    /// to enable patched scans.
+    pub fn to_blocks(&self, k: usize) -> CodeBlocks {
+        CodeBlocks::build(&self.codes, &[], self.n_subspaces, k)
     }
 }
 

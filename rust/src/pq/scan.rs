@@ -1,0 +1,499 @@
+//! Cache-resident blocked scan kernel for the top-k hot path
+//! (`docs/DESIGN.md` §6).
+//!
+//! The scalar scan loop pays one gather per subspace into the full
+//! `M×K²` elastic LUT per database item — a memory-bound access pattern
+//! over a table that does not fit L1/L2 at realistic `K`. This module
+//! removes that bottleneck in three moves:
+//!
+//! 1. **Query-collapsed LUT** ([`CollapsedLut`]): for the symmetric
+//!    modes, the query's `cx[m]` rows are sliced out of the full LUT
+//!    once per query into a compact `M×K` table — the same shape the
+//!    asymmetric path already uses — shrinking the per-scan working set
+//!    by a factor of `K`.
+//! 2. **Segment-major blocks** ([`super::encode::CodeBlocks`]): the
+//!    inner loop streams contiguous code bytes per subspace instead of
+//!    striding through row-major code words, with a `u8` fast path when
+//!    `K <= 256`.
+//! 3. **Pruning cascade** ([`scan_block`]): a caller-supplied threshold
+//!    (the top-k collector's running admission bound) abandons items
+//!    whose partial sum already exceeds it. Every kernel term is a
+//!    non-negative squared distance, so a partial sum only ever grows —
+//!    the abandon is *exact*, not approximate.
+//!
+//! Bit-identity is load-bearing: the collapsed table holds verbatim
+//! copies of the scalar path's `f64` values and items accumulate in the
+//! same `m = 0..M` order, so every emitted distance is bit-identical to
+//! the scalar reference in all three modes (enforced by the proptests).
+
+use std::borrow::Cow;
+
+use super::codebook::Codebook;
+use super::encode::{CodeBlocks, SCAN_BLOCK};
+
+/// Per-query `M×K` lookup table in the kernel's collapsed form, plus
+/// the diagonal-substitution state of the Keogh-patched mode.
+///
+/// The table is owned on the symmetric paths (the collapse genuinely
+/// produces new data) and *borrowed* on the asymmetric path — the
+/// query table already exists, and cloning `M·K` f64s per query would
+/// be a needless memcpy on the exact hot path this kernel exists to
+/// speed up.
+#[derive(Debug, Clone)]
+pub struct CollapsedLut<'a> {
+    /// Flat `M×K` table: `table[s*K + c]` is the query's squared
+    /// subspace-`s` distance to centroid `c`.
+    table: Cow<'a, [f64]>,
+    /// Subspace count `M`.
+    m: usize,
+    /// Codebook size `K`.
+    k: usize,
+    /// Keogh-patched mode: the query's code word and its squared self
+    /// bounds. At the `cy[s] == cx[s]` slot the LUT term is 0 (distance
+    /// of a centroid to itself), and the scalar path substitutes
+    /// `max(lbx[s], lby[s])`; the kernel resolves the same substitution
+    /// per item from this state plus the block's `lb` lane.
+    diag: Option<(Vec<u16>, Vec<f64>)>,
+}
+
+impl<'a> CollapsedLut<'a> {
+    /// Collapse the full `M×K²` symmetric LUT onto the query's rows.
+    pub fn symmetric(cb: &Codebook, cx: &[u16]) -> Self {
+        assert_eq!(cx.len(), cb.n_subspaces, "query code word has wrong M");
+        let (m, k) = (cb.n_subspaces, cb.k);
+        let kk = k * k;
+        let mut table = Vec::with_capacity(m * k);
+        for (s, &c) in cx.iter().enumerate() {
+            let c = c as usize;
+            assert!(c < k, "query code {c} out of range (K = {k})");
+            let base = s * kk + c * k;
+            table.extend_from_slice(&cb.lut_sq[base..base + k]);
+        }
+        CollapsedLut { table: Cow::Owned(table), m, k, diag: None }
+    }
+
+    /// Collapsed LUT for the Keogh-patched symmetric mode: `lbx` is the
+    /// query's per-subspace squared reversed-Keogh self bound.
+    pub fn patched(cb: &Codebook, cx: &[u16], lbx: &[f64]) -> Self {
+        assert_eq!(lbx.len(), cb.n_subspaces, "self-bound row has wrong M");
+        let mut lut = Self::symmetric(cb, cx);
+        lut.diag = Some((cx.to_vec(), lbx.to_vec()));
+        lut
+    }
+
+    /// Borrow an asymmetric query table (already `M×K`, from
+    /// [`super::distance::asymmetric_table`]) — zero-copy.
+    pub fn asymmetric(cb: &Codebook, table: &'a [f64]) -> Self {
+        assert_eq!(table.len(), cb.n_subspaces * cb.k, "asymmetric table is not M×K");
+        CollapsedLut { table: Cow::Borrowed(table), m: cb.n_subspaces, k: cb.k, diag: None }
+    }
+
+    /// Subspace count `M`.
+    pub fn n_subspaces(&self) -> usize {
+        self.m
+    }
+
+    /// The flat `M×K` table, whichever side owns it.
+    #[inline]
+    fn table(&self) -> &[f64] {
+        match &self.table {
+            Cow::Borrowed(t) => t,
+            Cow::Owned(v) => v,
+        }
+    }
+
+    /// Scalar reference: squared distance to one row-major code word.
+    /// `lby` is the item's self-bound row; it is only read in patched
+    /// mode (pass `&[]` otherwise). Bit-identical to the corresponding
+    /// `pq::distance` scalar function.
+    pub fn dist_sq(&self, cy: &[u16], lby: &[f64]) -> f64 {
+        debug_assert_eq!(cy.len(), self.m);
+        let table = self.table();
+        let mut acc = 0.0;
+        match &self.diag {
+            None => {
+                for (s, &c) in cy.iter().enumerate() {
+                    acc += table[s * self.k + c as usize];
+                }
+            }
+            Some((cx, lbx)) => {
+                debug_assert_eq!(lby.len(), self.m);
+                for (s, &c) in cy.iter().enumerate() {
+                    acc += if c == cx[s] {
+                        lbx[s].max(lby[s])
+                    } else {
+                        table[s * self.k + c as usize]
+                    };
+                }
+            }
+        }
+        acc
+    }
+
+    /// Batch over a flat row-major code block: `out[i]` becomes the
+    /// squared distance of item `i`. `lb` must parallel `codes` in
+    /// patched mode and may be empty otherwise. Values are bit-identical
+    /// to the per-item scalar path (same `m = 0..M` accumulation order).
+    pub fn dist_sq_rows(&self, codes: &[u16], lb: &[f64], out: &mut [f64]) {
+        let m = self.m;
+        assert_eq!(codes.len() % m, 0, "ragged code block");
+        assert_eq!(out.len(), codes.len() / m, "output slice mis-sized");
+        match &self.diag {
+            None => {
+                let table = self.table();
+                for (o, cy) in out.iter_mut().zip(codes.chunks_exact(m)) {
+                    let mut acc = 0.0;
+                    for (s, &c) in cy.iter().enumerate() {
+                        acc += table[s * self.k + c as usize];
+                    }
+                    *o = acc;
+                }
+            }
+            Some(..) => {
+                assert_eq!(lb.len(), codes.len(), "self bounds must parallel codes");
+                let rows = codes.chunks_exact(m).zip(lb.chunks_exact(m));
+                for (o, (cy, lby)) in out.iter_mut().zip(rows) {
+                    *o = self.dist_sq(cy, lby);
+                }
+            }
+        }
+    }
+}
+
+/// A code lane element: `u8` on the narrow path, `u16` on the wide one.
+trait CodeLane: Copy {
+    fn idx(self) -> usize;
+}
+
+impl CodeLane for u8 {
+    #[inline(always)]
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+impl CodeLane for u16 {
+    #[inline(always)]
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Scan lanes `[lo, hi)` of one block, calling `emit(lane, d_sq)` for
+/// every item that survives the pruning cascade.
+///
+/// `thr` is the caller's current admission bound (squared): after each
+/// subspace except the last, items whose partial sum *strictly* exceeds
+/// `thr` are abandoned. Since every term is a non-negative squared
+/// distance, an abandoned item's full sum would also exceed `thr`, so
+/// the abandon is exact — a top-k collector with threshold `thr` could
+/// never have admitted it. Items that are emitted carry their full,
+/// bit-identical squared distance (an emitted item may still exceed
+/// `thr`; the caller's collector rejects it in `O(1)`). Pass
+/// `f64::INFINITY` to disable pruning and emit every lane.
+pub fn scan_block<F: FnMut(usize, f64)>(
+    lut: &CollapsedLut,
+    blocks: &CodeBlocks,
+    block: usize,
+    lo: usize,
+    hi: usize,
+    thr: f64,
+    emit: F,
+) {
+    debug_assert!(lo <= hi && hi <= SCAN_BLOCK, "lane range out of bounds");
+    debug_assert_eq!(lut.m, blocks.n_subspaces(), "LUT / blocks subspace mismatch");
+    debug_assert_eq!(lut.k, blocks.k(), "LUT / blocks codebook mismatch");
+    assert!(
+        lut.diag.is_none() || blocks.has_bounds(),
+        "patched scan requires blocks built with self bounds"
+    );
+    if blocks.uses_u8() {
+        scan_block_impl(lut, &blocks.lanes8[..], &blocks.lb, block, lo, hi, thr, emit);
+    } else {
+        scan_block_impl(lut, &blocks.lanes16[..], &blocks.lb, block, lo, hi, thr, emit);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn scan_block_impl<T: CodeLane, F: FnMut(usize, f64)>(
+    lut: &CollapsedLut,
+    lanes: &[T],
+    lb: &[f64],
+    block: usize,
+    lo: usize,
+    hi: usize,
+    thr: f64,
+    mut emit: F,
+) {
+    let (m, k) = (lut.m, lut.k);
+    let table = lut.table();
+    let base = block * m * SCAN_BLOCK;
+    let mut acc = [0.0f64; SCAN_BLOCK];
+    if thr == f64::INFINITY {
+        // Streaming path: nothing can be pruned, so run the pure
+        // segment-major loop the compiler can vectorise.
+        for s in 0..m {
+            let row = &table[s * k..(s + 1) * k];
+            let seg = &lanes[base + s * SCAN_BLOCK..base + (s + 1) * SCAN_BLOCK];
+            match &lut.diag {
+                None => {
+                    for (a, c) in acc[lo..hi].iter_mut().zip(&seg[lo..hi]) {
+                        *a += row[c.idx()];
+                    }
+                }
+                Some((cx, lbx)) => {
+                    let cxs = cx[s] as usize;
+                    let lbxs = lbx[s];
+                    let lbseg = &lb[base + s * SCAN_BLOCK..base + (s + 1) * SCAN_BLOCK];
+                    let items = acc[lo..hi].iter_mut().zip(&seg[lo..hi]).zip(&lbseg[lo..hi]);
+                    for ((a, c), &b) in items {
+                        let c = c.idx();
+                        *a += if c == cxs { lbxs.max(b) } else { row[c] };
+                    }
+                }
+            }
+        }
+        for (lane, &a) in acc.iter().enumerate().take(hi).skip(lo) {
+            emit(lane, a);
+        }
+    } else {
+        // Pruning cascade: accumulate segment-at-a-time over the list
+        // of still-alive lanes, dropping lanes whose partial sum
+        // already exceeds the threshold. The comparison keeps NaNs
+        // (`!(NaN > thr)`), so pathological inputs are never pruned —
+        // the collector's total order deals with them downstream.
+        let mut alive = [0usize; SCAN_BLOCK];
+        let mut n_alive = hi - lo;
+        for (slot, lane) in alive[..n_alive].iter_mut().zip(lo..hi) {
+            *slot = lane;
+        }
+        for s in 0..m {
+            let row = &table[s * k..(s + 1) * k];
+            let seg = &lanes[base + s * SCAN_BLOCK..base + (s + 1) * SCAN_BLOCK];
+            match &lut.diag {
+                None => {
+                    for &lane in &alive[..n_alive] {
+                        acc[lane] += row[seg[lane].idx()];
+                    }
+                }
+                Some((cx, lbx)) => {
+                    let cxs = cx[s] as usize;
+                    let lbxs = lbx[s];
+                    let lbseg = &lb[base + s * SCAN_BLOCK..base + (s + 1) * SCAN_BLOCK];
+                    for &lane in &alive[..n_alive] {
+                        let c = seg[lane].idx();
+                        acc[lane] += if c == cxs { lbxs.max(lbseg[lane]) } else { row[c] };
+                    }
+                }
+            }
+            if s + 1 < m {
+                let mut kept = 0usize;
+                for slot in 0..n_alive {
+                    let lane = alive[slot];
+                    // Note: deliberately *not* `acc <= thr` — a NaN
+                    // partial must be kept, not pruned.
+                    let pruned = acc[lane] > thr;
+                    if !pruned {
+                        alive[kept] = lane;
+                        kept += 1;
+                    }
+                }
+                n_alive = kept;
+                if n_alive == 0 {
+                    return;
+                }
+            }
+        }
+        for &lane in &alive[..n_alive] {
+            emit(lane, acc[lane]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+    use crate::pq::codebook::PqMetric;
+    use crate::pq::distance::{
+        asymmetric_sq, asymmetric_table, patched_symmetric_sq, symmetric_sq,
+    };
+
+    fn toy_codebook(m: usize, k: usize, l: usize, seed: u64) -> Codebook {
+        let mut rng = Rng::new(seed);
+        let per: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..k * l).map(|_| rng.normal()).collect()).collect();
+        Codebook::build(per, l, Some(2), PqMetric::Dtw)
+    }
+
+    fn random_rows(rng: &mut Rng, n: usize, m: usize, k: usize) -> (Vec<u16>, Vec<f64>) {
+        let codes = (0..n * m).map(|_| rng.below(k) as u16).collect();
+        let lb = (0..n * m).map(|_| rng.uniform()).collect();
+        (codes, lb)
+    }
+
+    /// Drive `scan_block` over every block of `blocks`, collecting
+    /// `(item, d_sq)` for everything emitted.
+    fn scan_all(lut: &CollapsedLut, blocks: &CodeBlocks, thr: f64) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        for b in 0..blocks.n_blocks() {
+            let hi = (blocks.n() - b * SCAN_BLOCK).min(SCAN_BLOCK);
+            scan_block(lut, blocks, b, 0, hi, thr, |lane, d| {
+                out.push((b * SCAN_BLOCK + lane, d));
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn collapsed_symmetric_is_bit_identical_to_scalar() {
+        let cb = toy_codebook(3, 8, 6, 401);
+        let mut rng = Rng::new(403);
+        for n in [1usize, SCAN_BLOCK - 1, SCAN_BLOCK, SCAN_BLOCK + 1, 150] {
+            let (codes, lb) = random_rows(&mut rng, n, 3, 8);
+            let blocks = CodeBlocks::build(&codes, &lb, 3, 8);
+            let cx: Vec<u16> = (0..3).map(|_| rng.below(8) as u16).collect();
+            let lut = CollapsedLut::symmetric(&cb, &cx);
+            let got = scan_all(&lut, &blocks, f64::INFINITY);
+            assert_eq!(got.len(), n, "n={n}: every item must be emitted");
+            for (i, d) in got {
+                let cy = &codes[i * 3..(i + 1) * 3];
+                let want = symmetric_sq(&cb, &cx, cy);
+                assert_eq!(d.to_bits(), want.to_bits(), "n={n} item {i}");
+                assert_eq!(lut.dist_sq(cy, &[]).to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn collapsed_patched_is_bit_identical_to_scalar() {
+        let cb = toy_codebook(4, 6, 5, 409);
+        let mut rng = Rng::new(419);
+        let n = SCAN_BLOCK + 9;
+        let (mut codes, lb) = random_rows(&mut rng, n, 4, 6);
+        let cx: Vec<u16> = (0..4).map(|_| rng.below(6) as u16).collect();
+        let lbx: Vec<f64> = (0..4).map(|_| rng.uniform()).collect();
+        // Force plenty of diagonal hits: every third item shares the
+        // query's code in at least one subspace.
+        for i in (0..n).step_by(3) {
+            let s = i % 4;
+            codes[i * 4 + s] = cx[s];
+        }
+        let blocks = CodeBlocks::build(&codes, &lb, 4, 6);
+        let lut = CollapsedLut::patched(&cb, &cx, &lbx);
+        let got = scan_all(&lut, &blocks, f64::INFINITY);
+        assert_eq!(got.len(), n);
+        for (i, d) in got {
+            let cy = &codes[i * 4..(i + 1) * 4];
+            let lby = &lb[i * 4..(i + 1) * 4];
+            let want = patched_symmetric_sq(&cb, &cx, cy, &lbx, lby);
+            assert_eq!(d.to_bits(), want.to_bits(), "item {i}");
+            assert_eq!(lut.dist_sq(cy, lby).to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn collapsed_asymmetric_is_bit_identical_to_scalar() {
+        let cb = toy_codebook(2, 10, 7, 421);
+        let mut rng = Rng::new(431);
+        let n = 2 * SCAN_BLOCK;
+        let (codes, lb) = random_rows(&mut rng, n, 2, 10);
+        let subs: Vec<Vec<f64>> = (0..2)
+            .map(|_| (0..cb.sub_len).map(|_| rng.normal()).collect())
+            .collect();
+        let table = asymmetric_table(&cb, &subs);
+        let blocks = CodeBlocks::build(&codes, &lb, 2, 10);
+        let lut = CollapsedLut::asymmetric(&cb, &table);
+        for (i, d) in scan_all(&lut, &blocks, f64::INFINITY) {
+            let cy = &codes[i * 2..(i + 1) * 2];
+            let want = asymmetric_sq(&cb, &table, cy);
+            assert_eq!(d.to_bits(), want.to_bits(), "item {i}");
+        }
+    }
+
+    #[test]
+    fn u16_lane_path_matches_scalar() {
+        // K > 256 forces the wide lanes; keep L tiny so the O(K²) LUT
+        // precompute stays cheap.
+        let cb = toy_codebook(1, 260, 3, 433);
+        let mut rng = Rng::new(439);
+        let n = SCAN_BLOCK + 3;
+        let (codes, lb) = random_rows(&mut rng, n, 1, 260);
+        let blocks = CodeBlocks::build(&codes, &lb, 1, 260);
+        assert!(!blocks.uses_u8());
+        let cx = vec![rng.below(260) as u16];
+        let lut = CollapsedLut::symmetric(&cb, &cx);
+        let got = scan_all(&lut, &blocks, f64::INFINITY);
+        assert_eq!(got.len(), n);
+        for (i, d) in got {
+            let want = symmetric_sq(&cb, &cx, &codes[i..i + 1]);
+            assert_eq!(d.to_bits(), want.to_bits(), "item {i}");
+        }
+    }
+
+    #[test]
+    fn pruning_is_exact_and_emits_all_admissible_items() {
+        let cb = toy_codebook(4, 12, 6, 443);
+        let mut rng = Rng::new(449);
+        let n = 3 * SCAN_BLOCK + 17;
+        let (codes, lb) = random_rows(&mut rng, n, 4, 12);
+        let blocks = CodeBlocks::build(&codes, &lb, 4, 12);
+        let cx: Vec<u16> = (0..4).map(|_| rng.below(12) as u16).collect();
+        let lut = CollapsedLut::symmetric(&cb, &cx);
+        let full: Vec<f64> = (0..n)
+            .map(|i| symmetric_sq(&cb, &cx, &codes[i * 4..(i + 1) * 4]))
+            .collect();
+        // Threshold at a mid-range distance: everything at or under it
+        // must be emitted with bit-identical values; everything pruned
+        // must be strictly over it.
+        let mut sorted = full.clone();
+        sorted.sort_by(f64::total_cmp);
+        let thr = sorted[n / 2];
+        let got = scan_all(&lut, &blocks, thr);
+        let emitted: std::collections::HashMap<usize, f64> = got.into_iter().collect();
+        for (i, &want) in full.iter().enumerate() {
+            match emitted.get(&i) {
+                Some(d) => assert_eq!(d.to_bits(), want.to_bits(), "item {i}"),
+                None => assert!(want > thr, "item {i} (d={want}) pruned at thr={thr}"),
+            }
+        }
+        // Oracle check of the cascade semantics: an item is abandoned
+        // iff one of its prefix sums — checked after every segment but
+        // the last — strictly exceeds the threshold.
+        let mut want_pruned = 0usize;
+        for i in 0..n {
+            let mut acc = 0.0;
+            for s in 0..3 {
+                acc += cb.lut_sq(s, cx[s] as usize, codes[i * 4 + s] as usize);
+                if acc > thr {
+                    want_pruned += 1;
+                    break;
+                }
+            }
+        }
+        assert_eq!(emitted.len(), n - want_pruned, "cascade pruned a different set");
+    }
+
+    #[test]
+    #[should_panic(expected = "requires blocks built with self bounds")]
+    fn patched_scan_over_boundless_blocks_is_rejected() {
+        let cb = toy_codebook(2, 4, 4, 463);
+        let codes = vec![0u16, 1, 2, 3];
+        let blocks = CodeBlocks::build(&codes, &[], 2, 4);
+        let lut = CollapsedLut::patched(&cb, &[0, 1], &[0.1, 0.2]);
+        scan_block(&lut, &blocks, 0, 0, 2, f64::INFINITY, |_, _| {});
+    }
+
+    #[test]
+    fn lane_subranges_scan_only_their_lanes() {
+        let cb = toy_codebook(2, 5, 4, 457);
+        let mut rng = Rng::new(461);
+        let (codes, lb) = random_rows(&mut rng, SCAN_BLOCK, 2, 5);
+        let blocks = CodeBlocks::build(&codes, &lb, 2, 5);
+        let cx = vec![1u16, 3];
+        let lut = CollapsedLut::symmetric(&cb, &cx);
+        let mut seen = Vec::new();
+        scan_block(&lut, &blocks, 0, 5, 20, f64::INFINITY, |lane, _| seen.push(lane));
+        assert_eq!(seen, (5..20).collect::<Vec<_>>());
+    }
+}

@@ -288,6 +288,8 @@ pub fn get_dataset(payload: &[u8]) -> Result<Dataset> {
 }
 
 /// Serialize an IVF index: coarse centroids, metric, inverted lists.
+/// The index stores its lists in CSR form; `to_parts` materializes the
+/// per-list vectors so the on-disk layout is unchanged from version 1.
 pub fn put_ivf(w: &mut ByteWriter, ivf: &IvfIndex) {
     let (coarse, dim, metric, lists) = ivf.to_parts();
     w.usize(dim);
@@ -299,7 +301,7 @@ pub fn put_ivf(w: &mut ByteWriter, ivf: &IvfIndex) {
         CoarseMetric::Euclidean => w.u8(1),
     }
     w.usize(lists.len());
-    for l in lists {
+    for l in &lists {
         w.vec_usize(l);
     }
     w.vec_f64(coarse);

@@ -29,6 +29,11 @@
 //! any state is constructed — never a panic, never an unbounded
 //! allocation. See `docs/index-format.md` for the full specification
 //! and the version-bump policy.
+//!
+//! The scan kernel's blocked code layouts (`pq::scan`, `docs/DESIGN.md`
+//! §6) are deliberately *not* persisted: they are cheap deterministic
+//! transposes of the row-major codes stored here, so `Engine::open`
+//! rebuilds them on load and the version-1 layout is unchanged.
 
 pub mod codec;
 pub mod format;

@@ -318,6 +318,170 @@ fn prop_store_roundtrip_serves_bit_identically() {
 }
 
 #[test]
+fn prop_blocked_scan_kernel_bit_identical_to_scalar() {
+    // The blocked kernel (query-collapsed LUT over segment-major code
+    // blocks) must produce bit-identical squared distances to the
+    // scalar reference in all three modes — symmetric, Keogh-patched,
+    // asymmetric — across u8/u16 lane widths, block-remainder sizes,
+    // and with the pruning cascade on or off.
+    use pqdtw::pq::codebook::Codebook;
+    use pqdtw::pq::distance::{asymmetric_sq, patched_symmetric_sq, symmetric_sq};
+    use pqdtw::pq::encode::{CodeBlocks, SCAN_BLOCK};
+    use pqdtw::pq::scan::{scan_block, CollapsedLut};
+
+    check("blocked kernel == scalar", 8, |rng| {
+        // Synthetic codebooks straight from random centroids: cheap,
+        // and lets K exceed 256 to exercise the u16 lane path.
+        let m = 1 + rng.below(4);
+        let (k, l) = if rng.below(4) == 0 {
+            (257 + rng.below(8), 3)
+        } else {
+            (2 + rng.below(40), 4 + rng.below(6))
+        };
+        let per: Vec<Vec<f64>> = (0..m).map(|_| gen_series(rng, k * l)).collect();
+        let cb = Codebook::build(per, l, Some(1), PqMetric::Dtw);
+        // n spans the block-remainder cases: one short of a block, an
+        // exact block, one over, and arbitrary multi-block sizes.
+        let n = match rng.below(4) {
+            0 => SCAN_BLOCK - 1,
+            1 => SCAN_BLOCK,
+            2 => SCAN_BLOCK + 1,
+            _ => 1 + rng.below(3 * SCAN_BLOCK),
+        };
+        let mut codes: Vec<u16> = (0..n * m).map(|_| rng.below(k) as u16).collect();
+        let lb: Vec<f64> = (0..n * m).map(|_| rng.uniform() * 2.0).collect();
+        // Query side for each mode.
+        let cx: Vec<u16> = (0..m).map(|_| rng.below(k) as u16).collect();
+        let lbx: Vec<f64> = (0..m).map(|_| rng.uniform() * 2.0).collect();
+        let qtab: Vec<f64> = (0..m * k).map(|_| rng.uniform() * 3.0).collect();
+        // Plant diagonal hits so the patched substitution actually runs.
+        for i in (0..n).step_by(5) {
+            let s = i % m;
+            codes[i * m + s] = cx[s];
+        }
+        let blocks = CodeBlocks::build(&codes, &lb, m, k);
+        if (k <= 256) != blocks.uses_u8() {
+            return Err(format!("lane width mis-dispatched for K={k}"));
+        }
+        let luts = [
+            ("symmetric", CollapsedLut::symmetric(&cb, &cx)),
+            ("patched", CollapsedLut::patched(&cb, &cx, &lbx)),
+            ("asymmetric", CollapsedLut::asymmetric(&cb, &qtab)),
+        ];
+        for (name, lut) in &luts {
+            let want: Vec<f64> = (0..n)
+                .map(|i| {
+                    let cy = &codes[i * m..(i + 1) * m];
+                    let lby = &lb[i * m..(i + 1) * m];
+                    match *name {
+                        "symmetric" => symmetric_sq(&cb, &cx, cy),
+                        "patched" => patched_symmetric_sq(&cb, &cx, cy, &lbx, lby),
+                        _ => asymmetric_sq(&cb, &qtab, cy),
+                    }
+                })
+                .collect();
+            // Kernel scalar path.
+            for (i, &w) in want.iter().enumerate() {
+                let got = lut.dist_sq(&codes[i * m..(i + 1) * m], &lb[i * m..(i + 1) * m]);
+                if got.to_bits() != w.to_bits() {
+                    return Err(format!("{name}: scalar kernel item {i}: {got} != {w}"));
+                }
+            }
+            // Blocked path, pruning off: every item emitted, bit-identical.
+            let mut got = vec![f64::NAN; n];
+            let mut emitted = 0usize;
+            for b in 0..blocks.n_blocks() {
+                let hi = (n - b * SCAN_BLOCK).min(SCAN_BLOCK);
+                scan_block(lut, &blocks, b, 0, hi, f64::INFINITY, |lane, d| {
+                    got[b * SCAN_BLOCK + lane] = d;
+                    emitted += 1;
+                });
+            }
+            if emitted != n {
+                return Err(format!("{name}: emitted {emitted} of {n} items"));
+            }
+            for (i, &w) in want.iter().enumerate() {
+                if got[i].to_bits() != w.to_bits() {
+                    return Err(format!("{name}: blocked item {i}: {} != {w}", got[i]));
+                }
+            }
+            // Blocked path, pruning on at a mid-range threshold: emitted
+            // items bit-identical, pruned items strictly over threshold.
+            let mut sorted = want.clone();
+            sorted.sort_by(f64::total_cmp);
+            let thr = sorted[n / 2];
+            let mut seen = vec![false; n];
+            for b in 0..blocks.n_blocks() {
+                let hi = (n - b * SCAN_BLOCK).min(SCAN_BLOCK);
+                scan_block(lut, &blocks, b, 0, hi, thr, |lane, d| {
+                    let i = b * SCAN_BLOCK + lane;
+                    seen[i] = d.to_bits() == want[i].to_bits();
+                });
+            }
+            for (i, &w) in want.iter().enumerate() {
+                if !seen[i] && w <= thr {
+                    return Err(format!(
+                        "{name}: admissible item {i} (d={w}, thr={thr}) was pruned"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pruned_blocked_topk_matches_unpruned_and_scalar() {
+    // Threshold-pruning soundness on a real trained quantizer: the
+    // pruned blocked scan must return exactly the same top-k set (same
+    // ids, same bit-level distances) as the unpruned blocked scan and
+    // the scalar reference, in both query modes and under sharding.
+    use pqdtw::nn::topk::{topk_scan_blocked_opts, topk_scan_scalar, QueryLut};
+
+    check("pruned topk == unpruned", 5, |rng| {
+        let n = 80 + rng.below(150);
+        let len = 32 + 4 * rng.below(5);
+        let mut values = Vec::with_capacity(n * len);
+        for _ in 0..n {
+            values.extend(gen_walk(rng, len));
+        }
+        let data = Dataset::from_flat(values, len);
+        let cfg = PqConfig {
+            n_subspaces: 2 + rng.below(3),
+            codebook_size: 4 + rng.below(12),
+            window_frac: 0.25,
+            metric: if rng.below(4) == 0 { PqMetric::Euclidean } else { PqMetric::Dtw },
+            kmeans_iters: 2,
+            dba_iters: 1,
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&data, &cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        let enc = pq.encode_dataset(&data);
+        let blocks = enc.to_blocks(pq.codebook.k);
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            let q = gen_walk(rng, len);
+            let lut = QueryLut::build(&pq, &q, mode);
+            let clut = lut.collapse(&pq.codebook);
+            let k = 1 + rng.below(9);
+            let scalar = topk_scan_scalar(&pq, &enc, &lut, k);
+            let unpruned = topk_scan_blocked_opts(&blocks, &clut, k, 1, false);
+            let pruned = topk_scan_blocked_opts(&blocks, &clut, k, 1, true);
+            let sharded = topk_scan_blocked_opts(&blocks, &clut, k, 1 + rng.below(4), true);
+            if scalar != unpruned {
+                return Err(format!("{mode:?}: unpruned blocked != scalar"));
+            }
+            if scalar != pruned {
+                return Err(format!("{mode:?}: pruned blocked != scalar"));
+            }
+            if scalar != sharded {
+                return Err(format!("{mode:?}: sharded pruned blocked != scalar"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_dtw_triangle_violations_exist_but_bounded_scaling() {
     // DTW is not a metric (no triangle inequality) — but sqrt-costs must
     // still scale linearly under uniform scaling of inputs.
