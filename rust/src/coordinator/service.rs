@@ -2,6 +2,11 @@
 //! batcher and execute them on the shared [`Engine`], answering through
 //! per-request oneshot channels.
 
+// rustc-side twin of the xtask no-panic-in-serving rule: serving code
+// must propagate errors. Test code (crate-wide `cfg(test)` under
+// `cargo test`) is exempt on purpose.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;

@@ -76,6 +76,15 @@
 //! assert_eq!(hits.len(), 3);
 //! assert!(hits[0].distance <= hits[2].distance); // ascending
 //! ```
+//!
+//! ## Machine-checked invariants
+//!
+//! The serving-plane guarantees above (no panics on hostile bytes,
+//! deterministic `(distance, index)` order, checked narrowing in the
+//! codecs) are enforced statically by `cargo lint` (the `xtask`
+//! workspace member) — see `docs/INVARIANTS.md`.
+
+#![forbid(unsafe_code)]
 
 pub mod cli;
 pub mod core;

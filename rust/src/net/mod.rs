@@ -29,6 +29,11 @@
 //! re-ranked) — f64 values cross the wire as IEEE-754 bit patterns,
 //! exactly like the index store.
 
+// rustc-side twin of the xtask no-panic-in-serving rule: serving code
+// must propagate errors. Test code (crate-wide `cfg(test)` under
+// `cargo test`) is exempt on purpose.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+
 pub mod client;
 pub mod protocol;
 pub mod server;

@@ -18,7 +18,7 @@
 use std::collections::HashMap;
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -55,6 +55,15 @@ impl Default for ServerConfig {
     }
 }
 
+/// Lock a mutex, recovering from poison. A panicking connection
+/// thread must not wedge the rest of the serving plane: the state
+/// behind each of these locks (connection registry, join handles, the
+/// done flag) stays consistent even if a holder unwound mid-update,
+/// because every critical section completes its mutation in one step.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// State shared by the accept loop and every connection thread.
 struct Shared {
     service: Arc<Service>,
@@ -87,11 +96,11 @@ impl Shared {
             });
         }
         let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
-        for stream in self.conns.lock().unwrap().values() {
+        for stream in lock_unpoisoned(&self.conns).values() {
             let _ = stream.shutdown(Shutdown::Read);
         }
         let (lock, cv) = &self.done;
-        *lock.lock().unwrap() = true;
+        *lock_unpoisoned(lock) = true;
         cv.notify_all();
     }
 }
@@ -140,9 +149,9 @@ impl NetServer {
     pub fn wait(mut self) {
         {
             let (lock, cv) = &self.shared.done;
-            let mut done = lock.lock().unwrap();
+            let mut done = lock_unpoisoned(lock);
             while !*done {
-                done = cv.wait(done).unwrap();
+                done = cv.wait(done).unwrap_or_else(PoisonError::into_inner);
             }
         }
         self.finish();
@@ -159,7 +168,7 @@ impl NetServer {
             let _ = h.join();
         }
         let handles: Vec<JoinHandle<()>> =
-            self.shared.conn_threads.lock().unwrap().drain(..).collect();
+            lock_unpoisoned(&self.shared.conn_threads).drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -209,7 +218,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             // `stop` store is visible here (and we half-close it
             // ourselves) — never neither, which would leave the reader
             // thread blocked forever and hang the shutdown joins.
-            let mut conns = shared.conns.lock().unwrap();
+            let mut conns = lock_unpoisoned(&shared.conns);
             if let Ok(clone) = stream.try_clone() {
                 conns.insert(id, clone);
             }
@@ -219,7 +228,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         }
         let conn_shared = Arc::clone(&shared);
         let handle = std::thread::spawn(move || handle_connection(stream, id, conn_shared));
-        let mut threads = shared.conn_threads.lock().unwrap();
+        let mut threads = lock_unpoisoned(&shared.conn_threads);
         // Compact handles of connections that already finished (joining
         // a finished thread is instant, but the Vec should not grow
         // with the connection churn of a long-lived server).
@@ -237,7 +246,7 @@ enum Outgoing {
 
 fn handle_connection(stream: TcpStream, id: u64, shared: Arc<Shared>) {
     let saw_shutdown = serve_connection(&stream, &shared);
-    shared.conns.lock().unwrap().remove(&id);
+    lock_unpoisoned(&shared.conns).remove(&id);
     shared.active.fetch_sub(1, Ordering::SeqCst);
     let _ = stream.shutdown(Shutdown::Both);
     if saw_shutdown {

@@ -250,7 +250,7 @@ pub fn get_encoded(payload: &[u8], pq: &ProductQuantizer) -> Result<EncodedDatas
     );
     let k = pq.codebook.k;
     ensure!(
-        codes.iter().all(|&c| (c as usize) < k),
+        codes.iter().all(|&c| usize::from(c) < k),
         "store: code id out of range (K = {k})"
     );
     Ok(EncodedDataset { codes, lb_self_sq, n_subspaces: m, labels, stats })

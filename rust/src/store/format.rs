@@ -179,6 +179,15 @@ impl<'a> ByteReader<'a> {
         Ok(s)
     }
 
+    /// Borrow the next `N` bytes as a fixed-size array. `take`
+    /// returns exactly `N` bytes on success, so the conversion is
+    /// infallible in practice; it still propagates rather than panics.
+    fn arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        self.take(N)?
+            .try_into()
+            .context("store: fixed-width read returned the wrong length")
+    }
+
     /// One byte.
     pub fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
@@ -186,17 +195,17 @@ impl<'a> ByteReader<'a> {
 
     /// `u32`, little-endian.
     pub fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.arr()?))
     }
 
     /// `u64`, little-endian.
     pub fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.arr()?))
     }
 
     /// `f64` from its little-endian bit pattern.
     pub fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(self.arr()?))
     }
 
     /// `usize` from a little-endian `u64`.
@@ -243,7 +252,7 @@ impl<'a> ByteReader<'a> {
         let n = self.checked_count(2)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
-            v.push(u16::from_le_bytes(self.take(2)?.try_into().unwrap()));
+            v.push(u16::from_le_bytes(self.arr()?));
         }
         Ok(v)
     }
@@ -253,7 +262,7 @@ impl<'a> ByteReader<'a> {
         let n = self.checked_count(8)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
-            v.push(i64::from_le_bytes(self.take(8)?.try_into().unwrap()));
+            v.push(i64::from_le_bytes(self.arr()?));
         }
         Ok(v)
     }

@@ -1,0 +1,18 @@
+// Fixture: deterministic-ordering violations — hash containers and a
+// partial_cmp().unwrap() on a ranking path. Linted as nn/knn.rs.
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+pub fn rank(dists: &[(f64, usize)]) -> Vec<usize> {
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut best: HashMap<usize, f64> = HashMap::new();
+    let mut order: Vec<(f64, usize)> = dists.to_vec();
+    order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for &(d, i) in &order {
+        if seen.insert(i) {
+            best.insert(i, d);
+        }
+    }
+    order.into_iter().map(|(_, i)| i).collect()
+}

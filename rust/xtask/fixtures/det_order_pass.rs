@@ -1,0 +1,14 @@
+// Fixture: the deterministic-ordering compliant twin — total_cmp with
+// an index tiebreak, and a BTreeMap where keyed iteration is needed.
+
+use std::collections::BTreeMap;
+
+pub fn rank(dists: &[(f64, usize)]) -> Vec<usize> {
+    let mut order: Vec<(f64, usize)> = dists.to_vec();
+    order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut best: BTreeMap<usize, f64> = BTreeMap::new();
+    for &(d, i) in &order {
+        best.entry(i).or_insert(d);
+    }
+    order.into_iter().map(|(_, i)| i).collect()
+}

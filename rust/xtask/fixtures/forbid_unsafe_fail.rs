@@ -1,0 +1,13 @@
+// Fixture: forbid-unsafe violation — an unwaived unsafe block (the
+// shape a future SIMD tier would take before earning its waiver).
+
+pub fn sum(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    unsafe {
+        let p = xs.as_ptr();
+        for i in 0..xs.len() {
+            acc += *p.add(i);
+        }
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+// Fixture: a crate root carrying the compiler-enforced twin of the
+// forbid-unsafe rule. Linted as lib.rs.
+
+#![forbid(unsafe_code)]
+
+pub mod pq;
+pub mod store;

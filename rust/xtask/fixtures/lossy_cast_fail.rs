@@ -1,0 +1,8 @@
+// Fixture: no-lossy-cast-in-codec violations — `as` narrowing of
+// values that flow through the byte codec. Linted as store/codec.rs.
+
+pub fn pack(code: u32, len: u64) -> (u8, usize) {
+    let b = code as u8;
+    let n = len as usize;
+    (b, n)
+}

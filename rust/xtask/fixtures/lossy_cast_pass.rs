@@ -1,0 +1,13 @@
+// Fixture: the no-lossy-cast-in-codec compliant twin — checked
+// try_from for narrowing, plain `as`/From only for widening.
+
+#[derive(Debug)]
+pub struct Overflow;
+
+pub fn pack(code: u32, len: u64) -> Result<(u8, u64), Overflow> {
+    let b = u8::try_from(code).map_err(|_| Overflow)?;
+    let widened = u64::from(code);
+    let doubled = (len as u128).saturating_mul(2);
+    let back = u64::try_from(doubled).map_err(|_| Overflow)?;
+    Ok((b, widened.max(back)))
+}

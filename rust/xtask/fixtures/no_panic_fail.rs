@@ -1,0 +1,15 @@
+// Fixture: no-panic-in-serving violations — an unwrap, an expect, a
+// panic!, and an unreachable! in non-test code. Linted as if it lived
+// under `store/`.
+
+pub fn load(bytes: &[u8]) -> u32 {
+    let head: [u8; 4] = bytes[..4].try_into().unwrap();
+    let tag = std::str::from_utf8(&bytes[4..8]).expect("tag bytes");
+    if tag != "PQDT" {
+        panic!("bad magic");
+    }
+    match head[0] {
+        1 => u32::from_le_bytes(head),
+        _ => unreachable!("unknown version"),
+    }
+}

@@ -1,0 +1,22 @@
+// Fixture: the no-panic-in-serving compliant twin of
+// no_panic_fail.rs — every failure surfaces as an Err.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct DecodeError(pub String);
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "decode error: {}", self.0)
+    }
+}
+
+pub fn load(bytes: &[u8]) -> Result<u32, DecodeError> {
+    let head = bytes
+        .get(..4)
+        .ok_or_else(|| DecodeError("truncated header".to_string()))?;
+    let mut buf = [0u8; 4];
+    buf.copy_from_slice(head);
+    Ok(u32::from_le_bytes(buf))
+}

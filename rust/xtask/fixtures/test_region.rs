@@ -1,0 +1,24 @@
+// Fixture: unwraps and asserts that live only inside a #[cfg(test)]
+// module — the analyzer must not flag test code even in a file whose
+// path is inside the no-panic-in-serving scope.
+
+pub fn double(x: u32) -> u32 {
+    x.checked_mul(2).unwrap_or(u32::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubles() {
+        assert_eq!(double(2), 4);
+        let parsed: u32 = "8".parse().unwrap();
+        assert_eq!(double(parsed), 16);
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(double(u32::MAX), u32::MAX);
+    }
+}

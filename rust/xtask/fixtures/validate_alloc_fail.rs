@@ -1,0 +1,11 @@
+// Fixture: validate-before-alloc violations — allocations sized from
+// freshly decoded header bytes with no bounds check anywhere in the
+// preceding window. Linted as store/decode.rs.
+
+pub fn read_block(header: &[u8]) -> (Vec<u8>, Vec<f32>) {
+    let count = usize::from(header[0]);
+    let dims = usize::from(header[1]);
+    let codes = Vec::with_capacity(count * dims);
+    let scratch = vec![0.0f32; dims];
+    (codes, scratch)
+}

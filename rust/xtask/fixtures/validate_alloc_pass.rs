@@ -1,0 +1,20 @@
+// Fixture: the validate-before-alloc compliant twin — every
+// value-sized allocation sits just below an explicit bounds check;
+// literal capacities and `.len()` of existing buffers need none.
+
+const MAX_BLOCK: usize = 1 << 20;
+
+pub fn read_block(header: &[u8]) -> Result<(Vec<u8>, Vec<f32>), String> {
+    let count = usize::from(header.first().copied().unwrap_or(0));
+    let dims = usize::from(header.get(1).copied().unwrap_or(0));
+    ensure!(count <= MAX_BLOCK, "count {count} exceeds block cap");
+    ensure!(dims <= 64, "dims {dims} exceeds subspace cap");
+    let codes = Vec::with_capacity(count * dims);
+    let scratch = vec![0.0f32; dims];
+    let fixed = [0u8; 16];
+    let mut names: Vec<String> = Vec::with_capacity(4);
+    names.clear();
+    let copied = vec![0u8; fixed.len()];
+    let _ = copied;
+    Ok((codes, scratch))
+}

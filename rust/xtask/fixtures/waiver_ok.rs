@@ -1,0 +1,11 @@
+// Fixture: both waiver forms — standalone (suppresses the line below)
+// and trailing (suppresses its own line). Lints clean.
+
+use std::collections::VecDeque;
+
+pub fn head_pair(q: &VecDeque<u8>) -> u8 {
+    // lint:allow(no-panic-in-serving, reason = "queue is non-empty by construction at every call site")
+    let first = q.front().copied().unwrap();
+    let second = q.get(1).copied().unwrap(); // lint:allow(no-panic-in-serving, reason = "length two is checked by the caller")
+    first.wrapping_add(second)
+}

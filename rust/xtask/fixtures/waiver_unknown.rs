@@ -1,0 +1,7 @@
+// Fixture: a waiver naming a rule the registry does not know — must
+// surface as a lint-waiver finding, not silently do nothing.
+
+pub fn f(x: Option<u8>) -> u8 {
+    // lint:allow(no-such-rule, reason = "this rule name does not exist")
+    x.map(|v| v.wrapping_add(1)).unwrap_or(0)
+}

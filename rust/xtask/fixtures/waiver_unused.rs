@@ -1,0 +1,7 @@
+// Fixture: a well-formed waiver that suppresses nothing — must be
+// reported as unused so stale waivers cannot accumulate.
+
+pub fn f(x: u8) -> u8 {
+    // lint:allow(no-panic-in-serving, reason = "stale waiver left behind by a refactor")
+    x.wrapping_add(1)
+}

@@ -1,0 +1,371 @@
+//! Orchestration: lex a file, run the rule registry, apply waivers,
+//! and render findings as text or JSON.
+//!
+//! Waiver semantics: `// lint:allow(<rule>, reason = "...")` suppresses
+//! findings of `<rule>` on its own line or the line directly below.
+//! Waivers are themselves checked — an unknown rule name, a missing
+//! reason, or a waiver that suppresses nothing is a `lint-waiver`
+//! finding, and those are not waivable: the waiver ledger must stay
+//! honest or it stops being evidence.
+
+use crate::lexer;
+use crate::rules::{self, Finding};
+
+/// Lint one file's source. `rel` is the path relative to the linted
+/// root (forward slashes) — rule scoping matches against it.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let cf = lexer::clean(src);
+    let mut findings = rules::check_all(rel, &cf);
+
+    for w in &cf.waivers {
+        if !rules::is_known_rule(&w.rule) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: w.line,
+                rule: rules::LINT_WAIVER,
+                message: format!(
+                    "waiver names unknown rule `{}` — run `cargo lint rules` \
+                     for the registry",
+                    w.rule
+                ),
+            });
+            continue;
+        }
+        let before = findings.len();
+        findings.retain(|f| {
+            !(f.rule == w.rule && (f.line == w.line || f.line == w.line + 1))
+        });
+        if findings.len() == before {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: w.line,
+                rule: rules::LINT_WAIVER,
+                message: format!(
+                    "unused waiver for `{}` (reason: \"{}\") — nothing on \
+                     this or the next line violates it; delete the waiver",
+                    w.rule, w.reason
+                ),
+            });
+        }
+    }
+
+    for e in &cf.waiver_errors {
+        findings.push(Finding {
+            file: rel.to_string(),
+            line: e.line,
+            rule: rules::LINT_WAIVER,
+            message: e.message.clone(),
+        });
+    }
+
+    findings.sort_by_key(|f| (f.line, f.rule));
+    findings
+}
+
+/// Render findings as `file:line: [rule] message` lines.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render findings as a JSON report (stable field order, sorted input).
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            f.rule,
+            json_escape(&f.message)
+        ));
+    }
+    if findings.is_empty() {
+        out.push_str("],\n");
+    } else {
+        out.push_str("\n  ],\n");
+    }
+    out.push_str(&format!("  \"total\": {}\n}}\n", findings.len()));
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, sorted, as
+/// (relative-forward-slash-path, absolute-path) pairs.
+pub fn collect_rs_files(
+    root: &std::path::Path,
+) -> Result<Vec<(String, std::path::PathBuf)>, String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir)
+            .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .map_err(|e| format!("strip_prefix {}: {e}", path.display()))?
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push((rel, path));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root`; findings carry root-relative paths.
+pub fn lint_tree(root: &std::path::Path) -> Result<Vec<Finding>, String> {
+    let mut all = Vec::new();
+    for (rel, path) in collect_rs_files(root)? {
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        all.extend(lint_source(&rel, &src));
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules;
+    use std::path::Path;
+
+    /// Read a fixture from `rust/xtask/fixtures/`.
+    fn fixture(name: &str) -> String {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("fixture {}: {e}", path.display()))
+    }
+
+    fn rules_hit(findings: &[rules::Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- no-panic-in-serving ----
+
+    #[test]
+    fn no_panic_fail_fixture_is_flagged() {
+        let f = lint_source("store/broken.rs", &fixture("no_panic_fail.rs"));
+        assert!(
+            f.iter().filter(|f| f.rule == rules::NO_PANIC).count() >= 4,
+            "expected unwrap/expect/panic!/unreachable! findings, got {f:?}"
+        );
+        // Findings carry 1-based lines pointing at real content.
+        assert!(f.iter().all(|f| f.line >= 1));
+    }
+
+    #[test]
+    fn no_panic_pass_fixture_is_clean() {
+        let f = lint_source("store/clean.rs", &fixture("no_panic_pass.rs"));
+        assert!(f.is_empty(), "expected clean, got {f:?}");
+    }
+
+    #[test]
+    fn no_panic_ignored_outside_serving_scope() {
+        let f = lint_source("pq/dist.rs", &fixture("no_panic_fail.rs"));
+        assert!(
+            !f.iter().any(|f| f.rule == rules::NO_PANIC),
+            "pq/ is outside no-panic scope, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn no_panic_ignored_in_test_regions() {
+        let f = lint_source("net/x.rs", &fixture("test_region.rs"));
+        assert!(
+            !f.iter().any(|f| f.rule == rules::NO_PANIC),
+            "unwraps inside #[cfg(test)] mod must not be flagged, got {f:?}"
+        );
+    }
+
+    // ---- no-lossy-cast-in-codec ----
+
+    #[test]
+    fn lossy_cast_fail_fixture_is_flagged() {
+        let f = lint_source("store/codec.rs", &fixture("lossy_cast_fail.rs"));
+        assert!(
+            f.iter().filter(|f| f.rule == rules::NO_LOSSY_CAST).count() >= 2,
+            "expected narrowing-cast findings, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn lossy_cast_pass_fixture_is_clean() {
+        let f = lint_source("net/protocol.rs", &fixture("lossy_cast_pass.rs"));
+        assert!(f.is_empty(), "widening casts / try_from must pass, got {f:?}");
+    }
+
+    // ---- deterministic-ordering ----
+
+    #[test]
+    fn det_order_fail_fixture_is_flagged() {
+        let f = lint_source("nn/knn.rs", &fixture("det_order_fail.rs"));
+        let hits = f.iter().filter(|f| f.rule == rules::DET_ORDER).count();
+        assert!(hits >= 3, "expected HashMap/HashSet/partial_cmp findings, got {f:?}");
+    }
+
+    #[test]
+    fn det_order_pass_fixture_is_clean() {
+        let f = lint_source("pq/scan.rs", &fixture("det_order_pass.rs"));
+        assert!(f.is_empty(), "total_cmp + BTreeMap must pass, got {f:?}");
+    }
+
+    #[test]
+    fn det_order_catches_unwrap_on_next_line() {
+        let src = "fn f(a: f64, b: f64) {\n    let o = a.partial_cmp(&b)\n        .unwrap();\n}\n";
+        let f = lint_source("nn/knn.rs", src);
+        assert!(f.iter().any(|f| f.rule == rules::DET_ORDER), "got {f:?}");
+    }
+
+    // ---- validate-before-alloc ----
+
+    #[test]
+    fn validate_alloc_fail_fixture_is_flagged() {
+        let f = lint_source("store/decode.rs", &fixture("validate_alloc_fail.rs"));
+        assert!(
+            f.iter().filter(|f| f.rule == rules::VALIDATE_ALLOC).count() >= 2,
+            "expected unguarded with_capacity and vec! findings, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn validate_alloc_pass_fixture_is_clean() {
+        let f = lint_source("store/decode.rs", &fixture("validate_alloc_pass.rs"));
+        assert!(f.is_empty(), "guarded allocations must pass, got {f:?}");
+    }
+
+    // ---- forbid-unsafe ----
+
+    #[test]
+    fn forbid_unsafe_fail_fixture_is_flagged() {
+        let f = lint_source("pq/simd.rs", &fixture("forbid_unsafe_fail.rs"));
+        assert!(f.iter().any(|f| f.rule == rules::FORBID_UNSAFE), "got {f:?}");
+    }
+
+    #[test]
+    fn forbid_unsafe_missing_crate_attr_is_flagged() {
+        let f = lint_source("lib.rs", "pub mod pq;\n");
+        assert!(
+            f.iter().any(|f| f.rule == rules::FORBID_UNSAFE
+                && f.message.contains("forbid(unsafe_code)")),
+            "lib.rs without the attribute must be flagged, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn forbid_unsafe_pass_fixture_is_clean() {
+        let f = lint_source("lib.rs", &fixture("forbid_unsafe_pass.rs"));
+        assert!(f.is_empty(), "got {f:?}");
+    }
+
+    // ---- waivers ----
+
+    #[test]
+    fn waiver_suppresses_own_line_and_next_line() {
+        let f = lint_source("store/x.rs", &fixture("waiver_ok.rs"));
+        assert!(f.is_empty(), "valid waivers must suppress their findings, got {f:?}");
+    }
+
+    #[test]
+    fn waiver_unknown_rule_is_an_error() {
+        let f = lint_source("store/x.rs", &fixture("waiver_unknown.rs"));
+        assert!(
+            f.iter().any(|f| f.rule == rules::LINT_WAIVER
+                && f.message.contains("unknown rule")),
+            "got {f:?}"
+        );
+    }
+
+    #[test]
+    fn waiver_unused_is_an_error() {
+        let f = lint_source("store/x.rs", &fixture("waiver_unused.rs"));
+        assert!(
+            f.iter().any(|f| f.rule == rules::LINT_WAIVER && f.message.contains("unused")),
+            "got {f:?}"
+        );
+    }
+
+    #[test]
+    fn waiver_missing_reason_is_an_error() {
+        let src = "// lint:allow(no-panic-in-serving)\nfn f(x: Option<u8>) { x.unwrap(); }\n";
+        let f = lint_source("store/x.rs", src);
+        assert!(
+            f.iter().any(|f| f.rule == rules::LINT_WAIVER),
+            "reason-less waiver must be a lint-waiver finding, got {f:?}"
+        );
+        // And it does not suppress the underlying finding.
+        assert!(f.iter().any(|f| f.rule == rules::NO_PANIC), "got {f:?}");
+    }
+
+    // ---- output / tree ----
+
+    #[test]
+    fn json_output_is_wellformed_and_escaped() {
+        let findings = vec![rules::Finding {
+            file: "a\"b.rs".to_string(),
+            line: 3,
+            rule: rules::NO_PANIC,
+            message: "quote \" and backslash \\".to_string(),
+        }];
+        let j = render_json(&findings);
+        assert!(j.contains("\"total\": 1"));
+        assert!(j.contains("a\\\"b.rs"));
+        assert!(j.contains("backslash \\\\"));
+        let empty = render_json(&[]);
+        assert!(empty.contains("\"total\": 0"));
+    }
+
+    #[test]
+    fn rules_hit_is_deterministically_sorted() {
+        let src = "fn f(x: Option<u8>) {\n    x.unwrap();\n    panic!(\"no\");\n}\n";
+        let f = lint_source("store/x.rs", src);
+        let lines: Vec<usize> = f.iter().map(|f| f.line).collect();
+        let mut sorted = lines.clone();
+        sorted.sort_unstable();
+        assert_eq!(lines, sorted);
+        assert_eq!(rules_hit(&f), vec![rules::NO_PANIC, rules::NO_PANIC]);
+    }
+
+    /// The real crate tree must lint clean — this is the same check CI's
+    /// static-analysis job runs, kept here so `cargo test -p xtask`
+    /// catches regressions without a separate step.
+    #[test]
+    fn real_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
+        let findings = lint_tree(&root).expect("walk rust/src");
+        assert!(
+            findings.is_empty(),
+            "rust/src must lint clean:\n{}",
+            render_text(&findings)
+        );
+    }
+}

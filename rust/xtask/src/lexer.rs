@@ -1,0 +1,558 @@
+//! Source preparation for the lint rules: a hand-rolled scan that
+//! strips comments and string/char-literal *contents* (so rule
+//! patterns never match inside prose), records `// lint:allow(..)`
+//! waiver comments, and marks which lines lie inside test regions
+//! (`#[cfg(test)]` / `#[test]` items and `mod tests { .. }` blocks).
+//!
+//! This is deliberately a token-level scanner, not a parser. What it
+//! understands: line and (nested) block comments, string literals with
+//! escapes, raw/byte strings (`r"..."`, `r#"..."#`, `b"..."`,
+//! `br#"..."#`), char literals vs lifetimes, and brace nesting for
+//! region tracking. What it does not understand: macro-generated code,
+//! type information, control flow. The rules are written so that this
+//! is enough (see `rules.rs`), and the Miri/TSan CI tiers backstop the
+//! properties tokens cannot see.
+
+/// A waiver comment: `// lint:allow(<rule>, reason = "...")`.
+///
+/// A waiver suppresses findings of `rule` on its own line (trailing
+/// form) or on the line directly below it (standalone form). Unknown
+/// rule names and waivers that suppress nothing are reported as
+/// `lint-waiver` findings — waivers are part of the checked surface.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// 1-based line of the comment.
+    pub line: usize,
+    /// Rule name the waiver claims to suppress.
+    pub rule: String,
+    /// Mandatory human-readable justification.
+    pub reason: String,
+}
+
+/// A malformed waiver comment (missing reason, unbalanced syntax).
+#[derive(Debug, Clone)]
+pub struct WaiverError {
+    /// 1-based line of the comment.
+    pub line: usize,
+    /// What was wrong with it.
+    pub message: String,
+}
+
+/// A source file after cleaning and region analysis.
+#[derive(Debug)]
+pub struct CleanFile {
+    /// Source lines with comment and literal contents blanked to
+    /// spaces; line count and column offsets match the original.
+    pub lines: Vec<String>,
+    /// `is_test[i]`: 0-based line `i` lies inside a test region.
+    pub is_test: Vec<bool>,
+    /// Well-formed waivers, in source order.
+    pub waivers: Vec<Waiver>,
+    /// Malformed waivers, reported as findings by the engine.
+    pub waiver_errors: Vec<WaiverError>,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// Clean `src`: blank comments and literal contents, collect waivers,
+/// then mark test regions on the cleaned text.
+pub fn clean(src: &str) -> CleanFile {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let mut waivers = Vec::new();
+    let mut waiver_errors = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            out.push('\n');
+            line += 1;
+            i += 1;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            parse_waivers(&text, line, &mut waivers, &mut waiver_errors);
+            out.resize(out.len() + (i - start), ' ');
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            i = blank_string(&chars, i, &mut out, &mut line);
+        } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident_char(chars[i - 1])) {
+            match blank_prefixed_string(&chars, i, &mut out, &mut line) {
+                Some(j) => i = j,
+                None => {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            i = blank_char_or_lifetime(&chars, i, &mut out, &mut line);
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+
+    let lines: Vec<String> = out
+        .split(|&c| c == '\n')
+        .map(|l| l.iter().collect())
+        .collect();
+    let is_test = test_regions(&out, lines.len());
+    CleanFile { lines, is_test, waivers, waiver_errors }
+}
+
+/// Blank a non-raw string starting at the opening quote `chars[i]`;
+/// returns the index just past the closing quote. Newlines (including
+/// escaped line continuations) keep their place.
+fn blank_string(chars: &[char], start: usize, out: &mut Vec<char>, line: &mut usize) -> usize {
+    let n = chars.len();
+    out.push(' ');
+    let mut i = start + 1;
+    while i < n {
+        match chars[i] {
+            '\\' => {
+                out.push(' ');
+                i += 1;
+                if i < n {
+                    if chars[i] == '\n' {
+                        out.push('\n');
+                        *line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            '"' => {
+                out.push(' ');
+                return i + 1;
+            }
+            '\n' => {
+                out.push('\n');
+                *line += 1;
+                i += 1;
+            }
+            _ => {
+                out.push(' ');
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Blank a raw or byte string (`r".."`, `r#".."#`, `b".."`, `br#".."#`)
+/// starting at its prefix letter. Returns `None` when the characters at
+/// `start` are not actually a string prefix (e.g. a raw identifier
+/// `r#match` or a plain identifier starting with `r`/`b`).
+fn blank_prefixed_string(
+    chars: &[char],
+    start: usize,
+    out: &mut Vec<char>,
+    line: &mut usize,
+) -> Option<usize> {
+    let n = chars.len();
+    let mut j = start;
+    let mut raw = false;
+    if chars[j] == 'b' {
+        j += 1;
+        if j < n && chars[j] == 'r' {
+            raw = true;
+            j += 1;
+        }
+    } else {
+        // chars[start] == 'r'
+        raw = true;
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    if raw {
+        while j < n && chars[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    if j >= n || chars[j] != '"' {
+        return None;
+    }
+    // Blank the prefix and any hashes; the quote belongs to the body.
+    out.resize(out.len() + (j - start), ' ');
+    if !raw {
+        return Some(blank_string(chars, j, out, line));
+    }
+    out.push(' '); // opening quote
+    let mut i = j + 1;
+    while i < n {
+        if chars[i] == '"' {
+            let mut k = i + 1;
+            let mut h = 0usize;
+            while k < n && h < hashes && chars[k] == '#' {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                out.resize(out.len() + (k - i), ' ');
+                return Some(k);
+            }
+        }
+        if chars[i] == '\n' {
+            out.push('\n');
+            *line += 1;
+        } else {
+            out.push(' ');
+        }
+        i += 1;
+    }
+    Some(i)
+}
+
+/// Blank a char literal, or pass a lifetime through untouched,
+/// starting at the `'` at `chars[i]`.
+fn blank_char_or_lifetime(
+    chars: &[char],
+    start: usize,
+    out: &mut Vec<char>,
+    line: &mut usize,
+) -> usize {
+    let n = chars.len();
+    if start + 1 < n && chars[start + 1] == '\\' {
+        // Escaped char literal: '\n', '\'', '\u{7f}', '\\' ...
+        out.push(' ');
+        out.push(' ');
+        let mut i = start + 2;
+        if i < n {
+            // The escaped character itself (may be a quote).
+            if chars[i] == '\n' {
+                out.push('\n');
+                *line += 1;
+            } else {
+                out.push(' ');
+            }
+            i += 1;
+        }
+        while i < n && chars[i] != '\'' {
+            if chars[i] == '\n' {
+                out.push('\n');
+                *line += 1;
+            } else {
+                out.push(' ');
+            }
+            i += 1;
+        }
+        if i < n {
+            out.push(' ');
+            i += 1;
+        }
+        i
+    } else if start + 2 < n && chars[start + 2] == '\'' && chars[start + 1] != '\'' {
+        // Plain one-character literal like 'x' or '_'.
+        out.push(' ');
+        out.push(' ');
+        out.push(' ');
+        start + 3
+    } else {
+        // Lifetime (`'a`, `'static`, `'_`) or stray quote: code.
+        out.push('\'');
+        start + 1
+    }
+}
+
+/// Parse every `lint:allow(..)` occurrence in one comment's text.
+fn parse_waivers(
+    text: &str,
+    line: usize,
+    waivers: &mut Vec<Waiver>,
+    errors: &mut Vec<WaiverError>,
+) {
+    const MARK: &str = "lint:allow(";
+    let mut rest = text;
+    while let Some(pos) = rest.find(MARK) {
+        let body = &rest[pos + MARK.len()..];
+        match parse_one_waiver(body) {
+            Ok((rule, reason, consumed)) => {
+                waivers.push(Waiver { line, rule, reason });
+                rest = &body[consumed..];
+            }
+            Err(msg) => {
+                errors.push(WaiverError { line, message: msg });
+                rest = body;
+            }
+        }
+    }
+}
+
+/// Parse `<rule>, reason = "<text>")`, returning the rule, the reason
+/// and how many bytes of `body` were consumed.
+fn parse_one_waiver(body: &str) -> Result<(String, String, usize), String> {
+    let comma = match body.find(|c: char| c == ',' || c == ')') {
+        Some(p) if body.as_bytes()[p] == b',' => p,
+        _ => {
+            return Err(
+                "waiver is missing a reason — write lint:allow(<rule>, reason = \"why\")"
+                    .to_string(),
+            )
+        }
+    };
+    let rule = body[..comma].trim().to_string();
+    if rule.is_empty() {
+        return Err("waiver names no rule".to_string());
+    }
+    let after = &body[comma + 1..];
+    let trimmed = after.trim_start();
+    let key_off = after.len() - trimmed.len();
+    let Some(eq_rest) = trimmed.strip_prefix("reason") else {
+        return Err("waiver argument must be reason = \"..\"".to_string());
+    };
+    let eq_rest_trim = eq_rest.trim_start();
+    let Some(val) = eq_rest_trim.strip_prefix('=') else {
+        return Err("waiver reason is missing '='".to_string());
+    };
+    let val_trim = val.trim_start();
+    let Some(quoted) = val_trim.strip_prefix('"') else {
+        return Err("waiver reason must be a quoted string".to_string());
+    };
+    let Some(close) = quoted.find('"') else {
+        return Err("waiver reason string is unterminated".to_string());
+    };
+    let reason = quoted[..close].to_string();
+    if reason.trim().is_empty() {
+        return Err("waiver reason is empty".to_string());
+    }
+    let after_quote = &quoted[close + 1..];
+    let after_quote_trim = after_quote.trim_start();
+    if !after_quote_trim.starts_with(')') {
+        return Err("waiver is missing its closing ')'".to_string());
+    }
+    // Bytes consumed relative to `body`.
+    let consumed = comma
+        + 1
+        + key_off
+        + "reason".len()
+        + (eq_rest.len() - eq_rest_trim.len())
+        + 1
+        + (val.len() - val_trim.len())
+        + 1
+        + close
+        + 1
+        + (after_quote.len() - after_quote_trim.len())
+        + 1;
+    Ok((rule, reason, consumed))
+}
+
+/// Does the cleaned text at `i` start marker `atoms` (each atom a word
+/// or a single punctuation char), with whitespace allowed between
+/// atoms and word boundaries enforced on word atoms?
+fn matches_atoms(chars: &[char], mut i: usize, atoms: &[&str]) -> bool {
+    let n = chars.len();
+    for (ai, atom) in atoms.iter().enumerate() {
+        if ai > 0 {
+            while i < n && chars[i].is_whitespace() {
+                i += 1;
+            }
+        }
+        let aw: Vec<char> = atom.chars().collect();
+        let is_word = aw[0].is_ascii_alphabetic() || aw[0] == '_';
+        if is_word && i > 0 && is_ident_char(chars[i - 1]) {
+            return false;
+        }
+        for &ac in &aw {
+            if i >= n || chars[i] != ac {
+                return false;
+            }
+            i += 1;
+        }
+        if is_word && i < n && is_ident_char(chars[i]) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Mark lines inside test regions. A region opens at the `{` that
+/// follows a `#[cfg(test)]` / `#[test]` attribute or a `mod tests`
+/// item, and closes at its matching `}`; regions nest.
+fn test_regions(chars: &[char], n_lines: usize) -> Vec<bool> {
+    let mut is_test = vec![false; n_lines];
+    let n = chars.len();
+    let mut line = 0usize; // 0-based
+    let mut stack: Vec<bool> = Vec::new();
+    let mut test_depth = 0usize;
+    let mut pending = false;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if matches_atoms(chars, i, &["#", "[", "cfg", "(", "test"])
+            || matches_atoms(chars, i, &["#", "[", "test", "]"])
+            || matches_atoms(chars, i, &["mod", "tests"])
+        {
+            pending = true;
+        } else if c == '{' {
+            let t = pending || test_depth > 0;
+            stack.push(t);
+            if t {
+                test_depth += 1;
+            }
+            pending = false;
+        } else if c == '}' {
+            if let Some(t) = stack.pop() {
+                if t {
+                    test_depth -= 1;
+                }
+            }
+        } else if c == ';' {
+            // An attribute resolved to a braceless item (`mod tests;`).
+            pending = false;
+        }
+        if test_depth > 0 && line < n_lines {
+            is_test[line] = true;
+        }
+        i += 1;
+    }
+    is_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clean_lines(src: &str) -> Vec<String> {
+        clean(src).lines
+    }
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let x = 1; // trailing .unwrap()\nlet s = \"panic!(no)\";\n";
+        let lines = clean_lines(src);
+        assert!(!lines[0].contains("unwrap"));
+        assert!(lines[0].contains("let x = 1;"));
+        assert!(!lines[1].contains("panic"));
+        assert!(lines[1].contains("let s ="));
+    }
+
+    #[test]
+    fn block_comments_nest_and_keep_line_structure() {
+        let src = "a /* one /* two */ still */ b\nc /* multi\nline */ d\n";
+        let lines = clean_lines(src);
+        assert!(lines[0].contains('a') && lines[0].contains('b'));
+        assert!(!lines[0].contains("one") && !lines[0].contains("still"));
+        assert_eq!(lines.len(), 4); // 3 lines + trailing empty
+        assert!(lines[2].contains('d') && !lines[2].contains("line"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let src = "let a = r#\"has \"quotes\" and unwrap()\"#; let b = b\"panic!\";\n";
+        let l = &clean_lines(src)[0];
+        assert!(!l.contains("unwrap") && !l.contains("panic"));
+        assert!(l.contains("let a =") && l.contains("let b ="));
+    }
+
+    #[test]
+    fn raw_identifiers_are_not_strings() {
+        let src = "let r#type = 3; let x = r#type + 1;\n";
+        let l = &clean_lines(src)[0];
+        assert!(l.contains("r#type"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = '\\''; let d = 'x'; c }\n";
+        let l = &clean_lines(src)[0];
+        assert!(l.contains("<'a>"));
+        assert!(l.contains("&'a str"));
+        assert!(!l.contains("'x'"));
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_the_literal() {
+        let src = "let s = \"a\\\"b.unwrap()c\"; let t = 1;\n";
+        let l = &clean_lines(src)[0];
+        assert!(!l.contains("unwrap"));
+        assert!(l.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn waiver_parses_rule_and_reason() {
+        let cf = clean("x(); // lint:allow(no-panic-in-serving, reason = \"infallible\")\n");
+        assert_eq!(cf.waivers.len(), 1);
+        assert_eq!(cf.waivers[0].rule, "no-panic-in-serving");
+        assert_eq!(cf.waivers[0].reason, "infallible");
+        assert_eq!(cf.waivers[0].line, 1);
+        assert!(cf.waiver_errors.is_empty());
+    }
+
+    #[test]
+    fn waiver_without_reason_is_malformed() {
+        let cf = clean("// lint:allow(no-panic-in-serving)\n");
+        assert!(cf.waivers.is_empty());
+        assert_eq!(cf.waiver_errors.len(), 1);
+        assert!(cf.waiver_errors[0].message.contains("reason"));
+    }
+
+    #[test]
+    fn cfg_test_and_mod_tests_regions_are_marked() {
+        let src = "\
+fn serving() {}
+#[cfg(test)]
+mod tests {
+    fn helper() {}
+}
+fn more_serving() {}
+";
+        let cf = clean(src);
+        assert!(!cf.is_test[0], "serving fn is not test code");
+        assert!(cf.is_test[3], "body of mod tests is test code");
+        assert!(!cf.is_test[5], "code after the test mod is not test code");
+    }
+
+    #[test]
+    fn test_attribute_marks_the_following_fn() {
+        let src = "#[test]\nfn check() {\n    boom();\n}\nfn live() {}\n";
+        let cf = clean(src);
+        assert!(cf.is_test[2], "test fn body is test code");
+        assert!(!cf.is_test[4], "fn after the test is live code");
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nfn live() {\n    serve();\n}\n";
+        let cf = clean(src);
+        assert!(!cf.is_test[2]);
+    }
+}

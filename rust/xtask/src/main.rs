@@ -1,0 +1,85 @@
+//! `cargo xtask` — repo-invariant static analysis for the pqdtw crate.
+//!
+//! Usage:
+//!   cargo run -p xtask -- lint [--json] [--root <dir>]
+//!   cargo run -p xtask -- rules
+//!
+//! `lint` analyzes every `.rs` file under the root (default: the
+//! pqdtw crate's `src/`) and exits 0 when the tree is clean, 1 when
+//! any finding remains, 2 on usage or I/O errors. `rules` prints the
+//! registry. The `cargo lint` alias (rust/.cargo/config.toml) wraps
+//! the first form.
+
+mod engine;
+mod lexer;
+mod rules;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: cargo run -p xtask -- <command>\n\
+    \n\
+    commands:\n\
+    \x20 lint [--json] [--root <dir>]   lint the tree (default root: rust/src)\n\
+    \x20 rules                          print the rule registry\n";
+
+fn default_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+}
+
+fn cmd_lint(args: &[String]) -> Result<ExitCode, String> {
+    let mut json = false;
+    let mut root = default_root();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--root" => {
+                let dir = it.next().ok_or("--root requires a directory argument")?;
+                root = PathBuf::from(dir);
+            }
+            other => return Err(format!("unknown argument `{other}`\n{USAGE}")),
+        }
+    }
+    if !root.is_dir() {
+        return Err(format!("lint root {} is not a directory", root.display()));
+    }
+
+    let findings = engine::lint_tree(&root)?;
+    if json {
+        print!("{}", engine::render_json(&findings));
+    } else if findings.is_empty() {
+        println!("xtask lint: clean ({} rules)", rules::RULES.len());
+    } else {
+        print!("{}", engine::render_text(&findings));
+        eprintln!("xtask lint: {} finding(s)", findings.len());
+    }
+    if findings.is_empty() {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::from(1))
+    }
+}
+
+fn cmd_rules() -> ExitCode {
+    for r in rules::RULES {
+        println!("{}\n  scope: {}\n  {}\n", r.name, r.scope, r.summary);
+    }
+    ExitCode::SUCCESS
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("lint") => cmd_lint(&args[1..]),
+        Some("rules") => Ok(cmd_rules()),
+        _ => Err(USAGE.to_string()),
+    };
+    match result {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("xtask: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,464 @@
+//! The rule registry: each rule encodes one invariant the repo's
+//! correctness story depends on, scoped to the paths where it must
+//! hold. Rules run over cleaned lines (`lexer::CleanFile`) and skip
+//! test regions — tests are allowed to panic, index, and cast.
+//!
+//! `docs/INVARIANTS.md` documents what each rule protects and how to
+//! waive it; keep that file in sync when adding or changing rules.
+
+use crate::lexer::CleanFile;
+
+/// One diagnostic: a rule violated at a line of a file.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the crate's `src/`, forward slashes.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Rule name (from the registry, or `lint-waiver`).
+    pub rule: &'static str,
+    /// Human-readable explanation with the offending token.
+    pub message: String,
+}
+
+/// Serving code must return `Err`, never panic.
+pub const NO_PANIC: &str = "no-panic-in-serving";
+/// Codec narrowing must be checked (`try_from`), never `as`.
+pub const NO_LOSSY_CAST: &str = "no-lossy-cast-in-codec";
+/// Ranking paths must use total orders and ordered containers.
+pub const DET_ORDER: &str = "deterministic-ordering";
+/// Decoded lengths must be bounds-checked before sizing allocations.
+pub const VALIDATE_ALLOC: &str = "validate-before-alloc";
+/// The crate forbids `unsafe` (waiver path documented for SIMD).
+pub const FORBID_UNSAFE: &str = "forbid-unsafe";
+/// Meta-rule for waiver hygiene; not itself waivable.
+pub const LINT_WAIVER: &str = "lint-waiver";
+
+/// Registry entry: name, what it protects, where it applies.
+pub struct RuleInfo {
+    /// Stable rule name, used in waivers and reports.
+    pub name: &'static str,
+    /// One-line description.
+    pub summary: &'static str,
+    /// Human-readable scope (path prefixes under `src/`).
+    pub scope: &'static str,
+}
+
+/// Every rule the engine knows, in reporting order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: NO_PANIC,
+        summary: "no unwrap/expect/panic-family macros in serving code; \
+                  hostile bytes must surface as Err, never a crash",
+        scope: "store/, net/, coordinator/service.rs (non-test)",
+    },
+    RuleInfo {
+        name: NO_LOSSY_CAST,
+        summary: "no `as u8/u16/u32/usize` narrowing in codec code; \
+                  use checked try_from/From conversions",
+        scope: "store/codec.rs, net/protocol.rs (non-test)",
+    },
+    RuleInfo {
+        name: DET_ORDER,
+        summary: "no HashMap/HashSet or partial_cmp().unwrap() where the \
+                  deterministic (distance, index) order is produced",
+        scope: "nn/, pq/scan.rs, coordinator/ (non-test)",
+    },
+    RuleInfo {
+        name: VALIDATE_ALLOC,
+        summary: "allocations sized from decoded values must follow a \
+                  bounds check (ensure!/checked_count/bail!) within the \
+                  preceding 12 lines",
+        scope: "store/, net/protocol.rs (non-test)",
+    },
+    RuleInfo {
+        name: FORBID_UNSAFE,
+        summary: "crate root carries #![forbid(unsafe_code)] and no file \
+                  uses `unsafe` (SIMD tiers must waive with justification)",
+        scope: "lib.rs (attribute), every file (unsafe keyword)",
+    },
+    RuleInfo {
+        name: LINT_WAIVER,
+        summary: "waivers must name a known rule, carry a reason, and \
+                  actually suppress a finding",
+        scope: "every file",
+    },
+];
+
+/// Is `name` a rule the registry knows?
+pub fn is_known_rule(name: &str) -> bool {
+    RULES.iter().any(|r| r.name == name)
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Byte offsets where `word` occurs as a whole identifier.
+fn find_words(line: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let bytes = line.as_bytes();
+    for (pos, _) in line.match_indices(word) {
+        let before_ok = pos == 0 || !is_ident_byte(bytes[pos - 1]);
+        let end = pos + word.len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            out.push(pos);
+        }
+    }
+    out
+}
+
+/// First non-space byte before `pos`.
+fn prev_nonspace(line: &str, pos: usize) -> Option<u8> {
+    line.as_bytes()[..pos].iter().rev().copied().find(|b| *b != b' ')
+}
+
+/// First non-space byte at or after `pos`.
+fn next_nonspace(line: &str, pos: usize) -> Option<u8> {
+    line.as_bytes()[pos..].iter().copied().find(|b| *b != b' ')
+}
+
+/// Offsets where `.name(` occurs (a method call on some receiver).
+fn find_method_calls(line: &str, name: &str) -> Vec<usize> {
+    find_words(line, name)
+        .into_iter()
+        .filter(|&pos| {
+            prev_nonspace(line, pos) == Some(b'.')
+                && next_nonspace(line, pos + name.len()) == Some(b'(')
+        })
+        .collect()
+}
+
+/// Offsets where `name!` occurs (a macro invocation).
+fn find_macro_calls(line: &str, name: &str) -> Vec<usize> {
+    find_words(line, name)
+        .into_iter()
+        .filter(|&pos| next_nonspace(line, pos + name.len()) == Some(b'!'))
+        .collect()
+}
+
+/// Run every path-scoped rule over one cleaned file. `rel` is the
+/// file's path relative to the crate's `src/`, with forward slashes.
+pub fn check_all(rel: &str, cf: &CleanFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if scope_no_panic(rel) {
+        check_no_panic(rel, cf, &mut out);
+    }
+    if scope_lossy_cast(rel) {
+        check_lossy_cast(rel, cf, &mut out);
+    }
+    if scope_det_order(rel) {
+        check_det_order(rel, cf, &mut out);
+    }
+    if scope_validate_alloc(rel) {
+        check_validate_alloc(rel, cf, &mut out);
+    }
+    check_forbid_unsafe(rel, cf, &mut out);
+    out
+}
+
+fn scope_no_panic(rel: &str) -> bool {
+    rel.starts_with("store/") || rel.starts_with("net/") || rel == "coordinator/service.rs"
+}
+
+fn scope_lossy_cast(rel: &str) -> bool {
+    rel == "store/codec.rs" || rel == "net/protocol.rs"
+}
+
+fn scope_det_order(rel: &str) -> bool {
+    rel.starts_with("nn/") || rel == "pq/scan.rs" || rel.starts_with("coordinator/")
+}
+
+fn scope_validate_alloc(rel: &str) -> bool {
+    rel.starts_with("store/") || rel == "net/protocol.rs"
+}
+
+/// Panic surfaces: `.unwrap()` / `.expect(..)` calls and the panic
+/// macro family. `debug_assert*` is deliberately allowed (compiled out
+/// of release serving binaries); `unwrap_or*` / `expect_err` never
+/// match because the match is whole-identifier.
+fn check_no_panic(rel: &str, cf: &CleanFile, out: &mut Vec<Finding>) {
+    const METHODS: [&str; 2] = ["unwrap", "expect"];
+    const MACROS: [&str; 7] = [
+        "panic",
+        "unreachable",
+        "todo",
+        "unimplemented",
+        "assert",
+        "assert_eq",
+        "assert_ne",
+    ];
+    for (idx, line) in cf.lines.iter().enumerate() {
+        if cf.is_test[idx] {
+            continue;
+        }
+        for m in METHODS {
+            if !find_method_calls(line, m).is_empty() {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: NO_PANIC,
+                    message: format!(
+                        ".{m}() can panic in serving code — propagate an Err \
+                         (anyhow context) instead, or waive a proven-infallible case"
+                    ),
+                });
+            }
+        }
+        for m in MACROS {
+            if !find_macro_calls(line, m).is_empty() {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: NO_PANIC,
+                    message: format!(
+                        "{m}! aborts the serving thread — hostile input must \
+                         surface as Err, not a panic"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Narrowing casts in the byte codecs: `as u8/u16/u32/usize` silently
+/// truncates on the very inputs the hostile-byte sweeps exist for.
+fn check_lossy_cast(rel: &str, cf: &CleanFile, out: &mut Vec<Finding>) {
+    const NARROW: [&str; 4] = ["u8", "u16", "u32", "usize"];
+    for (idx, line) in cf.lines.iter().enumerate() {
+        if cf.is_test[idx] {
+            continue;
+        }
+        for pos in find_words(line, "as") {
+            let rest = line[pos + 2..].trim_start();
+            let end = rest
+                .char_indices()
+                .find(|&(_, c)| !(c.is_ascii_alphanumeric() || c == '_'))
+                .map(|(i, _)| i)
+                .unwrap_or(rest.len());
+            let word = &rest[..end];
+            if NARROW.contains(&word) {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: NO_LOSSY_CAST,
+                    message: format!(
+                        "`as {word}` can silently truncate decoded values — \
+                         use {word}::try_from (or a widening From) so hostile \
+                         lengths fail loudly"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Ordering hazards on the ranking paths: hash-iteration order leaks
+/// into results, and `partial_cmp().unwrap()` both panics on NaN and
+/// documents a non-total order where the (distance, index) contract
+/// requires `total_cmp`.
+fn check_det_order(rel: &str, cf: &CleanFile, out: &mut Vec<Finding>) {
+    for (idx, line) in cf.lines.iter().enumerate() {
+        if cf.is_test[idx] {
+            continue;
+        }
+        for container in ["HashMap", "HashSet"] {
+            if !find_words(line, container).is_empty() {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: DET_ORDER,
+                    message: format!(
+                        "{container} iteration order is nondeterministic — use a \
+                         sorted structure (Vec + sort, BTreeMap) on ranking paths"
+                    ),
+                });
+            }
+        }
+        for pos in find_method_calls(line, "partial_cmp") {
+            let tail_same = &line[pos..];
+            let next = match cf.lines.get(idx + 1) {
+                Some(l) => l.as_str(),
+                None => "",
+            };
+            let chained = format!("{tail_same} {next}");
+            if !find_method_calls(&chained, "unwrap").is_empty()
+                || !find_method_calls(&chained, "expect").is_empty()
+            {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: DET_ORDER,
+                    message: "partial_cmp().unwrap() panics on NaN and is not a \
+                              total order — use f64::total_cmp"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Is the cleaned expression a plain integer literal (possibly with
+/// `_` separators or a type suffix)?
+fn is_int_literal(expr: &str) -> bool {
+    let t = expr.trim();
+    if t.is_empty() || !t.as_bytes()[0].is_ascii_digit() {
+        return false;
+    }
+    t.bytes().all(is_ident_byte)
+}
+
+/// Text between the `(` following byte offset `after` and its matching
+/// `)` on the same line (best-effort: empty when it spills over).
+fn paren_arg(line: &str, after: usize) -> Option<&str> {
+    let bytes = line.as_bytes();
+    let mut i = after;
+    while i < bytes.len() && bytes[i] == b' ' {
+        i += 1;
+    }
+    if i >= bytes.len() || bytes[i] != b'(' {
+        return None;
+    }
+    let start = i + 1;
+    let mut depth = 1usize;
+    let mut j = start;
+    while j < bytes.len() {
+        match bytes[j] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&line[start..j]);
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Does any of the `window` cleaned lines ending at `idx` (inclusive)
+/// carry a bounds check?
+fn guarded(cf: &CleanFile, idx: usize, window: usize) -> bool {
+    let lo = idx.saturating_sub(window);
+    cf.lines[lo..=idx].iter().any(|l| {
+        !find_macro_calls(l, "ensure").is_empty()
+            || !find_macro_calls(l, "bail").is_empty()
+            || !find_words(l, "checked_count").is_empty()
+    })
+}
+
+/// Window of preceding lines in which `guarded` looks for a check.
+const GUARD_WINDOW: usize = 12;
+
+/// Allocations sized by freshly decoded values: `with_capacity(n)` and
+/// `vec![x; n]` where `n` is not a literal must sit within
+/// `GUARD_WINDOW` lines of an explicit bounds check, so a hostile
+/// length prefix can never drive an unbounded allocation.
+fn check_validate_alloc(rel: &str, cf: &CleanFile, out: &mut Vec<Finding>) {
+    for (idx, line) in cf.lines.iter().enumerate() {
+        if cf.is_test[idx] {
+            continue;
+        }
+        for pos in find_words(line, "with_capacity") {
+            let arg = paren_arg(line, pos + "with_capacity".len());
+            let sized_from_value = match arg {
+                // `.len()` of an existing container is not a decoded value.
+                Some(a) => !is_int_literal(a) && find_method_calls(a, "len").is_empty(),
+                None => true, // spills the line: demand a guard
+            };
+            if sized_from_value && !guarded(cf, idx, GUARD_WINDOW) {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: VALIDATE_ALLOC,
+                    message: format!(
+                        "with_capacity sized from a runtime value without a \
+                         bounds check in the preceding {GUARD_WINDOW} lines — \
+                         validate the decoded length (ensure!/checked_count) first"
+                    ),
+                });
+            }
+        }
+        for pos in find_macro_calls(line, "vec") {
+            // Repeat form only: vec![elem; count].
+            let Some(open) = line[pos..].find('[') else { continue };
+            let body_start = pos + open + 1;
+            let bytes = line.as_bytes();
+            let mut depth = 1usize;
+            let mut semi = None;
+            let mut close = None;
+            let mut j = body_start;
+            while j < bytes.len() {
+                match bytes[j] {
+                    b'[' => depth += 1,
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            close = Some(j);
+                            break;
+                        }
+                    }
+                    b';' if depth == 1 => semi = Some(j),
+                    _ => {}
+                }
+                j += 1;
+            }
+            let (Some(semi), Some(close)) = (semi, close) else { continue };
+            let count = &line[semi + 1..close];
+            // `.len()` of an existing container is not a decoded value.
+            if !is_int_literal(count)
+                && find_method_calls(count, "len").is_empty()
+                && !guarded(cf, idx, GUARD_WINDOW)
+            {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: VALIDATE_ALLOC,
+                    message: format!(
+                        "vec![_; n] sized from a runtime value without a bounds \
+                         check in the preceding {GUARD_WINDOW} lines — validate \
+                         the decoded length (ensure!/checked_count) first"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// `unsafe` is forbidden everywhere, and the crate root must say so
+/// (`#![forbid(unsafe_code)]`) so rustc enforces it even where the
+/// token scan cannot see (macro expansions).
+fn check_forbid_unsafe(rel: &str, cf: &CleanFile, out: &mut Vec<Finding>) {
+    for (idx, line) in cf.lines.iter().enumerate() {
+        if cf.is_test[idx] {
+            continue;
+        }
+        if !find_words(line, "unsafe").is_empty() {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule: FORBID_UNSAFE,
+                message: "`unsafe` is forbidden in this crate — a vetted SIMD \
+                          tier must carry a waiver with its safety argument"
+                    .to_string(),
+            });
+        }
+    }
+    if rel == "lib.rs" {
+        let squashed: String =
+            cf.lines.join("").chars().filter(|c| !c.is_whitespace()).collect();
+        if !squashed.contains("#![forbid(unsafe_code)]") {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: 1,
+                rule: FORBID_UNSAFE,
+                message: "crate root is missing #![forbid(unsafe_code)] — the \
+                          compiler-enforced twin of this rule"
+                    .to_string(),
+            });
+        }
+    }
+}
