@@ -16,13 +16,15 @@
 //!   exact DTW values, not approximations.
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::core::series::Dataset;
 use crate::nn::ivf::{CoarseMetric, IvfIndex};
 use crate::nn::knn::PqQueryMode;
-use crate::nn::topk::{rerank_dtw, topk_scan_blocked, Neighbor, QueryLut};
+use crate::nn::topk::{rerank_dtw, topk_scan_blocked_stats, Neighbor, QueryLut};
+use crate::obs::{HitExplain, QueryTrace, ScanSnapshot, ScanStats, Stage, StageSpan};
 use crate::pq::encode::CodeBlocks;
 use crate::pq::quantizer::{EncodedDataset, PqConfig, ProductQuantizer};
 
@@ -141,6 +143,32 @@ pub struct Engine {
     blocks: CodeBlocks,
     /// Threads used for exhaustive top-k scans (1 = sequential).
     scan_threads: usize,
+    /// Process-lifetime prune-cascade counters: every query's per-query
+    /// sink is merged in here, so the Prometheus exposition can report
+    /// cumulative scan/abandon totals.
+    scan_stats: ScanStats,
+}
+
+/// Identification summary of the serving state (the index header a
+/// remote `stats` call reports): `M`/`K`/`L`, the DTW window fraction,
+/// the coarse metric, and the database size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineInfo {
+    /// PQ subspaces (`M`).
+    pub n_subspaces: usize,
+    /// Codebook size per subspace (`K`).
+    pub codebook_size: usize,
+    /// Trained series length (`L`).
+    pub series_len: usize,
+    /// Sakoe-Chiba window fraction of the trained config.
+    pub window_frac: f64,
+    /// Coarse metric of the IVF index (`"dtw"` / `"euclidean"`), or
+    /// `"none"` when no IVF index is attached.
+    pub coarse_metric: String,
+    /// Number of database items.
+    pub n_items: usize,
+    /// IVF list count, when an IVF index is attached.
+    pub nlist: Option<usize>,
 }
 
 impl Engine {
@@ -158,6 +186,7 @@ impl Engine {
             n_items: db.n_series(),
             blocks,
             scan_threads: 1,
+            scan_stats: ScanStats::new(),
         })
     }
 
@@ -199,6 +228,7 @@ impl Engine {
             n_items,
             blocks,
             scan_threads: 1,
+            scan_stats: ScanStats::new(),
         })
     }
 
@@ -224,29 +254,165 @@ impl Engine {
         }
     }
 
-    /// PQ candidate pool for a query: IVF-probed when `nprobe` is set,
-    /// exhaustive (sharded) scan otherwise.
-    fn pq_candidates(
+    /// Cumulative prune-cascade counters over the engine's lifetime
+    /// (every served query merges its per-query sink in here).
+    pub fn scan_stats(&self) -> ScanSnapshot {
+        self.scan_stats.snapshot()
+    }
+
+    /// Identification summary of the serving state.
+    pub fn info(&self) -> EngineInfo {
+        let coarse_metric = match self.ivf.as_ref().map(|ivf| ivf.coarse_metric()) {
+            Some(CoarseMetric::Dtw { .. }) => "dtw".to_string(),
+            Some(CoarseMetric::Euclidean) => "euclidean".to_string(),
+            None => "none".to_string(),
+        };
+        EngineInfo {
+            n_subspaces: self.encoded.n_subspaces,
+            codebook_size: self.pq.codebook.k,
+            series_len: self.pq.series_len,
+            window_frac: self.pq.config.window_frac,
+            coarse_metric,
+            n_items: self.n_items,
+            nlist: self.ivf.as_ref().map(|ivf| ivf.nlist()),
+        }
+    }
+
+    /// Walk one query down the stage ladder (`lut_collapse` →
+    /// `coarse_probe` → `blocked_scan` → `rerank`), recording a span per
+    /// stage into `trace` and kernel counters into the per-query sink.
+    /// Returns the ranked neighbours — bit-identical to the pre-trace
+    /// code path: the ladder calls the same kernels with the same
+    /// arguments, tracing only observes.
+    #[allow(clippy::too_many_arguments)]
+    fn query_ladder(
         &self,
-        lut: &QueryLut,
         series: &[f64],
         k: usize,
+        depth: usize,
+        mode: PqQueryMode,
         nprobe: Option<usize>,
+        rerank: bool,
+        explain: bool,
+        trace: &mut QueryTrace,
     ) -> std::result::Result<Vec<Neighbor>, Response> {
-        match nprobe {
-            Some(np) => match &self.ivf {
-                Some(ivf) => {
-                    Ok(ivf.query_topk_with(&self.pq, &self.encoded, lut, series, k, np))
-                }
-                None => Err(Response::Error(
-                    "nprobe set but the engine has no IVF index (call enable_ivf)".into(),
-                )),
-            },
-            None => {
-                let clut = lut.collapse(&self.pq.codebook);
-                Ok(topk_scan_blocked(&self.blocks, &clut, k, self.scan_threads))
+        let qstats = ScanStats::new();
+        let n_items = self.n_items as u64;
+        let cands = match nprobe {
+            Some(np) => {
+                let Some(ivf) = &self.ivf else {
+                    return Err(Response::Error(
+                        "nprobe set but the engine has no IVF index (call enable_ivf)".into(),
+                    ));
+                };
+                let t0 = Instant::now();
+                let lut = QueryLut::build(&self.pq, series, mode);
+                let lut_us = t0.elapsed().as_micros() as u64;
+                trace.spans.push(StageSpan {
+                    stage: Stage::LutCollapse,
+                    wall_us: lut_us,
+                    candidates_in: n_items,
+                    candidates_out: n_items,
+                });
+                let t1 = Instant::now();
+                let (cands, probe) = ivf.query_topk_traced(
+                    &self.pq,
+                    &self.encoded,
+                    &lut,
+                    series,
+                    depth,
+                    np,
+                    Some(&qstats),
+                );
+                let total_us = t1.elapsed().as_micros() as u64;
+                trace.spans.push(StageSpan {
+                    stage: Stage::CoarseProbe,
+                    wall_us: probe.probe_us,
+                    candidates_in: n_items,
+                    candidates_out: probe.items_in_cells,
+                });
+                let s = qstats.snapshot();
+                trace.spans.push(StageSpan {
+                    stage: Stage::BlockedScan,
+                    wall_us: total_us.saturating_sub(probe.probe_us),
+                    candidates_in: s.items_scanned,
+                    candidates_out: s.items_scanned - s.items_abandoned,
+                });
+                cands
             }
+            None => {
+                let t0 = Instant::now();
+                let lut = QueryLut::build(&self.pq, series, mode);
+                let clut = lut.collapse(&self.pq.codebook);
+                if matches!(mode, PqQueryMode::Symmetric) {
+                    qstats.add_lut_collapse();
+                }
+                let lut_us = t0.elapsed().as_micros() as u64;
+                trace.spans.push(StageSpan {
+                    stage: Stage::LutCollapse,
+                    wall_us: lut_us,
+                    candidates_in: n_items,
+                    candidates_out: n_items,
+                });
+                let t1 = Instant::now();
+                let cands = topk_scan_blocked_stats(
+                    &self.blocks,
+                    &clut,
+                    depth,
+                    self.scan_threads,
+                    true,
+                    Some(&qstats),
+                );
+                let scan_us = t1.elapsed().as_micros() as u64;
+                let s = qstats.snapshot();
+                trace.spans.push(StageSpan {
+                    stage: Stage::BlockedScan,
+                    wall_us: scan_us,
+                    candidates_in: s.items_scanned,
+                    candidates_out: s.items_scanned - s.items_abandoned,
+                });
+                cands
+            }
+        };
+        let ranked = if rerank {
+            let t2 = Instant::now();
+            let ranked = rerank_dtw(&self.raw, series, &cands, k, self.full_window());
+            trace.spans.push(StageSpan {
+                stage: Stage::Rerank,
+                wall_us: t2.elapsed().as_micros() as u64,
+                candidates_in: cands.len() as u64,
+                candidates_out: ranked.len() as u64,
+            });
+            ranked
+        } else {
+            cands.clone()
+        };
+        if explain {
+            trace.hits = ranked
+                .iter()
+                .map(|n| {
+                    let (pq_estimate, exact_dtw, admitted_by) = if rerank {
+                        let est = cands
+                            .iter()
+                            .find(|c| c.index == n.index)
+                            .map(|c| c.distance)
+                            .unwrap_or(f64::NAN);
+                        (est, Some(n.distance), Stage::Rerank)
+                    } else {
+                        (n.distance, None, Stage::BlockedScan)
+                    };
+                    HitExplain {
+                        index: n.index as u64,
+                        pq_estimate,
+                        exact_dtw,
+                        admitted_by,
+                    }
+                })
+                .collect();
         }
+        trace.scan = qstats.snapshot();
+        qstats.merge_into(&self.scan_stats);
+        Ok(ranked)
     }
 
     fn hit(&self, n: Neighbor) -> Hit {
@@ -259,55 +425,85 @@ impl Engine {
 
     /// Serve one request.
     pub fn handle(&self, req: &Request) -> Response {
+        self.handle_traced(req, false).0
+    }
+
+    /// Serve one request and record its [`QueryTrace`] (the stage
+    /// ladder runs for the query classes `NnQuery`/`TopKQuery`; other
+    /// classes return `None`). With `explain` set, the trace also
+    /// carries per-hit [`HitExplain`] records. The response is
+    /// bit-identical to [`Engine::handle`]: tracing only observes.
+    ///
+    /// The trace's `request_id` is left at 0 — the network server
+    /// stamps the client-supplied id over it.
+    pub fn handle_traced(&self, req: &Request, explain: bool) -> (Response, Option<QueryTrace>) {
         match req {
             Request::Encode { series } => {
                 if series.len() != self.pq.series_len {
-                    return Response::Error(format!(
-                        "series length {} != trained length {}",
-                        series.len(),
-                        self.pq.series_len
-                    ));
+                    return (
+                        Response::Error(format!(
+                            "series length {} != trained length {}",
+                            series.len(),
+                            self.pq.series_len
+                        )),
+                        None,
+                    );
                 }
                 let (codes, _, _) = self.pq.encode(series);
-                Response::Codes(codes)
+                (Response::Codes(codes), None)
             }
             Request::NnQuery { series, mode, nprobe } => {
                 if series.len() != self.pq.series_len {
-                    return Response::Error(format!(
-                        "series length {} != trained length {}",
-                        series.len(),
-                        self.pq.series_len
-                    ));
+                    return (
+                        Response::Error(format!(
+                            "series length {} != trained length {}",
+                            series.len(),
+                            self.pq.series_len
+                        )),
+                        None,
+                    );
                 }
                 if self.n_items == 0 {
-                    return Response::Error("empty database".into());
+                    return (Response::Error("empty database".into()), None);
                 }
-                let lut = QueryLut::build(&self.pq, series, *mode);
-                let hits = match self.pq_candidates(&lut, series, 1, *nprobe) {
-                    Ok(hits) => hits,
-                    Err(resp) => return resp,
-                };
-                match hits.first() {
-                    Some(&n) => {
-                        let h = self.hit(n);
-                        Response::Nn { index: h.index, distance: h.distance, label: h.label }
-                    }
-                    None => Response::Error("probed cells were empty".into()),
+                let mut trace = QueryTrace::default();
+                match self.query_ladder(series, 1, 1, *mode, *nprobe, false, explain, &mut trace)
+                {
+                    Err(resp) => (resp, None),
+                    Ok(hits) => match hits.first() {
+                        Some(&n) => {
+                            let h = self.hit(n);
+                            (
+                                Response::Nn {
+                                    index: h.index,
+                                    distance: h.distance,
+                                    label: h.label,
+                                },
+                                Some(trace),
+                            )
+                        }
+                        None => {
+                            (Response::Error("probed cells were empty".into()), Some(trace))
+                        }
+                    },
                 }
             }
             Request::TopKQuery { series, k, mode, nprobe, rerank } => {
                 if series.len() != self.pq.series_len {
-                    return Response::Error(format!(
-                        "series length {} != trained length {}",
-                        series.len(),
-                        self.pq.series_len
-                    ));
+                    return (
+                        Response::Error(format!(
+                            "series length {} != trained length {}",
+                            series.len(),
+                            self.pq.series_len
+                        )),
+                        None,
+                    );
                 }
                 if self.n_items == 0 {
-                    return Response::Error("empty database".into());
+                    return (Response::Error("empty database".into()), None);
                 }
                 if *k == 0 {
-                    return Response::Error("k must be >= 1".into());
+                    return (Response::Error("k must be >= 1".into()), None);
                 }
                 let k = (*k).min(self.n_items);
                 // candidate depth: k, widened when a re-rank follows
@@ -315,22 +511,29 @@ impl Engine {
                     Some(r) => (*r).max(k).min(self.n_items),
                     None => k,
                 };
-                let lut = QueryLut::build(&self.pq, series, *mode);
-                let cands = match self.pq_candidates(&lut, series, depth, *nprobe) {
-                    Ok(c) => c,
-                    Err(resp) => return resp,
-                };
-                let ranked = match rerank {
-                    Some(_) => rerank_dtw(&self.raw, series, &cands, k, self.full_window()),
-                    None => cands,
-                };
-                Response::TopK(ranked.into_iter().map(|n| self.hit(n)).collect())
+                let mut trace = QueryTrace::default();
+                match self.query_ladder(
+                    series,
+                    k,
+                    depth,
+                    *mode,
+                    *nprobe,
+                    rerank.is_some(),
+                    explain,
+                    &mut trace,
+                ) {
+                    Err(resp) => (resp, None),
+                    Ok(ranked) => (
+                        Response::TopK(ranked.into_iter().map(|n| self.hit(n)).collect()),
+                        Some(trace),
+                    ),
+                }
             }
             Request::PairDist { i, j } => {
                 if *i >= self.n_items || *j >= self.n_items {
-                    return Response::Error("index out of range".into());
+                    return (Response::Error("index out of range".into()), None);
                 }
-                Response::Dist(self.pq.patched_distance(&self.encoded, *i, *j))
+                (Response::Dist(self.pq.patched_distance(&self.encoded, *i, *j)), None)
             }
         }
     }
@@ -567,6 +770,105 @@ mod tests {
         std::fs::write(&garbage, b"definitely not an index").unwrap();
         assert!(Engine::open(&garbage).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn traced_responses_are_bit_identical_with_consistent_spans() {
+        use crate::obs::Stage;
+        let (mut engine, test) = toy_engine();
+        engine.enable_ivf(6, CoarseMetric::Dtw { window: engine.full_window() }, 5);
+        let nlist = engine.ivf.as_ref().unwrap().nlist();
+        let q = test.row(0).to_vec();
+        let cases = [
+            (None, None),
+            (Some(nlist), None),
+            (Some(2), None),
+            (None, Some(12)),
+            (Some(3), Some(9)),
+        ];
+        for (nprobe, rerank) in cases {
+            let req = Request::TopKQuery {
+                series: q.clone(),
+                k: 4,
+                mode: PqQueryMode::Asymmetric,
+                nprobe,
+                rerank,
+            };
+            let plain = engine.handle(&req);
+            let (traced, trace) = engine.handle_traced(&req, true);
+            assert_eq!(plain, traced, "nprobe={nprobe:?} rerank={rerank:?}");
+            let trace = trace.expect("query classes carry a trace");
+            // Ladder shape: lut_collapse always; coarse_probe iff probed;
+            // rerank iff requested.
+            assert!(trace.span(Stage::LutCollapse).is_some());
+            assert!(trace.span(Stage::BlockedScan).is_some());
+            assert_eq!(trace.span(Stage::CoarseProbe).is_some(), nprobe.is_some());
+            assert_eq!(trace.span(Stage::Rerank).is_some(), rerank.is_some());
+            // Conservation: in − abandoned = out on the scan span.
+            let scan = trace.span(Stage::BlockedScan).unwrap();
+            assert_eq!(
+                scan.candidates_in - trace.scan.items_abandoned,
+                scan.candidates_out
+            );
+            assert_eq!(scan.candidates_in, trace.scan.items_scanned);
+            // Explain records mirror the hit list.
+            match &traced {
+                Response::TopK(hits) => {
+                    assert_eq!(trace.hits.len(), hits.len());
+                    for (e, h) in trace.hits.iter().zip(hits) {
+                        assert_eq!(e.index, h.index as u64);
+                        if rerank.is_some() {
+                            assert_eq!(e.admitted_by, Stage::Rerank);
+                            assert_eq!(e.exact_dtw, Some(h.distance));
+                            assert!(e.pq_estimate.is_finite());
+                        } else {
+                            assert_eq!(e.admitted_by, Stage::BlockedScan);
+                            assert_eq!(e.pq_estimate, h.distance);
+                            assert_eq!(e.exact_dtw, None);
+                        }
+                    }
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // The engine-wide sink accumulated every query's counters.
+        let total = engine.scan_stats();
+        assert!(total.items_scanned > 0);
+    }
+
+    #[test]
+    fn untraced_handle_does_not_build_explanations() {
+        let (engine, test) = toy_engine();
+        let req = Request::TopKQuery {
+            series: test.row(0).to_vec(),
+            k: 2,
+            mode: PqQueryMode::Symmetric,
+            nprobe: None,
+            rerank: None,
+        };
+        let (_, trace) = engine.handle_traced(&req, false);
+        let trace = trace.unwrap();
+        assert!(trace.hits.is_empty());
+        assert!(!trace.spans.is_empty());
+        // Symmetric exhaustive queries collapse the LUT once.
+        assert_eq!(trace.scan.lut_collapses, 1);
+    }
+
+    #[test]
+    fn engine_info_reports_index_header_summary() {
+        let (mut engine, _) = toy_engine();
+        let info = engine.info();
+        assert_eq!(info.n_subspaces, 4);
+        assert_eq!(info.codebook_size, 16);
+        assert_eq!(info.series_len, engine.pq.series_len);
+        assert!((info.window_frac - 0.2).abs() < 1e-12);
+        assert_eq!(info.coarse_metric, "none");
+        assert_eq!(info.n_items, engine.n_items);
+        assert_eq!(info.nlist, None);
+        engine.enable_ivf(6, CoarseMetric::Euclidean, 3);
+        let info = engine.info();
+        assert_eq!(info.coarse_metric, "euclidean");
+        assert_eq!(info.nlist, Some(engine.ivf.as_ref().unwrap().nlist()));
     }
 
     #[test]

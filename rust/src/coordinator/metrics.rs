@@ -1,8 +1,16 @@
 //! Lock-free service metrics: request counters, latency histogram,
-//! batch-size accounting, and per-request-class (serving mode) latency
-//! counters so the recall/latency dial of the top-k path is observable.
+//! batch-size accounting, per-request-class (serving mode) latency
+//! counters so the recall/latency dial of the top-k path is observable,
+//! and per-query-stage latency histograms (`lut_collapse` /
+//! `coarse_probe` / `blocked_scan` / `rerank`) fed by the engine's
+//! stage ladder. All histograms share the same log-spaced buckets and
+//! can be rendered in Prometheus text exposition format
+//! ([`Metrics::render_prometheus`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::prometheus::PromText;
+use crate::obs::{Stage, N_STAGES};
 
 /// Log-spaced latency buckets in microseconds (upper bounds).
 const BUCKETS_US: [u64; 12] =
@@ -90,6 +98,9 @@ pub struct Metrics {
     class_requests: [AtomicU64; N_REQUEST_CLASSES],
     class_latency_us: [AtomicU64; N_REQUEST_CLASSES],
     class_latency_buckets: [[AtomicU64; 12]; N_REQUEST_CLASSES],
+    stage_count: [AtomicU64; N_STAGES],
+    stage_latency_us: [AtomicU64; N_STAGES],
+    stage_latency_buckets: [[AtomicU64; 12]; N_STAGES],
 }
 
 /// Approximate percentile over a `(bucket upper bound µs, count)`
@@ -128,6 +139,22 @@ pub struct ClassSnapshot {
     pub p99_us: u64,
 }
 
+/// Per-query-stage slice of a [`MetricsSnapshot`] (same shape as
+/// [`ClassSnapshot`], keyed by ladder stage instead of request class).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSnapshot {
+    /// The query ladder stage.
+    pub stage: Stage,
+    /// Spans recorded for this stage.
+    pub count: u64,
+    /// Mean span wall-time (µs).
+    pub mean_us: f64,
+    /// Median span wall-time (µs, histogram upper bound).
+    pub p50_us: u64,
+    /// 99th-percentile span wall-time (µs, histogram upper bound).
+    pub p99_us: u64,
+}
+
 /// A point-in-time copy of the metrics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
@@ -146,6 +173,8 @@ pub struct MetricsSnapshot {
     /// Per-request-class counters, index-aligned with
     /// [`RequestClass::ALL`].
     pub per_class: Vec<ClassSnapshot>,
+    /// Per-query-stage counters, index-aligned with [`Stage::ALL`].
+    pub per_stage: Vec<StageSnapshot>,
 }
 
 impl MetricsSnapshot {
@@ -160,6 +189,11 @@ impl MetricsSnapshot {
     /// Counters for one request class.
     pub fn class(&self, class: RequestClass) -> ClassSnapshot {
         self.per_class[class.idx()]
+    }
+
+    /// Counters for one query ladder stage.
+    pub fn stage(&self, stage: Stage) -> StageSnapshot {
+        self.per_stage[stage.index()]
     }
 }
 
@@ -189,6 +223,16 @@ impl Metrics {
         self.batched_items.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Record one query-stage span's wall-time, reusing the same
+    /// log-spaced buckets as the request latency histograms.
+    pub fn record_stage(&self, stage: Stage, wall_us: u64) {
+        let idx = BUCKETS_US.iter().position(|&ub| wall_us <= ub).unwrap();
+        let s = stage.index();
+        self.stage_count[s].fetch_add(1, Ordering::Relaxed);
+        self.stage_latency_us[s].fetch_add(wall_us, Ordering::Relaxed);
+        self.stage_latency_buckets[s][idx].fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Take a snapshot.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let requests = self.requests.load(Ordering::Relaxed);
@@ -214,6 +258,25 @@ impl Metrics {
                 }
             })
             .collect();
+        let per_stage = Stage::ALL
+            .iter()
+            .map(|&stage| {
+                let n = self.stage_count[stage.index()].load(Ordering::Relaxed);
+                let lat = self.stage_latency_us[stage.index()].load(Ordering::Relaxed);
+                let hist: Vec<(u64, u64)> = BUCKETS_US
+                    .iter()
+                    .zip(self.stage_latency_buckets[stage.index()].iter())
+                    .map(|(&ub, c)| (ub, c.load(Ordering::Relaxed)))
+                    .collect();
+                StageSnapshot {
+                    stage,
+                    count: n,
+                    mean_us: if n > 0 { lat as f64 / n as f64 } else { 0.0 },
+                    p50_us: histogram_percentile(&hist, 0.5),
+                    p99_us: histogram_percentile(&hist, 0.99),
+                }
+            })
+            .collect();
         MetricsSnapshot {
             requests,
             errors: self.errors.load(Ordering::Relaxed),
@@ -226,6 +289,52 @@ impl Metrics {
                 .map(|(&ub, c)| (ub, c.load(Ordering::Relaxed)))
                 .collect(),
             per_class,
+            per_stage,
+        }
+    }
+
+    /// Render every counter and histogram into a Prometheus exposition
+    /// builder: total counters, per-class request-latency histograms
+    /// (`class` label), and per-stage span histograms (`stage` label).
+    /// The caller layers process-level families (uptime, build/index
+    /// info, scan counters) on top before finishing the document.
+    pub fn render_prometheus(&self, p: &mut PromText) {
+        p.counter("pqdtw_requests_total", self.requests.load(Ordering::Relaxed));
+        p.counter("pqdtw_errors_total", self.errors.load(Ordering::Relaxed));
+        p.counter("pqdtw_batches_total", self.batches.load(Ordering::Relaxed));
+        p.counter(
+            "pqdtw_batched_items_total",
+            self.batched_items.load(Ordering::Relaxed),
+        );
+        p.family("pqdtw_request_latency_microseconds", "histogram");
+        for &class in RequestClass::ALL.iter() {
+            let hist: Vec<(u64, u64)> = BUCKETS_US
+                .iter()
+                .zip(self.class_latency_buckets[class.idx()].iter())
+                .map(|(&ub, c)| (ub, c.load(Ordering::Relaxed)))
+                .collect();
+            let sum = self.class_latency_us[class.idx()].load(Ordering::Relaxed);
+            p.histogram_series(
+                "pqdtw_request_latency_microseconds",
+                &[("class", class.name())],
+                &hist,
+                sum as f64,
+            );
+        }
+        p.family("pqdtw_stage_latency_microseconds", "histogram");
+        for stage in Stage::ALL {
+            let hist: Vec<(u64, u64)> = BUCKETS_US
+                .iter()
+                .zip(self.stage_latency_buckets[stage.index()].iter())
+                .map(|(&ub, c)| (ub, c.load(Ordering::Relaxed)))
+                .collect();
+            let sum = self.stage_latency_us[stage.index()].load(Ordering::Relaxed);
+            p.histogram_series(
+                "pqdtw_stage_latency_microseconds",
+                &[("stage", stage.name())],
+                &hist,
+                sum as f64,
+            );
         }
     }
 }
@@ -335,6 +444,51 @@ mod tests {
         let ping = s.class(RequestClass::Ping);
         assert_eq!((ping.p50_us, ping.p99_us), (10, 10));
         assert_eq!(s.class(RequestClass::Stats).requests, 0);
+    }
+
+    #[test]
+    fn stage_spans_reuse_the_latency_buckets() {
+        let m = Metrics::new();
+        for _ in 0..9 {
+            m.record_stage(Stage::BlockedScan, 30);
+        }
+        m.record_stage(Stage::BlockedScan, 8_000);
+        m.record_stage(Stage::Rerank, 400);
+        let s = m.snapshot();
+        assert_eq!(s.per_stage.len(), N_STAGES);
+        let scan = s.stage(Stage::BlockedScan);
+        assert_eq!(scan.count, 10);
+        assert!((scan.mean_us - (9.0 * 30.0 + 8_000.0) / 10.0).abs() < 1e-9);
+        assert_eq!(scan.p50_us, 50);
+        assert_eq!(scan.p99_us, 10_000);
+        let rr = s.stage(Stage::Rerank);
+        assert_eq!((rr.count, rr.p50_us), (1, 500));
+        assert_eq!(s.stage(Stage::LutCollapse).count, 0);
+        // Stage spans do not perturb request counters.
+        assert_eq!(s.requests, 0);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_valid_exposition() {
+        use crate::obs::prometheus::validate_exposition;
+        let m = Metrics::new();
+        m.record_request(RequestClass::TopKProbed, 120, false);
+        m.record_request(RequestClass::Ping, 3, false);
+        m.record_stage(Stage::BlockedScan, 90);
+        let mut p = PromText::new();
+        m.render_prometheus(&mut p);
+        let text = p.finish();
+        let samples = validate_exposition(&text).expect("valid exposition");
+        assert!(samples > 0);
+        assert!(text.contains("# TYPE pqdtw_requests_total counter"));
+        assert!(text.contains("pqdtw_requests_total 2"));
+        assert!(text.contains("class=\"topk_probed\""));
+        assert!(text.contains("stage=\"blocked_scan\""));
+        assert!(text
+            .contains("pqdtw_request_latency_microseconds_count{class=\"topk_probed\"} 1"));
+        assert!(text.contains("pqdtw_stage_latency_microseconds_sum{stage=\"blocked_scan\"} 90"));
+        // The +Inf bucket closes every histogram series.
+        assert_eq!(text.matches("le=\"+Inf\"").count(), N_REQUEST_CLASSES + N_STAGES);
     }
 
     #[test]

@@ -21,6 +21,6 @@ pub mod metrics;
 pub mod service;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use engine::{Engine, Hit, Request, Response};
-pub use metrics::{ClassSnapshot, Metrics, MetricsSnapshot, RequestClass};
+pub use engine::{Engine, EngineInfo, Hit, Request, Response};
+pub use metrics::{ClassSnapshot, Metrics, MetricsSnapshot, RequestClass, StageSnapshot};
 pub use service::{Service, ServiceConfig};

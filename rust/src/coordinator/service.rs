@@ -15,6 +15,8 @@ use std::time::Instant;
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::engine::{Engine, Request, Response};
 use super::metrics::{Metrics, MetricsSnapshot};
+use crate::obs::prometheus::PromText;
+use crate::obs::QueryTrace;
 
 /// Service sizing.
 #[derive(Debug, Clone, Copy)]
@@ -34,7 +36,9 @@ impl Default for ServiceConfig {
 struct Job {
     request: Request,
     submitted: Instant,
-    reply: mpsc::Sender<Response>,
+    /// Client asked for a trace + per-hit explanations on this request.
+    trace: bool,
+    reply: mpsc::Sender<(Response, Option<QueryTrace>)>,
 }
 
 /// A running similarity-search service. Cloneable handles are cheap
@@ -42,6 +46,8 @@ struct Job {
 pub struct Service {
     batcher: Arc<DynamicBatcher<Job>>,
     metrics: Arc<Metrics>,
+    engine: Arc<Engine>,
+    started: Instant,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -60,40 +66,120 @@ impl Service {
                     metrics.record_batch(batch.len());
                     for job in batch {
                         let class = job.request.class();
-                        let resp = engine.handle(&job.request);
+                        let (resp, trace) = engine.handle_traced(&job.request, job.trace);
+                        // Stage spans feed the per-stage latency
+                        // histograms whether or not the client asked
+                        // for the trace back.
+                        if let Some(t) = &trace {
+                            for span in &t.spans {
+                                metrics.record_stage(span.stage, span.wall_us);
+                            }
+                        }
                         let is_err = matches!(resp, Response::Error(_));
                         let latency = job.submitted.elapsed().as_micros() as u64;
                         metrics.record_request(class, latency, is_err);
+                        let trace = if job.trace { trace } else { None };
                         // Receiver may have given up; that's fine.
-                        let _ = job.reply.send(resp);
+                        let _ = job.reply.send((resp, trace));
                     }
                 }
             }));
         }
-        Service { batcher, metrics, workers }
+        Service { batcher, metrics, engine, started: Instant::now(), workers }
     }
 
-    /// Submit a request; returns a oneshot receiver for the response.
-    /// `None` if the service is shutting down.
-    pub fn submit(&self, request: Request) -> Option<mpsc::Receiver<Response>> {
+    /// Submit a request; returns a oneshot receiver for the response
+    /// (trace slot always `None`). `None` if the service is shutting
+    /// down.
+    pub fn submit(
+        &self,
+        request: Request,
+    ) -> Option<mpsc::Receiver<(Response, Option<QueryTrace>)>> {
+        self.submit_traced(request, false)
+    }
+
+    /// Submit a request, optionally asking for a [`QueryTrace`] with
+    /// per-hit explanations alongside the response.
+    pub fn submit_traced(
+        &self,
+        request: Request,
+        trace: bool,
+    ) -> Option<mpsc::Receiver<(Response, Option<QueryTrace>)>> {
         let (tx, rx) = mpsc::channel();
-        let ok = self.batcher.push(Job { request, submitted: Instant::now(), reply: tx });
+        let ok = self
+            .batcher
+            .push(Job { request, submitted: Instant::now(), trace, reply: tx });
         ok.then_some(rx)
     }
 
     /// Convenience: submit and block for the response.
     pub fn call(&self, request: Request) -> Response {
-        match self.submit(request) {
-            Some(rx) => rx
-                .recv()
-                .unwrap_or_else(|_| Response::Error("worker dropped request".into())),
-            None => Response::Error("service closed".into()),
+        self.call_traced(request, false).0
+    }
+
+    /// Convenience: submit with a trace request and block for both.
+    pub fn call_traced(
+        &self,
+        request: Request,
+        trace: bool,
+    ) -> (Response, Option<QueryTrace>) {
+        match self.submit_traced(request, trace) {
+            Some(rx) => rx.recv().unwrap_or_else(|_| {
+                (Response::Error("worker dropped request".into()), None)
+            }),
+            None => (Response::Error("service closed".into()), None),
         }
     }
 
     /// Current metrics.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The shared engine (index header summary, scan counters).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Whole seconds since `start`.
+    pub fn uptime_s(&self) -> u64 {
+        self.started.elapsed().as_secs()
+    }
+
+    /// Render the full Prometheus text exposition for this service:
+    /// request/stage metrics, engine-wide prune-cascade counters, index
+    /// header gauges, uptime, and build info.
+    pub fn prometheus_text(&self) -> String {
+        let mut p = PromText::new();
+        self.metrics.render_prometheus(&mut p);
+        let scan = self.engine.scan_stats();
+        p.counter("pqdtw_scan_items_scanned_total", scan.items_scanned);
+        p.counter("pqdtw_scan_items_abandoned_total", scan.items_abandoned);
+        p.counter("pqdtw_scan_blocks_skipped_total", scan.blocks_skipped);
+        p.counter("pqdtw_scan_lut_collapses_total", scan.lut_collapses);
+        p.counter("pqdtw_scan_shard_time_microseconds_total", scan.shard_time_us);
+        let info = self.engine.info();
+        p.gauge("pqdtw_index_items", info.n_items as f64);
+        p.gauge("pqdtw_index_subspaces", info.n_subspaces as f64);
+        p.gauge("pqdtw_index_codebook_size", info.codebook_size as f64);
+        p.gauge("pqdtw_index_series_len", info.series_len as f64);
+        p.gauge("pqdtw_index_window_frac", info.window_frac);
+        p.gauge(
+            "pqdtw_index_ivf_lists",
+            info.nlist.map(|n| n as f64).unwrap_or(0.0),
+        );
+        p.gauge("pqdtw_queue_depth", self.queue_depth() as f64);
+        p.gauge("pqdtw_uptime_seconds", self.started.elapsed().as_secs_f64());
+        p.family("pqdtw_build_info", "gauge");
+        p.sample(
+            "pqdtw_build_info",
+            &[
+                ("version", env!("CARGO_PKG_VERSION")),
+                ("coarse_metric", info.coarse_metric.as_str()),
+            ],
+            1.0,
+        );
+        p.finish()
     }
 
     /// Record a request served outside the engine path — e.g. the
@@ -230,11 +316,63 @@ mod tests {
         }
         drop(svc);
         for (i, rx) in pending.into_iter().enumerate() {
-            let resp = rx.recv().unwrap_or_else(|_| {
+            let (resp, _) = rx.recv().unwrap_or_else(|_| {
                 panic!("request {i}: reply dropped — workers not joined on drop")
             });
             assert!(matches!(resp, Response::Codes(_)), "request {i}: {resp:?}");
         }
+    }
+
+    #[test]
+    fn traced_calls_return_traces_and_feed_stage_histograms() {
+        let (svc, test) = toy_service(1);
+        let q = test.row(0).to_vec();
+        // Untraced call: no trace comes back, but stage histograms still
+        // record the ladder.
+        let plain = svc.call(Request::TopKQuery {
+            series: q.clone(),
+            k: 3,
+            mode: PqQueryMode::Symmetric,
+            nprobe: None,
+            rerank: Some(8),
+        });
+        let (traced, trace) = svc.call_traced(
+            Request::TopKQuery {
+                series: q,
+                k: 3,
+                mode: PqQueryMode::Symmetric,
+                nprobe: None,
+                rerank: Some(8),
+            },
+            true,
+        );
+        assert_eq!(plain, traced, "tracing must not perturb results");
+        let trace = trace.expect("traced call returns a trace");
+        assert!(!trace.spans.is_empty());
+        assert_eq!(trace.hits.len(), 3, "explanations parallel the hit list");
+        let m = svc.shutdown();
+        use crate::obs::Stage;
+        assert_eq!(m.stage(Stage::BlockedScan).count, 2);
+        assert_eq!(m.stage(Stage::Rerank).count, 2);
+    }
+
+    #[test]
+    fn prometheus_text_is_valid_and_reports_index_header() {
+        let (svc, test) = toy_service(1);
+        let _ = svc.call(Request::NnQuery {
+            series: test.row(1).to_vec(),
+            mode: PqQueryMode::Symmetric,
+            nprobe: None,
+        });
+        let text = svc.prometheus_text();
+        let samples =
+            crate::obs::prometheus::validate_exposition(&text).expect("valid exposition");
+        assert!(samples > 10, "expected a substantive document, got {samples}");
+        assert!(text.contains("pqdtw_scan_items_scanned_total"));
+        assert!(text.contains("pqdtw_index_subspaces 4\n"));
+        assert!(text.contains("pqdtw_index_codebook_size 8\n"));
+        assert!(text.contains("pqdtw_build_info{version=\""));
+        assert!(text.contains("pqdtw_uptime_seconds"));
     }
 
     #[test]

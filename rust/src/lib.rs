@@ -53,6 +53,13 @@
 //!   server feeding concurrent connections into the coordinator's
 //!   batcher, and a blocking client — remote queries answer
 //!   bit-identically to the in-process engine.
+//! - [`obs`] — the observability layer (`docs/observability.md`):
+//!   lock-free prune-cascade counters flushed by the scan kernel,
+//!   per-query stage-ladder traces with per-hit "why ranked"
+//!   explainability, JSON-lines event logging for the serving plane,
+//!   and Prometheus text exposition rendering. Tracing is opt-in per
+//!   request and bit-transparent: traced queries return byte-identical
+//!   results.
 //! - [`runtime`] — (feature `pjrt`) loads AOT-lowered HLO artifacts
 //!   produced by `python/compile/aot.py` and executes them via PJRT.
 //!
@@ -99,5 +106,6 @@ pub mod eval;
 pub mod store;
 pub mod coordinator;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod testutil;

@@ -12,7 +12,10 @@
 //!   pqdtw serve --index rw.pqx --dataset RandomWalk-4096x128 --topk 5 --nprobe 4
 //!   pqdtw serve --listen 127.0.0.1:7447 --index rw.pqx
 //!   pqdtw query --connect 127.0.0.1:7447 --dataset RandomWalk-4096x128 --topk 5 --nprobe 4
+//!   pqdtw query --connect 127.0.0.1:7447 --dataset RandomWalk-4096x128 --topk 5 --trace
+//!   pqdtw serve --listen 127.0.0.1:7447 --index rw.pqx --log-json
 //!   pqdtw stats --connect 127.0.0.1:7447
+//!   pqdtw stats --connect 127.0.0.1:7447 --prometheus
 //!   pqdtw shutdown --connect 127.0.0.1:7447
 //!   pqdtw topk --index rw.pqx --dataset RandomWalk-4096x128 --nlist 32 --verify
 //!   pqdtw bench-scan --json --out BENCH_scan.json
@@ -63,7 +66,7 @@ const SPECS: &[CommandSpec] = &[
     CommandSpec { name: "train", flags: pq_flags!() },
     CommandSpec {
         name: "query",
-        flags: pq_flags!("mode", "queries", "connect", "topk", "nprobe", "rerank"),
+        flags: pq_flags!("mode", "queries", "connect", "topk", "nprobe", "rerank", "trace"),
     },
     CommandSpec {
         name: "topk",
@@ -77,7 +80,7 @@ const SPECS: &[CommandSpec] = &[
         name: "serve",
         flags: pq_flags!(
             "workers", "requests", "topk", "nprobe", "rerank", "nlist", "coarse",
-            "scan-threads", "index", "listen", "port-file", "max-conns"
+            "scan-threads", "index", "listen", "port-file", "max-conns", "log-json"
         ),
     },
     CommandSpec { name: "build-index", flags: pq_flags!("out", "nlist", "coarse") },
@@ -88,7 +91,7 @@ const SPECS: &[CommandSpec] = &[
             "out",
         ],
     },
-    CommandSpec { name: "stats", flags: &["connect"] },
+    CommandSpec { name: "stats", flags: &["connect", "prometheus"] },
     CommandSpec { name: "shutdown", flags: &["connect"] },
     CommandSpec { name: "selftest", flags: &["seed"] },
     CommandSpec { name: "info", flags: &["index"] },
@@ -259,12 +262,25 @@ fn cmd_query_remote(a: &Args, addr: &str) -> Result<()> {
     let nprobe: Option<usize> = a.get_opt("nprobe");
     let rerank: Option<usize> = a.get_opt("rerank");
     let n_queries = a.get_parsed("queries", 10usize).min(tt.test.n_series()).max(1);
+    let want_trace = a.has("trace");
     let mut client = Client::connect(addr, ClientConfig::default())?;
     let t0 = Instant::now();
     let mut n_hits = 0usize;
     for i in 0..n_queries {
-        let hits = client.topk(tt.test.row(i), k, mode, nprobe, rerank)?;
+        let (hits, trace) = client.topk_traced(
+            tt.test.row(i),
+            k,
+            mode,
+            nprobe,
+            rerank,
+            i as u64 + 1,
+            want_trace,
+        )?;
         ensure!(!hits.is_empty(), "server returned no hits for query {i}");
+        ensure!(
+            trace.is_some() == want_trace,
+            "server trace presence does not match the --trace flag for query {i}"
+        );
         n_hits += hits.len();
         if i == 0 {
             println!("query 0 top-{k} ({mode:?}, nprobe={nprobe:?}, rerank={rerank:?}):");
@@ -273,6 +289,9 @@ fn cmd_query_remote(a: &Args, addr: &str) -> Result<()> {
                     Some(l) => println!("  #{:<8} d={:.6} label={l}", h.index, h.distance),
                     None => println!("  #{:<8} d={:.6}", h.index, h.distance),
                 }
+            }
+            if let Some(t) = &trace {
+                print!("{}", t.render_text());
             }
         }
     }
@@ -405,7 +424,10 @@ fn cmd_build_index(a: &Args) -> Result<()> {
 /// correctness-guarded: every blocked variant is asserted bit-identical
 /// to the scalar reference before anything is timed.
 fn cmd_bench_scan(a: &Args) -> Result<()> {
-    use pqdtw::nn::topk::{topk_scan_blocked_opts, topk_scan_scalar, QueryLut};
+    use pqdtw::nn::topk::{
+        topk_scan_blocked_opts, topk_scan_blocked_stats, topk_scan_scalar, QueryLut,
+    };
+    use pqdtw::obs::ScanStats;
 
     let n: usize = a.get_parsed("n", 16_384usize);
     let len: usize = a.get_parsed("len", 64usize);
@@ -446,6 +468,7 @@ fn cmd_bench_scan(a: &Args) -> Result<()> {
     }
 
     let mut results: Vec<(String, f64)> = Vec::new();
+    let mut prune_stats: Vec<(String, pqdtw::obs::ScanSnapshot)> = Vec::new();
     for (mode_name, mode) in [
         ("symmetric", PqQueryMode::Symmetric),
         ("asymmetric", PqQueryMode::Asymmetric),
@@ -462,6 +485,12 @@ fn cmd_bench_scan(a: &Args) -> Result<()> {
                 "{variant} scan diverged from the scalar reference ({mode_name})"
             );
         }
+        // Prune-cascade accounting for this mode (single-threaded so the
+        // abandon counts are deterministic across runs).
+        let sink = ScanStats::new();
+        let traced = topk_scan_blocked_stats(&blocks, &clut, k, 1, true, Some(&sink));
+        ensure!(traced == want, "stats-sink scan diverged from the scalar reference");
+        prune_stats.push((mode_name.to_string(), sink.snapshot()));
         results.push((
             format!("scalar_{mode_name}"),
             median_us(reps, || {
@@ -499,6 +528,20 @@ fn cmd_bench_scan(a: &Args) -> Result<()> {
         pqdtw::pq::SCAN_BLOCK,
         blocks.uses_u8()
     ));
+    json.push_str("  \"prune\": [\n");
+    for (i, (mode_name, s)) in prune_stats.iter().enumerate() {
+        let sep = if i + 1 < prune_stats.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"mode\": \"{mode_name}\", \"items_scanned\": {}, \
+             \"items_abandoned\": {}, \"abandon_rate\": {:.4}, \
+             \"blocks_skipped\": {}}}{sep}\n",
+            s.items_scanned,
+            s.items_abandoned,
+            s.abandon_rate(),
+            s.blocks_skipped
+        ));
+    }
+    json.push_str("  ],\n");
     json.push_str("  \"results\": [\n");
     for (i, (name, us)) in results.iter().enumerate() {
         let sep = if i + 1 < results.len() { "," } else { "" };
@@ -518,6 +561,15 @@ fn cmd_bench_scan(a: &Args) -> Result<()> {
         println!("(one-time train+encode+transpose: {setup:?})");
         for (name, us) in &results {
             println!("  {name:<32} {us:10.1} µs");
+        }
+        for (mode_name, s) in &prune_stats {
+            println!(
+                "  prune ({mode_name}): {}/{} items abandoned ({:.1}%), {} blocks skipped",
+                s.items_abandoned,
+                s.items_scanned,
+                100.0 * s.abandon_rate(),
+                s.blocks_skipped
+            );
         }
         for mode_name in ["symmetric", "asymmetric"] {
             let scalar_name = format!("scalar_{mode_name}");
@@ -582,13 +634,19 @@ fn cmd_serve_listen(a: &Args, listen: &str) -> Result<()> {
             batcher: Default::default(),
         },
     ));
-    let server = NetServer::start(
+    let logger = if a.has("log-json") {
+        Arc::new(pqdtw::obs::log::JsonLogger::stderr())
+    } else {
+        Arc::new(pqdtw::obs::log::JsonLogger::disabled())
+    };
+    let server = NetServer::start_logged(
         listen,
         Arc::clone(&svc),
         ServerConfig {
             max_connections: a.get_parsed("max-conns", 64usize),
             ..Default::default()
         },
+        logger,
     )?;
     let addr = server.local_addr();
     if let Some(port_file) = a.flags.get("port-file") {
@@ -623,6 +681,18 @@ fn cmd_serve_listen(a: &Args, listen: &str) -> Result<()> {
             );
         }
     }
+    for st in &m.per_stage {
+        if st.count > 0 {
+            println!(
+                "  stage {:<13} {:>5} spans, mean {:>7.0}µs, p50 ≤{}µs, p99 ≤{}µs",
+                st.stage.name(),
+                st.count,
+                st.mean_us,
+                st.p50_us,
+                st.p99_us
+            );
+        }
+    }
     Ok(())
 }
 
@@ -632,7 +702,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     }
     reject_flags(
         a,
-        &["port-file", "max-conns"],
+        &["port-file", "max-conns", "log-json"],
         "has no effect without --listen: the local synthetic load loop binds no \
          socket (add --listen <addr> to serve over TCP)",
     )?;
@@ -708,12 +778,30 @@ fn cmd_serve(a: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Print a remote server's metrics snapshot.
+/// Print a remote server's metrics snapshot, or (with `--prometheus`)
+/// its raw text exposition document for a scrape-compatible pipeline.
 fn cmd_stats(a: &Args) -> Result<()> {
     let addr = a.require("connect").map_err(anyhow::Error::msg)?;
     let mut client = Client::connect(&addr, ClientConfig::default())?;
+    if a.has("prometheus") {
+        print!("{}", client.metrics_text()?);
+        return Ok(());
+    }
     let s = client.stats()?;
-    println!("server   : {addr}");
+    println!("server   : {addr} (pqdtw {}, up {}s)", s.version, s.uptime_s);
+    println!(
+        "index    : {} series × {} samples, M={} K={}, window={:.2}, coarse={}, ivf={}",
+        s.n_items,
+        s.series_len,
+        s.n_subspaces,
+        s.codebook_size,
+        s.window_frac,
+        s.coarse_metric,
+        match s.nlist {
+            Some(n) => format!("{n} cells"),
+            None => "none".to_string(),
+        }
+    );
     println!("requests : {} ({} errors)", s.requests, s.errors);
     println!("batches  : {} (mean size {:.1})", s.batches, s.mean_batch_size);
     println!(
@@ -728,6 +816,23 @@ fn cmd_stats(a: &Args) -> Result<()> {
             );
         }
     }
+    println!("stages   :");
+    for st in &s.per_stage {
+        if st.count > 0 {
+            println!(
+                "  {:<16} {:>8} spans, mean {:>7.0}µs, p50 ≤{}µs, p99 ≤{}µs",
+                st.name, st.count, st.mean_us, st.p50_us, st.p99_us
+            );
+        }
+    }
+    println!(
+        "scan     : {} items, {} abandoned ({:.1}%), {} blocks skipped, {} LUT collapses",
+        s.scan.items_scanned,
+        s.scan.items_abandoned,
+        100.0 * s.scan.abandon_rate(),
+        s.scan.blocks_skipped,
+        s.scan.lut_collapses
+    );
     Ok(())
 }
 

@@ -12,6 +12,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::Hit;
 use crate::nn::knn::PqQueryMode;
+use crate::obs::QueryTrace;
 
 use super::protocol::{self, NetRequest, NetResponse, WireStats};
 
@@ -122,9 +123,26 @@ impl Client {
         mode: PqQueryMode,
         nprobe: Option<usize>,
     ) -> Result<(usize, f64, Option<i64>)> {
-        let req = NetRequest::Nn { series: series.to_vec(), mode, nprobe };
+        let (index, distance, label, _) = self.nn_traced(series, mode, nprobe, 0, false)?;
+        Ok((index, distance, label))
+    }
+
+    /// [`Client::nn`] with a request id and an opt-in server-side
+    /// [`QueryTrace`] (returned iff `trace` is set).
+    pub fn nn_traced(
+        &mut self,
+        series: &[f64],
+        mode: PqQueryMode,
+        nprobe: Option<usize>,
+        request_id: u64,
+        trace: bool,
+    ) -> Result<(usize, f64, Option<i64>, Option<QueryTrace>)> {
+        let req =
+            NetRequest::Nn { series: series.to_vec(), mode, nprobe, request_id, trace };
         match self.call(&req)? {
-            NetResponse::Nn { index, distance, label } => Ok((index, distance, label)),
+            NetResponse::Nn { index, distance, label, trace } => {
+                Ok((index, distance, label, trace))
+            }
             NetResponse::Error(msg) => bail!("server error: {msg}"),
             other => bail!("net: unexpected response {other:?}"),
         }
@@ -141,9 +159,34 @@ impl Client {
         nprobe: Option<usize>,
         rerank: Option<usize>,
     ) -> Result<Vec<Hit>> {
-        let req = NetRequest::TopK { series: series.to_vec(), k, mode, nprobe, rerank };
+        let (hits, _) = self.topk_traced(series, k, mode, nprobe, rerank, 0, false)?;
+        Ok(hits)
+    }
+
+    /// [`Client::topk`] with a request id and an opt-in server-side
+    /// [`QueryTrace`] (returned iff `trace` is set).
+    #[allow(clippy::too_many_arguments)]
+    pub fn topk_traced(
+        &mut self,
+        series: &[f64],
+        k: usize,
+        mode: PqQueryMode,
+        nprobe: Option<usize>,
+        rerank: Option<usize>,
+        request_id: u64,
+        trace: bool,
+    ) -> Result<(Vec<Hit>, Option<QueryTrace>)> {
+        let req = NetRequest::TopK {
+            series: series.to_vec(),
+            k,
+            mode,
+            nprobe,
+            rerank,
+            request_id,
+            trace,
+        };
         match self.call(&req)? {
-            NetResponse::TopK(hits) => Ok(hits),
+            NetResponse::TopK { hits, trace } => Ok((hits, trace)),
             NetResponse::Error(msg) => bail!("server error: {msg}"),
             other => bail!("net: unexpected response {other:?}"),
         }
@@ -153,6 +196,15 @@ impl Client {
     pub fn stats(&mut self) -> Result<WireStats> {
         match self.call(&NetRequest::Stats)? {
             NetResponse::Stats(stats) => Ok(stats),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch the server's Prometheus text exposition document.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        match self.call(&NetRequest::MetricsText)? {
+            NetResponse::MetricsText(text) => Ok(text),
             NetResponse::Error(msg) => bail!("server error: {msg}"),
             other => bail!("net: unexpected response {other:?}"),
         }

@@ -39,5 +39,5 @@ pub mod protocol;
 pub mod server;
 
 pub use client::{Client, ClientConfig};
-pub use protocol::{NetRequest, NetResponse, WireClassStats, WireStats};
+pub use protocol::{NetRequest, NetResponse, WireClassStats, WireStageStats, WireStats};
 pub use server::{NetServer, ServerConfig};

@@ -29,6 +29,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::Hit;
 use crate::nn::knn::PqQueryMode;
+use crate::obs::{HitExplain, QueryTrace, ScanSnapshot, Stage, StageSpan};
 use crate::store::format::{ByteReader, ByteWriter};
 
 /// Magic bytes at offset 0 of every frame.
@@ -36,7 +37,12 @@ pub const NET_MAGIC: [u8; 8] = *b"PQDTWNET";
 
 /// Current protocol version (any layout change increments this; peers
 /// reject frames of versions they were not built to parse).
-pub const NET_VERSION: u32 = 1;
+///
+/// v2 added request ids + the `trace` flag on `Nn`/`TopK`, the optional
+/// [`QueryTrace`] trailer on their results, the `MetricsText` frame
+/// pair, and the uptime/version/index-header/per-stage extension of
+/// [`WireStats`].
+pub const NET_VERSION: u32 = 2;
 
 /// Frame header size: magic + version + tag + payload length.
 pub const HEADER_BYTES: usize = 8 + 4 + 1 + 8;
@@ -61,6 +67,8 @@ pub const TAG_TOPK: u8 = 3;
 pub const TAG_STATS: u8 = 4;
 /// Graceful server shutdown request.
 pub const TAG_SHUTDOWN: u8 = 5;
+/// Prometheus text exposition request.
+pub const TAG_METRICS_TEXT: u8 = 6;
 
 /// Response tags (64..).
 pub const TAG_PONG: u8 = 64;
@@ -72,6 +80,8 @@ pub const TAG_TOPK_RESULT: u8 = 66;
 pub const TAG_STATS_RESULT: u8 = 67;
 /// Shutdown acknowledged; the server is draining.
 pub const TAG_SHUTDOWN_ACK: u8 = 68;
+/// Prometheus text exposition document.
+pub const TAG_METRICS_TEXT_RESULT: u8 = 69;
 /// Request failed; payload is a human-readable message.
 pub const TAG_ERROR: u8 = 127;
 
@@ -88,6 +98,11 @@ pub enum NetRequest {
         mode: PqQueryMode,
         /// Probe only the `n` nearest IVF cells.
         nprobe: Option<usize>,
+        /// Client-chosen id echoed back in the result's trace
+        /// (0 when the client does not correlate requests).
+        request_id: u64,
+        /// Return a [`QueryTrace`] with per-hit explanations.
+        trace: bool,
     },
     /// Top-k query against the server's database.
     TopK {
@@ -101,9 +116,15 @@ pub enum NetRequest {
         nprobe: Option<usize>,
         /// Re-rank this many PQ candidates with exact windowed DTW.
         rerank: Option<usize>,
+        /// Client-chosen id echoed back in the result's trace.
+        request_id: u64,
+        /// Return a [`QueryTrace`] with per-hit explanations.
+        trace: bool,
     },
     /// Request the server's metrics snapshot.
     Stats,
+    /// Request the Prometheus text exposition document.
+    MetricsText,
     /// Ask the server to drain connections and exit.
     Shutdown,
 }
@@ -122,6 +143,23 @@ pub struct WireClassStats {
     /// Median latency (µs, histogram bucket upper bound).
     pub p50_us: u64,
     /// 99th-percentile latency (µs, histogram bucket upper bound).
+    pub p99_us: u64,
+}
+
+/// One query-ladder stage in a [`WireStats`] frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireStageStats {
+    /// Stable stage discriminant ([`Stage::as_u8`]).
+    pub stage: u8,
+    /// Stable display name ([`Stage::name`]).
+    pub name: String,
+    /// Spans recorded for this stage.
+    pub count: u64,
+    /// Mean stage wall-time (µs).
+    pub mean_us: f64,
+    /// Median stage wall-time (µs, histogram bucket upper bound).
+    pub p50_us: u64,
+    /// 99th-percentile stage wall-time (µs, bucket upper bound).
     pub p99_us: u64,
 }
 
@@ -144,6 +182,28 @@ pub struct WireStats {
     pub p99_us: u64,
     /// Per-request-class counters.
     pub per_class: Vec<WireClassStats>,
+    /// Per-ladder-stage latency counters.
+    pub per_stage: Vec<WireStageStats>,
+    /// Engine-wide prune-cascade counters since server start.
+    pub scan: ScanSnapshot,
+    /// Whole seconds since the server started.
+    pub uptime_s: u64,
+    /// Server crate version (`CARGO_PKG_VERSION`).
+    pub version: String,
+    /// Index header summary: items in the database.
+    pub n_items: u64,
+    /// PQ subspaces (`M`).
+    pub n_subspaces: u64,
+    /// Centroids per subspace (`K`).
+    pub codebook_size: u64,
+    /// Trained series length (`L`).
+    pub series_len: u64,
+    /// Sakoe-Chiba window fraction.
+    pub window_frac: f64,
+    /// Coarse quantizer metric (`dtw` / `euclidean` / `none`).
+    pub coarse_metric: String,
+    /// IVF coarse cells, when an IVF index is attached.
+    pub nlist: Option<usize>,
 }
 
 /// A server-to-client frame.
@@ -159,11 +219,20 @@ pub enum NetResponse {
         distance: f64,
         /// Its label, when the database is labeled.
         label: Option<i64>,
+        /// Present iff the request set its `trace` flag.
+        trace: Option<QueryTrace>,
     },
     /// Ranked top-k result, ascending by distance.
-    TopK(Vec<Hit>),
+    TopK {
+        /// Hits, ascending by distance.
+        hits: Vec<Hit>,
+        /// Present iff the request set its `trace` flag.
+        trace: Option<QueryTrace>,
+    },
     /// Metrics snapshot.
     Stats(WireStats),
+    /// Prometheus text exposition document.
+    MetricsText(String),
     /// Shutdown acknowledged; the connection closes after this frame.
     ShutdownAck,
     /// Request failed.
@@ -210,6 +279,123 @@ fn get_opt_i64(r: &mut ByteReader) -> Result<Option<i64>> {
     }
 }
 
+fn get_bool(r: &mut ByteReader) -> Result<bool> {
+    match r.u8()? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => bail!("net: bad bool flag {other}"),
+    }
+}
+
+fn put_opt_f64(w: &mut ByteWriter, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            w.u8(1);
+            w.f64(x);
+        }
+        None => w.u8(0),
+    }
+}
+
+fn get_opt_f64(r: &mut ByteReader) -> Result<Option<f64>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(r.f64()?)),
+        other => bail!("net: bad option flag {other}"),
+    }
+}
+
+fn put_trace(w: &mut ByteWriter, t: &QueryTrace) {
+    w.u64(t.request_id);
+    w.usize(t.spans.len());
+    for s in &t.spans {
+        w.u8(s.stage.as_u8());
+        w.u64(s.wall_us);
+        w.u64(s.candidates_in);
+        w.u64(s.candidates_out);
+    }
+    w.usize(t.hits.len());
+    for h in &t.hits {
+        w.u64(h.index);
+        w.f64(h.pq_estimate);
+        put_opt_f64(w, h.exact_dtw);
+        w.u8(h.admitted_by.as_u8());
+    }
+    w.u64(t.scan.items_scanned);
+    w.u64(t.scan.items_abandoned);
+    w.u64(t.scan.blocks_skipped);
+    w.u64(t.scan.lut_collapses);
+    w.u64(t.scan.shard_time_us);
+    w.u64(t.scan.shards);
+}
+
+fn get_stage(r: &mut ByteReader) -> Result<Stage> {
+    let v = r.u8()?;
+    Stage::from_u8(v).ok_or_else(|| anyhow::anyhow!("net: unknown stage tag {v}"))
+}
+
+fn get_trace(r: &mut ByteReader) -> Result<QueryTrace> {
+    let request_id = r.u64()?;
+    let n_spans = r.usize()?;
+    // stage tag + wall + in + out = 25 B per span; reject counts the
+    // frame cannot back before reserving capacity.
+    ensure!(
+        n_spans.saturating_mul(25) <= r.remaining(),
+        "net: span count {n_spans} exceeds remaining frame bytes"
+    );
+    let mut spans = Vec::with_capacity(n_spans);
+    for _ in 0..n_spans {
+        spans.push(StageSpan {
+            stage: get_stage(r)?,
+            wall_us: r.u64()?,
+            candidates_in: r.u64()?,
+            candidates_out: r.u64()?,
+        });
+    }
+    let n_hits = r.usize()?;
+    // index + estimate + exact presence byte + stage tag = ≥ 18 B.
+    ensure!(
+        n_hits.saturating_mul(18) <= r.remaining(),
+        "net: explain count {n_hits} exceeds remaining frame bytes"
+    );
+    let mut hits = Vec::with_capacity(n_hits);
+    for _ in 0..n_hits {
+        hits.push(HitExplain {
+            index: r.u64()?,
+            pq_estimate: r.f64()?,
+            exact_dtw: get_opt_f64(r)?,
+            admitted_by: get_stage(r)?,
+        });
+    }
+    let scan = ScanSnapshot {
+        items_scanned: r.u64()?,
+        items_abandoned: r.u64()?,
+        blocks_skipped: r.u64()?,
+        lut_collapses: r.u64()?,
+        shard_time_us: r.u64()?,
+        shards: r.u64()?,
+    };
+    Ok(QueryTrace { request_id, spans, hits, scan })
+}
+
+fn put_opt_trace(w: &mut ByteWriter, t: &Option<QueryTrace>) {
+    match t {
+        Some(t) => {
+            w.u8(1);
+            put_trace(w, t);
+        }
+        None => w.u8(0),
+    }
+}
+
+fn get_opt_trace(r: &mut ByteReader) -> Result<Option<QueryTrace>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(get_trace(r)?)),
+        other => bail!("net: bad option flag {other}"),
+    }
+}
+
 /// Frame a payload: header (magic, version, tag, length) + payload.
 pub fn encode_frame(tag: u8, payload: &[u8]) -> Vec<u8> {
     let mut w = ByteWriter::new();
@@ -226,13 +412,17 @@ pub fn encode_request(req: &NetRequest) -> Vec<u8> {
     let mut p = ByteWriter::new();
     let tag = match req {
         NetRequest::Ping => TAG_PING,
-        NetRequest::Nn { series, mode, nprobe } => {
+        NetRequest::Nn { series, mode, nprobe, request_id, trace } => {
+            p.u64(*request_id);
+            p.u8(u8::from(*trace));
             p.u8(mode_tag(*mode));
             p.opt_usize(*nprobe);
             p.vec_f64(series);
             TAG_NN
         }
-        NetRequest::TopK { series, k, mode, nprobe, rerank } => {
+        NetRequest::TopK { series, k, mode, nprobe, rerank, request_id, trace } => {
+            p.u64(*request_id);
+            p.u8(u8::from(*trace));
             p.usize(*k);
             p.u8(mode_tag(*mode));
             p.opt_usize(*nprobe);
@@ -241,6 +431,7 @@ pub fn encode_request(req: &NetRequest) -> Vec<u8> {
             TAG_TOPK
         }
         NetRequest::Stats => TAG_STATS,
+        NetRequest::MetricsText => TAG_METRICS_TEXT,
         NetRequest::Shutdown => TAG_SHUTDOWN,
     };
     encode_frame(tag, &p.into_bytes())
@@ -265,21 +456,26 @@ pub fn decode_request(tag: u8, payload: &[u8]) -> Result<NetRequest> {
     let req = match tag {
         TAG_PING => NetRequest::Ping,
         TAG_NN => {
+            let request_id = r.u64()?;
+            let trace = get_bool(&mut r)?;
             let mode = mode_from(r.u8()?)?;
             let nprobe = r.opt_usize()?;
             let series = get_query_series(&mut r)?;
-            NetRequest::Nn { series, mode, nprobe }
+            NetRequest::Nn { series, mode, nprobe, request_id, trace }
         }
         TAG_TOPK => {
+            let request_id = r.u64()?;
+            let trace = get_bool(&mut r)?;
             let k = r.usize()?;
             ensure!(k >= 1, "net: k must be >= 1");
             let mode = mode_from(r.u8()?)?;
             let nprobe = r.opt_usize()?;
             let rerank = r.opt_usize()?;
             let series = get_query_series(&mut r)?;
-            NetRequest::TopK { series, k, mode, nprobe, rerank }
+            NetRequest::TopK { series, k, mode, nprobe, rerank, request_id, trace }
         }
         TAG_STATS => NetRequest::Stats,
+        TAG_METRICS_TEXT => NetRequest::MetricsText,
         TAG_SHUTDOWN => NetRequest::Shutdown,
         other => bail!("net: unknown request tag {other}"),
     };
@@ -304,6 +500,30 @@ fn put_stats(w: &mut ByteWriter, s: &WireStats) {
         w.u64(c.p50_us);
         w.u64(c.p99_us);
     }
+    w.usize(s.per_stage.len());
+    for st in &s.per_stage {
+        w.u8(st.stage);
+        w.string(&st.name);
+        w.u64(st.count);
+        w.f64(st.mean_us);
+        w.u64(st.p50_us);
+        w.u64(st.p99_us);
+    }
+    w.u64(s.scan.items_scanned);
+    w.u64(s.scan.items_abandoned);
+    w.u64(s.scan.blocks_skipped);
+    w.u64(s.scan.lut_collapses);
+    w.u64(s.scan.shard_time_us);
+    w.u64(s.scan.shards);
+    w.u64(s.uptime_s);
+    w.string(&s.version);
+    w.u64(s.n_items);
+    w.u64(s.n_subspaces);
+    w.u64(s.codebook_size);
+    w.u64(s.series_len);
+    w.f64(s.window_frac);
+    w.string(&s.coarse_metric);
+    w.opt_usize(s.nlist);
 }
 
 fn get_stats(r: &mut ByteReader) -> Result<WireStats> {
@@ -333,6 +553,41 @@ fn get_stats(r: &mut ByteReader) -> Result<WireStats> {
             p99_us: r.u64()?,
         });
     }
+    let n_stages = r.usize()?;
+    // Same minimum entry size as a class: tag + name length prefix +
+    // four 8-byte counters.
+    ensure!(
+        n_stages.saturating_mul(41) <= r.remaining(),
+        "net: stats stage count {n_stages} exceeds remaining frame bytes"
+    );
+    let mut per_stage = Vec::with_capacity(n_stages);
+    for _ in 0..n_stages {
+        per_stage.push(WireStageStats {
+            stage: r.u8()?,
+            name: r.string()?,
+            count: r.u64()?,
+            mean_us: r.f64()?,
+            p50_us: r.u64()?,
+            p99_us: r.u64()?,
+        });
+    }
+    let scan = ScanSnapshot {
+        items_scanned: r.u64()?,
+        items_abandoned: r.u64()?,
+        blocks_skipped: r.u64()?,
+        lut_collapses: r.u64()?,
+        shard_time_us: r.u64()?,
+        shards: r.u64()?,
+    };
+    let uptime_s = r.u64()?;
+    let version = r.string()?;
+    let n_items = r.u64()?;
+    let n_subspaces = r.u64()?;
+    let codebook_size = r.u64()?;
+    let series_len = r.u64()?;
+    let window_frac = r.f64()?;
+    let coarse_metric = r.string()?;
+    let nlist = r.opt_usize()?;
     Ok(WireStats {
         requests,
         errors,
@@ -342,6 +597,17 @@ fn get_stats(r: &mut ByteReader) -> Result<WireStats> {
         p50_us,
         p99_us,
         per_class,
+        per_stage,
+        scan,
+        uptime_s,
+        version,
+        n_items,
+        n_subspaces,
+        codebook_size,
+        series_len,
+        window_frac,
+        coarse_metric,
+        nlist,
     })
 }
 
@@ -350,24 +616,30 @@ pub fn encode_response(resp: &NetResponse) -> Vec<u8> {
     let mut p = ByteWriter::new();
     let tag = match resp {
         NetResponse::Pong => TAG_PONG,
-        NetResponse::Nn { index, distance, label } => {
+        NetResponse::Nn { index, distance, label, trace } => {
             p.usize(*index);
             p.f64(*distance);
             put_opt_i64(&mut p, *label);
+            put_opt_trace(&mut p, trace);
             TAG_NN_RESULT
         }
-        NetResponse::TopK(hits) => {
+        NetResponse::TopK { hits, trace } => {
             p.usize(hits.len());
             for h in hits {
                 p.usize(h.index);
                 p.f64(h.distance);
                 put_opt_i64(&mut p, h.label);
             }
+            put_opt_trace(&mut p, trace);
             TAG_TOPK_RESULT
         }
         NetResponse::Stats(s) => {
             put_stats(&mut p, s);
             TAG_STATS_RESULT
+        }
+        NetResponse::MetricsText(text) => {
+            p.string(text);
+            TAG_METRICS_TEXT_RESULT
         }
         NetResponse::ShutdownAck => TAG_SHUTDOWN_ACK,
         NetResponse::Error(msg) => {
@@ -387,7 +659,8 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<NetResponse> {
             let index = r.usize()?;
             let distance = r.f64()?;
             let label = get_opt_i64(&mut r)?;
-            NetResponse::Nn { index, distance, label }
+            let trace = get_opt_trace(&mut r)?;
+            NetResponse::Nn { index, distance, label, trace }
         }
         TAG_TOPK_RESULT => {
             let n = r.usize()?;
@@ -403,9 +676,11 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<NetResponse> {
                 let label = get_opt_i64(&mut r)?;
                 hits.push(Hit { index, distance, label });
             }
-            NetResponse::TopK(hits)
+            let trace = get_opt_trace(&mut r)?;
+            NetResponse::TopK { hits, trace }
         }
         TAG_STATS_RESULT => NetResponse::Stats(get_stats(&mut r)?),
+        TAG_METRICS_TEXT_RESULT => NetResponse::MetricsText(r.string()?),
         TAG_SHUTDOWN_ACK => NetResponse::ShutdownAck,
         TAG_ERROR => NetResponse::Error(r.string()?),
         other => bail!("net: unknown response tag {other}"),
@@ -485,15 +760,60 @@ pub fn decode_request_bytes(bytes: &[u8]) -> Result<NetRequest> {
 mod tests {
     use super::*;
 
+    fn sample_trace() -> QueryTrace {
+        QueryTrace {
+            request_id: 77,
+            spans: vec![
+                StageSpan {
+                    stage: Stage::LutCollapse,
+                    wall_us: 2,
+                    candidates_in: 128,
+                    candidates_out: 128,
+                },
+                StageSpan {
+                    stage: Stage::BlockedScan,
+                    wall_us: 41,
+                    candidates_in: 128,
+                    candidates_out: 9,
+                },
+            ],
+            hits: vec![
+                HitExplain {
+                    index: 3,
+                    pq_estimate: 0.5,
+                    exact_dtw: Some(0.625),
+                    admitted_by: Stage::Rerank,
+                },
+                HitExplain {
+                    index: 11,
+                    pq_estimate: 0.75,
+                    exact_dtw: None,
+                    admitted_by: Stage::BlockedScan,
+                },
+            ],
+            scan: ScanSnapshot {
+                items_scanned: 128,
+                items_abandoned: 119,
+                blocks_skipped: 1,
+                lut_collapses: 1,
+                shard_time_us: 40,
+                shards: 1,
+            },
+        }
+    }
+
     fn sample_requests() -> Vec<NetRequest> {
         vec![
             NetRequest::Ping,
             NetRequest::Stats,
+            NetRequest::MetricsText,
             NetRequest::Shutdown,
             NetRequest::Nn {
                 series: vec![0.25, -1.5, f64::NAN, 3.0],
                 mode: PqQueryMode::Symmetric,
                 nprobe: Some(4),
+                request_id: 0,
+                trace: false,
             },
             NetRequest::TopK {
                 series: vec![1.0; 16],
@@ -501,6 +821,8 @@ mod tests {
                 mode: PqQueryMode::Asymmetric,
                 nprobe: None,
                 rerank: Some(20),
+                request_id: u64::MAX,
+                trace: true,
             },
         ]
     }
@@ -510,11 +832,32 @@ mod tests {
             NetResponse::Pong,
             NetResponse::ShutdownAck,
             NetResponse::Error("nope".into()),
-            NetResponse::Nn { index: 7, distance: 1.25, label: Some(-3) },
-            NetResponse::TopK(vec![
-                Hit { index: 0, distance: 0.5, label: None },
-                Hit { index: 9, distance: 0.75, label: Some(2) },
-            ]),
+            NetResponse::MetricsText(
+                "# TYPE pqdtw_requests_total counter\npqdtw_requests_total 3\n".into(),
+            ),
+            NetResponse::Nn {
+                index: 7,
+                distance: 1.25,
+                label: Some(-3),
+                trace: None,
+            },
+            NetResponse::Nn {
+                index: 2,
+                distance: 0.5,
+                label: None,
+                trace: Some(sample_trace()),
+            },
+            NetResponse::TopK {
+                hits: vec![
+                    Hit { index: 0, distance: 0.5, label: None },
+                    Hit { index: 9, distance: 0.75, label: Some(2) },
+                ],
+                trace: None,
+            },
+            NetResponse::TopK {
+                hits: vec![Hit { index: 3, distance: 0.625, label: None }],
+                trace: Some(sample_trace()),
+            },
             NetResponse::Stats(WireStats {
                 requests: 10,
                 errors: 1,
@@ -531,6 +874,31 @@ mod tests {
                     p50_us: 100,
                     p99_us: 1000,
                 }],
+                per_stage: vec![WireStageStats {
+                    stage: 2,
+                    name: "blocked_scan".into(),
+                    count: 10,
+                    mean_us: 40.5,
+                    p50_us: 50,
+                    p99_us: 100,
+                }],
+                scan: ScanSnapshot {
+                    items_scanned: 1280,
+                    items_abandoned: 1100,
+                    blocks_skipped: 4,
+                    lut_collapses: 10,
+                    shard_time_us: 400,
+                    shards: 10,
+                },
+                uptime_s: 61,
+                version: "0.1.0".into(),
+                n_items: 128,
+                n_subspaces: 4,
+                codebook_size: 8,
+                series_len: 64,
+                window_frac: 0.1,
+                coarse_metric: "dtw".into(),
+                nlist: Some(16),
             }),
         ]
     }
@@ -609,6 +977,8 @@ mod tests {
         // byte-level count check fires first (the frame cannot back the
         // claim), which is exactly the no-unbounded-allocation property.
         let mut p = ByteWriter::new();
+        p.u64(0); // request id
+        p.u8(0); // trace: off
         p.usize(3); // k
         p.u8(1); // asymmetric
         p.u8(0); // nprobe: None
@@ -621,6 +991,8 @@ mod tests {
     #[test]
     fn empty_query_and_zero_k_are_rejected() {
         let mut p = ByteWriter::new();
+        p.u64(0); // request id
+        p.u8(0); // trace: off
         p.u8(0); // symmetric
         p.u8(0); // nprobe: None
         p.usize(0); // empty series
@@ -628,6 +1000,8 @@ mod tests {
         assert!(decode_request_bytes(&frame).is_err());
 
         let mut p = ByteWriter::new();
+        p.u64(0); // request id
+        p.u8(0); // trace: off
         p.usize(0); // k = 0
         p.u8(0);
         p.u8(0);
@@ -668,6 +1042,8 @@ mod tests {
             mode: PqQueryMode::Asymmetric,
             nprobe: Some(2),
             rerank: Some(9),
+            request_id: 42,
+            trace: true,
         });
         for n in (0..good.len()).step_by(sweep_stride()) {
             let _ = decode_request_bytes(&good[..n]);
@@ -682,7 +1058,10 @@ mod tests {
                         | NetRequest::TopK { series, .. } => {
                             assert!(series.len() <= MAX_QUERY_LEN)
                         }
-                        NetRequest::Ping | NetRequest::Stats | NetRequest::Shutdown => {}
+                        NetRequest::Ping
+                        | NetRequest::Stats
+                        | NetRequest::MetricsText
+                        | NetRequest::Shutdown => {}
                     }
                 }
             }
@@ -728,5 +1107,44 @@ mod tests {
         let mut cursor = std::io::Cursor::new(&frame[..]);
         let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
         assert!(decode_response(tag, &payload).is_err());
+    }
+
+    #[test]
+    fn hostile_trace_counts_and_stage_tags_are_rejected() {
+        // An NN result whose trace claims 2^60 spans must be rejected by
+        // the span-count-vs-remaining check before any allocation.
+        let mut p = ByteWriter::new();
+        p.usize(7); // index
+        p.f64(1.0); // distance
+        p.u8(0); // label: None
+        p.u8(1); // trace present
+        p.u64(0); // trace request id
+        p.usize(1 << 60); // span count
+        let frame = encode_frame(TAG_NN_RESULT, &p.into_bytes());
+        let mut cursor = std::io::Cursor::new(&frame[..]);
+        let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+        assert!(decode_response(tag, &payload).is_err());
+
+        // An unknown stage discriminant in a span is hostile input.
+        let mut resp = NetResponse::Nn {
+            index: 7,
+            distance: 1.0,
+            label: None,
+            trace: Some(sample_trace()),
+        };
+        if let NetResponse::Nn { trace: Some(t), .. } = &mut resp {
+            t.hits.clear(); // keep the forged byte offset simple
+        }
+        let mut frame = encode_response(&resp);
+        // Payload starts after the header; the first span's stage tag
+        // sits after index (8) + distance (8) + label flag (1) + trace
+        // flag (1) + trace request id (8) + span count (8).
+        let stage_off = HEADER_BYTES + 8 + 8 + 1 + 1 + 8 + 8;
+        assert!(Stage::from_u8(frame[stage_off]).is_some(), "offset arithmetic drifted");
+        frame[stage_off] = 250;
+        let mut cursor = std::io::Cursor::new(&frame[..]);
+        let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+        let err = decode_response(tag, &payload).unwrap_err().to_string();
+        assert!(err.contains("stage tag"), "{err}");
     }
 }

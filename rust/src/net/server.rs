@@ -25,8 +25,10 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::{MetricsSnapshot, Request, RequestClass, Response, Service};
+use crate::obs::log::JsonLogger;
+use crate::obs::QueryTrace;
 
-use super::protocol::{self, NetRequest, NetResponse, WireClassStats, WireStats};
+use super::protocol::{self, NetRequest, NetResponse, WireClassStats, WireStageStats, WireStats};
 
 /// Serving-plane limits.
 #[derive(Debug, Clone, Copy)]
@@ -68,6 +70,10 @@ fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 struct Shared {
     service: Arc<Service>,
     cfg: ServerConfig,
+    /// Structured event log for the serving plane (disabled unless the
+    /// operator passed `--log-json`; never stderr prints — the
+    /// `no-raw-stderr-in-serving` lint enforces this).
+    logger: Arc<JsonLogger>,
     local_addr: SocketAddr,
     stop: AtomicBool,
     active: AtomicUsize,
@@ -116,11 +122,24 @@ impl NetServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
     /// start accepting connections over the shared service.
     pub fn start(addr: &str, service: Arc<Service>, cfg: ServerConfig) -> Result<NetServer> {
+        NetServer::start_logged(addr, service, cfg, Arc::new(JsonLogger::disabled()))
+    }
+
+    /// [`NetServer::start`] with a structured event logger for the
+    /// serving plane (`serve --log-json` wires stderr JSON-lines here).
+    pub fn start_logged(
+        addr: &str,
+        service: Arc<Service>,
+        cfg: ServerConfig,
+        logger: Arc<JsonLogger>,
+    ) -> Result<NetServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("net: binding {addr}"))?;
         let local_addr = listener.local_addr().context("net: reading bound address")?;
+        logger.event("server_start", &[("addr", local_addr.to_string().into())]);
         let shared = Arc::new(Shared {
             service,
             cfg,
+            logger,
             local_addr,
             stop: AtomicBool::new(false),
             active: AtomicUsize::new(0),
@@ -202,6 +221,10 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
         if shared.active.load(Ordering::SeqCst) >= shared.cfg.max_connections {
             let mut stream = stream;
+            shared.logger.event(
+                "conn_rejected",
+                &[("capacity", (shared.cfg.max_connections as u64).into())],
+            );
             let frame = protocol::encode_response(&NetResponse::Error(format!(
                 "server at its {}-connection capacity",
                 shared.cfg.max_connections
@@ -212,6 +235,15 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         }
         shared.active.fetch_add(1, Ordering::SeqCst);
         let id = shared.next_conn.fetch_add(1, Ordering::SeqCst);
+        if shared.logger.is_enabled() {
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "unknown".into());
+            shared
+                .logger
+                .event("conn_open", &[("conn", id.into()), ("peer", peer.into())]);
+        }
         {
             // Register under the conns lock so a concurrent `trigger`
             // either sees this connection (and half-closes it) or its
@@ -239,14 +271,20 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 
 /// One queued reply on a connection: either already materialized at the
 /// net layer (ping/stats/errors) or pending from a service worker.
+/// Pending replies carry the wire request id, stamped over the trace
+/// (if any) before the result frame goes out.
 enum Outgoing {
     Ready(NetResponse),
-    Pending(mpsc::Receiver<Response>),
+    Pending {
+        reply: mpsc::Receiver<(Response, Option<QueryTrace>)>,
+        request_id: u64,
+    },
 }
 
 fn handle_connection(stream: TcpStream, id: u64, shared: Arc<Shared>) {
     let saw_shutdown = serve_connection(&stream, &shared);
     lock_unpoisoned(&shared.conns).remove(&id);
+    shared.logger.event("conn_close", &[("conn", id.into())]);
     shared.active.fetch_sub(1, Ordering::SeqCst);
     let _ = stream.shutdown(Shutdown::Both);
     if saw_shutdown {
@@ -285,6 +323,9 @@ fn serve_connection(stream: &TcpStream, shared: &Shared) -> bool {
                     // The payload was length-delimited and fully read,
                     // so the stream is still frame-synchronized: report
                     // and keep serving this connection.
+                    shared
+                        .logger
+                        .event("bad_request", &[("error", format!("{e:#}").into())]);
                     let out = Outgoing::Ready(NetResponse::Error(format!("{e:#}")));
                     if tx.send(out).is_err() {
                         break;
@@ -295,6 +336,9 @@ fn serve_connection(stream: &TcpStream, shared: &Shared) -> bool {
                 // Torn header, bad magic/version, or over-limit length:
                 // the stream can no longer be trusted to be on a frame
                 // boundary. Best-effort error frame, then disconnect.
+                shared
+                    .logger
+                    .event("frame_error", &[("error", format!("{e:#}").into())]);
                 let _ = tx.send(Outgoing::Ready(NetResponse::Error(format!("{e:#}"))));
                 drain_best_effort(&mut reader);
                 break;
@@ -330,6 +374,17 @@ fn drain_best_effort(stream: &mut TcpStream) {
 /// net-plane classes into the shared metrics sink. Engine-bound
 /// requests are metered by the service workers themselves.
 fn dispatch(req: NetRequest, shared: &Shared) -> Outgoing {
+    if shared.logger.is_enabled() {
+        let kind = match &req {
+            NetRequest::Ping => "ping",
+            NetRequest::Stats => "stats",
+            NetRequest::MetricsText => "metrics_text",
+            NetRequest::Shutdown => "shutdown",
+            NetRequest::Nn { .. } => "nn",
+            NetRequest::TopK { .. } => "topk",
+        };
+        shared.logger.event("request", &[("kind", kind.into())]);
+    }
     match req {
         NetRequest::Ping => {
             shared.service.record_external(RequestClass::Ping, 0, false);
@@ -337,7 +392,7 @@ fn dispatch(req: NetRequest, shared: &Shared) -> Outgoing {
         }
         NetRequest::Stats => {
             let t0 = Instant::now();
-            let stats = wire_stats(&shared.service.metrics());
+            let stats = wire_stats_full(&shared.service);
             shared.service.record_external(
                 RequestClass::Stats,
                 t0.elapsed().as_micros() as u64,
@@ -345,19 +400,32 @@ fn dispatch(req: NetRequest, shared: &Shared) -> Outgoing {
             );
             Outgoing::Ready(NetResponse::Stats(stats))
         }
+        NetRequest::MetricsText => {
+            let t0 = Instant::now();
+            let text = shared.service.prometheus_text();
+            shared.service.record_external(
+                RequestClass::Stats,
+                t0.elapsed().as_micros() as u64,
+                false,
+            );
+            Outgoing::Ready(NetResponse::MetricsText(text))
+        }
         NetRequest::Shutdown => Outgoing::Ready(NetResponse::ShutdownAck),
-        NetRequest::Nn { series, mode, nprobe } => {
-            submit(shared, Request::NnQuery { series, mode, nprobe })
+        NetRequest::Nn { series, mode, nprobe, request_id, trace } => {
+            submit(shared, Request::NnQuery { series, mode, nprobe }, request_id, trace)
         }
-        NetRequest::TopK { series, k, mode, nprobe, rerank } => {
-            submit(shared, Request::TopKQuery { series, k, mode, nprobe, rerank })
-        }
+        NetRequest::TopK { series, k, mode, nprobe, rerank, request_id, trace } => submit(
+            shared,
+            Request::TopKQuery { series, k, mode, nprobe, rerank },
+            request_id,
+            trace,
+        ),
     }
 }
 
-fn submit(shared: &Shared, req: Request) -> Outgoing {
-    match shared.service.submit(req) {
-        Some(rx) => Outgoing::Pending(rx),
+fn submit(shared: &Shared, req: Request, request_id: u64, trace: bool) -> Outgoing {
+    match shared.service.submit_traced(req, trace) {
+        Some(reply) => Outgoing::Pending { reply, request_id },
         None => Outgoing::Ready(NetResponse::Error("service closed".into())),
     }
 }
@@ -368,8 +436,15 @@ fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
     while let Ok(out) = rx.recv() {
         let resp = match out {
             Outgoing::Ready(resp) => resp,
-            Outgoing::Pending(reply) => match reply.recv() {
-                Ok(resp) => engine_to_net(resp),
+            Outgoing::Pending { reply, request_id } => match reply.recv() {
+                Ok((resp, mut trace)) => {
+                    // The engine doesn't know wire ids; stamp the
+                    // client's id onto the trace it asked for.
+                    if let Some(t) = &mut trace {
+                        t.request_id = request_id;
+                    }
+                    engine_to_net(resp, trace)
+                }
                 Err(_) => NetResponse::Error("worker dropped request".into()),
             },
         };
@@ -380,10 +455,12 @@ fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
     }
 }
 
-fn engine_to_net(resp: Response) -> NetResponse {
+fn engine_to_net(resp: Response, trace: Option<QueryTrace>) -> NetResponse {
     match resp {
-        Response::Nn { index, distance, label } => NetResponse::Nn { index, distance, label },
-        Response::TopK(hits) => NetResponse::TopK(hits),
+        Response::Nn { index, distance, label } => {
+            NetResponse::Nn { index, distance, label, trace }
+        }
+        Response::TopK(hits) => NetResponse::TopK { hits, trace },
         Response::Error(msg) => NetResponse::Error(msg),
         // The wire vocabulary deliberately has no encode/pair-dist
         // verbs, so the engine cannot produce these for a net request.
@@ -393,7 +470,10 @@ fn engine_to_net(resp: Response) -> NetResponse {
     }
 }
 
-/// Project a [`MetricsSnapshot`] onto the wire stats frame.
+/// Project a [`MetricsSnapshot`] onto the wire stats frame. The
+/// service-level fields (uptime, version, index header, scan counters)
+/// are zeroed here; [`wire_stats_full`] stamps them from a live
+/// service.
 pub fn wire_stats(m: &MetricsSnapshot) -> WireStats {
     WireStats {
         requests: m.requests,
@@ -416,7 +496,47 @@ pub fn wire_stats(m: &MetricsSnapshot) -> WireStats {
                 p99_us: c.p99_us,
             })
             .collect(),
+        per_stage: m
+            .per_stage
+            .iter()
+            .map(|s| WireStageStats {
+                stage: s.stage.as_u8(),
+                name: s.stage.name().to_string(),
+                count: s.count,
+                mean_us: s.mean_us,
+                p50_us: s.p50_us,
+                p99_us: s.p99_us,
+            })
+            .collect(),
+        scan: Default::default(),
+        uptime_s: 0,
+        version: String::new(),
+        n_items: 0,
+        n_subspaces: 0,
+        codebook_size: 0,
+        series_len: 0,
+        window_frac: 0.0,
+        coarse_metric: String::new(),
+        nlist: None,
     }
+}
+
+/// [`wire_stats`] plus the live-service fields: engine scan counters,
+/// index header summary, uptime, and crate version.
+pub fn wire_stats_full(service: &Service) -> WireStats {
+    let mut s = wire_stats(&service.metrics());
+    let info = service.engine().info();
+    s.scan = service.engine().scan_stats();
+    s.uptime_s = service.uptime_s();
+    s.version = env!("CARGO_PKG_VERSION").to_string();
+    s.n_items = info.n_items as u64;
+    s.n_subspaces = info.n_subspaces as u64;
+    s.codebook_size = info.codebook_size as u64;
+    s.series_len = info.series_len as u64;
+    s.window_frac = info.window_frac;
+    s.coarse_metric = info.coarse_metric;
+    s.nlist = info.nlist;
+    s
 }
 
 #[cfg(test)]
@@ -437,5 +557,21 @@ mod tests {
         assert!(probed.p50_us >= 100);
         let ping = s.per_class.iter().find(|c| c.name == "ping").unwrap();
         assert_eq!(ping.requests, 1);
+    }
+
+    #[test]
+    fn wire_stats_projects_every_stage() {
+        use crate::obs::Stage;
+        let m = Metrics::new();
+        m.record_stage(Stage::BlockedScan, 40);
+        m.record_stage(Stage::Rerank, 900);
+        let s = wire_stats(&m.snapshot());
+        assert_eq!(s.per_stage.len(), crate::obs::N_STAGES);
+        let scan = s.per_stage.iter().find(|st| st.name == "blocked_scan").unwrap();
+        assert_eq!(scan.count, 1);
+        assert_eq!(scan.stage, Stage::BlockedScan.as_u8());
+        assert!(scan.p50_us >= 40);
+        let lut = s.per_stage.iter().find(|st| st.name == "lut_collapse").unwrap();
+        assert_eq!(lut.count, 0);
     }
 }

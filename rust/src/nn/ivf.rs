@@ -22,6 +22,7 @@ use crate::core::rng::Rng;
 use crate::core::series::Dataset;
 use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
 use crate::distance::euclidean::euclidean_sq;
+use crate::obs::ScanStats;
 use crate::pq::encode::CodeBlocks;
 use crate::pq::kmeans::{kmeans, KmeansGeometry};
 use crate::pq::quantizer::{EncodedDataset, ProductQuantizer};
@@ -42,6 +43,20 @@ pub enum CoarseMetric {
     /// Plain Euclidean (the classic IVF coarse quantizer; a probe costs
     /// `nlist × D` flops).
     Euclidean,
+}
+
+/// Coarse-probe stage accounting returned by
+/// [`IvfIndex::query_topk_traced`]: what the `coarse_probe` span of a
+/// query trace reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProbeInfo {
+    /// Number of coarse cells the query probed.
+    pub cells_probed: u64,
+    /// Total members of the probed cells (the blocked-scan stage's
+    /// candidate input).
+    pub items_in_cells: u64,
+    /// Wall-time of the coarse probe ordering, microseconds.
+    pub probe_us: u64,
 }
 
 /// An inverted-file index over PQ-encoded series.
@@ -118,6 +133,11 @@ impl IvfIndex {
     /// Number of inverted lists.
     pub fn nlist(&self) -> usize {
         self.list_offsets.len() - 1
+    }
+
+    /// Coarse assignment/probe metric.
+    pub fn coarse_metric(&self) -> CoarseMetric {
+        self.metric
     }
 
     /// Build the blocked, CSR-ordered copy of the member codes that the
@@ -226,11 +246,43 @@ impl IvfIndex {
         k: usize,
         nprobe: usize,
     ) -> Vec<Neighbor> {
+        self.query_topk_traced(pq, encoded, lut, q, k, nprobe, None).0
+    }
+
+    /// [`IvfIndex::query_topk_with`] plus observability: scan counters
+    /// flush into the optional `stats` sink and the returned
+    /// [`ProbeInfo`] reports the coarse-probe stage's accounting
+    /// (cells probed, items in the probed cells, probe wall-time). The
+    /// neighbour list is bit-identical to the untraced call.
+    pub fn query_topk_traced(
+        &self,
+        pq: &ProductQuantizer,
+        encoded: &EncodedDataset,
+        lut: &QueryLut,
+        q: &[f64],
+        k: usize,
+        nprobe: usize,
+        stats: Option<&ScanStats>,
+    ) -> (Vec<Neighbor>, ProbeInfo) {
+        let t0 = std::time::Instant::now();
         let cells = self.probe_order(q, nprobe.max(1));
+        let probe_us = t0.elapsed().as_micros() as u64;
+        let items_in_cells: usize = cells
+            .iter()
+            .map(|&c| self.list_offsets[c + 1] - self.list_offsets[c])
+            .sum();
+        let info = ProbeInfo {
+            cells_probed: cells.len() as u64,
+            items_in_cells: items_in_cells as u64,
+            probe_us,
+        };
         let mut coll = TopKCollector::new(k.max(1));
         match &self.blocks {
             Some(blocks) => {
                 let clut = lut.collapse(&pq.codebook);
+                if let (Some(st), QueryLut::Symmetric(_)) = (stats, lut) {
+                    st.add_lut_collapse();
+                }
                 for c in cells {
                     scan_blocks_into(
                         &clut,
@@ -240,6 +292,7 @@ impl IvfIndex {
                         Some(&self.list_ids),
                         true,
                         &mut coll,
+                        stats,
                     );
                 }
             }
@@ -250,9 +303,14 @@ impl IvfIndex {
                         coll.offer(id, lut.dist_sq(&pq.codebook, encoded.code(id)));
                     }
                 }
+                if let Some(st) = stats {
+                    // The gather path streams every member — nothing
+                    // abandoned, no blocks in play.
+                    st.add_range(items_in_cells as u64, items_in_cells as u64, 0);
+                }
             }
         }
-        coll.into_sorted()
+        (coll.into_sorted(), info)
     }
 
     /// Approximate 1-NN via asymmetric PQ distances over the probed
@@ -381,6 +439,27 @@ mod tests {
         let exhaustive = topk_scan(&pq, &enc, q, 10, PqQueryMode::Asymmetric, 1);
         let probed = ivf.query_topk(&pq, &enc, q, 10, nlist, PqQueryMode::Asymmetric);
         assert_eq!(exhaustive, probed);
+    }
+
+    #[test]
+    fn traced_probe_is_bit_identical_and_accounts_for_probed_cells() {
+        let (db, pq, enc, mut ivf) = setup();
+        ivf.attach_blocks(&enc, pq.codebook.k);
+        let q = db.row(4);
+        for nprobe in [1usize, 3, ivf.nlist()] {
+            let lut = QueryLut::build(&pq, q, PqQueryMode::Symmetric);
+            let plain = ivf.query_topk_with(&pq, &enc, &lut, q, 6, nprobe);
+            let stats = ScanStats::new();
+            let (traced, info) =
+                ivf.query_topk_traced(&pq, &enc, &lut, q, 6, nprobe, Some(&stats));
+            assert_eq!(plain, traced, "nprobe={nprobe}");
+            assert_eq!(info.cells_probed, nprobe as u64);
+            let s = stats.snapshot();
+            assert_eq!(s.items_scanned, info.items_in_cells);
+            assert_eq!(s.lut_collapses, 1, "symmetric probe collapses once");
+            // Conservation: in − abandoned = emitted ≤ in.
+            assert!(s.items_abandoned <= s.items_scanned);
+        }
     }
 
     #[test]

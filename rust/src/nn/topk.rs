@@ -29,6 +29,7 @@ use std::collections::BinaryHeap;
 
 use crate::core::series::Dataset;
 use crate::distance::dtw::{dtw_sq_scratch, DtwScratch};
+use crate::obs::ScanStats;
 use crate::pq::codebook::Codebook;
 use crate::pq::distance as pqdist;
 use crate::pq::encode::{CodeBlocks, SCAN_BLOCK};
@@ -201,6 +202,12 @@ impl QueryLut {
 /// whose partial sum already exceeds the bound are dropped. `ids` maps
 /// a block position to the database id it represents (the CSR-permuted
 /// IVF layout); `None` means positions are ids.
+///
+/// `stats` is the optional prune-cascade counter sink (`obs`): `None`
+/// runs the untouched hot loop (zero tracing overhead); `Some` counts
+/// items in / emitted / fully-skipped blocks in locals and flushes them
+/// into the atomics once per call. The emitted distances — and therefore
+/// the final top-k — are bit-identical either way (proptested).
 pub(crate) fn scan_blocks_into(
     lut: &CollapsedLut,
     blocks: &CodeBlocks,
@@ -209,8 +216,34 @@ pub(crate) fn scan_blocks_into(
     ids: Option<&[usize]>,
     prune: bool,
     coll: &mut TopKCollector,
+    stats: Option<&ScanStats>,
 ) {
     let end = end.min(blocks.n());
+    let Some(stats) = stats else {
+        let mut pos = start;
+        while pos < end {
+            let block = pos / SCAN_BLOCK;
+            let base = block * SCAN_BLOCK;
+            let lo = pos - base;
+            let hi = (end - base).min(SCAN_BLOCK);
+            let thr = if prune { coll.threshold_sq() } else { f64::INFINITY };
+            scan_block(lut, blocks, block, lo, hi, thr, |lane, d| {
+                let p = base + lane;
+                let id = match ids {
+                    Some(ids) => ids[p],
+                    None => p,
+                };
+                coll.offer(id, d);
+            });
+            pos = base + hi;
+        }
+        return;
+    };
+    // Counted twin of the loop above: identical kernel calls and emit
+    // order, plus local accounting flushed once at the end.
+    let mut items_in = 0u64;
+    let mut emitted = 0u64;
+    let mut blocks_skipped = 0u64;
     let mut pos = start;
     while pos < end {
         let block = pos / SCAN_BLOCK;
@@ -218,16 +251,23 @@ pub(crate) fn scan_blocks_into(
         let lo = pos - base;
         let hi = (end - base).min(SCAN_BLOCK);
         let thr = if prune { coll.threshold_sq() } else { f64::INFINITY };
+        let before = emitted;
         scan_block(lut, blocks, block, lo, hi, thr, |lane, d| {
             let p = base + lane;
             let id = match ids {
                 Some(ids) => ids[p],
                 None => p,
             };
+            emitted += 1;
             coll.offer(id, d);
         });
+        items_in += (hi - lo) as u64;
+        if prune && emitted == before && hi > lo {
+            blocks_skipped += 1;
+        }
         pos = base + hi;
     }
+    stats.add_range(items_in, emitted, blocks_skipped);
 }
 
 /// Exhaustive top-k scan of an encoded database, sharded over
@@ -287,14 +327,33 @@ pub fn topk_scan_blocked_opts(
     n_threads: usize,
     prune: bool,
 ) -> Vec<Neighbor> {
+    topk_scan_blocked_stats(blocks, lut, k, n_threads, prune, None)
+}
+
+/// [`topk_scan_blocked_opts`] with an optional prune-cascade counter
+/// sink. When `stats` is `Some`, each shard additionally records its
+/// wall-time ([`ScanStats::add_shard_time`]); the returned top-k is
+/// bit-identical to the untraced call for any thread count.
+pub fn topk_scan_blocked_stats(
+    blocks: &CodeBlocks,
+    lut: &CollapsedLut,
+    k: usize,
+    n_threads: usize,
+    prune: bool,
+    stats: Option<&ScanStats>,
+) -> Vec<Neighbor> {
     let n = blocks.n();
     if n == 0 {
         return Vec::new();
     }
     let threads = n_threads.max(1).min(n);
     if threads == 1 {
+        let t0 = stats.map(|_| std::time::Instant::now());
         let mut coll = TopKCollector::new(k);
-        scan_blocks_into(lut, blocks, 0, n, None, prune, &mut coll);
+        scan_blocks_into(lut, blocks, 0, n, None, prune, &mut coll, stats);
+        if let (Some(st), Some(t0)) = (stats, t0) {
+            st.add_shard_time(t0.elapsed().as_micros() as u64);
+        }
         return coll.into_sorted();
     }
     // Block-aligned shards: no two workers ever touch the same block.
@@ -306,8 +365,12 @@ pub fn topk_scan_blocked_opts(
         while start < n {
             let end = (start + chunk).min(n);
             handles.push(s.spawn(move || {
+                let t0 = stats.map(|_| std::time::Instant::now());
                 let mut coll = TopKCollector::new(k);
-                scan_blocks_into(lut, blocks, start, end, None, prune, &mut coll);
+                scan_blocks_into(lut, blocks, start, end, None, prune, &mut coll, stats);
+                if let (Some(st), Some(t0)) = (stats, t0) {
+                    st.add_shard_time(t0.elapsed().as_micros() as u64);
+                }
                 coll
             }));
             start = end;
@@ -531,6 +594,32 @@ mod tests {
         // 3. ascending order
         for w in hits.windows(2) {
             assert!(w[0].distance <= w[1].distance + 1e-12);
+        }
+    }
+
+    #[test]
+    fn stats_sink_is_bit_transparent_and_counts_are_consistent() {
+        let (pq, enc, _, test) = toy();
+        let blocks = enc.to_blocks(pq.codebook.k);
+        let q = test.row(1);
+        let lut = QueryLut::build(&pq, q, PqQueryMode::Asymmetric);
+        let clut = lut.collapse(&pq.codebook);
+        for prune in [false, true] {
+            for threads in [1usize, 3] {
+                let plain = topk_scan_blocked_opts(&blocks, &clut, 5, threads, prune);
+                let stats = ScanStats::new();
+                let traced =
+                    topk_scan_blocked_stats(&blocks, &clut, 5, threads, prune, Some(&stats));
+                assert_eq!(plain, traced, "prune={prune} threads={threads}");
+                let s = stats.snapshot();
+                assert_eq!(s.items_scanned, enc.n() as u64);
+                assert!(s.items_abandoned <= s.items_scanned);
+                assert!(s.shards >= 1);
+                if !prune {
+                    assert_eq!(s.items_abandoned, 0, "streaming scan abandons nothing");
+                    assert_eq!(s.blocks_skipped, 0);
+                }
+            }
         }
     }
 

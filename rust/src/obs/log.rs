@@ -1,0 +1,224 @@
+//! Structured JSON-lines event logging for the serving plane.
+//!
+//! The `no-raw-stderr-in-serving` lint forbids `eprintln!`/`eprint!` in
+//! `net/` and `coordinator/`; serving code logs through [`JsonLogger`]
+//! instead, so events are machine-parseable (one JSON object per line)
+//! and logging can be disabled without sprinkling `if` at call sites.
+//!
+//! Event shape: `{"ts":<unix_secs>,"event":"<name>",...fields}`.
+//! Field values are JSON numbers, strings, or booleans; strings are
+//! escaped per JSON. The event shapes the server emits are documented in
+//! `docs/observability.md`.
+
+use std::io::Write;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// A typed field value for one log event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::U64(v)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+/// JSON-lines event logger. Disabled loggers are free: `event` returns
+/// before formatting anything.
+pub struct JsonLogger {
+    sink: Option<Mutex<Box<dyn Write + Send>>>,
+}
+
+impl std::fmt::Debug for JsonLogger {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JsonLogger")
+            .field("enabled", &self.is_enabled())
+            .finish()
+    }
+}
+
+impl Default for JsonLogger {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl JsonLogger {
+    /// A logger that drops every event (the default for embedded use).
+    pub fn disabled() -> Self {
+        JsonLogger { sink: None }
+    }
+
+    /// A logger writing JSON lines to stderr (`serve --log-json`).
+    pub fn stderr() -> Self {
+        JsonLogger {
+            sink: Some(Mutex::new(Box::new(std::io::stderr()))),
+        }
+    }
+
+    /// A logger writing to an arbitrary sink (tests).
+    pub fn to_writer(w: Box<dyn Write + Send>) -> Self {
+        JsonLogger {
+            sink: Some(Mutex::new(w)),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Emit one event line. Logging failures (closed pipe, poisoned
+    /// mutex) are swallowed: observability must never take the serving
+    /// plane down.
+    pub fn event(&self, name: &str, fields: &[(&str, Value)]) {
+        let Some(sink) = &self.sink else {
+            return;
+        };
+        let line = render_event(unix_secs(), name, fields);
+        if let Ok(mut w) = sink.lock() {
+            let _ = w.write_all(line.as_bytes());
+            let _ = w.flush();
+        }
+    }
+}
+
+fn unix_secs() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Render one event as a single JSON line (trailing `\n`).
+pub fn render_event(ts: u64, name: &str, fields: &[(&str, Value)]) -> String {
+    let mut out = String::with_capacity(64);
+    out.push_str(&format!("{{\"ts\":{ts},\"event\":\"{}\"", escape(name)));
+    for (key, value) in fields {
+        out.push_str(&format!(",\"{}\":", escape(key)));
+        match value {
+            Value::U64(v) => out.push_str(&v.to_string()),
+            Value::I64(v) => out.push_str(&v.to_string()),
+            Value::F64(v) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v}"));
+                } else {
+                    // JSON has no NaN/Inf; stringify to stay parseable.
+                    out.push_str(&format!("\"{v}\""));
+                }
+            }
+            Value::Str(v) => out.push_str(&format!("\"{}\"", escape(v))),
+            Value::Bool(v) => out.push_str(if *v { "true" } else { "false" }),
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex as StdMutex};
+
+    /// Shared Vec<u8> sink for asserting on emitted lines.
+    #[derive(Clone, Default)]
+    struct Buf(Arc<StdMutex<Vec<u8>>>);
+
+    impl Write for Buf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn disabled_logger_emits_nothing_and_reports_disabled() {
+        let log = JsonLogger::disabled();
+        assert!(!log.is_enabled());
+        log.event("connect", &[("conn", Value::U64(1))]);
+    }
+
+    #[test]
+    fn events_are_one_json_object_per_line() {
+        let buf = Buf::default();
+        let log = JsonLogger::to_writer(Box::new(buf.clone()));
+        assert!(log.is_enabled());
+        log.event("connect", &[("conn", Value::U64(7)), ("peer", Value::from("1.2.3.4:5"))]);
+        log.event("disconnect", &[("conn", Value::U64(7)), ("ok", Value::Bool(true))]);
+        let bytes = buf.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("{\"ts\":"));
+        assert!(lines[0].contains("\"event\":\"connect\""));
+        assert!(lines[0].contains("\"conn\":7"));
+        assert!(lines[0].contains("\"peer\":\"1.2.3.4:5\""));
+        assert!(lines[1].contains("\"ok\":true"));
+        assert!(lines.iter().all(|l| l.ends_with('}')));
+    }
+
+    #[test]
+    fn strings_are_json_escaped() {
+        let line = render_event(
+            1,
+            "error",
+            &[("msg", Value::from("quote \" slash \\ nl \n tab \t"))],
+        );
+        assert!(line.contains("\\\""));
+        assert!(line.contains("\\\\"));
+        assert!(line.contains("\\n"));
+        assert!(line.contains("\\t"));
+        assert!(!line[..line.len() - 1].contains('\n'));
+    }
+
+    #[test]
+    fn non_finite_f64_is_stringified_not_bare() {
+        let line = render_event(0, "x", &[("v", Value::F64(f64::NAN))]);
+        assert!(line.contains("\"v\":\"NaN\""));
+        let line = render_event(0, "x", &[("v", Value::F64(2.5))]);
+        assert!(line.contains("\"v\":2.5"));
+    }
+}

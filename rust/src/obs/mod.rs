@@ -1,0 +1,384 @@
+//! Observability layer: prune-cascade counters, per-query traces, and the
+//! serving-path log/exposition surfaces.
+//!
+//! Everything here is std-only and lock-free on the hot path:
+//!
+//! - [`ScanStats`] is an atomic sink the blocked-scan kernel flushes into
+//!   once per scanned range (never per item). Callers pass
+//!   `Option<&ScanStats>`; `None` runs the untouched hot loop, so tracing
+//!   costs nothing when disabled.
+//! - [`QueryTrace`] records the stage ladder one query walks
+//!   (`lut_collapse → coarse_probe → blocked_scan → rerank`) with
+//!   wall-times and candidate in/out counts, plus optional per-hit
+//!   [`HitExplain`] records ("why ranked").
+//! - [`log::JsonLogger`] emits structured JSON-lines events for the
+//!   serving plane (the `no-raw-stderr-in-serving` lint requires serving
+//!   code to log through it rather than `eprintln!`).
+//! - [`prometheus::PromText`] renders counters/histograms in Prometheus
+//!   text exposition format.
+//!
+//! The trace schema and metric names are documented in
+//! `docs/observability.md`.
+
+pub mod log;
+pub mod prometheus;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free sink for kernel-level scan counters.
+///
+/// One `ScanStats` can serve as a per-query scratch (snapshot it into the
+/// query's trace) or as a long-lived process-wide accumulator (the engine
+/// keeps one for the Prometheus counters). All updates are relaxed atomic
+/// adds: the counters are monotone and independent, so no cross-field
+/// ordering is needed.
+#[derive(Debug, Default)]
+pub struct ScanStats {
+    /// Items entering the blocked-scan cascade (lanes actually requested,
+    /// excluding block tail padding).
+    pub items_scanned: AtomicU64,
+    /// Items abandoned mid-cascade by the exact prune
+    /// (`items_scanned - emitted`).
+    pub items_abandoned: AtomicU64,
+    /// Blocks where the prune abandoned every requested lane.
+    pub blocks_skipped: AtomicU64,
+    /// Per-query LUT collapses (symmetric `M·K² → M·K` row gathers).
+    pub lut_collapses: AtomicU64,
+    /// Wall-time summed over scan shards, in microseconds.
+    pub shard_time_us: AtomicU64,
+    /// Number of scan shards timed into `shard_time_us`.
+    pub shards: AtomicU64,
+}
+
+impl ScanStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Flush one scanned range: `items_in` lanes entered, `emitted`
+    /// survived the cascade, `blocks_skipped` blocks lost every lane.
+    pub fn add_range(&self, items_in: u64, emitted: u64, blocks_skipped: u64) {
+        self.items_scanned.fetch_add(items_in, Ordering::Relaxed);
+        self.items_abandoned
+            .fetch_add(items_in.saturating_sub(emitted), Ordering::Relaxed);
+        self.blocks_skipped.fetch_add(blocks_skipped, Ordering::Relaxed);
+    }
+
+    /// Record one symmetric-LUT collapse.
+    pub fn add_lut_collapse(&self) {
+        self.lut_collapses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one scan shard's wall-time.
+    pub fn add_shard_time(&self, us: u64) {
+        self.shard_time_us.fetch_add(us, Ordering::Relaxed);
+        self.shards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Read a consistent-enough point-in-time copy (fields are read
+    /// independently; exactness across fields is not required by any
+    /// consumer — per-query sinks are quiescent when snapshotted).
+    pub fn snapshot(&self) -> ScanSnapshot {
+        ScanSnapshot {
+            items_scanned: self.items_scanned.load(Ordering::Relaxed),
+            items_abandoned: self.items_abandoned.load(Ordering::Relaxed),
+            blocks_skipped: self.blocks_skipped.load(Ordering::Relaxed),
+            lut_collapses: self.lut_collapses.load(Ordering::Relaxed),
+            shard_time_us: self.shard_time_us.load(Ordering::Relaxed),
+            shards: self.shards.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Add this sink's current totals into `other` (used to roll a
+    /// per-query sink into the engine-wide accumulator).
+    pub fn merge_into(&self, other: &ScanStats) {
+        let s = self.snapshot();
+        other.items_scanned.fetch_add(s.items_scanned, Ordering::Relaxed);
+        other
+            .items_abandoned
+            .fetch_add(s.items_abandoned, Ordering::Relaxed);
+        other.blocks_skipped.fetch_add(s.blocks_skipped, Ordering::Relaxed);
+        other.lut_collapses.fetch_add(s.lut_collapses, Ordering::Relaxed);
+        other.shard_time_us.fetch_add(s.shard_time_us, Ordering::Relaxed);
+        other.shards.fetch_add(s.shards, Ordering::Relaxed);
+    }
+}
+
+/// Plain-value copy of [`ScanStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScanSnapshot {
+    pub items_scanned: u64,
+    pub items_abandoned: u64,
+    pub blocks_skipped: u64,
+    pub lut_collapses: u64,
+    pub shard_time_us: u64,
+    pub shards: u64,
+}
+
+impl ScanSnapshot {
+    /// Fraction of scanned items the prune cascade abandoned, in `[0, 1]`.
+    pub fn abandon_rate(&self) -> f64 {
+        if self.items_scanned == 0 {
+            0.0
+        } else {
+            self.items_abandoned as f64 / self.items_scanned as f64
+        }
+    }
+}
+
+/// One rung of the query ladder. Wire encoding and Prometheus label both
+/// use [`Stage::name`]; the discriminant is stable (`as_u8`/`from_u8`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Query-side LUT derivation (symmetric collapse or asymmetric build).
+    LutCollapse,
+    /// IVF coarse-centroid probe ordering (absent for exhaustive scans).
+    CoarseProbe,
+    /// Blocked PQ-code scan with the exact prune cascade.
+    BlockedScan,
+    /// Exact windowed-DTW re-rank of the PQ candidate pool.
+    Rerank,
+}
+
+/// Number of distinct stages (histogram array dimension).
+pub const N_STAGES: usize = 4;
+
+impl Stage {
+    /// All stages in ladder order.
+    pub const ALL: [Stage; N_STAGES] =
+        [Stage::LutCollapse, Stage::CoarseProbe, Stage::BlockedScan, Stage::Rerank];
+
+    /// Stable snake_case name (wire docs, Prometheus `stage` label,
+    /// JSON trace output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::LutCollapse => "lut_collapse",
+            Stage::CoarseProbe => "coarse_probe",
+            Stage::BlockedScan => "blocked_scan",
+            Stage::Rerank => "rerank",
+        }
+    }
+
+    /// Stable wire discriminant.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Stage::LutCollapse => 0,
+            Stage::CoarseProbe => 1,
+            Stage::BlockedScan => 2,
+            Stage::Rerank => 3,
+        }
+    }
+
+    /// Inverse of [`Stage::as_u8`]; `None` for unknown discriminants
+    /// (hostile wire input).
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        match v {
+            0 => Some(Stage::LutCollapse),
+            1 => Some(Stage::CoarseProbe),
+            2 => Some(Stage::BlockedScan),
+            3 => Some(Stage::Rerank),
+            _ => None,
+        }
+    }
+
+    /// Index into per-stage histogram arrays.
+    pub fn index(self) -> usize {
+        usize::from(self.as_u8())
+    }
+}
+
+/// One timed stage of a query, with candidate-set accounting.
+///
+/// For `BlockedScan`, `candidates_in - items_abandoned == candidates_out`
+/// (the prune-cascade conservation law tested in the proptest harness).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageSpan {
+    pub stage: Stage,
+    /// Wall-clock time spent in the stage, microseconds.
+    pub wall_us: u64,
+    /// Candidates entering the stage.
+    pub candidates_in: u64,
+    /// Candidates surviving the stage.
+    pub candidates_out: u64,
+}
+
+/// "Why ranked": per-hit provenance in a traced response.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HitExplain {
+    /// Database index of the hit (mirrors the hit list ordering).
+    pub index: u64,
+    /// PQ-space distance estimate that admitted the item.
+    pub pq_estimate: f64,
+    /// Exact windowed DTW, present iff the hit was re-ranked.
+    pub exact_dtw: Option<f64>,
+    /// The last stage that (re)admitted the hit into the result set.
+    pub admitted_by: Stage,
+}
+
+/// End-to-end record of one query's walk down the ladder.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueryTrace {
+    /// Client-supplied request id (0 when unset; the net server stamps
+    /// the wire value over whatever the engine recorded).
+    pub request_id: u64,
+    /// Stage ladder in execution order. Stages that did not run for this
+    /// query (e.g. `coarse_probe` on an exhaustive scan) are absent.
+    pub spans: Vec<StageSpan>,
+    /// Per-hit explainability, parallel to the response's hit list.
+    /// Empty when the client did not request explanations.
+    pub hits: Vec<HitExplain>,
+    /// This query's kernel counters (quiescent per-query sink snapshot).
+    pub scan: ScanSnapshot,
+}
+
+impl QueryTrace {
+    /// Find a span by stage, if that stage ran.
+    pub fn span(&self, stage: Stage) -> Option<&StageSpan> {
+        self.spans.iter().find(|s| s.stage == stage)
+    }
+
+    /// Render the trace as human-readable text (the `query --trace` CLI
+    /// output; one line per span, then one per explained hit).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("trace request_id={}\n", self.request_id));
+        for s in &self.spans {
+            out.push_str(&format!(
+                "  stage {:<13} wall_us={:<8} in={:<8} out={}\n",
+                s.stage.name(),
+                s.wall_us,
+                s.candidates_in,
+                s.candidates_out
+            ));
+        }
+        out.push_str(&format!(
+            "  scan items={} abandoned={} ({:.1}%) blocks_skipped={} \
+             lut_collapses={}\n",
+            self.scan.items_scanned,
+            self.scan.items_abandoned,
+            100.0 * self.scan.abandon_rate(),
+            self.scan.blocks_skipped,
+            self.scan.lut_collapses
+        ));
+        for h in &self.hits {
+            let exact = match h.exact_dtw {
+                Some(d) => format!(" exact_dtw={d:.6}"),
+                None => String::new(),
+            };
+            out.push_str(&format!(
+                "  hit index={:<6} pq_estimate={:.6}{} admitted_by={}\n",
+                h.index,
+                h.pq_estimate,
+                exact,
+                h.admitted_by.name()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_stats_accumulates_and_snapshots() {
+        let s = ScanStats::new();
+        s.add_range(64, 10, 0);
+        s.add_range(36, 0, 1);
+        s.add_lut_collapse();
+        s.add_shard_time(120);
+        let snap = s.snapshot();
+        assert_eq!(snap.items_scanned, 100);
+        assert_eq!(snap.items_abandoned, 54 + 36);
+        assert_eq!(snap.blocks_skipped, 1);
+        assert_eq!(snap.lut_collapses, 1);
+        assert_eq!(snap.shard_time_us, 120);
+        assert_eq!(snap.shards, 1);
+        assert!((snap.abandon_rate() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_into_adds_totals() {
+        let a = ScanStats::new();
+        let b = ScanStats::new();
+        a.add_range(10, 4, 0);
+        b.add_range(5, 5, 0);
+        a.merge_into(&b);
+        let snap = b.snapshot();
+        assert_eq!(snap.items_scanned, 15);
+        assert_eq!(snap.items_abandoned, 6);
+    }
+
+    #[test]
+    fn abandon_rate_of_empty_snapshot_is_zero() {
+        assert_eq!(ScanSnapshot::default().abandon_rate(), 0.0);
+    }
+
+    #[test]
+    fn stage_u8_roundtrip_is_stable() {
+        for stage in Stage::ALL {
+            assert_eq!(Stage::from_u8(stage.as_u8()), Some(stage));
+        }
+        assert_eq!(Stage::from_u8(4), None);
+        assert_eq!(Stage::from_u8(255), None);
+        // The discriminants are part of the wire format — pin them.
+        assert_eq!(Stage::LutCollapse.as_u8(), 0);
+        assert_eq!(Stage::CoarseProbe.as_u8(), 1);
+        assert_eq!(Stage::BlockedScan.as_u8(), 2);
+        assert_eq!(Stage::Rerank.as_u8(), 3);
+    }
+
+    #[test]
+    fn stage_names_are_unique_snake_case() {
+        let names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        for (i, a) in names.iter().enumerate() {
+            assert!(a.chars().all(|c| c.is_ascii_lowercase() || c == '_'));
+            for b in &names[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_span_lookup_and_text_rendering() {
+        let trace = QueryTrace {
+            request_id: 42,
+            spans: vec![
+                StageSpan {
+                    stage: Stage::LutCollapse,
+                    wall_us: 3,
+                    candidates_in: 100,
+                    candidates_out: 100,
+                },
+                StageSpan {
+                    stage: Stage::BlockedScan,
+                    wall_us: 50,
+                    candidates_in: 100,
+                    candidates_out: 12,
+                },
+            ],
+            hits: vec![HitExplain {
+                index: 7,
+                pq_estimate: 1.25,
+                exact_dtw: Some(1.5),
+                admitted_by: Stage::Rerank,
+            }],
+            scan: ScanSnapshot {
+                items_scanned: 100,
+                items_abandoned: 88,
+                blocks_skipped: 1,
+                lut_collapses: 1,
+                shard_time_us: 49,
+                shards: 1,
+            },
+        };
+        assert_eq!(trace.span(Stage::BlockedScan).map(|s| s.wall_us), Some(50));
+        assert_eq!(trace.span(Stage::Rerank), None);
+        let text = trace.render_text();
+        assert!(text.contains("request_id=42"));
+        assert!(text.contains("blocked_scan"));
+        assert!(text.contains("abandoned=88"));
+        assert!(text.contains("admitted_by=rerank"));
+    }
+}

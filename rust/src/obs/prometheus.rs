@@ -1,0 +1,249 @@
+//! Prometheus text exposition rendering (version 0.0.4 of the format).
+//!
+//! Std-only builder: each metric family gets exactly one `# TYPE` line,
+//! histograms are emitted as cumulative `_bucket{le="..."}` series plus
+//! `_sum`/`_count`, and label values are escaped per the exposition
+//! format. [`validate_exposition`] is a minimal parser used by tests to
+//! assert output well-formedness (unique family names, `# TYPE` lines,
+//! parseable samples).
+
+/// Incremental builder for one exposition document.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+    families: Vec<String>,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a metric family (`kind` is `counter`, `gauge`, or
+    /// `histogram`). Each family must be declared exactly once, before
+    /// its samples.
+    pub fn family(&mut self, name: &str, kind: &str) {
+        debug_assert!(
+            !self.families.iter().any(|f| f == name),
+            "duplicate metric family {name}"
+        );
+        self.families.push(name.to_string());
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    /// Emit one sample. `labels` may be empty.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        self.push_labels(labels);
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// Declare + emit a label-less counter in one call.
+    pub fn counter(&mut self, name: &str, value: u64) {
+        self.family(name, "counter");
+        self.sample(name, &[], value as f64);
+    }
+
+    /// Declare + emit a label-less gauge in one call.
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.family(name, "gauge");
+        self.sample(name, &[], value);
+    }
+
+    /// Emit one histogram series under an already-declared family.
+    ///
+    /// `buckets` are `(upper_bound_us, count)` pairs with *per-bucket*
+    /// counts (the repo's internal shape); this renders the cumulative
+    /// `_bucket` ladder the format requires, mapping the `u64::MAX`
+    /// sentinel to `+Inf`. `sum` is the observed-value total.
+    pub fn histogram_series(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        buckets: &[(u64, u64)],
+        sum: f64,
+    ) {
+        let mut acc: u64 = 0;
+        for &(ub, count) in buckets {
+            acc = acc.saturating_add(count);
+            let le = if ub == u64::MAX {
+                "+Inf".to_string()
+            } else {
+                ub.to_string()
+            };
+            let mut all: Vec<(&str, &str)> = labels.to_vec();
+            all.push(("le", &le));
+            self.sample(&format!("{name}_bucket"), &all, acc as f64);
+        }
+        self.sample(&format!("{name}_sum"), labels, sum);
+        self.sample(&format!("{name}_count"), labels, acc as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+
+    fn push_labels(&mut self, labels: &[(&str, &str)]) {
+        if labels.is_empty() {
+            return;
+        }
+        self.out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                self.out.push(',');
+            }
+            self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+        }
+        self.out.push('}');
+    }
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.is_finite() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Minimal exposition-format checker used by tests and the `--verify`
+/// style assertions: every sample line must parse, every metric family
+/// must have exactly one `# TYPE` line, and every sample must belong to
+/// a declared family (histogram suffixes `_bucket`/`_sum`/`_count`
+/// resolve to their base family). Returns the number of sample lines.
+pub fn validate_exposition(text: &str) -> Result<usize, String> {
+    let mut families: Vec<String> = Vec::new();
+    let mut samples = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let n = lineno + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().ok_or(format!("line {n}: TYPE without name"))?;
+            let kind = parts.next().ok_or(format!("line {n}: TYPE without kind"))?;
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {n}: unknown metric kind `{kind}`"));
+            }
+            if families.iter().any(|f| f == name) {
+                return Err(format!("line {n}: duplicate # TYPE for `{name}`"));
+            }
+            if !valid_metric_name(name) {
+                return Err(format!("line {n}: invalid metric name `{name}`"));
+            }
+            families.push(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or comment
+        }
+        let name_end = line
+            .find(|c: char| c == '{' || c == ' ')
+            .ok_or(format!("line {n}: sample without value"))?;
+        let name = &line[..name_end];
+        if !valid_metric_name(name) {
+            return Err(format!("line {n}: invalid sample name `{name}`"));
+        }
+        let rest = &line[name_end..];
+        let value_part = if let Some(stripped) = rest.strip_prefix('{') {
+            let close = stripped.find('}').ok_or(format!("line {n}: unclosed label set"))?;
+            &stripped[close + 1..]
+        } else {
+            rest
+        };
+        let value = value_part.trim();
+        if value.parse::<f64>().is_err() && value != "+Inf" && value != "-Inf" {
+            return Err(format!("line {n}: unparseable value `{value}`"));
+        }
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|b| families.iter().any(|f| f == b))
+            .unwrap_or(name);
+        if !families.iter().any(|f| f == base) {
+            return Err(format!("line {n}: sample `{name}` has no # TYPE line"));
+        }
+        samples += 1;
+    }
+    Ok(samples)
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_histograms_render_and_validate() {
+        let mut p = PromText::new();
+        p.counter("pqdtw_requests_total", 12);
+        p.gauge("pqdtw_uptime_seconds", 3.5);
+        p.family("pqdtw_request_latency_microseconds", "histogram");
+        p.histogram_series(
+            "pqdtw_request_latency_microseconds",
+            &[("class", "top_k")],
+            &[(10, 2), (100, 3), (u64::MAX, 1)],
+            420.0,
+        );
+        let text = p.finish();
+        assert!(text.contains("# TYPE pqdtw_requests_total counter\n"));
+        assert!(text.contains("pqdtw_requests_total 12\n"));
+        assert!(text.contains("le=\"10\"} 2\n"));
+        assert!(text.contains("le=\"100\"} 5\n"));
+        assert!(text.contains("le=\"+Inf\"} 6\n"));
+        assert!(text.contains("pqdtw_request_latency_microseconds_count{class=\"top_k\"} 6\n"));
+        assert!(text.contains("pqdtw_request_latency_microseconds_sum{class=\"top_k\"} 420\n"));
+        let samples = validate_exposition(&text).expect("valid exposition");
+        assert_eq!(samples, 2 + 5);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut p = PromText::new();
+        p.family("m", "gauge");
+        p.sample("m", &[("l", "a\"b\\c\nd")], 1.0);
+        let text = p.finish();
+        assert!(text.contains("l=\"a\\\"b\\\\c\\nd\""));
+        validate_exposition(&text).expect("escaped labels still validate");
+    }
+
+    #[test]
+    fn validator_rejects_duplicate_families_and_untyped_samples() {
+        assert!(validate_exposition("# TYPE a counter\n# TYPE a counter\na 1\n").is_err());
+        assert!(validate_exposition("orphan_metric 3\n").is_err());
+        assert!(validate_exposition("# TYPE a counter\na notanumber\n").is_err());
+        assert!(validate_exposition("# TYPE a counter\na 1\n").is_ok());
+    }
+
+    #[test]
+    fn integral_values_render_without_fraction() {
+        assert_eq!(fmt_value(5.0), "5");
+        assert_eq!(fmt_value(2.5), "2.5");
+        assert_eq!(fmt_value(0.0), "0");
+    }
+}

@@ -19,6 +19,7 @@ use pqdtw::net::protocol::{self, NetRequest, NetResponse};
 use pqdtw::net::{Client, ClientConfig, NetServer, ServerConfig};
 use pqdtw::nn::ivf::CoarseMetric;
 use pqdtw::nn::knn::PqQueryMode;
+use pqdtw::obs::{prometheus, Stage};
 use pqdtw::pq::quantizer::PqConfig;
 
 /// A small served engine with an IVF index, plus the matching queries.
@@ -128,6 +129,8 @@ fn hostile_frame_sweep_never_kills_the_server() {
         mode: PqQueryMode::Asymmetric,
         nprobe: Some(2),
         rerank: Some(4),
+        request_id: 7,
+        trace: true,
     });
     let mut cases: Vec<Vec<u8>> = Vec::new();
     for n in 0..good.len() {
@@ -200,6 +203,8 @@ fn oversized_frame_is_rejected_and_disconnected() {
         mode: PqQueryMode::Symmetric,
         nprobe: None,
         rerank: None,
+        request_id: 0,
+        trace: false,
     });
     let _ = s.write_all(&frame);
     let _ = s.flush();
@@ -295,6 +300,130 @@ fn stats_over_the_wire_account_for_every_class() {
     // The wire snapshot mirrors the in-process one (modulo the stats
     // request itself racing the snapshot).
     assert!(svc.metrics().requests >= stats.requests);
+    server.shutdown();
+}
+
+#[test]
+fn traced_queries_are_bit_identical_and_explain_their_hits() {
+    let (server, _svc, engine, test, addr) = toy_server(ServerConfig::default());
+    let nlist = engine.ivf.as_ref().unwrap().nlist();
+    let mut client = quick_client(&addr);
+    // The full serving-mode dial again, this time with tracing on: the
+    // trace must never perturb the ranked answer (bit-identity), and
+    // the stage ladder must mirror the mode that actually ran.
+    let cases: [(Option<usize>, Option<usize>); 4] =
+        [(None, None), (Some(nlist), None), (None, Some(12)), (Some(3), Some(9))];
+    for (i, (nprobe, rerank)) in cases.into_iter().enumerate() {
+        let q = test.row(i).to_vec();
+        let plain = client.topk(&q, 4, PqQueryMode::Asymmetric, nprobe, rerank).unwrap();
+        let rid = 1000 + i as u64;
+        let (traced, trace) = client
+            .topk_traced(&q, 4, PqQueryMode::Asymmetric, nprobe, rerank, rid, true)
+            .unwrap();
+        assert_eq!(traced, plain, "case {i}: tracing must not change the answer");
+        let t = trace.expect("trace was requested");
+        assert_eq!(t.request_id, rid, "case {i}: server must echo the request id");
+        // One explanation per hit, in hit order, indices matching.
+        assert_eq!(t.hits.len(), traced.len(), "case {i}");
+        for (ex, hit) in t.hits.iter().zip(&traced) {
+            assert_eq!(ex.index, hit.index as u64, "case {i}");
+            if rerank.is_some() {
+                let dtw = ex.exact_dtw.expect("re-ranked hits carry exact DTW");
+                assert_eq!(dtw.to_bits(), hit.distance.to_bits(), "case {i}");
+            } else {
+                assert_eq!(ex.pq_estimate.to_bits(), hit.distance.to_bits(), "case {i}");
+                assert!(ex.exact_dtw.is_none(), "case {i}");
+            }
+        }
+        // Stage ladder matches the dial: scan always runs, coarse probe
+        // iff nprobe, rerank iff rerank.
+        assert!(t.span(Stage::LutCollapse).is_some(), "case {i}");
+        assert!(t.span(Stage::BlockedScan).is_some(), "case {i}");
+        assert_eq!(t.span(Stage::CoarseProbe).is_some(), nprobe.is_some(), "case {i}");
+        assert_eq!(t.span(Stage::Rerank).is_some(), rerank.is_some(), "case {i}");
+        if let Some(s) = t.span(Stage::Rerank) {
+            assert_eq!(s.candidates_out, traced.len() as u64, "case {i}");
+        }
+        // Kernel accounting is conserved: everything scanned was either
+        // abandoned by the prune cascade or fully measured.
+        assert!(t.scan.items_abandoned <= t.scan.items_scanned, "case {i}");
+        // Tracing stays opt-in: same query through the traced API with
+        // the flag off returns the same hits and no trace.
+        let (again, none) = client
+            .topk_traced(&q, 4, PqQueryMode::Asymmetric, nprobe, rerank, rid, false)
+            .unwrap();
+        assert_eq!(again, plain, "case {i}");
+        assert!(none.is_none(), "case {i}: trace must be opt-in");
+    }
+    // 1-NN through the traced path, both query modes.
+    let q = test.row(0).to_vec();
+    for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+        let (wi, wd, wl) = client.nn(&q, mode, None).unwrap();
+        let (index, distance, label, trace) =
+            client.nn_traced(&q, mode, None, 77, true).unwrap();
+        assert_eq!((index, label), (wi, wl), "{mode:?}");
+        assert_eq!(distance.to_bits(), wd.to_bits(), "{mode:?}");
+        let t = trace.expect("trace was requested");
+        assert_eq!(t.request_id, 77, "{mode:?}");
+        assert!(t.span(Stage::BlockedScan).is_some(), "{mode:?}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn metrics_text_is_valid_prometheus_over_the_wire() {
+    let (server, _svc, _engine, test, addr) = toy_server(ServerConfig::default());
+    let mut client = quick_client(&addr);
+    client.topk(test.row(0), 2, PqQueryMode::Asymmetric, None, None).unwrap();
+    client.topk(test.row(1), 2, PqQueryMode::Asymmetric, None, Some(8)).unwrap();
+    let text = client.metrics_text().unwrap();
+    let samples = prometheus::validate_exposition(&text)
+        .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+    assert!(samples > 10, "expected a real document, got {samples} samples");
+    for name in [
+        "pqdtw_requests_total",
+        "pqdtw_request_latency_microseconds",
+        "pqdtw_stage_latency_microseconds",
+        "pqdtw_scan_items_scanned_total",
+        "pqdtw_index_items",
+        "pqdtw_build_info",
+        "pqdtw_uptime_seconds",
+    ] {
+        assert!(text.contains(name), "missing {name} in:\n{text}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn wire_stats_carry_stage_histograms_and_the_index_header() {
+    let (server, _svc, engine, test, addr) = toy_server(ServerConfig::default());
+    let mut client = quick_client(&addr);
+    client.topk(test.row(0), 2, PqQueryMode::Asymmetric, None, None).unwrap();
+    client.topk(test.row(1), 2, PqQueryMode::Asymmetric, None, Some(8)).unwrap();
+    let stats = client.stats().unwrap();
+    // Index header summary matches the engine we built.
+    let info = engine.info();
+    assert_eq!(stats.n_subspaces, info.n_subspaces as u64);
+    assert_eq!(stats.codebook_size, info.codebook_size as u64);
+    assert_eq!(stats.series_len, info.series_len as u64);
+    assert_eq!(stats.n_items, info.n_items as u64);
+    assert_eq!(stats.coarse_metric, info.coarse_metric);
+    assert_eq!(stats.nlist, info.nlist);
+    assert_eq!(stats.version, env!("CARGO_PKG_VERSION"));
+    // Per-stage histograms: both queries crossed the blocked scan, one
+    // crossed the rerank.
+    let by_name = |n: &str| {
+        stats
+            .per_stage
+            .iter()
+            .find(|s| s.name == n)
+            .unwrap_or_else(|| panic!("missing stage {n}"))
+    };
+    assert_eq!(by_name("blocked_scan").count, 2);
+    assert_eq!(by_name("rerank").count, 1);
+    assert!(by_name("blocked_scan").p50_us <= by_name("blocked_scan").p99_us);
+    // Kernel counters flowed into the engine-global sink.
+    assert!(stats.scan.items_scanned > 0);
     server.shutdown();
 }
 

@@ -482,6 +482,97 @@ fn prop_pruned_blocked_topk_matches_unpruned_and_scalar() {
 }
 
 #[test]
+fn prop_traced_scan_is_bit_transparent_and_counters_conserved() {
+    // Kernel accounting must be a pure observer: the traced blocked
+    // scan (`stats: Some`) returns bit-identical neighbours to the
+    // untraced one for every mode / prune / shard combination, and its
+    // counters obey the conservation law
+    // `items_scanned - items_abandoned == items emitted`:
+    //   - scanned is always exactly n (tail padding never counted);
+    //   - with pruning off nothing is ever abandoned;
+    //   - with pruning on at k >= n every item must survive the
+    //     cascade (the collector keeps everything), so abandoned == 0;
+    //   - with pruning on at k < n the k survivors were necessarily
+    //     emitted, so abandoned <= n - k.
+    use pqdtw::nn::topk::{topk_scan_blocked_opts, topk_scan_blocked_stats, QueryLut};
+    use pqdtw::obs::ScanStats;
+
+    check("traced scan == untraced + conservation", 5, |rng| {
+        let n = 80 + rng.below(150);
+        let len = 32 + 4 * rng.below(5);
+        let mut values = Vec::with_capacity(n * len);
+        for _ in 0..n {
+            values.extend(gen_walk(rng, len));
+        }
+        let data = Dataset::from_flat(values, len);
+        let cfg = PqConfig {
+            n_subspaces: 2 + rng.below(3),
+            codebook_size: 4 + rng.below(12),
+            window_frac: 0.25,
+            metric: if rng.below(4) == 0 { PqMetric::Euclidean } else { PqMetric::Dtw },
+            kmeans_iters: 2,
+            dba_iters: 1,
+            ..Default::default()
+        };
+        let pq = ProductQuantizer::train(&data, &cfg, rng.next_u64()).map_err(|e| e.to_string())?;
+        let enc = pq.encode_dataset(&data);
+        let blocks = enc.to_blocks(pq.codebook.k);
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            let q = gen_walk(rng, len);
+            let lut = QueryLut::build(&pq, &q, mode);
+            let clut = lut.collapse(&pq.codebook);
+            for k in [1 + rng.below(9), n + rng.below(4)] {
+                for prune in [false, true] {
+                    for threads in [1, 1 + rng.below(4)] {
+                        let tag = format!("{mode:?} k={k} prune={prune} threads={threads}");
+                        let plain = topk_scan_blocked_opts(&blocks, &clut, k, threads, prune);
+                        let sink = ScanStats::new();
+                        let traced = topk_scan_blocked_stats(
+                            &blocks, &clut, k, threads, prune,
+                            Some(&sink),
+                        );
+                        if plain != traced {
+                            return Err(format!("{tag}: traced scan diverged"));
+                        }
+                        let s = sink.snapshot();
+                        if s.items_scanned != n as u64 {
+                            return Err(format!(
+                                "{tag}: scanned {} of {n} items",
+                                s.items_scanned
+                            ));
+                        }
+                        let survivors = k.min(n) as u64;
+                        let emitted = s.items_scanned - s.items_abandoned;
+                        if emitted < survivors {
+                            return Err(format!(
+                                "{tag}: {emitted} emitted < {survivors} survivors \
+                                 (conservation violated)"
+                            ));
+                        }
+                        if (!prune || k >= n) && s.items_abandoned != 0 {
+                            return Err(format!(
+                                "{tag}: abandoned {} items with nothing to prune",
+                                s.items_abandoned
+                            ));
+                        }
+                        if (!prune || k >= n) && s.blocks_skipped != 0 {
+                            return Err(format!(
+                                "{tag}: skipped {} blocks with nothing to prune",
+                                s.blocks_skipped
+                            ));
+                        }
+                        if s.shards == 0 {
+                            return Err(format!("{tag}: no shard timings recorded"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_dtw_triangle_violations_exist_but_bounded_scaling() {
     // DTW is not a metric (no triangle inequality) — but sqrt-costs must
     // still scale linearly under uniform scaling of inputs.

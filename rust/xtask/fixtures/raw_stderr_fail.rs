@@ -1,0 +1,11 @@
+// Fixture: no-raw-stderr-in-serving violations — an eprintln! and an
+// eprint! in non-test code. Linted as if it lived under `net/`.
+
+pub fn on_connect(peer: &str) {
+    eprintln!("connection from {peer}");
+}
+
+pub fn on_error(msg: &str) {
+    eprint!("error: ");
+    eprintln!("{msg}");
+}

@@ -1,0 +1,15 @@
+// Fixture: the no-raw-stderr-in-serving compliant twin of
+// raw_stderr_fail.rs — events flow through a structured logger, and
+// `println!` (stdout, CLI-facing) stays out of the rule's reach.
+
+pub trait EventSink {
+    fn event(&self, name: &str, peer: &str);
+}
+
+pub fn on_connect(sink: &dyn EventSink, peer: &str) {
+    sink.event("conn_open", peer);
+}
+
+pub fn report(count: u64) {
+    println!("served {count} requests");
+}

@@ -263,6 +263,32 @@ mod tests {
         assert!(f.is_empty(), "guarded allocations must pass, got {f:?}");
     }
 
+    // ---- no-raw-stderr-in-serving ----
+
+    #[test]
+    fn raw_stderr_fail_fixture_is_flagged() {
+        let f = lint_source("net/server.rs", &fixture("raw_stderr_fail.rs"));
+        assert!(
+            f.iter().filter(|f| f.rule == rules::NO_RAW_STDERR).count() >= 3,
+            "expected eprintln!/eprint! findings, got {f:?}"
+        );
+    }
+
+    #[test]
+    fn raw_stderr_pass_fixture_is_clean() {
+        let f = lint_source("coordinator/service.rs", &fixture("raw_stderr_pass.rs"));
+        assert!(f.is_empty(), "logger events and println! must pass, got {f:?}");
+    }
+
+    #[test]
+    fn raw_stderr_ignored_outside_serving_scope() {
+        let f = lint_source("obs/log.rs", &fixture("raw_stderr_fail.rs"));
+        assert!(
+            !f.iter().any(|f| f.rule == rules::NO_RAW_STDERR),
+            "obs/ is outside no-raw-stderr scope, got {f:?}"
+        );
+    }
+
     // ---- forbid-unsafe ----
 
     #[test]

@@ -31,6 +31,8 @@ pub const DET_ORDER: &str = "deterministic-ordering";
 pub const VALIDATE_ALLOC: &str = "validate-before-alloc";
 /// The crate forbids `unsafe` (waiver path documented for SIMD).
 pub const FORBID_UNSAFE: &str = "forbid-unsafe";
+/// Serving code must log through `JsonLogger`, never raw stderr.
+pub const NO_RAW_STDERR: &str = "no-raw-stderr-in-serving";
 /// Meta-rule for waiver hygiene; not itself waivable.
 pub const LINT_WAIVER: &str = "lint-waiver";
 
@@ -76,6 +78,13 @@ pub const RULES: &[RuleInfo] = &[
         summary: "crate root carries #![forbid(unsafe_code)] and no file \
                   uses `unsafe` (SIMD tiers must waive with justification)",
         scope: "lib.rs (attribute), every file (unsafe keyword)",
+    },
+    RuleInfo {
+        name: NO_RAW_STDERR,
+        summary: "no eprintln!/eprint! in serving code; operational events \
+                  must flow through obs::log::JsonLogger so operators get \
+                  structured, machine-parseable output",
+        scope: "net/, coordinator/ (non-test)",
     },
     RuleInfo {
         name: LINT_WAIVER,
@@ -154,6 +163,9 @@ pub fn check_all(rel: &str, cf: &CleanFile) -> Vec<Finding> {
     if scope_validate_alloc(rel) {
         check_validate_alloc(rel, cf, &mut out);
     }
+    if scope_raw_stderr(rel) {
+        check_raw_stderr(rel, cf, &mut out);
+    }
     check_forbid_unsafe(rel, cf, &mut out);
     out
 }
@@ -172,6 +184,10 @@ fn scope_det_order(rel: &str) -> bool {
 
 fn scope_validate_alloc(rel: &str) -> bool {
     rel.starts_with("store/") || rel == "net/protocol.rs"
+}
+
+fn scope_raw_stderr(rel: &str) -> bool {
+    rel.starts_with("net/") || rel.starts_with("coordinator/")
 }
 
 /// Panic surfaces: `.unwrap()` / `.expect(..)` calls and the panic
@@ -421,6 +437,33 @@ fn check_validate_alloc(rel: &str, cf: &CleanFile, out: &mut Vec<Finding>) {
                         "vec![_; n] sized from a runtime value without a bounds \
                          check in the preceding {GUARD_WINDOW} lines — validate \
                          the decoded length (ensure!/checked_count) first"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Raw stderr in the serving plane: ad-hoc `eprintln!` lines are
+/// invisible to log pipelines and interleave across threads. Serving
+/// code must emit events through `obs::log::JsonLogger`, which is
+/// line-atomic and machine-parseable (`serve --log-json`).
+fn check_raw_stderr(rel: &str, cf: &CleanFile, out: &mut Vec<Finding>) {
+    const MACROS: [&str; 2] = ["eprintln", "eprint"];
+    for (idx, line) in cf.lines.iter().enumerate() {
+        if cf.is_test[idx] {
+            continue;
+        }
+        for m in MACROS {
+            if !find_macro_calls(line, m).is_empty() {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: NO_RAW_STDERR,
+                    message: format!(
+                        "{m}! writes unstructured text to stderr from serving \
+                         code — emit an obs::log::JsonLogger event instead \
+                         (waive only for pre-logger bootstrap failures)"
                     ),
                 });
             }
