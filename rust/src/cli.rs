@@ -71,6 +71,22 @@ impl Args {
         self.flags.get(key).cloned().ok_or_else(|| format!("missing required flag --{key}"))
     }
 
+    /// Promote a two-word subcommand: `pqdtw job submit --k 5` parses
+    /// as command `job` with a stray `submit` token; this folds the
+    /// action into the command (`job submit`) so spec validation sees
+    /// the full verb. Errors when no action token is present.
+    pub fn promote_action(&mut self) -> Result<(), String> {
+        if self.stray.is_empty() {
+            return Err(format!(
+                "'{}' needs an action (e.g. `{} <action> --flag value`)",
+                self.command, self.command
+            ));
+        }
+        let action = self.stray.remove(0);
+        self.command = format!("{} {}", self.command, action);
+        Ok(())
+    }
+
     /// Validate the parsed command line against a spec table: an
     /// unknown subcommand, or any flag the matched subcommand does not
     /// accept, is an error listing the valid options. Without this, a
@@ -193,6 +209,22 @@ mod tests {
         assert!(err.contains("frobnicate"), "{err}");
         assert!(err.contains("topk"), "{err}");
         assert!(err.contains("info"), "{err}");
+    }
+
+    #[test]
+    fn promote_action_folds_the_first_stray_into_the_command() {
+        let mut a = parse("job submit --connect 127.0.0.1:7447");
+        a.promote_action().unwrap();
+        assert_eq!(a.command, "job submit");
+        assert!(a.stray.is_empty());
+        // A second stray is still a stray (and still rejected later).
+        let mut a = parse("job events tail --id 3");
+        a.promote_action().unwrap();
+        assert_eq!(a.command, "job events");
+        assert_eq!(a.stray, vec!["tail".to_string()]);
+        // No action at all is an error naming the parent command.
+        let err = parse("job --id 3").promote_action().unwrap_err();
+        assert!(err.contains("'job'"), "{err}");
     }
 
     #[test]

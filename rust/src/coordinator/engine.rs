@@ -147,6 +147,11 @@ pub struct Engine {
     /// sink is merged in here, so the Prometheus exposition can report
     /// cumulative scan/abandon totals.
     scan_stats: ScanStats,
+    /// Jobs read from the index file's jobs section on [`Engine::open`]
+    /// (empty on [`Engine::build`]). The job plane
+    /// ([`crate::jobs::JobManager`]) consumes these on startup to
+    /// recover terminal results and re-enqueue interrupted jobs.
+    pub recovered_jobs: Vec<crate::jobs::PersistedJob>,
 }
 
 /// Identification summary of the serving state (the index header a
@@ -187,6 +192,7 @@ impl Engine {
             blocks,
             scan_threads: 1,
             scan_stats: ScanStats::new(),
+            recovered_jobs: Vec::new(),
         })
     }
 
@@ -229,6 +235,7 @@ impl Engine {
             blocks,
             scan_threads: 1,
             scan_stats: ScanStats::new(),
+            recovered_jobs: idx.jobs,
         })
     }
 

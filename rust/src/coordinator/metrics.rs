@@ -39,10 +39,13 @@ pub enum RequestClass {
     Ping,
     /// Metrics snapshot served by the network plane.
     Stats,
+    /// Job-plane control frame (submit/status/events/cancel/result)
+    /// answered by the network plane via the job manager.
+    JobControl,
 }
 
 /// Number of tracked request classes.
-pub const N_REQUEST_CLASSES: usize = 8;
+pub const N_REQUEST_CLASSES: usize = 9;
 
 impl RequestClass {
     /// All classes, index-aligned with the per-class metric arrays.
@@ -55,6 +58,7 @@ impl RequestClass {
         RequestClass::TopKReranked,
         RequestClass::Ping,
         RequestClass::Stats,
+        RequestClass::JobControl,
     ];
 
     /// Stable display name.
@@ -68,6 +72,7 @@ impl RequestClass {
             RequestClass::TopKReranked => "topk_reranked",
             RequestClass::Ping => "ping",
             RequestClass::Stats => "stats",
+            RequestClass::JobControl => "job_control",
         }
     }
 
@@ -82,6 +87,7 @@ impl RequestClass {
             RequestClass::TopKReranked => 5,
             RequestClass::Ping => 6,
             RequestClass::Stats => 7,
+            RequestClass::JobControl => 8,
         }
     }
 }

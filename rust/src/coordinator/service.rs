@@ -8,7 +8,7 @@
 #![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
 
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -49,6 +49,9 @@ pub struct Service {
     engine: Arc<Engine>,
     started: Instant,
     workers: Vec<JoinHandle<()>>,
+    /// Optional durable job plane; attached once after startup when the
+    /// process enables background jobs (`serve --listen`).
+    jobs: OnceLock<Arc<crate::jobs::JobManager>>,
 }
 
 impl Service {
@@ -85,7 +88,25 @@ impl Service {
                 }
             }));
         }
-        Service { batcher, metrics, engine, started: Instant::now(), workers }
+        Service {
+            batcher,
+            metrics,
+            engine,
+            started: Instant::now(),
+            workers,
+            jobs: OnceLock::new(),
+        }
+    }
+
+    /// Attach a durable job manager. First attach wins; later calls are
+    /// ignored (the plane is wired exactly once at startup).
+    pub fn attach_jobs(&self, manager: Arc<crate::jobs::JobManager>) {
+        let _ = self.jobs.set(manager);
+    }
+
+    /// The attached job manager, if the job plane is enabled.
+    pub fn jobs(&self) -> Option<&Arc<crate::jobs::JobManager>> {
+        self.jobs.get()
     }
 
     /// Submit a request; returns a oneshot receiver for the response
@@ -170,6 +191,9 @@ impl Service {
         );
         p.gauge("pqdtw_queue_depth", self.queue_depth() as f64);
         p.gauge("pqdtw_uptime_seconds", self.started.elapsed().as_secs_f64());
+        if let Some(jobs) = self.jobs.get() {
+            jobs.render_prometheus(&mut p);
+        }
         p.family("pqdtw_build_info", "gauge");
         p.sample(
             "pqdtw_build_info",
@@ -373,6 +397,35 @@ mod tests {
         assert!(text.contains("pqdtw_index_codebook_size 8\n"));
         assert!(text.contains("pqdtw_build_info{version=\""));
         assert!(text.contains("pqdtw_uptime_seconds"));
+    }
+
+    #[test]
+    fn attached_job_plane_shows_up_in_the_exposition() {
+        let tt = ucr_like_by_name("SpikePosition", 43).unwrap();
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 8,
+            window_frac: 0.2,
+            ..Default::default()
+        };
+        let engine = Arc::new(Engine::build(&tt.train, &cfg, 1).unwrap());
+        let svc = Service::start(Arc::clone(&engine), ServiceConfig::default());
+        let text = svc.prometheus_text();
+        assert!(!text.contains("pqdtw_jobs_"), "no job plane attached yet");
+        let mgr = crate::jobs::JobManager::start(
+            engine,
+            Arc::new(crate::obs::log::JsonLogger::disabled()),
+            None,
+            crate::jobs::JobConfig::default(),
+        );
+        svc.attach_jobs(Arc::clone(&mgr));
+        // Second attach is ignored, not an error.
+        svc.attach_jobs(mgr);
+        let text = svc.prometheus_text();
+        crate::obs::prometheus::validate_exposition(&text).expect("valid exposition");
+        assert!(text.contains("pqdtw_jobs_running 0\n"));
+        assert!(text.contains("pqdtw_jobs_queued 0\n"));
+        assert!(text.contains("pqdtw_jobs_submitted_total{kind=\"all_pairs_topk\"} 0\n"));
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Execution of the three job kinds, in cancellable chunks.
+//!
+//! Every kind is a pure function of the immutable [`Engine`] and the
+//! [`JobSpec`], so a re-run after crash recovery is bit-identical to
+//! the interrupted run. Kinds report progress through [`JobHooks`] and
+//! poll cancellation between chunks — a cancel therefore lands within
+//! one chunk boundary, and the partial-progress count the job reports
+//! is exactly the work that completed.
+//!
+//! Job phases are mapped onto the query stage ladder
+//! ([`crate::obs::Stage`]): `blocked_scan` for distance scans
+//! (all-pairs rows, k-medoids assignment), `rerank` for refinement
+//! (medoid updates), `coarse_probe` for the autotune probe sweep.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::{Engine, Request, Response};
+use crate::obs::Stage;
+
+use super::{AllPairsRow, JobResult, JobSpec, SweepPoint};
+
+/// Callbacks a running job uses to report progress and observe
+/// cancellation. Implemented by the manager's per-job context.
+pub(crate) trait JobHooks {
+    /// Should the job stop at the next chunk boundary?
+    fn cancelled(&self) -> bool;
+    /// Record progress: `done` of `total` items, currently in `stage`.
+    fn progress(&self, stage: Stage, done: u64, total: u64, message: String);
+}
+
+/// How a run ended (failures surface as `Err`).
+pub(crate) enum RunOutcome {
+    /// Finished; the payload is ready to persist.
+    Completed(JobResult),
+    /// A cancel (or shutdown) landed on a chunk boundary.
+    Cancelled,
+}
+
+/// Execute `spec` against `engine`, checking cancellation every
+/// `chunk` items.
+pub(crate) fn run(
+    engine: &Engine,
+    spec: &JobSpec,
+    chunk: usize,
+    hooks: &dyn JobHooks,
+) -> Result<RunOutcome> {
+    let chunk = chunk.max(1);
+    match spec {
+        JobSpec::AllPairsTopK { k, mode, nprobe, rerank } => {
+            run_all_pairs(engine, *k, *mode, *nprobe, *rerank, chunk, hooks)
+        }
+        JobSpec::ClusterSweep { k_clusters, max_iters, seed } => {
+            run_cluster_sweep(engine, *k_clusters, *max_iters, *seed, chunk, hooks)
+        }
+        JobSpec::AutotuneNprobe { k, target_recall, sample } => {
+            run_autotune(engine, *k, *target_recall, *sample, chunk, hooks)
+        }
+    }
+}
+
+/// Run one top-k request through the engine, with tracing (per-hit
+/// provenance) when `explain` is set.
+fn topk(
+    engine: &Engine,
+    query_index: usize,
+    k: usize,
+    mode: crate::nn::knn::PqQueryMode,
+    nprobe: Option<usize>,
+    rerank: Option<usize>,
+    explain: bool,
+) -> Result<(Vec<crate::coordinator::Hit>, Vec<crate::obs::HitExplain>)> {
+    let req = Request::TopKQuery {
+        series: engine.raw.row(query_index).to_vec(),
+        k,
+        mode,
+        nprobe,
+        rerank,
+    };
+    let (resp, trace) = engine.handle_traced(&req, explain);
+    match resp {
+        Response::TopK(hits) => {
+            let explains = trace.map(|t| t.hits).unwrap_or_default();
+            Ok((hits, explains))
+        }
+        Response::Error(e) => bail!("query {query_index}: {e}"),
+        other => bail!("query {query_index}: unexpected engine response {other:?}"),
+    }
+}
+
+/// `AllPairsTopK`: every series vs. the database, one traced top-k
+/// request per series. Rows are bit-identical to serial `TopK`
+/// requests with the same parameters (`handle_traced` is
+/// bit-transparent; loopback-tested in `tests/integration_jobs.rs`).
+fn run_all_pairs(
+    engine: &Engine,
+    k: usize,
+    mode: crate::nn::knn::PqQueryMode,
+    nprobe: Option<usize>,
+    rerank: Option<usize>,
+    chunk: usize,
+    hooks: &dyn JobHooks,
+) -> Result<RunOutcome> {
+    ensure!(k >= 1, "all_pairs_topk: k must be >= 1");
+    let n = engine.n_items;
+    let total = n as u64;
+    let stage = if rerank.is_some() { Stage::Rerank } else { Stage::BlockedScan };
+    hooks.progress(stage, 0, total, format!("all-pairs top-{k} over {n} series"));
+    let mut rows = Vec::with_capacity(n);
+    let mut start = 0usize;
+    while start < n {
+        if hooks.cancelled() {
+            return Ok(RunOutcome::Cancelled);
+        }
+        let end = (start + chunk).min(n);
+        for i in start..end {
+            let (hits, explains) = topk(engine, i, k, mode, nprobe, rerank, true)?;
+            rows.push(AllPairsRow { query_index: i as u64, hits, explains });
+        }
+        hooks.progress(stage, end as u64, total, format!("scanned queries {start}..{end}"));
+        start = end;
+    }
+    Ok(RunOutcome::Completed(JobResult::AllPairs(rows)))
+}
+
+/// SplitMix64 step: the deterministic seed scrambler used for medoid
+/// initialisation.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// `k` distinct indices in `0..n`, deterministically from `seed`.
+fn seeded_distinct(seed: u64, k: usize, n: usize) -> Vec<usize> {
+    let mut state = seed;
+    let mut taken = vec![false; n];
+    let mut out = Vec::with_capacity(k);
+    while out.len() < k {
+        let mut idx = usize::try_from(splitmix64(&mut state) % (n as u64)).unwrap_or(0);
+        while taken[idx] {
+            idx = (idx + 1) % n;
+        }
+        taken[idx] = true;
+        out.push(idx);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// `ClusterSweep`: k-medoids (PAM-style alternating assignment/update)
+/// over PQ distances. Deterministic: seeded initialisation, total
+/// `(distance, index)` orders everywhere, fixed iteration order.
+fn run_cluster_sweep(
+    engine: &Engine,
+    k_clusters: usize,
+    max_iters: usize,
+    seed: u64,
+    chunk: usize,
+    hooks: &dyn JobHooks,
+) -> Result<RunOutcome> {
+    let n = engine.n_items;
+    ensure!(
+        k_clusters >= 1 && k_clusters <= n,
+        "cluster_sweep: k_clusters must be in 1..={n} (got {k_clusters})"
+    );
+    let max_iters = max_iters.max(1);
+    let dist = |i: usize, j: usize| engine.pq.patched_distance(&engine.encoded, i, j);
+    let total = (max_iters as u64) * (n as u64);
+    hooks.progress(
+        Stage::BlockedScan,
+        0,
+        total,
+        format!("k-medoids: {k_clusters} clusters over {n} series, <= {max_iters} rounds"),
+    );
+    let mut medoids = seeded_distinct(seed, k_clusters, n);
+    let mut assignment = vec![0usize; n];
+    let mut rounds_done = 0u64;
+    for round in 0..max_iters {
+        // Assignment step: nearest medoid by the (distance, slot) total
+        // order, chunked so cancel lands between chunks.
+        let mut start = 0usize;
+        while start < n {
+            if hooks.cancelled() {
+                return Ok(RunOutcome::Cancelled);
+            }
+            let end = (start + chunk).min(n);
+            for (i, slot) in assignment.iter_mut().enumerate().take(end).skip(start) {
+                let mut best = (f64::INFINITY, 0usize);
+                for (c, &m) in medoids.iter().enumerate() {
+                    let d = dist(i, m);
+                    if d.total_cmp(&best.0).is_lt() {
+                        best = (d, c);
+                    }
+                }
+                *slot = best.1;
+            }
+            hooks.progress(
+                Stage::BlockedScan,
+                rounds_done * (n as u64) + end as u64,
+                total,
+                format!("round {}: assigned {end}/{n}", round + 1),
+            );
+            start = end;
+        }
+        // Update step: per cluster, the member minimizing the summed
+        // intra-cluster distance (ties to the smallest index).
+        let mut new_medoids = medoids.clone();
+        for c in 0..k_clusters {
+            if hooks.cancelled() {
+                return Ok(RunOutcome::Cancelled);
+            }
+            let members: Vec<usize> =
+                (0..n).filter(|&i| assignment[i] == c).collect();
+            if members.is_empty() {
+                continue; // keep the old medoid for an empty cluster
+            }
+            let mut best = (f64::INFINITY, medoids[c]);
+            for &cand in &members {
+                let sum: f64 = members.iter().map(|&x| dist(cand, x)).sum();
+                if sum.total_cmp(&best.0).is_lt() {
+                    best = (sum, cand);
+                }
+            }
+            new_medoids[c] = best.1;
+        }
+        rounds_done += 1;
+        hooks.progress(
+            Stage::Rerank,
+            rounds_done * (n as u64),
+            total,
+            format!("round {}: medoids updated", round + 1),
+        );
+        if new_medoids == medoids {
+            break; // converged — assignment is already vs. these medoids
+        }
+        medoids = new_medoids;
+    }
+    // Final assignment + cost against the final medoids.
+    let mut cost = 0.0f64;
+    for (i, slot) in assignment.iter_mut().enumerate() {
+        let mut best = (f64::INFINITY, 0usize);
+        for (c, &m) in medoids.iter().enumerate() {
+            let d = dist(i, m);
+            if d.total_cmp(&best.0).is_lt() {
+                best = (d, c);
+            }
+        }
+        *slot = best.1;
+        cost += best.0;
+    }
+    Ok(RunOutcome::Completed(JobResult::Cluster { medoids, assignment, cost }))
+}
+
+/// `AutotuneNprobe`: sweep a doubling `nprobe` ladder over sampled
+/// database queries, measure recall@k against the exhaustive scan, and
+/// recommend the smallest width reaching the target (the paper's
+/// accuracy/efficiency trade-off study as a job).
+fn run_autotune(
+    engine: &Engine,
+    k: usize,
+    target_recall: f64,
+    sample: usize,
+    chunk: usize,
+    hooks: &dyn JobHooks,
+) -> Result<RunOutcome> {
+    ensure!(k >= 1, "autotune_nprobe: k must be >= 1");
+    ensure!(
+        target_recall.is_finite() && target_recall > 0.0 && target_recall <= 1.0,
+        "autotune_nprobe: target_recall must be in (0, 1] (got {target_recall})"
+    );
+    let nlist = engine
+        .ivf
+        .as_ref()
+        .map(|ivf| ivf.nlist())
+        .ok_or_else(|| {
+            anyhow!("autotune_nprobe needs an IVF index (rebuild with --nlist > 0)")
+        })?;
+    let n = engine.n_items;
+    let sample = sample.clamp(1, n);
+    // Doubling ladder capped by the list count, which is always swept
+    // last (nprobe = nlist is bit-identical to the exhaustive scan).
+    let mut candidates = Vec::new();
+    let mut c = 1usize;
+    while c < nlist {
+        candidates.push(c);
+        c = c.saturating_mul(2);
+    }
+    candidates.push(nlist);
+    let total = sample as u64;
+    hooks.progress(
+        Stage::CoarseProbe,
+        0,
+        total,
+        format!(
+            "autotune: {} nprobe widths x {sample} sampled queries (target recall {target_recall})",
+            candidates.len()
+        ),
+    );
+    // Evenly spread sample of database series as queries.
+    let step = (n / sample).max(1);
+    let mut overlap = vec![0u64; candidates.len()];
+    let mut truth_hits = 0u64;
+    let mode = crate::nn::knn::PqQueryMode::Asymmetric;
+    let mut done = 0usize;
+    while done < sample {
+        if hooks.cancelled() {
+            return Ok(RunOutcome::Cancelled);
+        }
+        let end = (done + chunk).min(sample);
+        for q in done..end {
+            let qi = (q * step).min(n - 1);
+            let (truth, _) = topk(engine, qi, k, mode, None, None, false)?;
+            truth_hits += truth.len() as u64;
+            for (ci, &np) in candidates.iter().enumerate() {
+                let (probed, _) = topk(engine, qi, k, mode, Some(np), None, false)?;
+                overlap[ci] += probed
+                    .iter()
+                    .filter(|h| truth.iter().any(|t| t.index == h.index))
+                    .count() as u64;
+            }
+        }
+        hooks.progress(
+            Stage::CoarseProbe,
+            end as u64,
+            total,
+            format!("swept queries {done}..{end}"),
+        );
+        done = end;
+    }
+    let denom = truth_hits.max(1) as f64;
+    let sweep: Vec<SweepPoint> = candidates
+        .iter()
+        .zip(overlap.iter())
+        .map(|(&np, &ov)| SweepPoint { nprobe: np, recall: ov as f64 / denom })
+        .collect();
+    let recommended_nprobe = sweep
+        .iter()
+        .find(|p| p.recall >= target_recall)
+        .map(|p| p.nprobe)
+        .unwrap_or(nlist);
+    Ok(RunOutcome::Completed(JobResult::Autotune { recommended_nprobe, sweep }))
+}

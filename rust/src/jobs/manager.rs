@@ -1,0 +1,880 @@
+//! [`JobManager`]: bounded worker pool, job registry, progress events,
+//! cancellation, metrics, and durable persistence through the store's
+//! jobs section.
+//!
+//! Lifecycle: `submit` registers the job (persisting it as `Queued`),
+//! a worker picks it up and runs it in cancellable chunks, and the
+//! terminal transition (`Completed`/`Cancelled`/`Failed`) persists the
+//! final state + result. A process killed mid-job therefore leaves a
+//! `Queued`/`Running` job on disk, which the next open re-enqueues
+//! from scratch (at-least-once; kinds are pure functions of the
+//! immutable index). Graceful shutdown ([`Drop`]) deliberately does
+//! *not* mark running jobs cancelled — they stay non-terminal on disk
+//! so a restart resumes them.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::Engine;
+use crate::obs::log::JsonLogger;
+use crate::obs::prometheus::PromText;
+use crate::obs::Stage;
+
+use super::kinds::{self, JobHooks, RunOutcome};
+use super::{
+    JobEvent, JobKind, JobResult, JobSnapshot, JobSpec, JobStatus, PersistedJob,
+    MAX_RETAINED_EVENTS, N_JOB_KINDS,
+};
+
+/// Lock a mutex, recovering from poisoning: job state is a snapshot
+/// sink, always valid to read/write even if a holder panicked.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Log-spaced job-duration buckets in microseconds (upper bounds).
+/// Jobs run orders of magnitude longer than requests, so these extend
+/// from 1 ms to 10 min where the request buckets stop at 50 ms.
+const JOB_BUCKETS_US: [u64; 10] = [
+    1_000,
+    10_000,
+    50_000,
+    250_000,
+    1_000_000,
+    5_000_000,
+    30_000_000,
+    120_000_000,
+    600_000_000,
+    u64::MAX,
+];
+
+/// Per-kind job counters and duration histograms (lock-free).
+#[derive(Debug, Default)]
+struct JobMetrics {
+    submitted: [AtomicU64; N_JOB_KINDS],
+    completed: [AtomicU64; N_JOB_KINDS],
+    cancelled: [AtomicU64; N_JOB_KINDS],
+    failed: [AtomicU64; N_JOB_KINDS],
+    duration_buckets: [[AtomicU64; JOB_BUCKETS_US.len()]; N_JOB_KINDS],
+    duration_sum_us: [AtomicU64; N_JOB_KINDS],
+}
+
+impl JobMetrics {
+    fn record_duration(&self, kind: JobKind, us: u64) {
+        let k = kind.index();
+        self.duration_sum_us[k].fetch_add(us, Ordering::Relaxed);
+        for (i, &ub) in JOB_BUCKETS_US.iter().enumerate() {
+            if us <= ub {
+                self.duration_buckets[k][i].fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+}
+
+/// Mutable per-job state behind the job's mutex.
+struct JobState {
+    status: JobStatus,
+    done: u64,
+    total: u64,
+    eta_us: Option<u64>,
+    last_seq: u64,
+    events: VecDeque<JobEvent>,
+    result: Option<JobResult>,
+}
+
+/// One registered job: immutable identity + spec, a cancel flag the
+/// worker polls between chunks, and the mutable state.
+struct JobShared {
+    id: u64,
+    spec: JobSpec,
+    cancel: AtomicBool,
+    state: Mutex<JobState>,
+}
+
+impl JobShared {
+    fn new(id: u64, spec: JobSpec, status: JobStatus, done: u64, total: u64, result: Option<JobResult>) -> Arc<JobShared> {
+        Arc::new(JobShared {
+            id,
+            spec,
+            cancel: AtomicBool::new(false),
+            state: Mutex::new(JobState {
+                status,
+                done,
+                total,
+                eta_us: None,
+                last_seq: 0,
+                events: VecDeque::new(),
+                result,
+            }),
+        })
+    }
+
+    fn snapshot(&self) -> JobSnapshot {
+        let st = lock_unpoisoned(&self.state);
+        JobSnapshot {
+            id: self.id,
+            kind: self.spec.kind(),
+            status: st.status.clone(),
+            done: st.done,
+            total: st.total,
+            eta_us: st.eta_us,
+            latest_seq: st.last_seq,
+        }
+    }
+}
+
+/// Append an event, dropping the oldest past the retention cap.
+fn push_event(
+    st: &mut JobState,
+    stage: Stage,
+    done: u64,
+    total: u64,
+    eta_us: Option<u64>,
+    message: String,
+) {
+    st.last_seq += 1;
+    st.events.push_back(JobEvent { seq: st.last_seq, stage, done, total, eta_us, message });
+    while st.events.len() > MAX_RETAINED_EVENTS {
+        st.events.pop_front();
+    }
+}
+
+/// The stage of the newest event, for terminal-transition events.
+fn last_stage(st: &JobState) -> Stage {
+    st.events.back().map(|e| e.stage).unwrap_or(Stage::LutCollapse)
+}
+
+/// Manager configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct JobConfig {
+    /// Worker threads executing jobs (≥ 1).
+    pub n_workers: usize,
+    /// Items per cancellation check / progress event. Cancels land
+    /// within one chunk; smaller chunks mean faster cancels and more
+    /// events.
+    pub chunk: usize,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig { n_workers: 1, chunk: 16 }
+    }
+}
+
+/// Shared manager internals (workers hold an `Arc`).
+struct Inner {
+    engine: Arc<Engine>,
+    logger: Arc<JsonLogger>,
+    /// Index path jobs persist into (`None` = in-memory only).
+    persist: Option<PathBuf>,
+    /// Serializes whole-file persistence (atomic tmp+rename saves
+    /// would otherwise race on the tmp path).
+    persist_gate: Mutex<()>,
+    jobs: Mutex<BTreeMap<u64, Arc<JobShared>>>,
+    queue: Mutex<VecDeque<u64>>,
+    queue_cv: Condvar,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+    metrics: JobMetrics,
+    chunk: usize,
+}
+
+/// The durable job plane: registry + bounded worker pool. See the
+/// module docs ([`crate::jobs`]) for the lifecycle.
+pub struct JobManager {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl JobManager {
+    /// Start a manager over `engine`. Jobs recovered from the store
+    /// (`engine.recovered_jobs`) are re-registered: terminal jobs
+    /// verbatim (results remain fetchable), non-terminal jobs
+    /// re-enqueued from scratch. When `persist` is set, every submit
+    /// and terminal transition rewrites the index file's jobs section.
+    pub fn start(
+        engine: Arc<Engine>,
+        logger: Arc<JsonLogger>,
+        persist: Option<PathBuf>,
+        cfg: JobConfig,
+    ) -> Arc<JobManager> {
+        let inner = Arc::new(Inner {
+            logger,
+            persist,
+            persist_gate: Mutex::new(()),
+            jobs: Mutex::new(BTreeMap::new()),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+            metrics: JobMetrics::default(),
+            chunk: cfg.chunk.max(1),
+            engine,
+        });
+        let mut max_id = 0u64;
+        {
+            let mut jobs = lock_unpoisoned(&inner.jobs);
+            let mut queue = lock_unpoisoned(&inner.queue);
+            for pj in &inner.engine.recovered_jobs {
+                max_id = max_id.max(pj.id);
+                let requeue = !pj.status.is_terminal();
+                let (status, done) = if requeue {
+                    (JobStatus::Queued, 0)
+                } else {
+                    (pj.status.clone(), pj.done)
+                };
+                let shared = JobShared::new(
+                    pj.id,
+                    pj.spec.clone(),
+                    status,
+                    done,
+                    pj.total,
+                    pj.result.clone(),
+                );
+                jobs.insert(pj.id, shared);
+                if requeue {
+                    queue.push_back(pj.id);
+                    inner.logger.event(
+                        "job_recovered",
+                        &[
+                            ("id", pj.id.into()),
+                            ("kind", pj.spec.kind().name().into()),
+                        ],
+                    );
+                }
+            }
+        }
+        inner.next_id.store(max_id + 1, Ordering::Relaxed);
+        let workers = (0..cfg.n_workers.max(1))
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || worker_loop(&inner))
+            })
+            .collect();
+        inner.queue_cv.notify_all();
+        Arc::new(JobManager { inner, workers })
+    }
+
+    /// Validate and enqueue a job; returns its id. The job is
+    /// persisted as `Queued` before this returns, so a crash between
+    /// submit and completion is recoverable.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        self.validate(&spec)?;
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let shared = JobShared::new(id, spec.clone(), JobStatus::Queued, 0, 0, None);
+        lock_unpoisoned(&self.inner.jobs).insert(id, shared);
+        lock_unpoisoned(&self.inner.queue).push_back(id);
+        self.inner.queue_cv.notify_one();
+        let kind = spec.kind();
+        self.inner.metrics.submitted[kind.index()].fetch_add(1, Ordering::Relaxed);
+        self.inner.logger.event(
+            "job_create",
+            &[("id", id.into()), ("kind", kind.name().into())],
+        );
+        persist_all(&self.inner);
+        Ok(id)
+    }
+
+    /// Reject specs that can never run on this engine, at submit time.
+    fn validate(&self, spec: &JobSpec) -> Result<()> {
+        let n = self.inner.engine.n_items;
+        match spec {
+            JobSpec::AllPairsTopK { k, nprobe, rerank, .. } => {
+                ensure!(*k >= 1, "all_pairs_topk: k must be >= 1");
+                if nprobe.is_some() {
+                    ensure!(
+                        self.inner.engine.ivf.is_some(),
+                        "all_pairs_topk: nprobe needs an IVF index (rebuild with --nlist > 0)"
+                    );
+                }
+                if let Some(r) = rerank {
+                    ensure!(*r >= 1, "all_pairs_topk: rerank depth must be >= 1");
+                }
+            }
+            JobSpec::ClusterSweep { k_clusters, max_iters, .. } => {
+                ensure!(
+                    *k_clusters >= 1 && *k_clusters <= n,
+                    "cluster_sweep: k_clusters must be in 1..={n} (got {k_clusters})"
+                );
+                ensure!(*max_iters >= 1, "cluster_sweep: max_iters must be >= 1");
+            }
+            JobSpec::AutotuneNprobe { k, target_recall, sample } => {
+                ensure!(*k >= 1, "autotune_nprobe: k must be >= 1");
+                ensure!(
+                    target_recall.is_finite()
+                        && *target_recall > 0.0
+                        && *target_recall <= 1.0,
+                    "autotune_nprobe: target_recall must be in (0, 1] (got {target_recall})"
+                );
+                ensure!(*sample >= 1, "autotune_nprobe: sample must be >= 1");
+                ensure!(
+                    self.inner.engine.ivf.is_some(),
+                    "autotune_nprobe needs an IVF index (rebuild with --nlist > 0)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Point-in-time view of a job (`None` = unknown id).
+    pub fn status(&self, id: u64) -> Option<JobSnapshot> {
+        lock_unpoisoned(&self.inner.jobs).get(&id).map(|s| s.snapshot())
+    }
+
+    /// Events with `seq > cursor`, oldest first, at most `max`, plus
+    /// the newest retained sequence number (`None` = unknown id).
+    /// Retention is bounded (newest [`MAX_RETAINED_EVENTS`]); a stale
+    /// cursor simply starts at the oldest retained event.
+    pub fn events(&self, id: u64, cursor: u64, max: usize) -> Option<(Vec<JobEvent>, u64)> {
+        let shared = lock_unpoisoned(&self.inner.jobs).get(&id).cloned()?;
+        let st = lock_unpoisoned(&shared.state);
+        let out = st
+            .events
+            .iter()
+            .filter(|e| e.seq > cursor)
+            .take(max)
+            .cloned()
+            .collect();
+        Some((out, st.last_seq))
+    }
+
+    /// Request cancellation. A queued job cancels immediately; a
+    /// running job stops at the next chunk boundary (its partial
+    /// progress count stays consistent — exactly the chunks that
+    /// finished). Terminal jobs are unaffected. Returns the post-call
+    /// snapshot (`None` = unknown id).
+    pub fn cancel(&self, id: u64) -> Option<JobSnapshot> {
+        let shared = lock_unpoisoned(&self.inner.jobs).get(&id).cloned()?;
+        shared.cancel.store(true, Ordering::Relaxed);
+        let kind = shared.spec.kind();
+        let mut terminal_now = false;
+        {
+            let mut st = lock_unpoisoned(&shared.state);
+            match st.status {
+                JobStatus::Queued => {
+                    st.status = JobStatus::Cancelled;
+                    let (stage, done, total) = (last_stage(&st), st.done, st.total);
+                    push_event(&mut st, stage, done, total, None, "cancelled while queued".into());
+                    terminal_now = true;
+                }
+                JobStatus::Running => {
+                    self.inner.logger.event(
+                        "job_cancel",
+                        &[("id", id.into()), ("kind", kind.name().into())],
+                    );
+                }
+                _ => {}
+            }
+        }
+        if terminal_now {
+            self.inner.metrics.cancelled[kind.index()].fetch_add(1, Ordering::Relaxed);
+            self.inner.logger.event(
+                "job_cancel",
+                &[("id", id.into()), ("kind", kind.name().into())],
+            );
+            self.inner.logger.event(
+                "job_done",
+                &[
+                    ("id", id.into()),
+                    ("kind", kind.name().into()),
+                    ("status", "cancelled".into()),
+                    ("duration_us", 0u64.into()),
+                ],
+            );
+            persist_all(&self.inner);
+        }
+        Some(shared.snapshot())
+    }
+
+    /// The result payload of a completed job. `None` = unknown id;
+    /// `Some(None)` = known but not (yet) completed.
+    pub fn result(&self, id: u64) -> Option<Option<JobResult>> {
+        let shared = lock_unpoisoned(&self.inner.jobs).get(&id).cloned()?;
+        let st = lock_unpoisoned(&shared.state);
+        Some(st.result.clone())
+    }
+
+    /// `(running, queued)` job counts (the Prometheus gauges).
+    pub fn counts(&self) -> (u64, u64) {
+        let jobs = lock_unpoisoned(&self.inner.jobs);
+        let mut running = 0u64;
+        let mut queued = 0u64;
+        for s in jobs.values() {
+            match lock_unpoisoned(&s.state).status {
+                JobStatus::Running => running += 1,
+                JobStatus::Queued => queued += 1,
+                _ => {}
+            }
+        }
+        (running, queued)
+    }
+
+    /// Render the `pqdtw_jobs_*` families into an exposition builder.
+    pub fn render_prometheus(&self, p: &mut PromText) {
+        let (running, queued) = self.counts();
+        p.gauge("pqdtw_jobs_running", running as f64);
+        p.gauge("pqdtw_jobs_queued", queued as f64);
+        let m = &self.inner.metrics;
+        for (family, arr) in [
+            ("pqdtw_jobs_submitted_total", &m.submitted),
+            ("pqdtw_jobs_completed_total", &m.completed),
+            ("pqdtw_jobs_cancelled_total", &m.cancelled),
+            ("pqdtw_jobs_failed_total", &m.failed),
+        ] {
+            p.family(family, "counter");
+            for kind in JobKind::ALL {
+                p.sample(
+                    family,
+                    &[("kind", kind.name())],
+                    arr[kind.index()].load(Ordering::Relaxed) as f64,
+                );
+            }
+        }
+        p.family("pqdtw_jobs_duration_microseconds", "histogram");
+        for kind in JobKind::ALL {
+            let hist: Vec<(u64, u64)> = JOB_BUCKETS_US
+                .iter()
+                .zip(m.duration_buckets[kind.index()].iter())
+                .map(|(&ub, c)| (ub, c.load(Ordering::Relaxed)))
+                .collect();
+            let sum = m.duration_sum_us[kind.index()].load(Ordering::Relaxed);
+            p.histogram_series(
+                "pqdtw_jobs_duration_microseconds",
+                &[("kind", kind.name())],
+                &hist,
+                sum as f64,
+            );
+        }
+    }
+
+    /// Snapshots of every registered job, ascending by id.
+    pub fn list(&self) -> Vec<JobSnapshot> {
+        lock_unpoisoned(&self.inner.jobs).values().map(|s| s.snapshot()).collect()
+    }
+}
+
+impl Drop for JobManager {
+    /// Graceful shutdown: stop the pool and join. Running jobs are
+    /// abandoned *without* a terminal transition so their on-disk
+    /// state stays `Queued`/`Running` and the next open re-enqueues
+    /// them (crash and graceful exit recover identically).
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        self.inner.queue_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Per-run progress/cancellation context handed to the kind executors.
+struct Ctx<'a> {
+    shared: &'a JobShared,
+    inner: &'a Inner,
+    started: Instant,
+}
+
+impl JobHooks for Ctx<'_> {
+    fn cancelled(&self) -> bool {
+        self.shared.cancel.load(Ordering::Relaxed)
+            || self.inner.stop.load(Ordering::Relaxed)
+    }
+
+    fn progress(&self, stage: Stage, done: u64, total: u64, message: String) {
+        // ETA from observed throughput: elapsed * remaining / done.
+        let eta_us = if done > 0 && done < total {
+            let elapsed = self.started.elapsed().as_micros();
+            u64::try_from(
+                elapsed.saturating_mul(u128::from(total - done)) / u128::from(done),
+            )
+            .ok()
+        } else {
+            None
+        };
+        {
+            let mut st = lock_unpoisoned(&self.shared.state);
+            st.done = done;
+            st.total = total;
+            st.eta_us = eta_us;
+            push_event(&mut st, stage, done, total, eta_us, message);
+        }
+        self.inner.logger.event(
+            "job_progress",
+            &[
+                ("id", self.shared.id.into()),
+                ("kind", self.shared.spec.kind().name().into()),
+                ("stage", stage.name().into()),
+                ("done", done.into()),
+                ("total", total.into()),
+            ],
+        );
+    }
+}
+
+/// Collect every job's persistable state and rewrite the index file's
+/// jobs section (atomic tmp+rename; serialized by the persist gate).
+fn persist_all(inner: &Inner) {
+    let Some(path) = &inner.persist else { return };
+    let _gate = lock_unpoisoned(&inner.persist_gate);
+    let jobs: Vec<PersistedJob> = {
+        let reg = lock_unpoisoned(&inner.jobs);
+        reg.values()
+            .map(|s| {
+                let st = lock_unpoisoned(&s.state);
+                PersistedJob {
+                    id: s.id,
+                    spec: s.spec.clone(),
+                    status: st.status.clone(),
+                    done: st.done,
+                    total: st.total,
+                    result: st.result.clone(),
+                }
+            })
+            .collect()
+    };
+    let e = &inner.engine;
+    if let Err(err) = crate::store::save_index_with_jobs(
+        path,
+        &e.pq,
+        &e.encoded,
+        &e.raw,
+        e.ivf.as_ref(),
+        &jobs,
+    ) {
+        inner.logger.event(
+            "job_persist_error",
+            &[
+                ("path", path.display().to_string().into()),
+                ("error", err.to_string().into()),
+            ],
+        );
+    }
+}
+
+/// Worker: pull ids off the queue, execute, transition, persist.
+fn worker_loop(inner: &Inner) {
+    loop {
+        let id = {
+            let mut q = lock_unpoisoned(&inner.queue);
+            loop {
+                if inner.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(id) = q.pop_front() {
+                    break id;
+                }
+                q = inner
+                    .queue_cv
+                    .wait(q)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let Some(shared) = lock_unpoisoned(&inner.jobs).get(&id).cloned() else {
+            continue;
+        };
+        {
+            let mut st = lock_unpoisoned(&shared.state);
+            if st.status != JobStatus::Queued {
+                continue; // cancelled while queued
+            }
+            st.status = JobStatus::Running;
+        }
+        let kind = shared.spec.kind();
+        let started = Instant::now();
+        let ctx = Ctx { shared: &shared, inner, started };
+        let outcome = kinds::run(&inner.engine, &shared.spec, inner.chunk, &ctx);
+        let duration_us = u64::try_from(started.elapsed().as_micros()).unwrap_or(u64::MAX);
+        let final_status = match outcome {
+            Ok(RunOutcome::Completed(result)) => {
+                let mut st = lock_unpoisoned(&shared.state);
+                st.done = st.total;
+                st.eta_us = None;
+                st.status = JobStatus::Completed;
+                st.result = Some(result);
+                let (stage, done, total) = (last_stage(&st), st.done, st.total);
+                push_event(&mut st, stage, done, total, None, "completed".into());
+                inner.metrics.completed[kind.index()].fetch_add(1, Ordering::Relaxed);
+                "completed"
+            }
+            Ok(RunOutcome::Cancelled) => {
+                if inner.stop.load(Ordering::Relaxed)
+                    && !shared.cancel.load(Ordering::Relaxed)
+                {
+                    // Shutdown, not a user cancel: no terminal
+                    // transition, so the persisted state stays
+                    // non-terminal and a restart re-enqueues the job.
+                    continue;
+                }
+                let mut st = lock_unpoisoned(&shared.state);
+                st.status = JobStatus::Cancelled;
+                st.eta_us = None;
+                let (stage, done, total) = (last_stage(&st), st.done, st.total);
+                push_event(
+                    &mut st,
+                    stage,
+                    done,
+                    total,
+                    None,
+                    format!("cancelled at {done}/{total}"),
+                );
+                inner.metrics.cancelled[kind.index()].fetch_add(1, Ordering::Relaxed);
+                "cancelled"
+            }
+            Err(e) => {
+                let mut st = lock_unpoisoned(&shared.state);
+                st.status = JobStatus::Failed(e.to_string());
+                st.eta_us = None;
+                let (stage, done, total) = (last_stage(&st), st.done, st.total);
+                push_event(&mut st, stage, done, total, None, format!("failed: {e}"));
+                inner.metrics.failed[kind.index()].fetch_add(1, Ordering::Relaxed);
+                "failed"
+            }
+        };
+        inner.metrics.record_duration(kind, duration_us);
+        inner.logger.event(
+            "job_done",
+            &[
+                ("id", id.into()),
+                ("kind", kind.name().into()),
+                ("status", final_status.into()),
+                ("duration_us", duration_us.into()),
+            ],
+        );
+        persist_all(inner);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Engine, Request, Response};
+    use crate::data::ucr_like::ucr_like_by_name;
+    use crate::nn::ivf::CoarseMetric;
+    use crate::nn::knn::PqQueryMode;
+    use crate::pq::quantizer::PqConfig;
+
+    fn toy_engine() -> Arc<Engine> {
+        let tt = ucr_like_by_name("SpikePosition", 43).expect("dataset");
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 8,
+            window_frac: 0.2,
+            kmeans_iters: 2,
+            dba_iters: 1,
+            ..Default::default()
+        };
+        let mut engine = Engine::build(&tt.train, &cfg, 1).expect("engine");
+        engine.enable_ivf(4, CoarseMetric::Euclidean, 5);
+        Arc::new(engine)
+    }
+
+    fn disabled_logger() -> Arc<JsonLogger> {
+        Arc::new(JsonLogger::disabled())
+    }
+
+    fn wait_terminal(mgr: &JobManager, id: u64) -> JobSnapshot {
+        for _ in 0..3000 {
+            let snap = mgr.status(id).expect("job exists");
+            if snap.status.is_terminal() {
+                return snap;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        panic!("job {id} never reached a terminal state");
+    }
+
+    #[test]
+    fn all_pairs_rows_match_serial_topk_bit_for_bit() {
+        let engine = toy_engine();
+        let mgr = JobManager::start(
+            Arc::clone(&engine),
+            disabled_logger(),
+            None,
+            JobConfig { n_workers: 1, chunk: 4 },
+        );
+        let spec = JobSpec::AllPairsTopK {
+            k: 3,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: Some(6),
+        };
+        let id = mgr.submit(spec).expect("submit");
+        let snap = wait_terminal(&mgr, id);
+        assert_eq!(snap.status, JobStatus::Completed, "{snap:?}");
+        assert_eq!(snap.done, snap.total);
+        let result = mgr.result(id).expect("known id").expect("completed");
+        let JobResult::AllPairs(rows) = &result else {
+            panic!("wrong result kind: {result:?}")
+        };
+        assert_eq!(rows.len(), engine.n_items);
+        for row in rows {
+            let i = usize::try_from(row.query_index).expect("index fits");
+            let want = engine.handle(&Request::TopKQuery {
+                series: engine.raw.row(i).to_vec(),
+                k: 3,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: None,
+                rerank: Some(6),
+            });
+            let Response::TopK(want_hits) = want else { panic!("serial: {want:?}") };
+            assert_eq!(row.hits.len(), want_hits.len());
+            for (got, want) in row.hits.iter().zip(want_hits.iter()) {
+                assert_eq!(got.index, want.index);
+                assert_eq!(got.distance.to_bits(), want.distance.to_bits());
+                assert_eq!(got.label, want.label);
+            }
+            assert_eq!(row.explains.len(), row.hits.len());
+        }
+    }
+
+    #[test]
+    fn cluster_sweep_is_deterministic_and_partitions_the_database() {
+        let engine = toy_engine();
+        let mgr = JobManager::start(
+            Arc::clone(&engine),
+            disabled_logger(),
+            None,
+            JobConfig { n_workers: 2, chunk: 8 },
+        );
+        let spec = JobSpec::ClusterSweep { k_clusters: 3, max_iters: 5, seed: 11 };
+        let a = mgr.submit(spec.clone()).expect("submit a");
+        let b = mgr.submit(spec).expect("submit b");
+        assert_eq!(wait_terminal(&mgr, a).status, JobStatus::Completed);
+        assert_eq!(wait_terminal(&mgr, b).status, JobStatus::Completed);
+        let ra = mgr.result(a).expect("a").expect("a done");
+        let rb = mgr.result(b).expect("b").expect("b done");
+        assert_eq!(ra, rb, "same spec must yield a bit-identical result");
+        let JobResult::Cluster { medoids, assignment, cost } = ra else {
+            panic!("wrong kind")
+        };
+        assert_eq!(medoids.len(), 3);
+        assert_eq!(assignment.len(), engine.n_items);
+        assert!(assignment.iter().all(|&c| c < 3));
+        assert!(cost.is_finite() && cost >= 0.0);
+    }
+
+    #[test]
+    fn autotune_requires_ivf_and_full_probe_reaches_full_recall() {
+        let tt = ucr_like_by_name("SpikePosition", 43).expect("dataset");
+        let cfg = PqConfig {
+            n_subspaces: 4,
+            codebook_size: 8,
+            window_frac: 0.2,
+            kmeans_iters: 2,
+            dba_iters: 1,
+            ..Default::default()
+        };
+        let no_ivf = Arc::new(Engine::build(&tt.train, &cfg, 1).expect("engine"));
+        let mgr = JobManager::start(
+            no_ivf,
+            disabled_logger(),
+            None,
+            JobConfig::default(),
+        );
+        let err = mgr
+            .submit(JobSpec::AutotuneNprobe { k: 3, target_recall: 0.9, sample: 4 })
+            .expect_err("no IVF index must be rejected at submit");
+        assert!(err.to_string().contains("IVF"), "{err}");
+
+        let engine = toy_engine();
+        let mgr = JobManager::start(
+            Arc::clone(&engine),
+            disabled_logger(),
+            None,
+            JobConfig { n_workers: 1, chunk: 2 },
+        );
+        let id = mgr
+            .submit(JobSpec::AutotuneNprobe { k: 3, target_recall: 1.0, sample: 6 })
+            .expect("submit");
+        let snap = wait_terminal(&mgr, id);
+        assert_eq!(snap.status, JobStatus::Completed, "{snap:?}");
+        let JobResult::Autotune { recommended_nprobe, sweep } =
+            mgr.result(id).expect("known").expect("done")
+        else {
+            panic!("wrong kind")
+        };
+        let nlist = engine.ivf.as_ref().expect("ivf").nlist();
+        let full = sweep.last().expect("non-empty sweep");
+        assert_eq!(full.nprobe, nlist);
+        assert!(
+            (full.recall - 1.0).abs() < 1e-12,
+            "probing every cell must reproduce the exhaustive scan, got {}",
+            full.recall
+        );
+        assert!(recommended_nprobe >= 1 && recommended_nprobe <= nlist);
+        assert!(sweep.windows(2).all(|w| w[0].nprobe < w[1].nprobe));
+    }
+
+    #[test]
+    fn cancel_while_queued_is_immediate_and_events_are_cursor_addressable() {
+        let engine = toy_engine();
+        let mgr = JobManager::start(
+            Arc::clone(&engine),
+            disabled_logger(),
+            None,
+            // One worker: the first job occupies it, the second waits.
+            JobConfig { n_workers: 1, chunk: 4 },
+        );
+        let running = mgr
+            .submit(JobSpec::AllPairsTopK {
+                k: 3,
+                mode: PqQueryMode::Asymmetric,
+                nprobe: None,
+                rerank: Some(8),
+            })
+            .expect("submit running");
+        let queued = mgr
+            .submit(JobSpec::ClusterSweep { k_clusters: 2, max_iters: 3, seed: 1 })
+            .expect("submit queued");
+        let snap = mgr.cancel(queued).expect("known id");
+        assert_eq!(snap.status, JobStatus::Cancelled);
+        assert_eq!(snap.done, 0);
+        let done = wait_terminal(&mgr, running);
+        assert_eq!(done.status, JobStatus::Completed);
+        // Events: cursor-addressable, strictly increasing seq.
+        let (events, latest) = mgr.events(running, 0, 10_000).expect("events");
+        assert!(!events.is_empty());
+        assert_eq!(events.last().expect("last").seq, latest);
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+        let (tail, _) = mgr.events(running, latest - 1, 10_000).expect("tail");
+        assert_eq!(tail.len(), 1);
+        let (empty, _) = mgr.events(running, latest, 10_000).expect("empty");
+        assert!(empty.is_empty());
+        assert!(mgr.status(9999).is_none());
+    }
+
+    #[test]
+    fn prometheus_families_render_and_validate_even_with_no_jobs() {
+        let engine = toy_engine();
+        let mgr = JobManager::start(
+            engine,
+            disabled_logger(),
+            None,
+            JobConfig::default(),
+        );
+        let mut p = PromText::new();
+        mgr.render_prometheus(&mut p);
+        let text = p.finish();
+        let n = crate::obs::prometheus::validate_exposition(&text)
+            .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+        assert!(n > 0);
+        for family in [
+            "pqdtw_jobs_running",
+            "pqdtw_jobs_queued",
+            "pqdtw_jobs_submitted_total",
+            "pqdtw_jobs_completed_total",
+            "pqdtw_jobs_cancelled_total",
+            "pqdtw_jobs_failed_total",
+            "pqdtw_jobs_duration_microseconds",
+        ] {
+            assert!(text.contains(family), "missing {family} in:\n{text}");
+        }
+    }
+}

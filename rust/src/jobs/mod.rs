@@ -1,0 +1,322 @@
+//! Durable async job plane: long-running scans with progress
+//! streaming, cancellation, and per-hit provenance.
+//!
+//! The TCP plane is strictly request/response, so any scan bigger than
+//! a socket timeout — all-pairs similarity, full-database clustering,
+//! recall-target `nprobe` sweeps — needs a different shape: submit,
+//! poll, cancel, fetch. [`JobManager`] owns a bounded worker pool and a
+//! registry of job kinds, each executing in cancellable chunks that
+//! feed the existing [`crate::obs::ScanStats`] sinks and emit
+//! [`JobEvent`]s (stage ladder reusing [`crate::obs::Stage`], items
+//! done/total, ETA from observed throughput, per-hit
+//! [`crate::obs::HitExplain`] provenance carried into persisted
+//! results).
+//!
+//! Jobs survive restart: state + result payloads persist through the
+//! store layer's jobs section (`docs/index-format.md`, format
+//! version 2). Terminal jobs are recovered verbatim; a job that was
+//! queued or running when the process died is re-enqueued from scratch
+//! on the next open (at-least-once execution — every kind is a pure
+//! function of the immutable index, so a re-run is bit-identical).
+//!
+//! The wire surface is protocol v3 (`JobCreate`/`JobStatus`/
+//! `JobEvents`/`JobCancel`/`JobResult` frames, `docs/wire-protocol.md`)
+//! and the `job submit|status|events|cancel|result` CLI verbs;
+//! operational visibility is the `pqdtw_jobs_*` Prometheus families
+//! and the `job_create`/`job_progress`/`job_cancel`/`job_done`
+//! structured log events (`serve --log-json`).
+
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+
+mod kinds;
+mod manager;
+
+pub use manager::{JobConfig, JobManager};
+
+use crate::coordinator::Hit;
+use crate::nn::knn::PqQueryMode;
+use crate::obs::{HitExplain, Stage};
+
+/// Number of distinct job kinds (metric array dimension).
+pub const N_JOB_KINDS: usize = 3;
+
+/// The registry of job kinds. Discriminants are stable wire/store
+/// identifiers (`as_u8`/`from_u8`), names are stable Prometheus
+/// `kind` labels and CLI spellings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Every database series queried against the full database.
+    AllPairsTopK,
+    /// k-medoids clustering over PQ distances.
+    ClusterSweep,
+    /// Recall-target `nprobe` sweep emitting a recommendation.
+    AutotuneNprobe,
+}
+
+impl JobKind {
+    /// All kinds, index-aligned with the per-kind metric arrays.
+    pub const ALL: [JobKind; N_JOB_KINDS] =
+        [JobKind::AllPairsTopK, JobKind::ClusterSweep, JobKind::AutotuneNprobe];
+
+    /// Stable snake_case name (Prometheus `kind` label, log events).
+    pub fn name(self) -> &'static str {
+        match self {
+            JobKind::AllPairsTopK => "all_pairs_topk",
+            JobKind::ClusterSweep => "cluster_sweep",
+            JobKind::AutotuneNprobe => "autotune_nprobe",
+        }
+    }
+
+    /// Stable wire/store discriminant.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            JobKind::AllPairsTopK => 1,
+            JobKind::ClusterSweep => 2,
+            JobKind::AutotuneNprobe => 3,
+        }
+    }
+
+    /// Inverse of [`JobKind::as_u8`]; `None` for unknown discriminants
+    /// (hostile wire/store input).
+    pub fn from_u8(v: u8) -> Option<JobKind> {
+        match v {
+            1 => Some(JobKind::AllPairsTopK),
+            2 => Some(JobKind::ClusterSweep),
+            3 => Some(JobKind::AutotuneNprobe),
+            _ => None,
+        }
+    }
+
+    /// Index into per-kind metric arrays.
+    pub fn index(self) -> usize {
+        match self {
+            JobKind::AllPairsTopK => 0,
+            JobKind::ClusterSweep => 1,
+            JobKind::AutotuneNprobe => 2,
+        }
+    }
+}
+
+/// Full specification of a job: the kind plus its parameters. What a
+/// client submits, what the store persists, what a re-run replays.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobSpec {
+    /// Query every database series against the full database and keep
+    /// each query's top-k with per-hit provenance. The serving-mode
+    /// dial is the same as a `TopK` request.
+    AllPairsTopK {
+        /// Neighbours kept per query (≥ 1; self-matches included).
+        k: usize,
+        /// PQ query mode.
+        mode: PqQueryMode,
+        /// IVF probe width (`None` = exhaustive scan).
+        nprobe: Option<usize>,
+        /// Exact-DTW re-rank depth (`None` = PQ order).
+        rerank: Option<usize>,
+    },
+    /// k-medoids over PQ distances (`patched_distance`), the paper's
+    /// full-database clustering workload as a background job.
+    ClusterSweep {
+        /// Number of clusters (1 ..= database size).
+        k_clusters: usize,
+        /// Maximum assignment/update rounds.
+        max_iters: usize,
+        /// Seed for the deterministic medoid initialisation.
+        seed: u64,
+    },
+    /// Sweep `nprobe` over a sample of database series, measuring
+    /// recall of the probed scan against the exhaustive one, and
+    /// recommend the smallest `nprobe` reaching `target_recall`.
+    AutotuneNprobe {
+        /// Top-k depth recall is measured at (≥ 1).
+        k: usize,
+        /// Recall target in (0, 1].
+        target_recall: f64,
+        /// Number of database series sampled as queries.
+        sample: usize,
+    },
+}
+
+impl JobSpec {
+    /// The kind this spec instantiates.
+    pub fn kind(&self) -> JobKind {
+        match self {
+            JobSpec::AllPairsTopK { .. } => JobKind::AllPairsTopK,
+            JobSpec::ClusterSweep { .. } => JobKind::ClusterSweep,
+            JobSpec::AutotuneNprobe { .. } => JobKind::AutotuneNprobe,
+        }
+    }
+}
+
+/// Lifecycle state of a job. Discriminants are stable wire/store
+/// identifiers (`tag`); `Completed`/`Cancelled`/`Failed` are terminal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Submitted, waiting for a worker.
+    Queued,
+    /// A worker is executing chunks.
+    Running,
+    /// Finished; the result is available.
+    Completed,
+    /// Cancel landed on a chunk boundary; partial progress is final.
+    Cancelled,
+    /// Execution failed with a descriptive message.
+    Failed(String),
+}
+
+impl JobStatus {
+    /// Stable wire/store discriminant.
+    pub fn tag(&self) -> u8 {
+        match self {
+            JobStatus::Queued => 0,
+            JobStatus::Running => 1,
+            JobStatus::Completed => 2,
+            JobStatus::Cancelled => 3,
+            JobStatus::Failed(_) => 4,
+        }
+    }
+
+    /// Stable display name (log events, CLI output).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Completed => "completed",
+            JobStatus::Cancelled => "cancelled",
+            JobStatus::Failed(_) => "failed",
+        }
+    }
+
+    /// No further transitions happen from this state.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobStatus::Completed | JobStatus::Cancelled | JobStatus::Failed(_)
+        )
+    }
+}
+
+/// One progress event, cursor-addressable by `seq`. Retention is
+/// bounded (the newest [`MAX_RETAINED_EVENTS`] per job); a poll whose
+/// cursor has fallen off the window still sees monotonic progress —
+/// the window always holds the newest events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobEvent {
+    /// Monotonic per-job sequence number, starting at 1.
+    pub seq: u64,
+    /// The ladder stage the job is executing (reuses the query ladder).
+    pub stage: Stage,
+    /// Work items finished so far.
+    pub done: u64,
+    /// Total work items (fixed at job start).
+    pub total: u64,
+    /// Estimated microseconds to completion, from observed throughput
+    /// (`None` until the first chunk lands).
+    pub eta_us: Option<u64>,
+    /// Human-readable detail (chunk summary, round number, …).
+    pub message: String,
+}
+
+/// Events retained per job (oldest dropped past this).
+pub const MAX_RETAINED_EVENTS: usize = 256;
+
+/// Point-in-time view of a job (the `JobStatus` wire frame).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSnapshot {
+    /// Job id (unique per manager lifetime, including recovered jobs).
+    pub id: u64,
+    /// The kind submitted.
+    pub kind: JobKind,
+    /// Lifecycle state.
+    pub status: JobStatus,
+    /// Work items finished so far.
+    pub done: u64,
+    /// Total work items.
+    pub total: u64,
+    /// Estimated microseconds to completion (running jobs only).
+    pub eta_us: Option<u64>,
+    /// Sequence number of the newest event (0 = none yet) — the
+    /// cursor high-water mark for `JobEvents` polls.
+    pub latest_seq: u64,
+}
+
+/// One query's row in an [`JobResult::AllPairs`] payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllPairsRow {
+    /// Database index of the query series.
+    pub query_index: u64,
+    /// Its top-k, bit-identical to a serial `TopK` request with the
+    /// same parameters (ascending `(distance, index)`).
+    pub hits: Vec<Hit>,
+    /// Per-hit provenance, parallel to `hits` (the traced query's
+    /// [`HitExplain`] list).
+    pub explains: Vec<HitExplain>,
+}
+
+/// One measured point of an [`JobResult::Autotune`] sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    /// Probe width measured.
+    pub nprobe: usize,
+    /// Mean recall@k of the probed scan against the exhaustive one.
+    pub recall: f64,
+}
+
+/// Result payload of a completed job, persisted with the job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobResult {
+    /// Per-query top-k rows with provenance.
+    AllPairs(Vec<AllPairsRow>),
+    /// k-medoids outcome over PQ distances.
+    Cluster {
+        /// Database indices of the final medoids, in slot order
+        /// (`assignment[i]` indexes this vector).
+        medoids: Vec<usize>,
+        /// Per-item medoid assignment (`assignment[i]` indexes
+        /// `medoids`).
+        assignment: Vec<usize>,
+        /// Sum of PQ distances of items to their medoids.
+        cost: f64,
+    },
+    /// `nprobe` sweep outcome.
+    Autotune {
+        /// Smallest swept `nprobe` whose recall reached the target
+        /// (the full list width when none did).
+        recommended_nprobe: usize,
+        /// The measured sweep, ascending by `nprobe`.
+        sweep: Vec<SweepPoint>,
+    },
+}
+
+impl JobResult {
+    /// The kind that produces this payload (store/wire discriminant
+    /// cross-check).
+    pub fn kind(&self) -> JobKind {
+        match self {
+            JobResult::AllPairs(_) => JobKind::AllPairsTopK,
+            JobResult::Cluster { .. } => JobKind::ClusterSweep,
+            JobResult::Autotune { .. } => JobKind::AutotuneNprobe,
+        }
+    }
+}
+
+/// A job as the store persists it (`docs/index-format.md`, jobs
+/// section): identity, spec, last observed state, and the result when
+/// terminal. Events are deliberately not persisted — they are a
+/// bounded in-memory stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PersistedJob {
+    /// Job id at persist time; recovered ids are kept stable.
+    pub id: u64,
+    /// The spec, replayable verbatim.
+    pub spec: JobSpec,
+    /// Status at persist time. Non-terminal statuses mean the process
+    /// died mid-job; recovery re-enqueues the spec from scratch.
+    pub status: JobStatus,
+    /// Progress at persist time (informational for non-terminal jobs).
+    pub done: u64,
+    /// Total work items (0 until the job started).
+    pub total: u64,
+    /// Result payload, present iff `status` is `Completed`.
+    pub result: Option<JobResult>,
+}

@@ -53,6 +53,11 @@
 //!   server feeding concurrent connections into the coordinator's
 //!   batcher, and a blocking client — remote queries answer
 //!   bit-identically to the in-process engine.
+//! - [`jobs`] — the durable async job plane: a bounded worker pool
+//!   running long scans (all-pairs top-k, k-medoids sweeps, `nprobe`
+//!   autotuning) in cancellable chunks with cursor-polled progress
+//!   events, persisted job state/results (store jobs section), and
+//!   `pqdtw_jobs_*` Prometheus families.
 //! - [`obs`] — the observability layer (`docs/observability.md`):
 //!   lock-free prune-cascade counters flushed by the scan kernel,
 //!   per-query stage-ladder traces with per-hit "why ranked"
@@ -105,6 +110,7 @@ pub mod data;
 pub mod eval;
 pub mod store;
 pub mod coordinator;
+pub mod jobs;
 pub mod net;
 pub mod obs;
 pub mod runtime;

@@ -19,6 +19,10 @@
 //!   pqdtw shutdown --connect 127.0.0.1:7447
 //!   pqdtw topk --index rw.pqx --dataset RandomWalk-4096x128 --nlist 32 --verify
 //!   pqdtw bench-scan --json --out BENCH_scan.json
+//!   pqdtw bench-scan --json --out BENCH_scan.json --baseline BENCH_prev.json --threshold 75
+//!   pqdtw job submit --connect 127.0.0.1:7447 --kind autotune --topk 10 --target-recall 0.95
+//!   pqdtw job events --connect 127.0.0.1:7447 --id 1 --follow
+//!   pqdtw job result --connect 127.0.0.1:7447 --id 1
 //!   pqdtw info --index rw.pqx
 //!
 //! The build-once / serve-many split: `build-index` trains, encodes and
@@ -39,6 +43,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use pqdtw::cluster::{agglomerative, compact_labels, rand_index, Linkage};
 use pqdtw::coordinator::{Engine, Request, Response, Service, ServiceConfig};
+use pqdtw::jobs::{JobConfig, JobManager, JobResult, JobSnapshot, JobSpec};
 use pqdtw::core::matrix::CondensedMatrix;
 use pqdtw::data::random_walk::RandomWalks;
 use pqdtw::data::ucr_like::{ucr_like_by_name, TrainTest};
@@ -80,7 +85,8 @@ const SPECS: &[CommandSpec] = &[
         name: "serve",
         flags: pq_flags!(
             "workers", "requests", "topk", "nprobe", "rerank", "nlist", "coarse",
-            "scan-threads", "index", "listen", "port-file", "max-conns", "log-json"
+            "scan-threads", "index", "listen", "port-file", "max-conns", "log-json",
+            "job-workers"
         ),
     },
     CommandSpec { name: "build-index", flags: pq_flags!("out", "nlist", "coarse") },
@@ -88,11 +94,22 @@ const SPECS: &[CommandSpec] = &[
         name: "bench-scan",
         flags: &[
             "n", "len", "seed", "subspaces", "codebook", "topk", "reps", "threads", "json",
-            "out",
+            "out", "baseline", "threshold",
         ],
     },
     CommandSpec { name: "stats", flags: &["connect", "prometheus"] },
     CommandSpec { name: "shutdown", flags: &["connect"] },
+    CommandSpec {
+        name: "job submit",
+        flags: &[
+            "connect", "kind", "topk", "mode", "nprobe", "rerank", "clusters", "iters",
+            "seed", "target-recall", "sample",
+        ],
+    },
+    CommandSpec { name: "job status", flags: &["connect", "id"] },
+    CommandSpec { name: "job events", flags: &["connect", "id", "cursor", "max", "follow"] },
+    CommandSpec { name: "job cancel", flags: &["connect", "id"] },
+    CommandSpec { name: "job result", flags: &["connect", "id"] },
     CommandSpec { name: "selftest", flags: &["seed"] },
     CommandSpec { name: "info", flags: &["index"] },
 ];
@@ -553,6 +570,40 @@ fn cmd_bench_scan(a: &Args) -> Result<()> {
         std::fs::write(out, &json).with_context(|| format!("writing --out {out}"))?;
         println!("wrote {out}");
     }
+    if let Some(baseline_path) = a.flags.get("baseline") {
+        // Regression gate: compare per-mode medians against an archived
+        // run of the same bench. The artifact was already written above,
+        // so a failing gate still leaves the fresh numbers on disk.
+        let threshold: f64 = a.get_parsed("threshold", 75.0f64);
+        let base_text = std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("reading --baseline {baseline_path}"))?;
+        let base = parse_bench_results(&base_text);
+        ensure!(
+            !base.is_empty(),
+            "--baseline {baseline_path} contains no bench-scan result entries"
+        );
+        let mut offenders: Vec<String> = Vec::new();
+        println!("baseline compare vs {baseline_path} (fail past +{threshold:.0}%):");
+        for (name, us) in &results {
+            match base.iter().find(|(b, _)| b == name) {
+                Some((_, base_us)) if *base_us > 0.0 => {
+                    let delta = 100.0 * (us - base_us) / base_us;
+                    println!(
+                        "  {name:<40} {base_us:10.1} -> {us:10.1} µs ({delta:+6.1}%)"
+                    );
+                    if delta > threshold {
+                        offenders.push(format!("{name} ({delta:+.1}%)"));
+                    }
+                }
+                _ => println!("  {name:<40} (no baseline entry)"),
+            }
+        }
+        ensure!(
+            offenders.is_empty(),
+            "bench-scan regressions past the +{threshold:.0}% threshold: {}",
+            offenders.join(", ")
+        );
+    }
     if a.has("json") {
         println!("{json}");
     } else {
@@ -583,6 +634,27 @@ fn cmd_bench_scan(a: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Extract the `{"name": ..., "us": ...}` result pairs from a
+/// bench-scan JSON document. The document is this binary's own output
+/// (one result object per line), so a full JSON parser is unnecessary;
+/// lines of any other shape are skipped.
+fn parse_bench_results(json: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in json.lines() {
+        let Some(rest) = line.trim().strip_prefix("{\"name\": \"") else { continue };
+        let Some((name, rest)) = rest.split_once('"') else { continue };
+        let Some(rest) = rest.strip_prefix(", \"us\": ") else { continue };
+        let num: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+            .collect();
+        if let Ok(us) = num.parse::<f64>() {
+            out.push((name.to_string(), us));
+        }
+    }
+    out
 }
 
 /// Network serving: cold-start an engine (straight from an index file,
@@ -627,8 +699,9 @@ fn cmd_serve_listen(a: &Args, listen: &str) -> Result<()> {
         }
     };
     engine.set_scan_threads(a.get_parsed("scan-threads", 1usize));
+    let engine = Arc::new(engine);
     let svc = Arc::new(Service::start(
-        Arc::new(engine),
+        Arc::clone(&engine),
         ServiceConfig {
             n_workers: a.get_parsed("workers", 2usize),
             batcher: Default::default(),
@@ -639,6 +712,17 @@ fn cmd_serve_listen(a: &Args, listen: &str) -> Result<()> {
     } else {
         Arc::new(pqdtw::obs::log::JsonLogger::disabled())
     };
+    // The durable job plane: background jobs run over the same engine,
+    // stream progress through the structured logger, and (with --index)
+    // persist their state into the index file so a restart resumes or
+    // replays them.
+    let jobs = JobManager::start(
+        Arc::clone(&engine),
+        Arc::clone(&logger),
+        a.flags.get("index").map(std::path::PathBuf::from),
+        JobConfig { n_workers: a.get_parsed("job-workers", 1usize).max(1), ..Default::default() },
+    );
+    svc.attach_jobs(Arc::clone(&jobs));
     let server = NetServer::start_logged(
         listen,
         Arc::clone(&svc),
@@ -842,6 +926,166 @@ fn cmd_shutdown(a: &Args) -> Result<()> {
     let mut client = Client::connect(&addr, ClientConfig::default())?;
     client.shutdown()?;
     println!("server {addr} acknowledged shutdown and is draining");
+    Ok(())
+}
+
+/// Shared `--connect`/`--id` preamble for the job verbs that address
+/// an existing job.
+fn job_client(a: &Args) -> Result<(Client, u64)> {
+    let addr = a.require("connect").map_err(anyhow::Error::msg)?;
+    let id: u64 = a
+        .require("id")
+        .map_err(anyhow::Error::msg)?
+        .parse()
+        .context("--id must be a job id (a non-negative integer)")?;
+    Ok((Client::connect(&addr, ClientConfig::default())?, id))
+}
+
+fn print_job_snapshot(s: &JobSnapshot) {
+    let pct = if s.total > 0 { 100.0 * s.done as f64 / s.total as f64 } else { 0.0 };
+    let eta = match s.eta_us {
+        Some(us) => format!("{:.1}s", us as f64 / 1e6),
+        None => "-".to_string(),
+    };
+    println!(
+        "job {}: {} [{}] {}/{} chunks ({pct:.1}%), eta {eta}, latest event seq {}",
+        s.id,
+        s.kind.name(),
+        s.status.name(),
+        s.done,
+        s.total,
+        s.latest_seq
+    );
+    if let pqdtw::jobs::JobStatus::Failed(msg) = &s.status {
+        println!("  error: {msg}");
+    }
+}
+
+/// Submit a background job to a remote server. The spec flags mirror
+/// the query verbs: `--kind all-pairs` takes the top-k serving dial,
+/// `--kind cluster` the k-medoids shape, `--kind autotune` the
+/// recall-target sweep.
+fn cmd_job_submit(a: &Args) -> Result<()> {
+    let addr = a.require("connect").map_err(anyhow::Error::msg)?;
+    let kind = a.get("kind", "all-pairs");
+    let mode = if a.get("mode", "asymmetric") == "symmetric" {
+        PqQueryMode::Symmetric
+    } else {
+        PqQueryMode::Asymmetric
+    };
+    let spec = match kind.as_str() {
+        "all-pairs" | "all_pairs_topk" => JobSpec::AllPairsTopK {
+            k: a.get_parsed("topk", 5usize).max(1),
+            mode,
+            nprobe: a.get_opt("nprobe"),
+            rerank: a.get_opt("rerank"),
+        },
+        "cluster" | "cluster_sweep" => JobSpec::ClusterSweep {
+            k_clusters: a.get_parsed("clusters", 8usize),
+            max_iters: a.get_parsed("iters", 10usize),
+            seed: a.get_parsed("seed", 7u64),
+        },
+        "autotune" | "autotune_nprobe" => JobSpec::AutotuneNprobe {
+            k: a.get_parsed("topk", 10usize).max(1),
+            target_recall: a.get_parsed("target-recall", 0.95f64),
+            sample: a.get_parsed("sample", 32usize),
+        },
+        other => bail!("unknown --kind '{other}' (valid: all-pairs|cluster|autotune)"),
+    };
+    let mut client = Client::connect(&addr, ClientConfig::default())?;
+    let id = client.job_submit(spec)?;
+    println!("job {id} submitted ({kind})");
+    println!("  follow with `pqdtw job events --connect {addr} --id {id} --follow`");
+    Ok(())
+}
+
+fn cmd_job_status(a: &Args) -> Result<()> {
+    let (mut client, id) = job_client(a)?;
+    print_job_snapshot(&client.job_status(id)?);
+    Ok(())
+}
+
+/// Print a job's progress events past `--cursor`. With `--follow`,
+/// keep polling (and advancing the cursor) until the job reaches a
+/// terminal status, then print the final snapshot.
+fn cmd_job_events(a: &Args) -> Result<()> {
+    let (mut client, id) = job_client(a)?;
+    let mut cursor: u64 = a.get_parsed("cursor", 0u64);
+    let max: usize =
+        a.get_parsed("max", 256usize).clamp(1, pqdtw::net::protocol::MAX_JOB_EVENTS);
+    let follow = a.has("follow");
+    loop {
+        let (events, _latest_seq) = client.job_events(id, cursor, max)?;
+        for e in &events {
+            let eta = match e.eta_us {
+                Some(us) => format!(" (eta {:.1}s)", us as f64 / 1e6),
+                None => String::new(),
+            };
+            println!(
+                "  seq {:>4} [{}] {}/{} {}{eta}",
+                e.seq,
+                e.stage.name(),
+                e.done,
+                e.total,
+                e.message
+            );
+            cursor = e.seq;
+        }
+        let snap = client.job_status(id)?;
+        if !follow || snap.status.is_terminal() {
+            print_job_snapshot(&snap);
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+}
+
+fn cmd_job_cancel(a: &Args) -> Result<()> {
+    let (mut client, id) = job_client(a)?;
+    let snap = client.job_cancel(id)?;
+    println!("cancel requested (a running job stops at its next chunk boundary):");
+    print_job_snapshot(&snap);
+    Ok(())
+}
+
+/// Fetch and summarize a completed job's persisted result.
+fn cmd_job_result(a: &Args) -> Result<()> {
+    let (mut client, id) = job_client(a)?;
+    match client.job_result(id)? {
+        JobResult::AllPairs(rows) => {
+            println!("job {id}: all-pairs top-k result, {} rows", rows.len());
+            for row in rows.iter().take(5) {
+                match row.hits.first() {
+                    Some(h) => println!(
+                        "  query #{:<6} best hit #{} d={:.6} ({} hits, {} explains)",
+                        row.query_index,
+                        h.index,
+                        h.distance,
+                        row.hits.len(),
+                        row.explains.len()
+                    ),
+                    None => println!("  query #{:<6} (no hits)", row.query_index),
+                }
+            }
+            if rows.len() > 5 {
+                println!("  … {} more rows", rows.len() - 5);
+            }
+        }
+        JobResult::Cluster { medoids, assignment, cost } => {
+            println!(
+                "job {id}: k-medoids result, k={} over {} items, cost {cost:.6}",
+                medoids.len(),
+                assignment.len()
+            );
+            println!("  medoids: {medoids:?}");
+        }
+        JobResult::Autotune { recommended_nprobe, sweep } => {
+            println!("job {id}: autotune result — recommended nprobe {recommended_nprobe}");
+            for p in &sweep {
+                println!("  nprobe {:>5} -> recall {:.4}", p.nprobe, p.recall);
+            }
+        }
+    }
     Ok(())
 }
 
@@ -1111,6 +1355,9 @@ fn main() -> Result<()> {
     if args.command.is_empty() {
         args.command = "info".to_string();
     }
+    if args.command == "job" {
+        args.promote_action().map_err(anyhow::Error::msg)?;
+    }
     args.validate(SPECS).map_err(anyhow::Error::msg)?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
@@ -1122,6 +1369,11 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
         "shutdown" => cmd_shutdown(&args),
+        "job submit" => cmd_job_submit(&args),
+        "job status" => cmd_job_status(&args),
+        "job events" => cmd_job_events(&args),
+        "job cancel" => cmd_job_cancel(&args),
+        "job result" => cmd_job_result(&args),
         "selftest" => cmd_selftest(&args),
         "info" => cmd_info(&args),
         other => bail!("unknown command '{other}'"), // unreachable after validate

@@ -11,6 +11,7 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::Hit;
+use crate::jobs::{JobEvent, JobResult, JobSnapshot, JobSpec};
 use crate::nn::knn::PqQueryMode;
 use crate::obs::QueryTrace;
 
@@ -205,6 +206,62 @@ impl Client {
     pub fn metrics_text(&mut self) -> Result<String> {
         match self.call(&NetRequest::MetricsText)? {
             NetResponse::MetricsText(text) => Ok(text),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Submit a durable background job; returns the server-assigned id.
+    pub fn job_submit(&mut self, spec: JobSpec) -> Result<u64> {
+        match self.call(&NetRequest::JobCreate { spec })? {
+            NetResponse::JobCreated { id } => Ok(id),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Current status/progress snapshot of a job.
+    pub fn job_status(&mut self, id: u64) -> Result<JobSnapshot> {
+        match self.call(&NetRequest::JobStatus { id })? {
+            NetResponse::JobStatus(snap) => Ok(snap),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Poll a job's progress events: those with `seq > cursor`, oldest
+    /// first, at most `max` (capped at
+    /// [`protocol::MAX_JOB_EVENTS`](super::protocol::MAX_JOB_EVENTS)).
+    /// Also returns the newest retained sequence number, the natural
+    /// next `cursor`.
+    pub fn job_events(
+        &mut self,
+        id: u64,
+        cursor: u64,
+        max: usize,
+    ) -> Result<(Vec<JobEvent>, u64)> {
+        match self.call(&NetRequest::JobEvents { id, cursor, max })? {
+            NetResponse::JobEvents { events, latest_seq } => Ok((events, latest_seq)),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Request cancellation; the reply is the post-cancel status
+    /// snapshot (a queued job is already `Cancelled`, a running job
+    /// lands within one chunk boundary).
+    pub fn job_cancel(&mut self, id: u64) -> Result<JobSnapshot> {
+        match self.call(&NetRequest::JobCancel { id })? {
+            NetResponse::JobStatus(snap) => Ok(snap),
+            NetResponse::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("net: unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch a completed job's persisted result.
+    pub fn job_result(&mut self, id: u64) -> Result<JobResult> {
+        match self.call(&NetRequest::JobResult { id })? {
+            NetResponse::JobResult(result) => Ok(result),
             NetResponse::Error(msg) => bail!("server error: {msg}"),
             other => bail!("net: unexpected response {other:?}"),
         }

@@ -6,7 +6,7 @@
 //!
 //! ```text
 //! magic    8 B   "PQDTWNET"
-//! version  4 B   u32 LE (currently 1)
+//! version  4 B   u32 LE (currently 3)
 //! tag      1 B   frame kind
 //! length   8 B   payload length in bytes, u64 LE
 //! payload  …     tag-specific, encoded with the store's codec primitives
@@ -28,9 +28,11 @@ use std::io::{Read, Write};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::Hit;
+use crate::jobs::{JobEvent, JobSnapshot, JobSpec};
 use crate::nn::knn::PqQueryMode;
 use crate::obs::{HitExplain, QueryTrace, ScanSnapshot, Stage, StageSpan};
 use crate::store::format::{ByteReader, ByteWriter};
+use crate::store::jobs as jobs_codec;
 
 /// Magic bytes at offset 0 of every frame.
 pub const NET_MAGIC: [u8; 8] = *b"PQDTWNET";
@@ -42,7 +44,11 @@ pub const NET_MAGIC: [u8; 8] = *b"PQDTWNET";
 /// [`QueryTrace`] trailer on their results, the `MetricsText` frame
 /// pair, and the uptime/version/index-header/per-stage extension of
 /// [`WireStats`].
-pub const NET_VERSION: u32 = 2;
+///
+/// v3 added the job-plane frames: `JobCreate`/`JobStatus`/`JobEvents`
+/// (cursor-based poll)/`JobCancel`/`JobResult` requests and their
+/// responses (`JobCancel` is answered with a `JobStatus` result frame).
+pub const NET_VERSION: u32 = 3;
 
 /// Frame header size: magic + version + tag + payload length.
 pub const HEADER_BYTES: usize = 8 + 4 + 1 + 8;
@@ -57,7 +63,7 @@ pub const MAX_FRAME_BYTES: usize = 8 << 20;
 /// time, before the engine sees it.
 pub const MAX_QUERY_LEN: usize = 1 << 20;
 
-/// Request tags (1..=5).
+/// Request tags (1..=11).
 pub const TAG_PING: u8 = 1;
 /// 1-NN query.
 pub const TAG_NN: u8 = 2;
@@ -69,6 +75,16 @@ pub const TAG_STATS: u8 = 4;
 pub const TAG_SHUTDOWN: u8 = 5;
 /// Prometheus text exposition request.
 pub const TAG_METRICS_TEXT: u8 = 6;
+/// Submit a job (payload: a job spec).
+pub const TAG_JOB_CREATE: u8 = 7;
+/// Poll a job's status snapshot.
+pub const TAG_JOB_STATUS: u8 = 8;
+/// Poll a job's progress events past a cursor.
+pub const TAG_JOB_EVENTS: u8 = 9;
+/// Request job cancellation (answered with a status snapshot).
+pub const TAG_JOB_CANCEL: u8 = 10;
+/// Fetch a completed job's result payload.
+pub const TAG_JOB_RESULT: u8 = 11;
 
 /// Response tags (64..).
 pub const TAG_PONG: u8 = 64;
@@ -82,6 +98,14 @@ pub const TAG_STATS_RESULT: u8 = 67;
 pub const TAG_SHUTDOWN_ACK: u8 = 68;
 /// Prometheus text exposition document.
 pub const TAG_METRICS_TEXT_RESULT: u8 = 69;
+/// Job accepted; payload is its id.
+pub const TAG_JOB_CREATED: u8 = 70;
+/// Job status snapshot (also the answer to a cancel request).
+pub const TAG_JOB_STATUS_RESULT: u8 = 71;
+/// Job progress events past the polled cursor.
+pub const TAG_JOB_EVENTS_RESULT: u8 = 72;
+/// Completed job's result payload.
+pub const TAG_JOB_RESULT_RESULT: u8 = 73;
 /// Request failed; payload is a human-readable message.
 pub const TAG_ERROR: u8 = 127;
 
@@ -125,9 +149,45 @@ pub enum NetRequest {
     Stats,
     /// Request the Prometheus text exposition document.
     MetricsText,
+    /// Submit a job to the server's job plane.
+    JobCreate {
+        /// The job kind and its parameters.
+        spec: JobSpec,
+    },
+    /// Poll a job's status snapshot.
+    JobStatus {
+        /// Job id from `JobCreated`.
+        id: u64,
+    },
+    /// Poll a job's progress events with `seq > cursor`.
+    JobEvents {
+        /// Job id from `JobCreated`.
+        id: u64,
+        /// Return only events newer than this sequence number
+        /// (0 = from the start of the retained window).
+        cursor: u64,
+        /// At most this many events (1 ..= [`MAX_JOB_EVENTS`]).
+        max: usize,
+    },
+    /// Request cancellation; the answer is a status snapshot.
+    JobCancel {
+        /// Job id from `JobCreated`.
+        id: u64,
+    },
+    /// Fetch a completed job's result payload (an `Error` frame while
+    /// the job is not yet completed).
+    JobResult {
+        /// Job id from `JobCreated`.
+        id: u64,
+    },
     /// Ask the server to drain connections and exit.
     Shutdown,
 }
+
+/// Ceiling on the `max` field of a `JobEvents` poll — far above the
+/// per-job retention window, so one poll can always drain it, while a
+/// hostile value is rejected at decode time.
+pub const MAX_JOB_EVENTS: usize = 4096;
 
 /// One request class in a [`WireStats`] frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -233,6 +293,23 @@ pub enum NetResponse {
     Stats(WireStats),
     /// Prometheus text exposition document.
     MetricsText(String),
+    /// Job accepted by the job plane.
+    JobCreated {
+        /// Id for subsequent status/events/cancel/result frames.
+        id: u64,
+    },
+    /// Job status snapshot (the answer to `JobStatus` and `JobCancel`).
+    JobStatus(JobSnapshot),
+    /// Progress events past the polled cursor.
+    JobEvents {
+        /// Events with `seq > cursor`, oldest first.
+        events: Vec<JobEvent>,
+        /// Sequence number of the newest retained event (poll again
+        /// from here).
+        latest_seq: u64,
+    },
+    /// Completed job's result payload.
+    JobResult(crate::jobs::JobResult),
     /// Shutdown acknowledged; the connection closes after this frame.
     ShutdownAck,
     /// Request failed.
@@ -432,6 +509,28 @@ pub fn encode_request(req: &NetRequest) -> Vec<u8> {
         }
         NetRequest::Stats => TAG_STATS,
         NetRequest::MetricsText => TAG_METRICS_TEXT,
+        NetRequest::JobCreate { spec } => {
+            jobs_codec::put_spec(&mut p, spec);
+            TAG_JOB_CREATE
+        }
+        NetRequest::JobStatus { id } => {
+            p.u64(*id);
+            TAG_JOB_STATUS
+        }
+        NetRequest::JobEvents { id, cursor, max } => {
+            p.u64(*id);
+            p.u64(*cursor);
+            p.usize(*max);
+            TAG_JOB_EVENTS
+        }
+        NetRequest::JobCancel { id } => {
+            p.u64(*id);
+            TAG_JOB_CANCEL
+        }
+        NetRequest::JobResult { id } => {
+            p.u64(*id);
+            TAG_JOB_RESULT
+        }
         NetRequest::Shutdown => TAG_SHUTDOWN,
     };
     encode_frame(tag, &p.into_bytes())
@@ -476,6 +575,20 @@ pub fn decode_request(tag: u8, payload: &[u8]) -> Result<NetRequest> {
         }
         TAG_STATS => NetRequest::Stats,
         TAG_METRICS_TEXT => NetRequest::MetricsText,
+        TAG_JOB_CREATE => NetRequest::JobCreate { spec: jobs_codec::get_spec(&mut r)? },
+        TAG_JOB_STATUS => NetRequest::JobStatus { id: r.u64()? },
+        TAG_JOB_EVENTS => {
+            let id = r.u64()?;
+            let cursor = r.u64()?;
+            let max = r.usize()?;
+            ensure!(
+                max >= 1 && max <= MAX_JOB_EVENTS,
+                "net: job-events max {max} outside 1..={MAX_JOB_EVENTS}"
+            );
+            NetRequest::JobEvents { id, cursor, max }
+        }
+        TAG_JOB_CANCEL => NetRequest::JobCancel { id: r.u64()? },
+        TAG_JOB_RESULT => NetRequest::JobResult { id: r.u64()? },
         TAG_SHUTDOWN => NetRequest::Shutdown,
         other => bail!("net: unknown request tag {other}"),
     };
@@ -641,6 +754,23 @@ pub fn encode_response(resp: &NetResponse) -> Vec<u8> {
             p.string(text);
             TAG_METRICS_TEXT_RESULT
         }
+        NetResponse::JobCreated { id } => {
+            p.u64(*id);
+            TAG_JOB_CREATED
+        }
+        NetResponse::JobStatus(snap) => {
+            jobs_codec::put_snapshot(&mut p, snap);
+            TAG_JOB_STATUS_RESULT
+        }
+        NetResponse::JobEvents { events, latest_seq } => {
+            jobs_codec::put_events(&mut p, events);
+            p.u64(*latest_seq);
+            TAG_JOB_EVENTS_RESULT
+        }
+        NetResponse::JobResult(result) => {
+            jobs_codec::put_result(&mut p, result);
+            TAG_JOB_RESULT_RESULT
+        }
         NetResponse::ShutdownAck => TAG_SHUTDOWN_ACK,
         NetResponse::Error(msg) => {
             p.string(msg);
@@ -681,6 +811,14 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<NetResponse> {
         }
         TAG_STATS_RESULT => NetResponse::Stats(get_stats(&mut r)?),
         TAG_METRICS_TEXT_RESULT => NetResponse::MetricsText(r.string()?),
+        TAG_JOB_CREATED => NetResponse::JobCreated { id: r.u64()? },
+        TAG_JOB_STATUS_RESULT => NetResponse::JobStatus(jobs_codec::get_snapshot(&mut r)?),
+        TAG_JOB_EVENTS_RESULT => {
+            let events = jobs_codec::get_events(&mut r)?;
+            let latest_seq = r.u64()?;
+            NetResponse::JobEvents { events, latest_seq }
+        }
+        TAG_JOB_RESULT_RESULT => NetResponse::JobResult(jobs_codec::get_result(&mut r)?),
         TAG_SHUTDOWN_ACK => NetResponse::ShutdownAck,
         TAG_ERROR => NetResponse::Error(r.string()?),
         other => bail!("net: unknown response tag {other}"),
@@ -824,14 +962,86 @@ mod tests {
                 request_id: u64::MAX,
                 trace: true,
             },
+            NetRequest::JobCreate {
+                spec: JobSpec::AllPairsTopK {
+                    k: 3,
+                    mode: PqQueryMode::Asymmetric,
+                    nprobe: Some(2),
+                    rerank: Some(16),
+                },
+            },
+            NetRequest::JobCreate {
+                spec: JobSpec::ClusterSweep { k_clusters: 4, max_iters: 10, seed: 99 },
+            },
+            NetRequest::JobCreate {
+                spec: JobSpec::AutotuneNprobe { k: 5, target_recall: 0.95, sample: 32 },
+            },
+            NetRequest::JobStatus { id: 3 },
+            NetRequest::JobEvents { id: 3, cursor: 17, max: 64 },
+            NetRequest::JobCancel { id: u64::MAX },
+            NetRequest::JobResult { id: 1 },
         ]
     }
 
     fn sample_responses() -> Vec<NetResponse> {
+        use crate::jobs::{AllPairsRow, JobKind, JobStatus, SweepPoint};
         vec![
             NetResponse::Pong,
             NetResponse::ShutdownAck,
             NetResponse::Error("nope".into()),
+            NetResponse::JobCreated { id: 7 },
+            NetResponse::JobStatus(JobSnapshot {
+                id: 7,
+                kind: JobKind::AllPairsTopK,
+                status: JobStatus::Running,
+                done: 12,
+                total: 64,
+                eta_us: Some(1_500_000),
+                latest_seq: 4,
+            }),
+            NetResponse::JobStatus(JobSnapshot {
+                id: 2,
+                kind: JobKind::ClusterSweep,
+                status: JobStatus::Failed("worker died".into()),
+                done: 3,
+                total: 10,
+                eta_us: None,
+                latest_seq: 9,
+            }),
+            NetResponse::JobEvents {
+                events: vec![JobEvent {
+                    seq: 5,
+                    stage: Stage::BlockedScan,
+                    done: 16,
+                    total: 64,
+                    eta_us: Some(200),
+                    message: "scanned queries 0..16".into(),
+                }],
+                latest_seq: 5,
+            },
+            NetResponse::JobEvents { events: vec![], latest_seq: 0 },
+            NetResponse::JobResult(crate::jobs::JobResult::AllPairs(vec![AllPairsRow {
+                query_index: 1,
+                hits: vec![Hit { index: 1, distance: 0.0, label: Some(4) }],
+                explains: vec![HitExplain {
+                    index: 1,
+                    pq_estimate: 0.0,
+                    exact_dtw: Some(0.0),
+                    admitted_by: Stage::Rerank,
+                }],
+            }])),
+            NetResponse::JobResult(crate::jobs::JobResult::Autotune {
+                recommended_nprobe: 4,
+                sweep: vec![
+                    SweepPoint { nprobe: 1, recall: 0.5 },
+                    SweepPoint { nprobe: 4, recall: 1.0 },
+                ],
+            }),
+            NetResponse::JobResult(crate::jobs::JobResult::Cluster {
+                medoids: vec![4, 1],
+                assignment: vec![0, 1, 0],
+                cost: 2.5,
+            }),
             NetResponse::MetricsText(
                 "# TYPE pqdtw_requests_total counter\npqdtw_requests_total 3\n".into(),
             ),
@@ -1058,10 +1268,81 @@ mod tests {
                         | NetRequest::TopK { series, .. } => {
                             assert!(series.len() <= MAX_QUERY_LEN)
                         }
+                        NetRequest::JobEvents { max, .. } => {
+                            assert!(max <= MAX_JOB_EVENTS)
+                        }
                         NetRequest::Ping
                         | NetRequest::Stats
                         | NetRequest::MetricsText
+                        | NetRequest::JobCreate { .. }
+                        | NetRequest::JobStatus { .. }
+                        | NetRequest::JobCancel { .. }
+                        | NetRequest::JobResult { .. }
                         | NetRequest::Shutdown => {}
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_job_frames_are_rejected_without_allocating() {
+        // A job-events result claiming 2^60 events must be rejected by
+        // the count-vs-remaining check before any allocation.
+        let mut p = ByteWriter::new();
+        p.usize(1 << 60);
+        let frame = encode_frame(TAG_JOB_EVENTS_RESULT, &p.into_bytes());
+        let mut cursor = std::io::Cursor::new(&frame[..]);
+        let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+        assert!(decode_response(tag, &payload).is_err());
+
+        // An all-pairs result claiming 2^59 rows likewise.
+        let mut p = ByteWriter::new();
+        p.u8(crate::jobs::JobKind::AllPairsTopK.as_u8());
+        p.usize(1 << 59);
+        let frame = encode_frame(TAG_JOB_RESULT_RESULT, &p.into_bytes());
+        let mut cursor = std::io::Cursor::new(&frame[..]);
+        let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+        assert!(decode_response(tag, &payload).is_err());
+
+        // An events poll with a hostile `max` is rejected at decode.
+        let mut p = ByteWriter::new();
+        p.u64(1); // id
+        p.u64(0); // cursor
+        p.usize(MAX_JOB_EVENTS + 1);
+        let frame = encode_frame(TAG_JOB_EVENTS, &p.into_bytes());
+        let payload = &frame[HEADER_BYTES..];
+        assert!(decode_request(TAG_JOB_EVENTS, payload).is_err());
+
+        // Unknown job-kind tag in a create frame.
+        let frame = encode_frame(TAG_JOB_CREATE, &[0xEE]);
+        let payload = &frame[HEADER_BYTES..];
+        assert!(decode_request(TAG_JOB_CREATE, payload).is_err());
+    }
+
+    /// The hostile byte-flip/truncation sweep over a *job* frame — the
+    /// v3 frames inherit the same no-panic guarantee as the query
+    /// frames.
+    #[test]
+    fn hostile_sweep_over_job_frames_never_panics() {
+        let frames = [
+            encode_request(&NetRequest::JobCreate {
+                spec: JobSpec::AutotuneNprobe { k: 3, target_recall: 0.9, sample: 16 },
+            }),
+            encode_request(&NetRequest::JobEvents { id: 9, cursor: 4, max: 256 }),
+        ];
+        for good in frames {
+            for n in (0..good.len()).step_by(sweep_stride()) {
+                let _ = decode_request_bytes(&good[..n]);
+            }
+            for i in (0..good.len()).step_by(sweep_stride()) {
+                for bit in [0x01u8, 0x40, 0x80] {
+                    let mut bad = good.clone();
+                    bad[i] ^= bit;
+                    if let Ok(NetRequest::JobEvents { max, .. }) =
+                        decode_request_bytes(&bad)
+                    {
+                        assert!(max >= 1 && max <= MAX_JOB_EVENTS);
                     }
                 }
             }

@@ -382,6 +382,11 @@ fn dispatch(req: NetRequest, shared: &Shared) -> Outgoing {
             NetRequest::Shutdown => "shutdown",
             NetRequest::Nn { .. } => "nn",
             NetRequest::TopK { .. } => "topk",
+            NetRequest::JobCreate { .. } => "job_create",
+            NetRequest::JobStatus { .. } => "job_status",
+            NetRequest::JobEvents { .. } => "job_events",
+            NetRequest::JobCancel { .. } => "job_cancel",
+            NetRequest::JobResult { .. } => "job_result",
         };
         shared.logger.event("request", &[("kind", kind.into())]);
     }
@@ -420,7 +425,57 @@ fn dispatch(req: NetRequest, shared: &Shared) -> Outgoing {
             request_id,
             trace,
         ),
+        req @ (NetRequest::JobCreate { .. }
+        | NetRequest::JobStatus { .. }
+        | NetRequest::JobEvents { .. }
+        | NetRequest::JobCancel { .. }
+        | NetRequest::JobResult { .. }) => dispatch_job(req, shared),
     }
+}
+
+/// Job-plane control frames are answered inline (`Outgoing::Ready`):
+/// every manager call is a registry lookup, never a scan, so nothing
+/// here blocks the connection reader.
+fn dispatch_job(req: NetRequest, shared: &Shared) -> Outgoing {
+    let t0 = Instant::now();
+    let resp = match shared.service.jobs() {
+        None => NetResponse::Error("job plane not enabled on this server".into()),
+        Some(mgr) => match req {
+            NetRequest::JobCreate { spec } => match mgr.submit(spec) {
+                Ok(id) => NetResponse::JobCreated { id },
+                Err(e) => NetResponse::Error(format!("{e:#}")),
+            },
+            NetRequest::JobStatus { id } => match mgr.status(id) {
+                Some(snap) => NetResponse::JobStatus(snap),
+                None => NetResponse::Error(format!("unknown job id {id}")),
+            },
+            NetRequest::JobEvents { id, cursor, max } => match mgr.events(id, cursor, max) {
+                Some((events, latest_seq)) => NetResponse::JobEvents { events, latest_seq },
+                None => NetResponse::Error(format!("unknown job id {id}")),
+            },
+            // A cancel is acknowledged with the post-cancel status frame
+            // so the client sees the terminal (or soon-terminal) state
+            // without a second round trip.
+            NetRequest::JobCancel { id } => match mgr.cancel(id) {
+                Some(snap) => NetResponse::JobStatus(snap),
+                None => NetResponse::Error(format!("unknown job id {id}")),
+            },
+            NetRequest::JobResult { id } => match mgr.result(id) {
+                Some(Some(result)) => NetResponse::JobResult(result),
+                Some(None) => NetResponse::Error(format!("job {id} has no result yet")),
+                None => NetResponse::Error(format!("unknown job id {id}")),
+            },
+            // Unreachable: the caller only routes job frames here.
+            other => NetResponse::Error(format!("net: not a job frame: {other:?}")),
+        },
+    };
+    let is_err = matches!(resp, NetResponse::Error(_));
+    shared.service.record_external(
+        RequestClass::JobControl,
+        t0.elapsed().as_micros() as u64,
+        is_err,
+    );
+    Outgoing::Ready(resp)
 }
 
 fn submit(shared: &Shared, req: Request, request_id: u64, trace: bool) -> Outgoing {

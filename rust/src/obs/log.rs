@@ -201,6 +201,64 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_writers_never_interleave_lines() {
+        // N threads × M events into one shared sink must come out as
+        // exactly N×M well-formed JSON lines — `event` writes the whole
+        // rendered line under the sink mutex, so no interleaving, no
+        // torn lines, no lost events.
+        const N_THREADS: usize = 8;
+        const M_EVENTS: usize = 50;
+        let buf = Buf::default();
+        let log = Arc::new(JsonLogger::to_writer(Box::new(buf.clone())));
+        let mut handles = Vec::new();
+        for t in 0..N_THREADS {
+            let log = Arc::clone(&log);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..M_EVENTS {
+                    log.event(
+                        "job_progress",
+                        &[
+                            ("thread", Value::U64(t as u64)),
+                            ("i", Value::U64(i as u64)),
+                            ("msg", Value::from("chunk \"done\"\nnext")),
+                        ],
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let bytes = buf.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), N_THREADS * M_EVENTS);
+        let mut seen = vec![0usize; N_THREADS];
+        for line in &lines {
+            assert!(line.starts_with("{\"ts\":"), "torn line: {line:?}");
+            assert!(line.ends_with('}'), "torn line: {line:?}");
+            assert!(line.contains("\"event\":\"job_progress\""));
+            // Balanced quoting is a cheap well-formedness proxy: every
+            // line must contain an even number of unescaped quotes.
+            let unescaped_quotes = line
+                .as_bytes()
+                .windows(2)
+                .filter(|w| w[1] == b'"' && w[0] != b'\\')
+                .count()
+                + usize::from(line.starts_with('"'));
+            assert_eq!(unescaped_quotes % 2, 0, "unbalanced quotes: {line:?}");
+            let t_field = line
+                .split("\"thread\":")
+                .nth(1)
+                .and_then(|r| r.split(',').next())
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or_else(|| panic!("missing thread field: {line:?}"));
+            seen[t_field] += 1;
+        }
+        assert!(seen.iter().all(|&c| c == M_EVENTS), "per-thread counts: {seen:?}");
+    }
+
+    #[test]
     fn strings_are_json_escaped() {
         let line = render_event(
             1,

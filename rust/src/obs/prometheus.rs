@@ -233,6 +233,80 @@ mod tests {
     }
 
     #[test]
+    fn hostile_label_values_round_trip_through_the_validator() {
+        // Every hostile value must (a) escape to something the
+        // validator accepts as a single sample line, and (b) unescape
+        // back to the original bytes — i.e. escaping is lossless.
+        for v in [
+            "plain",
+            "new\nline",
+            "quo\"te",
+            "back\\slash",
+            "\\n already escaped-looking",
+            "mix \\\"\n end",
+            "",
+        ] {
+            let escaped = escape_label(v);
+            let mut back = String::new();
+            let mut chars = escaped.chars();
+            while let Some(c) = chars.next() {
+                if c == '\\' {
+                    match chars.next() {
+                        Some('\\') => back.push('\\'),
+                        Some('"') => back.push('"'),
+                        Some('n') => back.push('\n'),
+                        other => panic!("stray escape \\{other:?} in {escaped:?}"),
+                    }
+                } else {
+                    back.push(c);
+                }
+            }
+            assert_eq!(back, v, "escape must round-trip losslessly");
+            let mut p = PromText::new();
+            p.family("m", "gauge");
+            p.sample("m", &[("l", v)], 1.0);
+            let text = p.finish();
+            assert_eq!(
+                text.lines().count(),
+                2,
+                "an escaped newline must not split the sample line: {text:?}"
+            );
+            let samples = validate_exposition(&text)
+                .unwrap_or_else(|e| panic!("value {v:?} broke the exposition: {e}"));
+            assert_eq!(samples, 1);
+        }
+    }
+
+    #[test]
+    fn zero_observation_histogram_stays_parseable() {
+        let mut p = PromText::new();
+        p.family("h", "histogram");
+        p.histogram_series("h", &[("kind", "x")], &[(10, 0), (100, 0), (u64::MAX, 0)], 0.0);
+        let text = p.finish();
+        let samples = validate_exposition(&text).expect("zero-observation histogram");
+        assert_eq!(samples, 5);
+        assert!(text.contains("h_bucket{kind=\"x\",le=\"+Inf\"} 0\n"));
+        assert!(text.contains("h_sum{kind=\"x\"} 0\n"));
+        assert!(text.contains("h_count{kind=\"x\"} 0\n"));
+    }
+
+    #[test]
+    fn all_overflow_bucket_histogram_stays_parseable_and_cumulative() {
+        // Every observation past the last finite bound: the finite
+        // ladder stays at zero and only +Inf (and _count) move.
+        let mut p = PromText::new();
+        p.family("h", "histogram");
+        p.histogram_series("h", &[], &[(10, 0), (100, 0), (u64::MAX, 7)], 9e9);
+        let text = p.finish();
+        validate_exposition(&text).expect("all-overflow histogram");
+        assert!(text.contains("h_bucket{le=\"10\"} 0\n"));
+        assert!(text.contains("h_bucket{le=\"100\"} 0\n"));
+        assert!(text.contains("h_bucket{le=\"+Inf\"} 7\n"));
+        assert!(text.contains("h_count 7\n"));
+        assert!(text.contains("h_sum 9000000000\n"));
+    }
+
+    #[test]
     fn validator_rejects_duplicate_families_and_untyped_samples() {
         assert!(validate_exposition("# TYPE a counter\n# TYPE a counter\na 1\n").is_err());
         assert!(validate_exposition("orphan_metric 3\n").is_err());

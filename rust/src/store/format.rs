@@ -15,7 +15,7 @@ pub const MAGIC: [u8; 8] = *b"PQDTWIDX";
 /// Current format version (see `docs/index-format.md` for the bump
 /// policy: any layout change increments this and readers reject files
 /// they were not built to parse).
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
 
 /// FNV-1a 64-bit hash — the file's dependency-free corruption check.
 pub fn fnv1a(bytes: &[u8]) -> u64 {

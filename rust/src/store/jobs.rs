@@ -1,0 +1,574 @@
+//! Encoders/decoders for the durable job plane ([`crate::jobs`]): the
+//! store's jobs section *and* the v3 wire frames share these codecs,
+//! so the validate-before-alloc discipline is enforced in one place.
+//!
+//! Layout notes: every length prefix is validated against a per-element
+//! minimum byte size *before* any allocation (a hostile count can never
+//! trigger a huge allocation); `f64` values round-trip via their IEEE
+//! bit patterns; enum discriminants are the stable `as_u8`/`tag` values
+//! documented on the types themselves.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::Hit;
+use crate::jobs::{
+    AllPairsRow, JobEvent, JobKind, JobResult, JobSnapshot, JobSpec, JobStatus, PersistedJob,
+    SweepPoint,
+};
+use crate::nn::knn::PqQueryMode;
+use crate::obs::{HitExplain, Stage};
+
+use super::format::{ByteReader, ByteWriter};
+
+fn mode_tag(m: PqQueryMode) -> u8 {
+    match m {
+        PqQueryMode::Symmetric => 0,
+        PqQueryMode::Asymmetric => 1,
+    }
+}
+
+fn mode_from(tag: u8) -> Result<PqQueryMode> {
+    match tag {
+        0 => Ok(PqQueryMode::Symmetric),
+        1 => Ok(PqQueryMode::Asymmetric),
+        other => bail!("jobs: unknown query-mode tag {other}"),
+    }
+}
+
+fn put_opt_f64(w: &mut ByteWriter, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            w.u8(1);
+            w.f64(x);
+        }
+        None => w.u8(0),
+    }
+}
+
+fn get_opt_f64(r: &mut ByteReader) -> Result<Option<f64>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(r.f64()?)),
+        other => bail!("jobs: bad option flag {other}"),
+    }
+}
+
+fn put_opt_i64(w: &mut ByteWriter, v: Option<i64>) {
+    match v {
+        Some(x) => {
+            w.u8(1);
+            w.bytes(&x.to_le_bytes());
+        }
+        None => w.u8(0),
+    }
+}
+
+fn get_opt_i64(r: &mut ByteReader) -> Result<Option<i64>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(i64::from_le_bytes(r.u64()?.to_le_bytes()))),
+        other => bail!("jobs: bad option flag {other}"),
+    }
+}
+
+fn put_opt_u64(w: &mut ByteWriter, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            w.u8(1);
+            w.u64(x);
+        }
+        None => w.u8(0),
+    }
+}
+
+fn get_opt_u64(r: &mut ByteReader) -> Result<Option<u64>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(r.u64()?)),
+        other => bail!("jobs: bad option flag {other}"),
+    }
+}
+
+fn get_kind(r: &mut ByteReader) -> Result<JobKind> {
+    let v = r.u8()?;
+    JobKind::from_u8(v).ok_or_else(|| anyhow::anyhow!("jobs: unknown job-kind tag {v}"))
+}
+
+fn get_stage(r: &mut ByteReader) -> Result<Stage> {
+    let v = r.u8()?;
+    Stage::from_u8(v).ok_or_else(|| anyhow::anyhow!("jobs: unknown stage tag {v}"))
+}
+
+/// Serialize a job spec (kind tag + parameters).
+pub(crate) fn put_spec(w: &mut ByteWriter, spec: &JobSpec) {
+    w.u8(spec.kind().as_u8());
+    match spec {
+        JobSpec::AllPairsTopK { k, mode, nprobe, rerank } => {
+            w.usize(*k);
+            w.u8(mode_tag(*mode));
+            w.opt_usize(*nprobe);
+            w.opt_usize(*rerank);
+        }
+        JobSpec::ClusterSweep { k_clusters, max_iters, seed } => {
+            w.usize(*k_clusters);
+            w.usize(*max_iters);
+            w.u64(*seed);
+        }
+        JobSpec::AutotuneNprobe { k, target_recall, sample } => {
+            w.usize(*k);
+            w.f64(*target_recall);
+            w.usize(*sample);
+        }
+    }
+}
+
+/// Deserialize a job spec.
+pub(crate) fn get_spec(r: &mut ByteReader) -> Result<JobSpec> {
+    Ok(match get_kind(r)? {
+        JobKind::AllPairsTopK => JobSpec::AllPairsTopK {
+            k: r.usize()?,
+            mode: mode_from(r.u8()?)?,
+            nprobe: r.opt_usize()?,
+            rerank: r.opt_usize()?,
+        },
+        JobKind::ClusterSweep => JobSpec::ClusterSweep {
+            k_clusters: r.usize()?,
+            max_iters: r.usize()?,
+            seed: r.u64()?,
+        },
+        JobKind::AutotuneNprobe => JobSpec::AutotuneNprobe {
+            k: r.usize()?,
+            target_recall: r.f64()?,
+            sample: r.usize()?,
+        },
+    })
+}
+
+/// Serialize a status (tag + failure message when `Failed`).
+pub(crate) fn put_status(w: &mut ByteWriter, status: &JobStatus) {
+    w.u8(status.tag());
+    if let JobStatus::Failed(msg) = status {
+        w.string(msg);
+    }
+}
+
+/// Deserialize a status.
+pub(crate) fn get_status(r: &mut ByteReader) -> Result<JobStatus> {
+    Ok(match r.u8()? {
+        0 => JobStatus::Queued,
+        1 => JobStatus::Running,
+        2 => JobStatus::Completed,
+        3 => JobStatus::Cancelled,
+        4 => JobStatus::Failed(r.string()?),
+        other => bail!("jobs: unknown status tag {other}"),
+    })
+}
+
+/// Serialize a snapshot (the `JobStatus` wire frame body).
+pub(crate) fn put_snapshot(w: &mut ByteWriter, s: &JobSnapshot) {
+    w.u64(s.id);
+    w.u8(s.kind.as_u8());
+    put_status(w, &s.status);
+    w.u64(s.done);
+    w.u64(s.total);
+    put_opt_u64(w, s.eta_us);
+    w.u64(s.latest_seq);
+}
+
+/// Deserialize a snapshot.
+pub(crate) fn get_snapshot(r: &mut ByteReader) -> Result<JobSnapshot> {
+    Ok(JobSnapshot {
+        id: r.u64()?,
+        kind: get_kind(r)?,
+        status: get_status(r)?,
+        done: r.u64()?,
+        total: r.u64()?,
+        eta_us: get_opt_u64(r)?,
+        latest_seq: r.u64()?,
+    })
+}
+
+/// Serialize one progress event.
+pub(crate) fn put_event(w: &mut ByteWriter, e: &JobEvent) {
+    w.u64(e.seq);
+    w.u8(e.stage.as_u8());
+    w.u64(e.done);
+    w.u64(e.total);
+    put_opt_u64(w, e.eta_us);
+    w.string(&e.message);
+}
+
+/// Deserialize one progress event.
+pub(crate) fn get_event(r: &mut ByteReader) -> Result<JobEvent> {
+    Ok(JobEvent {
+        seq: r.u64()?,
+        stage: get_stage(r)?,
+        done: r.u64()?,
+        total: r.u64()?,
+        eta_us: get_opt_u64(r)?,
+        message: r.string()?,
+    })
+}
+
+/// Minimum encoded size of one event: seq 8 + stage 1 + done 8 +
+/// total 8 + eta flag 1 + message length 8.
+pub(crate) const MIN_EVENT_BYTES: usize = 34;
+
+/// Serialize an event list.
+pub(crate) fn put_events(w: &mut ByteWriter, events: &[JobEvent]) {
+    w.usize(events.len());
+    for e in events {
+        put_event(w, e);
+    }
+}
+
+/// Deserialize an event list (count validated before allocation).
+pub(crate) fn get_events(r: &mut ByteReader) -> Result<Vec<JobEvent>> {
+    let n = r.usize()?;
+    ensure!(
+        n.saturating_mul(MIN_EVENT_BYTES) <= r.remaining(),
+        "jobs: event count {n} exceeds remaining bytes"
+    );
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        events.push(get_event(r)?);
+    }
+    Ok(events)
+}
+
+/// Serialize a result payload (kind tag + payload).
+pub(crate) fn put_result(w: &mut ByteWriter, result: &JobResult) {
+    w.u8(result.kind().as_u8());
+    match result {
+        JobResult::AllPairs(rows) => {
+            w.usize(rows.len());
+            for row in rows {
+                w.u64(row.query_index);
+                w.usize(row.hits.len());
+                for h in &row.hits {
+                    w.usize(h.index);
+                    w.f64(h.distance);
+                    put_opt_i64(w, h.label);
+                }
+                w.usize(row.explains.len());
+                for e in &row.explains {
+                    w.u64(e.index);
+                    w.f64(e.pq_estimate);
+                    put_opt_f64(w, e.exact_dtw);
+                    w.u8(e.admitted_by.as_u8());
+                }
+            }
+        }
+        JobResult::Cluster { medoids, assignment, cost } => {
+            w.vec_usize(medoids);
+            w.vec_usize(assignment);
+            w.f64(*cost);
+        }
+        JobResult::Autotune { recommended_nprobe, sweep } => {
+            w.usize(*recommended_nprobe);
+            w.usize(sweep.len());
+            for p in sweep {
+                w.usize(p.nprobe);
+                w.f64(p.recall);
+            }
+        }
+    }
+}
+
+/// Deserialize a result payload.
+pub(crate) fn get_result(r: &mut ByteReader) -> Result<JobResult> {
+    Ok(match get_kind(r)? {
+        JobKind::AllPairsTopK => {
+            let n_rows = r.usize()?;
+            // query index + hit count + explain count = ≥ 24 B per row.
+            ensure!(
+                n_rows.saturating_mul(24) <= r.remaining(),
+                "jobs: row count {n_rows} exceeds remaining bytes"
+            );
+            let mut rows = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                let query_index = r.u64()?;
+                let n_hits = r.usize()?;
+                // index + distance + label presence byte = ≥ 17 B.
+                ensure!(
+                    n_hits.saturating_mul(17) <= r.remaining(),
+                    "jobs: hit count {n_hits} exceeds remaining bytes"
+                );
+                let mut hits = Vec::with_capacity(n_hits);
+                for _ in 0..n_hits {
+                    hits.push(Hit {
+                        index: r.usize()?,
+                        distance: r.f64()?,
+                        label: get_opt_i64(r)?,
+                    });
+                }
+                let n_explains = r.usize()?;
+                // index + estimate + exact presence + stage = ≥ 18 B.
+                ensure!(
+                    n_explains.saturating_mul(18) <= r.remaining(),
+                    "jobs: explain count {n_explains} exceeds remaining bytes"
+                );
+                let mut explains = Vec::with_capacity(n_explains);
+                for _ in 0..n_explains {
+                    explains.push(HitExplain {
+                        index: r.u64()?,
+                        pq_estimate: r.f64()?,
+                        exact_dtw: get_opt_f64(r)?,
+                        admitted_by: get_stage(r)?,
+                    });
+                }
+                rows.push(AllPairsRow { query_index, hits, explains });
+            }
+            JobResult::AllPairs(rows)
+        }
+        JobKind::ClusterSweep => JobResult::Cluster {
+            medoids: r.vec_usize()?,
+            assignment: r.vec_usize()?,
+            cost: r.f64()?,
+        },
+        JobKind::AutotuneNprobe => {
+            let recommended_nprobe = r.usize()?;
+            let n = r.usize()?;
+            // nprobe + recall = 16 B per sweep point.
+            ensure!(
+                n.saturating_mul(16) <= r.remaining(),
+                "jobs: sweep count {n} exceeds remaining bytes"
+            );
+            let mut sweep = Vec::with_capacity(n);
+            for _ in 0..n {
+                sweep.push(SweepPoint { nprobe: r.usize()?, recall: r.f64()? });
+            }
+            JobResult::Autotune { recommended_nprobe, sweep }
+        }
+    })
+}
+
+/// Serialize the jobs-section payload: a job count followed by each
+/// job's id, spec, status, progress and optional result.
+pub(crate) fn put_jobs(w: &mut ByteWriter, jobs: &[PersistedJob]) {
+    w.usize(jobs.len());
+    for j in jobs {
+        w.u64(j.id);
+        put_spec(w, &j.spec);
+        put_status(w, &j.status);
+        w.u64(j.done);
+        w.u64(j.total);
+        match &j.result {
+            Some(result) => {
+                w.u8(1);
+                put_result(w, result);
+            }
+            None => w.u8(0),
+        }
+    }
+}
+
+/// Deserialize the jobs-section payload, cross-checking that each
+/// result's kind matches its spec's kind.
+pub(crate) fn get_jobs(r: &mut ByteReader) -> Result<Vec<PersistedJob>> {
+    let n = r.usize()?;
+    // id 8 + spec (kind tag + smallest body) 12 + status 1 + done 8 +
+    // total 8 + result presence byte 1 = ≥ 38 B per job.
+    ensure!(
+        n.saturating_mul(38) <= r.remaining(),
+        "jobs: job count {n} exceeds remaining bytes"
+    );
+    let mut jobs = Vec::with_capacity(n);
+    let mut prev_id: Option<u64> = None;
+    for _ in 0..n {
+        let id = r.u64()?;
+        if let Some(p) = prev_id {
+            ensure!(id > p, "jobs: ids must be strictly ascending ({p} then {id})");
+        }
+        prev_id = Some(id);
+        let spec = get_spec(r)?;
+        let status = get_status(r)?;
+        let done = r.u64()?;
+        let total = r.u64()?;
+        let result = match r.u8()? {
+            0 => None,
+            1 => Some(get_result(r)?),
+            other => bail!("jobs: bad result flag {other}"),
+        };
+        if let Some(res) = &result {
+            ensure!(
+                res.kind() == spec.kind(),
+                "jobs: result kind {:?} disagrees with spec kind {:?}",
+                res.kind(),
+                spec.kind()
+            );
+            ensure!(
+                status == JobStatus::Completed,
+                "jobs: result present on non-completed job {id}"
+            );
+        }
+        jobs.push(PersistedJob { id, spec, status, done, total, result });
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_jobs() -> Vec<PersistedJob> {
+        vec![
+            PersistedJob {
+                id: 1,
+                spec: JobSpec::AllPairsTopK {
+                    k: 3,
+                    mode: PqQueryMode::Asymmetric,
+                    nprobe: Some(2),
+                    rerank: Some(8),
+                },
+                status: JobStatus::Completed,
+                done: 4,
+                total: 4,
+                result: Some(JobResult::AllPairs(vec![AllPairsRow {
+                    query_index: 0,
+                    hits: vec![
+                        Hit { index: 0, distance: 0.0, label: Some(-3) },
+                        Hit { index: 2, distance: f64::NAN, label: None },
+                    ],
+                    explains: vec![HitExplain {
+                        index: 2,
+                        pq_estimate: 1.25,
+                        exact_dtw: Some(-0.0),
+                        admitted_by: Stage::Rerank,
+                    }],
+                }])),
+            },
+            PersistedJob {
+                id: 2,
+                spec: JobSpec::ClusterSweep { k_clusters: 2, max_iters: 5, seed: 99 },
+                status: JobStatus::Failed("synthetic failure".into()),
+                done: 1,
+                total: 10,
+                result: None,
+            },
+            PersistedJob {
+                id: 7,
+                spec: JobSpec::AutotuneNprobe { k: 5, target_recall: 0.9, sample: 16 },
+                status: JobStatus::Queued,
+                done: 0,
+                total: 0,
+                result: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn jobs_roundtrip_is_bit_exact() {
+        let jobs = sample_jobs();
+        let mut w = ByteWriter::new();
+        put_jobs(&mut w, &jobs);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let back = get_jobs(&mut r).unwrap();
+        assert!(r.is_exhausted());
+        assert_eq!(back.len(), jobs.len());
+        // NaN distances break PartialEq; compare the NaN hit by bits.
+        let (Some(JobResult::AllPairs(rows)), Some(JobResult::AllPairs(orig))) =
+            (&back[0].result, &jobs[0].result)
+        else {
+            panic!("first job must carry an all-pairs result")
+        };
+        assert_eq!(
+            rows[0].hits[1].distance.to_bits(),
+            orig[0].hits[1].distance.to_bits()
+        );
+        assert_eq!(back[1], jobs[1]);
+        assert_eq!(back[2], jobs[2]);
+    }
+
+    #[test]
+    fn hostile_counts_are_rejected_before_allocating() {
+        // Job count far larger than the buffer.
+        let mut w = ByteWriter::new();
+        w.usize(usize::MAX / 64);
+        let bytes = w.into_bytes();
+        assert!(get_jobs(&mut ByteReader::new(&bytes)).is_err());
+
+        // Event count far larger than the buffer.
+        let mut w = ByteWriter::new();
+        w.usize(1 << 60);
+        let bytes = w.into_bytes();
+        assert!(get_events(&mut ByteReader::new(&bytes)).is_err());
+
+        // Hostile row count inside an all-pairs result.
+        let mut w = ByteWriter::new();
+        w.u8(JobKind::AllPairsTopK.as_u8());
+        w.usize(1 << 59);
+        let bytes = w.into_bytes();
+        assert!(get_result(&mut ByteReader::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn result_kind_mismatch_is_rejected() {
+        let mut w = ByteWriter::new();
+        put_jobs(
+            &mut w,
+            &[PersistedJob {
+                id: 1,
+                spec: JobSpec::ClusterSweep { k_clusters: 2, max_iters: 1, seed: 0 },
+                status: JobStatus::Completed,
+                done: 1,
+                total: 1,
+                result: Some(JobResult::Autotune { recommended_nprobe: 1, sweep: vec![] }),
+            }],
+        );
+        let bytes = w.into_bytes();
+        assert!(get_jobs(&mut ByteReader::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn result_on_non_completed_job_is_rejected() {
+        let mut w = ByteWriter::new();
+        put_jobs(
+            &mut w,
+            &[PersistedJob {
+                id: 3,
+                spec: JobSpec::AutotuneNprobe { k: 1, target_recall: 1.0, sample: 1 },
+                status: JobStatus::Running,
+                done: 0,
+                total: 4,
+                result: Some(JobResult::Autotune { recommended_nprobe: 1, sweep: vec![] }),
+            }],
+        );
+        let bytes = w.into_bytes();
+        assert!(get_jobs(&mut ByteReader::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn non_ascending_ids_are_rejected() {
+        let job = PersistedJob {
+            id: 5,
+            spec: JobSpec::AutotuneNprobe { k: 1, target_recall: 1.0, sample: 1 },
+            status: JobStatus::Queued,
+            done: 0,
+            total: 0,
+            result: None,
+        };
+        let mut w = ByteWriter::new();
+        put_jobs(&mut w, &[job.clone(), job]);
+        let bytes = w.into_bytes();
+        let err = get_jobs(&mut ByteReader::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("ascending"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn unknown_tags_are_rejected() {
+        // Unknown kind tag.
+        let mut r = ByteReader::new(&[0xEE]);
+        assert!(get_spec(&mut r).is_err());
+        // Unknown status tag.
+        let mut r = ByteReader::new(&[9]);
+        assert!(get_status(&mut r).is_err());
+        // Unknown stage tag inside an event.
+        let mut w = ByteWriter::new();
+        w.u64(1); // seq
+        w.u8(0xEE); // stage
+        let bytes = w.into_bytes();
+        assert!(get_event(&mut ByteReader::new(&bytes)).is_err());
+    }
+}

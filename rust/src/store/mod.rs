@@ -10,14 +10,17 @@
 //! + metric), and the raw [`Dataset`] needed for exact DTW re-ranking —
 //! as one self-describing binary file, and reconstructs an engine that
 //! answers queries **bit-identically** to the one that was saved.
+//! Version 2 adds an optional trailing jobs section so the durable job
+//! plane ([`crate::jobs`]) survives restarts: job specs, statuses,
+//! progress and completed-result payloads ride in the same file.
 //!
-//! ## File layout (version 1)
+//! ## File layout (version 2)
 //!
 //! ```text
 //! magic    8 B   "PQDTWIDX"
 //! version  4 B   u32 LE
 //! sections       tag u8 · length u64 LE · payload
-//!                (header, quantizer, encoded, raw, [ivf]) in order
+//!                (header, quantizer, encoded, raw, [ivf], [jobs]) in order
 //! checksum 8 B   FNV-1a 64 of every preceding byte, u64 LE
 //! ```
 //!
@@ -33,7 +36,7 @@
 //! The scan kernel's blocked code layouts (`pq::scan`, `docs/DESIGN.md`
 //! §6) are deliberately *not* persisted: they are cheap deterministic
 //! transposes of the row-major codes stored here, so `Engine::open`
-//! rebuilds them on load and the version-1 layout is unchanged.
+//! rebuilds them on load and the section layout is unchanged.
 
 // rustc-side twin of the xtask no-panic-in-serving rule: serving code
 // must propagate errors. Test code (crate-wide `cfg(test)` under
@@ -42,12 +45,14 @@
 
 pub mod codec;
 pub mod format;
+pub(crate) mod jobs;
 
 use std::path::Path;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::core::series::Dataset;
+use crate::jobs::PersistedJob;
 use crate::nn::ivf::IvfIndex;
 use crate::pq::codebook::PqMetric;
 use crate::pq::quantizer::{EncodedDataset, ProductQuantizer};
@@ -60,6 +65,7 @@ const SEC_QUANTIZER: u8 = 2;
 const SEC_ENCODED: u8 = 3;
 const SEC_RAW: u8 = 4;
 const SEC_IVF: u8 = 5;
+const SEC_JOBS: u8 = 6;
 
 /// The full serving state reconstructed from disk.
 pub struct StoredIndex {
@@ -71,6 +77,8 @@ pub struct StoredIndex {
     pub raw: Dataset,
     /// Optional inverted-file index.
     pub ivf: Option<IvfIndex>,
+    /// Persisted jobs (empty when the file carries no jobs section).
+    pub jobs: Vec<PersistedJob>,
 }
 
 /// Summary of an index file — the `info --index` view, readable without
@@ -128,12 +136,26 @@ fn get_header(payload: &[u8], version: u32, file_bytes: u64) -> Result<StoreHead
     Ok(h)
 }
 
-/// Serialize the full serving state to the version-1 byte format.
+/// Serialize the full serving state to the version-2 byte format,
+/// with no jobs section.
 pub fn encode_index(
     pq: &ProductQuantizer,
     encoded: &EncodedDataset,
     raw: &Dataset,
     ivf: Option<&IvfIndex>,
+) -> Vec<u8> {
+    encode_index_with_jobs(pq, encoded, raw, ivf, &[])
+}
+
+/// Serialize the full serving state plus the durable job registry. An
+/// empty `jobs` slice writes no jobs section, so indexes without jobs
+/// are byte-identical to [`encode_index`] output.
+pub fn encode_index_with_jobs(
+    pq: &ProductQuantizer,
+    encoded: &EncodedDataset,
+    raw: &Dataset,
+    ivf: Option<&IvfIndex>,
+    persisted_jobs: &[PersistedJob],
 ) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.bytes(&MAGIC);
@@ -154,6 +176,11 @@ pub fn encode_index(
         let mut s = ByteWriter::new();
         codec::put_ivf(&mut s, ivf);
         w.section(SEC_IVF, &s.into_bytes());
+    }
+    if !persisted_jobs.is_empty() {
+        let mut s = ByteWriter::new();
+        jobs::put_jobs(&mut s, persisted_jobs);
+        w.section(SEC_JOBS, &s.into_bytes());
     }
     let mut buf = w.into_bytes();
     let sum = fnv1a(&buf);
@@ -215,13 +242,30 @@ pub fn decode_index(bytes: &[u8]) -> Result<StoredIndex> {
         raw.n_series(),
         encoded.n()
     );
-    let ivf = if r.is_exhausted() {
-        None
-    } else {
+    // Optional tail: [ivf] then [jobs], either independently absent.
+    let mut ivf = None;
+    let mut stored_jobs = Vec::new();
+    if !r.is_exhausted() {
         let (tag, payload) = r.section()?;
-        ensure!(tag == SEC_IVF, "store: expected IVF section, found tag {tag}");
-        Some(codec::get_ivf(payload, pq.series_len, encoded.n())?)
-    };
+        match tag {
+            SEC_IVF => {
+                ivf = Some(codec::get_ivf(payload, pq.series_len, encoded.n())?);
+                if !r.is_exhausted() {
+                    let (tag, payload) = r.section()?;
+                    ensure!(tag == SEC_JOBS, "store: expected jobs section, found tag {tag}");
+                    let mut jr = ByteReader::new(payload);
+                    stored_jobs = jobs::get_jobs(&mut jr)?;
+                    ensure!(jr.is_exhausted(), "store: trailing bytes in jobs section");
+                }
+            }
+            SEC_JOBS => {
+                let mut jr = ByteReader::new(payload);
+                stored_jobs = jobs::get_jobs(&mut jr)?;
+                ensure!(jr.is_exhausted(), "store: trailing bytes in jobs section");
+            }
+            other => bail!("store: unexpected section tag {other}"),
+        }
+    }
     ensure!(r.is_exhausted(), "store: trailing bytes after final section");
     ensure!(
         header.n_subspaces == pq.config.n_subspaces
@@ -234,7 +278,7 @@ pub fn decode_index(bytes: &[u8]) -> Result<StoredIndex> {
             && header.ivf_nlist == ivf.as_ref().map(|i| i.nlist()),
         "store: header summary disagrees with section contents"
     );
-    Ok(StoredIndex { pq, encoded, raw, ivf })
+    Ok(StoredIndex { pq, encoded, raw, ivf, jobs: stored_jobs })
 }
 
 /// Write the full serving state to `path`, atomically: the bytes go to
@@ -249,7 +293,20 @@ pub fn save_index(
     raw: &Dataset,
     ivf: Option<&IvfIndex>,
 ) -> Result<()> {
-    let bytes = encode_index(pq, encoded, raw, ivf);
+    save_index_with_jobs(path, pq, encoded, raw, ivf, &[])
+}
+
+/// [`save_index`] plus the durable job registry (the job plane's
+/// persistence hook). An empty `jobs` slice writes no jobs section.
+pub fn save_index_with_jobs(
+    path: &Path,
+    pq: &ProductQuantizer,
+    encoded: &EncodedDataset,
+    raw: &Dataset,
+    ivf: Option<&IvfIndex>,
+    persisted_jobs: &[PersistedJob],
+) -> Result<()> {
+    let bytes = encode_index_with_jobs(pq, encoded, raw, ivf, persisted_jobs);
     let mut tmp_name = path.as_os_str().to_owned();
     tmp_name.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp_name);
@@ -305,6 +362,58 @@ mod tests {
         encode_index(&pq, &enc, &db, Some(&ivf))
     }
 
+    fn tiny_jobs() -> Vec<PersistedJob> {
+        use crate::coordinator::Hit;
+        use crate::jobs::{AllPairsRow, JobResult, JobSpec, JobStatus};
+        use crate::nn::knn::PqQueryMode;
+        use crate::obs::{HitExplain, Stage};
+        vec![
+            PersistedJob {
+                id: 1,
+                spec: JobSpec::AllPairsTopK {
+                    k: 2,
+                    mode: PqQueryMode::Asymmetric,
+                    nprobe: None,
+                    rerank: Some(4),
+                },
+                status: JobStatus::Completed,
+                done: 2,
+                total: 2,
+                result: Some(JobResult::AllPairs(vec![AllPairsRow {
+                    query_index: 0,
+                    hits: vec![Hit { index: 0, distance: 0.0, label: None }],
+                    explains: vec![HitExplain {
+                        index: 0,
+                        pq_estimate: 0.5,
+                        exact_dtw: Some(0.25),
+                        admitted_by: Stage::Rerank,
+                    }],
+                }])),
+            },
+            PersistedJob {
+                id: 2,
+                spec: JobSpec::ClusterSweep { k_clusters: 3, max_iters: 4, seed: 7 },
+                status: JobStatus::Failed("worker died".into()),
+                done: 5,
+                total: 48,
+                result: None,
+            },
+            PersistedJob {
+                id: 4,
+                spec: JobSpec::AutotuneNprobe { k: 3, target_recall: 0.95, sample: 8 },
+                status: JobStatus::Queued,
+                done: 0,
+                total: 0,
+                result: None,
+            },
+        ]
+    }
+
+    fn tiny_bytes_with_jobs() -> Vec<u8> {
+        let (pq, enc, db, ivf) = tiny_state();
+        encode_index_with_jobs(&pq, &enc, &db, Some(&ivf), &tiny_jobs())
+    }
+
     fn restamp_checksum(bytes: &mut [u8]) {
         let n = bytes.len() - 8;
         let sum = fnv1a(&bytes[..n]);
@@ -341,6 +450,32 @@ mod tests {
         let bytes = encode_index(&pq, &enc, &db, None);
         let idx = decode_index(&bytes).unwrap();
         assert!(idx.ivf.is_none());
+        assert!(idx.jobs.is_empty());
+    }
+
+    #[test]
+    fn jobs_section_roundtrips_with_and_without_ivf() {
+        let (pq, enc, db, ivf) = tiny_state();
+        let jobs = tiny_jobs();
+        // With IVF: sections [.., ivf, jobs].
+        let bytes = encode_index_with_jobs(&pq, &enc, &db, Some(&ivf), &jobs);
+        let idx = decode_index(&bytes).unwrap();
+        assert!(idx.ivf.is_some());
+        assert_eq!(idx.jobs, jobs);
+        // Without IVF: sections [.., jobs].
+        let bytes = encode_index_with_jobs(&pq, &enc, &db, None, &jobs);
+        let idx = decode_index(&bytes).unwrap();
+        assert!(idx.ivf.is_none());
+        assert_eq!(idx.jobs, jobs);
+    }
+
+    #[test]
+    fn empty_jobs_slice_is_byte_identical_to_the_plain_encoder() {
+        let (pq, enc, db, ivf) = tiny_state();
+        assert_eq!(
+            encode_index(&pq, &enc, &db, Some(&ivf)),
+            encode_index_with_jobs(&pq, &enc, &db, Some(&ivf), &[])
+        );
     }
 
     #[test]
@@ -441,6 +576,56 @@ mod tests {
             bad[i] ^= 0x40;
             assert!(decode_index(&bad).is_err(), "flip at byte {i} must fail");
         }
+    }
+
+    /// The corruption sweeps over a file *with* a jobs section: the new
+    /// trailing section must not weaken the existing guarantees, and
+    /// corrupting it must never corrupt (or crash on) the sections
+    /// before it. The jobs section sits at the end of the body, so the
+    /// sweep tail exercises it specifically.
+    #[test]
+    fn every_prefix_truncation_errors_with_jobs_section() {
+        let good = tiny_bytes_with_jobs();
+        for n in (0..good.len()).step_by(sweep_stride()) {
+            assert!(decode_index(&good[..n]).is_err(), "prefix of {n} bytes must fail");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_errors_with_jobs_section() {
+        let good = tiny_bytes_with_jobs();
+        for i in (0..good.len()).step_by(sweep_stride()) {
+            let mut bad = good.clone();
+            bad[i] ^= 0x40;
+            assert!(decode_index(&bad).is_err(), "flip at byte {i} must fail");
+        }
+    }
+
+    /// Even with a valid checksum (re-stamped after corruption), a
+    /// hostile job count inside the jobs section must be rejected
+    /// before allocating.
+    #[test]
+    fn restamped_hostile_job_count_is_rejected() {
+        let good = tiny_bytes_with_jobs();
+        // Locate the jobs section: walk the sections from the front.
+        let mut pos = 12; // magic + version
+        let body_end = good.len() - 8;
+        let jobs_payload_start = loop {
+            assert!(pos + 9 <= body_end, "jobs section must exist");
+            let tag = good[pos];
+            let len = u64::from_le_bytes(good[pos + 1..pos + 9].try_into().unwrap());
+            if tag == SEC_JOBS {
+                break pos + 9;
+            }
+            pos += 9 + usize::try_from(len).unwrap();
+        };
+        let mut bad = good.clone();
+        // First payload field is the u64 job count.
+        bad[jobs_payload_start..jobs_payload_start + 8]
+            .copy_from_slice(&u64::MAX.to_le_bytes());
+        restamp_checksum(&mut bad);
+        let err = decode_index(&bad).unwrap_err().to_string();
+        assert!(err.contains("job count"), "unexpected error: {err}");
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Loopback integration tests for the durable job plane: a real TCP
+//! server with a [`JobManager`] attached, jobs submitted/polled/
+//! cancelled through the v3 wire frames, and the in-process engine as
+//! ground truth.
+//!
+//! The acceptance properties:
+//! (a) a completed `AllPairsTopK` job's persisted rows are
+//!     bit-identical to serial `Engine::handle` top-k calls;
+//! (b) a cancel lands within one chunk boundary and the job reports
+//!     `Cancelled` with a consistent partial-progress count;
+//! (c) killing the job plane mid-job and reopening the engine recovers
+//!     job state from the store without corrupting existing sections;
+//! (d) the Prometheus exposition exposes `pqdtw_jobs_*` families and
+//!     passes `validate_exposition`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pqdtw::coordinator::{Engine, Request, Response, Service, ServiceConfig};
+use pqdtw::data::random_walk::RandomWalks;
+use pqdtw::data::ucr_like::ucr_like_by_name;
+use pqdtw::jobs::{JobConfig, JobManager, JobResult, JobSpec, JobStatus};
+use pqdtw::net::{Client, ClientConfig, NetServer, ServerConfig};
+use pqdtw::nn::ivf::CoarseMetric;
+use pqdtw::nn::knn::PqQueryMode;
+use pqdtw::obs::log::JsonLogger;
+use pqdtw::obs::prometheus;
+use pqdtw::pq::quantizer::PqConfig;
+
+/// A served engine with an IVF index and an attached job plane.
+fn toy_job_server(
+    job_cfg: JobConfig,
+) -> (NetServer, Arc<Service>, Arc<JobManager>, Arc<Engine>, String) {
+    let tt = ucr_like_by_name("SpikePosition", 77).unwrap();
+    let pq_cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 8,
+        window_frac: 0.2,
+        kmeans_iters: 2,
+        dba_iters: 1,
+        ..Default::default()
+    };
+    let mut engine = Engine::build(&tt.train, &pq_cfg, 3).unwrap();
+    engine.enable_ivf(6, CoarseMetric::Euclidean, 5);
+    let engine = Arc::new(engine);
+    let svc = Arc::new(Service::start(Arc::clone(&engine), ServiceConfig::default()));
+    let jobs = JobManager::start(
+        Arc::clone(&engine),
+        Arc::new(JsonLogger::disabled()),
+        None,
+        job_cfg,
+    );
+    svc.attach_jobs(Arc::clone(&jobs));
+    let server =
+        NetServer::start("127.0.0.1:0", Arc::clone(&svc), ServerConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, svc, jobs, engine, addr)
+}
+
+fn quick_client(addr: &str) -> Client {
+    Client::connect(
+        addr,
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(20),
+        },
+    )
+    .unwrap()
+}
+
+/// Poll a job over the wire until it reaches a terminal status.
+fn wait_terminal(client: &mut Client, id: u64) -> pqdtw::jobs::JobSnapshot {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let snap = client.job_status(id).unwrap();
+        if snap.status.is_terminal() {
+            return snap;
+        }
+        assert!(Instant::now() < deadline, "job {id} did not finish in time: {snap:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// (a) + (d): a completed all-pairs job answers bit-identically to
+/// serial in-process top-k calls, and the job plane shows up in the
+/// Prometheus exposition.
+#[test]
+fn all_pairs_job_matches_serial_topk_bit_for_bit_over_loopback() {
+    let (server, _svc, _jobs, engine, addr) = toy_job_server(JobConfig::default());
+    let mut client = quick_client(&addr);
+    let (k, rerank) = (3usize, Some(8usize));
+    let id = client
+        .job_submit(JobSpec::AllPairsTopK {
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank,
+        })
+        .unwrap();
+    let snap = wait_terminal(&mut client, id);
+    assert_eq!(snap.status, JobStatus::Completed, "{snap:?}");
+    assert_eq!(snap.done, snap.total);
+    assert_eq!(snap.total, engine.n_items as u64);
+
+    let rows = match client.job_result(id).unwrap() {
+        JobResult::AllPairs(rows) => rows,
+        other => panic!("unexpected result payload {other:?}"),
+    };
+    assert_eq!(rows.len(), engine.n_items);
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.query_index, i as u64);
+        let want = match engine.handle(&Request::TopKQuery {
+            series: engine.raw.row(i).to_vec(),
+            k,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank,
+        }) {
+            Response::TopK(hits) => hits,
+            other => panic!("unexpected engine response {other:?}"),
+        };
+        assert_eq!(row.hits.len(), want.len(), "row {i}");
+        for (got, want) in row.hits.iter().zip(want.iter()) {
+            assert_eq!(got.index, want.index, "row {i}");
+            assert_eq!(
+                got.distance.to_bits(),
+                want.distance.to_bits(),
+                "row {i}: distances must be bit-identical"
+            );
+            assert_eq!(got.label, want.label, "row {i}");
+        }
+        // Per-hit provenance rides along with every row.
+        assert_eq!(row.explains.len(), row.hits.len(), "row {i}");
+    }
+
+    // Events are cursor-addressable over the wire: strictly ascending
+    // seqs, and a cursor at the tail returns nothing new.
+    let (events, latest_seq) = client.job_events(id, 0, 4096).unwrap();
+    assert!(!events.is_empty());
+    for pair in events.windows(2) {
+        assert!(pair[0].seq < pair[1].seq, "events must be strictly ascending");
+    }
+    assert_eq!(events.last().unwrap().seq, latest_seq);
+    let (tail, _) = client.job_events(id, latest_seq, 4096).unwrap();
+    assert!(tail.is_empty(), "cursor at the tail must return nothing, got {tail:?}");
+
+    // (d) the exposition carries the job families and validates.
+    let text = client.metrics_text().unwrap();
+    let samples = prometheus::validate_exposition(&text).expect("valid exposition");
+    assert!(samples > 10);
+    assert!(text.contains("pqdtw_jobs_running"));
+    assert!(text.contains("pqdtw_jobs_queued"));
+    assert!(text.contains("pqdtw_jobs_submitted_total{kind=\"all_pairs_topk\"} 1\n"));
+    assert!(text.contains("pqdtw_jobs_completed_total{kind=\"all_pairs_topk\"} 1\n"));
+    assert!(text.contains("pqdtw_jobs_duration_microseconds_bucket"));
+
+    // Unknown ids are server errors, not dead connections.
+    let err = client.job_status(9999).unwrap_err().to_string();
+    assert!(err.contains("server error"), "{err}");
+    assert!(err.contains("unknown job id"), "{err}");
+    drop(server);
+}
+
+/// (b): cancelling a running job lands within one chunk boundary and
+/// reports a consistent partial-progress count.
+#[test]
+fn cancel_lands_within_one_chunk_boundary_over_loopback() {
+    // A deliberately slow job: DTW re-ranking over a RandomWalk corpus,
+    // small chunks so there are many cancellation points.
+    let db = RandomWalks::new(11).generate(512, 128);
+    let pq_cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 16,
+        window_frac: 0.3,
+        kmeans_iters: 2,
+        dba_iters: 1,
+        train_subsample: Some(64),
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::build(&db, &pq_cfg, 9).unwrap());
+    let svc = Arc::new(Service::start(Arc::clone(&engine), ServiceConfig::default()));
+    let jobs = JobManager::start(
+        Arc::clone(&engine),
+        Arc::new(JsonLogger::disabled()),
+        None,
+        JobConfig { n_workers: 1, chunk: 8 },
+    );
+    svc.attach_jobs(Arc::clone(&jobs));
+    let server =
+        NetServer::start("127.0.0.1:0", Arc::clone(&svc), ServerConfig::default()).unwrap();
+    let mut client = quick_client(&server.local_addr().to_string());
+
+    let id = client
+        .job_submit(JobSpec::AllPairsTopK {
+            k: 5,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: Some(64),
+        })
+        .unwrap();
+    // Wait until real progress is visible, then cancel mid-run.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let snap = client.job_status(id).unwrap();
+        if snap.status == JobStatus::Running && snap.done > 0 {
+            break;
+        }
+        assert!(
+            !snap.status.is_terminal(),
+            "job finished before the cancel could land — workload too small? {snap:?}"
+        );
+        assert!(Instant::now() < deadline, "job never made progress: {snap:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let acked = client.job_cancel(id).unwrap();
+    assert_eq!(acked.id, id);
+    let snap = wait_terminal(&mut client, id);
+    assert_eq!(snap.status, JobStatus::Cancelled, "{snap:?}");
+    // Partial progress is consistent: some work done, not all of it,
+    // and `done` sits on a chunk boundary (chunk = 8 over 512 queries).
+    assert!(snap.done > 0, "{snap:?}");
+    assert!(snap.done < snap.total, "{snap:?}");
+    assert_eq!(snap.done % 8, 0, "cancel must land on a chunk boundary: {snap:?}");
+    // A cancelled job has no result.
+    let err = client.job_result(id).unwrap_err().to_string();
+    assert!(err.contains("no result"), "{err}");
+    drop(server);
+}
+
+/// (c): kill the job plane mid-job; reopening the engine recovers the
+/// job from the store (re-enqueued from scratch), re-runs it to a
+/// bit-identical result, and no existing section is corrupted.
+#[test]
+fn job_state_survives_kill_and_reopen_without_corrupting_the_store() {
+    let dir = pqdtw::testutil::unique_temp_dir("jobs_recover");
+    let path = dir.join("idx.pqx");
+    let db = RandomWalks::new(21).generate(384, 128);
+    let pq_cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 16,
+        window_frac: 0.3,
+        kmeans_iters: 2,
+        dba_iters: 1,
+        train_subsample: Some(64),
+        ..Default::default()
+    };
+    let mut built = Engine::build(&db, &pq_cfg, 9).unwrap();
+    built.enable_ivf(8, CoarseMetric::Euclidean, 5);
+    built.save(&path).unwrap();
+
+    let spec = JobSpec::AllPairsTopK {
+        k: 4,
+        mode: PqQueryMode::Asymmetric,
+        nprobe: None,
+        rerank: Some(48),
+    };
+
+    // First life: submit a slow job, then kill the plane before it can
+    // finish. The graceful stop deliberately leaves the on-disk job
+    // non-terminal so the next open re-runs it.
+    let engine1 = Arc::new(Engine::open(&path).unwrap());
+    assert!(engine1.recovered_jobs.is_empty());
+    let mgr1 = JobManager::start(
+        Arc::clone(&engine1),
+        Arc::new(JsonLogger::disabled()),
+        Some(path.clone()),
+        JobConfig { n_workers: 1, chunk: 4 },
+    );
+    let id = mgr1.submit(spec.clone()).unwrap();
+    drop(mgr1); // stop + join: the running job is abandoned, not cancelled
+
+    // Second life: the job comes back non-terminal and re-enqueued.
+    let engine2 = Arc::new(Engine::open(&path).unwrap());
+    assert_eq!(engine2.recovered_jobs.len(), 1);
+    let recovered = &engine2.recovered_jobs[0];
+    assert_eq!(recovered.id, id);
+    assert_eq!(recovered.spec, spec);
+    assert!(!recovered.status.is_terminal(), "{recovered:?}");
+    assert!(recovered.result.is_none());
+
+    // Existing sections are intact: the reopened engine answers queries
+    // bit-identically to the engine it was saved from.
+    for i in [0usize, 7, 191] {
+        let req = Request::TopKQuery {
+            series: db.row(i).to_vec(),
+            k: 4,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: Some(3),
+            rerank: None,
+        };
+        assert_eq!(engine2.handle(&req), built.handle(&req), "query {i}");
+    }
+
+    let mgr2 = JobManager::start(
+        Arc::clone(&engine2),
+        Arc::new(JsonLogger::disabled()),
+        Some(path.clone()),
+        JobConfig { n_workers: 1, chunk: 4 },
+    );
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let snap = mgr2.status(id).expect("recovered job is registered");
+        if snap.status.is_terminal() {
+            assert_eq!(snap.status, JobStatus::Completed, "{snap:?}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "recovered job never finished: {snap:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // The re-run is a pure function of the immutable index: rows are
+    // bit-identical to serial in-process calls.
+    let rows = match mgr2.result(id).unwrap().expect("completed job has a result") {
+        JobResult::AllPairs(rows) => rows,
+        other => panic!("unexpected result payload {other:?}"),
+    };
+    assert_eq!(rows.len(), engine2.n_items);
+    for i in [0usize, 63, 383] {
+        let want = match engine2.handle(&Request::TopKQuery {
+            series: engine2.raw.row(i).to_vec(),
+            k: 4,
+            mode: PqQueryMode::Asymmetric,
+            nprobe: None,
+            rerank: Some(48),
+        }) {
+            Response::TopK(hits) => hits,
+            other => panic!("unexpected engine response {other:?}"),
+        };
+        let got = &rows[i].hits;
+        assert_eq!(got.len(), want.len(), "row {i}");
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!((g.index, g.distance.to_bits()), (w.index, w.distance.to_bits()));
+        }
+    }
+    drop(mgr2);
+
+    // Third life: the terminal job (with its result) is recovered
+    // verbatim, not re-run.
+    let engine3 = Engine::open(&path).unwrap();
+    assert_eq!(engine3.recovered_jobs.len(), 1);
+    let done = &engine3.recovered_jobs[0];
+    assert_eq!(done.id, id);
+    assert_eq!(done.status, JobStatus::Completed);
+    assert!(done.result.is_some());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Autotune over loopback: full sweep reaches recall 1.0 at
+/// `nprobe = nlist`, and the recommendation respects the target.
+#[test]
+fn autotune_job_over_loopback_reaches_full_recall_at_full_probe() {
+    let (server, _svc, _jobs, engine, addr) = toy_job_server(JobConfig::default());
+    let nlist = engine.ivf.as_ref().unwrap().nlist();
+    let mut client = quick_client(&addr);
+    let id = client
+        .job_submit(JobSpec::AutotuneNprobe { k: 3, target_recall: 1.0, sample: 8 })
+        .unwrap();
+    let snap = wait_terminal(&mut client, id);
+    assert_eq!(snap.status, JobStatus::Completed, "{snap:?}");
+    let (recommended, sweep) = match client.job_result(id).unwrap() {
+        JobResult::Autotune { recommended_nprobe, sweep } => (recommended_nprobe, sweep),
+        other => panic!("unexpected result payload {other:?}"),
+    };
+    assert!(recommended >= 1 && recommended <= nlist);
+    let last = sweep.last().unwrap();
+    assert_eq!(last.nprobe, nlist, "the ladder must end at the full probe");
+    assert!(
+        (last.recall - 1.0).abs() < 1e-12,
+        "full probe must reproduce the exhaustive scan: {sweep:?}"
+    );
+    drop(server);
+}
+
+/// A server without a job plane answers job frames with a clean error.
+#[test]
+fn server_without_job_plane_rejects_job_frames_cleanly() {
+    let tt = ucr_like_by_name("SpikePosition", 77).unwrap();
+    let pq_cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 8,
+        window_frac: 0.2,
+        kmeans_iters: 2,
+        dba_iters: 1,
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::build(&tt.train, &pq_cfg, 3).unwrap());
+    let svc = Arc::new(Service::start(Arc::clone(&engine), ServiceConfig::default()));
+    let server =
+        NetServer::start("127.0.0.1:0", Arc::clone(&svc), ServerConfig::default()).unwrap();
+    let mut client = quick_client(&server.local_addr().to_string());
+    let err = client.job_status(1).unwrap_err().to_string();
+    assert!(err.contains("job plane not enabled"), "{err}");
+    // The connection survives: queries still work afterwards.
+    client.ping().unwrap();
+    drop(server);
+}

@@ -1,0 +1,15 @@
+// Fixture: job-plane code compliant with no-raw-stderr-in-serving —
+// lifecycle events flow through a structured logger, never raw stderr.
+// Linted as if it lived under `jobs/`.
+
+pub trait EventSink {
+    fn event(&self, name: &str, id: u64);
+}
+
+pub fn on_job_done(sink: &dyn EventSink, id: u64) {
+    sink.event("job_done", id);
+}
+
+pub fn on_job_progress(sink: &dyn EventSink, id: u64) {
+    sink.event("job_progress", id);
+}

@@ -281,6 +281,19 @@ mod tests {
     }
 
     #[test]
+    fn raw_stderr_scope_covers_the_job_plane() {
+        // The fail fixture under a jobs/ path must be flagged …
+        let f = lint_source("jobs/manager.rs", &fixture("raw_stderr_fail.rs"));
+        assert!(
+            f.iter().filter(|f| f.rule == rules::NO_RAW_STDERR).count() >= 3,
+            "jobs/ is in no-raw-stderr scope, got {f:?}"
+        );
+        // … and the structured-logger twin must pass with zero waivers.
+        let f = lint_source("jobs/manager.rs", &fixture("raw_stderr_jobs_pass.rs"));
+        assert!(f.is_empty(), "logger-based job events must pass, got {f:?}");
+    }
+
+    #[test]
     fn raw_stderr_ignored_outside_serving_scope() {
         let f = lint_source("obs/log.rs", &fixture("raw_stderr_fail.rs"));
         assert!(

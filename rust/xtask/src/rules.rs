@@ -84,7 +84,7 @@ pub const RULES: &[RuleInfo] = &[
         summary: "no eprintln!/eprint! in serving code; operational events \
                   must flow through obs::log::JsonLogger so operators get \
                   structured, machine-parseable output",
-        scope: "net/, coordinator/ (non-test)",
+        scope: "net/, coordinator/, jobs/ (non-test)",
     },
     RuleInfo {
         name: LINT_WAIVER,
@@ -187,7 +187,7 @@ fn scope_validate_alloc(rel: &str) -> bool {
 }
 
 fn scope_raw_stderr(rel: &str) -> bool {
-    rel.starts_with("net/") || rel.starts_with("coordinator/")
+    rel.starts_with("net/") || rel.starts_with("coordinator/") || rel.starts_with("jobs/")
 }
 
 /// Panic surfaces: `.unwrap()` / `.expect(..)` calls and the panic
