@@ -152,6 +152,13 @@ pub struct Engine {
     /// ([`crate::jobs::JobManager`]) consumes these on startup to
     /// recover terminal results and re-enqueue interrupted jobs.
     pub recovered_jobs: Vec<crate::jobs::PersistedJob>,
+    /// Shard membership when this engine holds a deterministic slice of
+    /// a larger database (`build-index --shard i/n`). When set, every
+    /// `Nn`/`TopK` hit index is mapped through the global-id table so
+    /// results carry database-global indices — the property a
+    /// scatter-gather router needs to merge shard answers bit-identically
+    /// to the unsharded scan.
+    pub shard: Option<crate::store::ShardInfo>,
 }
 
 /// Identification summary of the serving state (the index header a
@@ -193,6 +200,55 @@ impl Engine {
             scan_threads: 1,
             scan_stats: ScanStats::new(),
             recovered_jobs: Vec::new(),
+            shard: None,
+        })
+    }
+
+    /// Build shard `shard_index` of an `shard_count`-way deterministic
+    /// split: the quantizer is trained on the **full** database (same
+    /// seed ⇒ bit-identical codebooks on every shard and on the
+    /// unsharded build), then only the rows with
+    /// `id % shard_count == shard_index` are encoded and retained.
+    /// Because per-item PQ distances depend only on the shared
+    /// quantizer and the item's own code, a router that merges the
+    /// shards' top-k lists through the `(distance, index)` total order
+    /// reproduces the unsharded exhaustive scan bit-for-bit
+    /// (`docs/serving-topology.md`).
+    pub fn build_shard(
+        db: &Dataset,
+        cfg: &PqConfig,
+        seed: u64,
+        shard_index: u64,
+        shard_count: u64,
+    ) -> Result<Self> {
+        anyhow::ensure!(shard_count >= 1, "shard count must be >= 1");
+        anyhow::ensure!(
+            shard_index < shard_count,
+            "shard index {shard_index} out of range for {shard_count} shards"
+        );
+        let pq = ProductQuantizer::train(db, cfg, seed)?;
+        let keep: Vec<usize> = (0..db.n_series())
+            .filter(|&id| id as u64 % shard_count == shard_index)
+            .collect();
+        let raw = db.subset(&keep);
+        let encoded = pq.encode_dataset(&raw);
+        let blocks = encoded.to_blocks(pq.codebook.k);
+        let n_items = raw.n_series();
+        Ok(Engine {
+            pq,
+            encoded,
+            raw,
+            ivf: None,
+            n_items,
+            blocks,
+            scan_threads: 1,
+            scan_stats: ScanStats::new(),
+            recovered_jobs: Vec::new(),
+            shard: Some(crate::store::ShardInfo {
+                shard_index,
+                shard_count,
+                global_ids: keep.iter().map(|&i| i as u64).collect(),
+            }),
         })
     }
 
@@ -209,7 +265,15 @@ impl Engine {
     /// raw database, optional IVF index — to a versioned index file
     /// (see [`crate::store`] and `docs/index-format.md`).
     pub fn save(&self, path: &Path) -> Result<()> {
-        crate::store::save_index(path, &self.pq, &self.encoded, &self.raw, self.ivf.as_ref())
+        crate::store::save_index_full(
+            path,
+            &self.pq,
+            &self.encoded,
+            &self.raw,
+            self.ivf.as_ref(),
+            &[],
+            self.shard.as_ref(),
+        )
     }
 
     /// Reopen a saved index without retraining. The loaded engine
@@ -236,6 +300,7 @@ impl Engine {
             scan_threads: 1,
             scan_stats: ScanStats::new(),
             recovered_jobs: idx.jobs,
+            shard: idx.shard,
         })
     }
 
@@ -409,7 +474,7 @@ impl Engine {
                         (n.distance, None, Stage::BlockedScan)
                     };
                     HitExplain {
-                        index: n.index as u64,
+                        index: self.global_index(n.index) as u64,
                         pq_estimate,
                         exact_dtw,
                         admitted_by,
@@ -422,9 +487,24 @@ impl Engine {
         Ok(ranked)
     }
 
+    /// Database-global index of local row `local`: the identity when
+    /// unsharded, the shard's global-id table entry otherwise. The
+    /// table is strictly increasing (store-validated), so local
+    /// tie-break order equals global tie-break order.
+    fn global_index(&self, local: usize) -> usize {
+        match &self.shard {
+            Some(s) => s
+                .global_ids
+                .get(local)
+                .and_then(|&g| usize::try_from(g).ok())
+                .unwrap_or(local),
+            None => local,
+        }
+    }
+
     fn hit(&self, n: Neighbor) -> Hit {
         Hit {
-            index: n.index,
+            index: self.global_index(n.index),
             distance: n.distance,
             label: self.encoded.labels.get(n.index).copied(),
         }

@@ -540,13 +540,14 @@ fn persist_all(inner: &Inner) {
             .collect()
     };
     let e = &inner.engine;
-    if let Err(err) = crate::store::save_index_with_jobs(
+    if let Err(err) = crate::store::save_index_full(
         path,
         &e.pq,
         &e.encoded,
         &e.raw,
         e.ivf.as_ref(),
         &jobs,
+        e.shard.as_ref(),
     ) {
         inner.logger.event(
             "job_persist_error",

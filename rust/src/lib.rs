@@ -53,6 +53,17 @@
 //!   server feeding concurrent connections into the coordinator's
 //!   batcher, and a blocking client — remote queries answer
 //!   bit-identically to the in-process engine.
+//! - [`router`] — fault-tolerant sharded serving: a scatter-gather
+//!   router speaking the same wire protocol fans queries out to shard
+//!   servers (each holding a `id % n` slice of the database, built with
+//!   `build-index --shard i/n`) and merges through the deterministic
+//!   `(distance, index)` order, so a full-health routed answer is
+//!   bit-identical to an unsharded scan. Per-shard supervision —
+//!   deadlines, one retry on a fresh connection, a
+//!   `Healthy → Degraded → Down` breaker with jittered-backoff
+//!   half-open recovery — turns shard failures into flagged partial
+//!   results (wire v4 `degraded` trailer) instead of outages
+//!   (`docs/serving-topology.md`).
 //! - [`jobs`] — the durable async job plane: a bounded worker pool
 //!   running long scans (all-pairs top-k, k-medoids sweeps, `nprobe`
 //!   autotuning) in cancellable chunks with cursor-polled progress
@@ -113,5 +124,6 @@ pub mod coordinator;
 pub mod jobs;
 pub mod net;
 pub mod obs;
+pub mod router;
 pub mod runtime;
 pub mod testutil;

@@ -24,6 +24,10 @@
 //!   pqdtw job events --connect 127.0.0.1:7447 --id 1 --follow
 //!   pqdtw job result --connect 127.0.0.1:7447 --id 1
 //!   pqdtw info --index rw.pqx
+//!   pqdtw build-index --dataset RandomWalk-4096x128 --shard 0/3 --nlist 0 --out s0.pqx
+//!   pqdtw serve --listen 127.0.0.1:7448 --index s0.pqx
+//!   pqdtw serve --router --listen 127.0.0.1:7450 --shards 127.0.0.1:7448,127.0.0.1:7449
+//!   pqdtw query --connect 127.0.0.1:7450 --dataset RandomWalk-4096x128 --topk 5
 //!
 //! The build-once / serve-many split: `build-index` trains, encodes and
 //! persists the full serving state; `serve --index` / `topk --index`
@@ -48,10 +52,11 @@ use pqdtw::core::matrix::CondensedMatrix;
 use pqdtw::data::random_walk::RandomWalks;
 use pqdtw::data::ucr_like::{ucr_like_by_name, TrainTest};
 use pqdtw::distance::measure::Measure;
-use pqdtw::net::{Client, ClientConfig, NetServer, ServerConfig};
+use pqdtw::net::{connect_with_retry, Client, ClientConfig, NetServer, RetryConfig, ServerConfig};
 use pqdtw::nn::ivf::CoarseMetric;
 use pqdtw::nn::knn::{nn_classify_pq, nn_classify_raw, PqQueryMode};
 use pqdtw::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
+use pqdtw::router::{RouterConfig, RouterServer, RouterServerConfig};
 
 use pqdtw::cli::{Args, CommandSpec};
 
@@ -86,10 +91,10 @@ const SPECS: &[CommandSpec] = &[
         flags: pq_flags!(
             "workers", "requests", "topk", "nprobe", "rerank", "nlist", "coarse",
             "scan-threads", "index", "listen", "port-file", "max-conns", "log-json",
-            "job-workers"
+            "job-workers", "router", "shards", "require-full"
         ),
     },
-    CommandSpec { name: "build-index", flags: pq_flags!("out", "nlist", "coarse") },
+    CommandSpec { name: "build-index", flags: pq_flags!("out", "nlist", "coarse", "shard") },
     CommandSpec {
         name: "bench-scan",
         flags: &[
@@ -283,8 +288,9 @@ fn cmd_query_remote(a: &Args, addr: &str) -> Result<()> {
     let mut client = Client::connect(addr, ClientConfig::default())?;
     let t0 = Instant::now();
     let mut n_hits = 0usize;
+    let mut n_degraded = 0usize;
     for i in 0..n_queries {
-        let (hits, trace) = client.topk_traced(
+        let reply = client.topk_full(
             tt.test.row(i),
             k,
             mode,
@@ -293,21 +299,32 @@ fn cmd_query_remote(a: &Args, addr: &str) -> Result<()> {
             i as u64 + 1,
             want_trace,
         )?;
-        ensure!(!hits.is_empty(), "server returned no hits for query {i}");
+        ensure!(!reply.hits.is_empty(), "server returned no hits for query {i}");
         ensure!(
-            trace.is_some() == want_trace,
-            "server trace presence does not match the --trace flag for query {i}"
+            reply.trace.is_some() == want_trace,
+            "server trace presence does not match the --trace flag for query {i} \
+             (routers answer untraced — trace against a shard directly)"
         );
-        n_hits += hits.len();
+        n_hits += reply.hits.len();
+        if reply.degraded {
+            if n_degraded == 0 {
+                println!(
+                    "WARNING: degraded result for query {i} — shards {:?} missing, \
+                     hits cover the surviving shards only",
+                    reply.missing_shards
+                );
+            }
+            n_degraded += 1;
+        }
         if i == 0 {
             println!("query 0 top-{k} ({mode:?}, nprobe={nprobe:?}, rerank={rerank:?}):");
-            for h in &hits {
+            for h in &reply.hits {
                 match h.label {
                     Some(l) => println!("  #{:<8} d={:.6} label={l}", h.index, h.distance),
                     None => println!("  #{:<8} d={:.6}", h.index, h.distance),
                 }
             }
-            if let Some(t) = &trace {
+            if let Some(t) = &reply.trace {
                 print!("{}", t.render_text());
             }
         }
@@ -317,6 +334,9 @@ fn cmd_query_remote(a: &Args, addr: &str) -> Result<()> {
         "{n_queries} remote queries to {addr} in {dt:?} ({:.0} req/s, {n_hits} hits)",
         n_queries as f64 / dt.as_secs_f64()
     );
+    if n_degraded > 0 {
+        println!("degraded : {n_degraded} of {n_queries} queries answered partially");
+    }
     Ok(())
 }
 
@@ -389,18 +409,41 @@ fn cmd_cluster(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--shard i/n` (e.g. `0/3`): this process builds shard `i` of an
+/// `n`-way deterministic `id % n` split.
+fn parse_shard_spec(spec: &str) -> Result<(u64, u64)> {
+    let (i, n) = spec
+        .split_once('/')
+        .with_context(|| format!("--shard must be <index>/<count> (e.g. 0/3), got '{spec}'"))?;
+    let i: u64 = i.trim().parse().with_context(|| format!("--shard index in '{spec}'"))?;
+    let n: u64 = n.trim().parse().with_context(|| format!("--shard count in '{spec}'"))?;
+    ensure!(n >= 1, "--shard count must be >= 1, got '{spec}'");
+    ensure!(i < n, "--shard index must be < count, got '{spec}'");
+    Ok((i, n))
+}
+
 /// Offline build phase of the build-once / serve-many split: train,
 /// encode, optionally build the IVF index, and persist everything as
 /// one index file that `serve --index` / `topk --index` reopen without
-/// retraining.
+/// retraining. With `--shard i/n` the quantizer still trains on the
+/// full dataset (bit-identical codebooks across shards) but only the
+/// `id % n == i` rows are encoded and kept, for `serve --router`
+/// fleets (`docs/serving-topology.md`).
 fn cmd_build_index(a: &Args) -> Result<()> {
     let seed = a.get_parsed("seed", 7u64);
     let tt = load_dataset(&a.get("dataset", "CBF"), seed)?;
     let cfg = config_from_args(a);
     let out = a.get("out", "index.pqx");
     let nlist: usize = a.get_parsed("nlist", 16usize);
+    let shard = match a.flags.get("shard") {
+        Some(spec) => Some(parse_shard_spec(spec)?),
+        None => None,
+    };
     let t0 = Instant::now();
-    let mut engine = Engine::build(&tt.train, &cfg, seed)?;
+    let mut engine = match shard {
+        Some((i, n)) => Engine::build_shard(&tt.train, &cfg, seed, i, n)?,
+        None => Engine::build(&tt.train, &cfg, seed)?,
+    };
     if nlist > 0 {
         let metric = coarse_metric(a, &engine);
         engine.enable_ivf(nlist, metric, seed);
@@ -412,6 +455,15 @@ fn cmd_build_index(a: &Args) -> Result<()> {
     let file_bytes = std::fs::metadata(&out)?.len();
     let mm = engine.pq.memory_model();
     println!("dataset     : {} (n={}, D={})", tt.name, engine.n_items, tt.train.len);
+    if let Some(info) = engine.shard.as_ref() {
+        println!(
+            "shard       : {}/{} ({} of {} rows retained, global ids preserved)",
+            info.shard_index,
+            info.shard_count,
+            engine.n_items,
+            tt.train.n_series()
+        );
+    }
     println!("build time  : {build_t:?} (train + encode + IVF), save {save_t:?}");
     println!(
         "index file  : {out} ({file_bytes} bytes = {:.2} MB on disk)",
@@ -780,7 +832,76 @@ fn cmd_serve_listen(a: &Args, listen: &str) -> Result<()> {
     Ok(())
 }
 
+/// Scatter-gather router front end: no engine of its own, just the
+/// supervised shard fleet (`docs/serving-topology.md`). Queries fan out
+/// to every shard and merge deterministically; failed shards produce
+/// degraded partial results unless `--require-full`.
+fn cmd_serve_router(a: &Args) -> Result<()> {
+    reject_flags(
+        a,
+        &[
+            "dataset", "index", "workers", "job-workers", "scan-threads", "nlist",
+            "coarse", "requests", "topk", "nprobe", "rerank",
+        ],
+        "has no effect with --router: the router holds no engine — build the shards \
+         with `build-index --shard i/n` and serve each with `serve --listen --index`",
+    )?;
+    let shards: Vec<String> = a
+        .require("shards")
+        .map_err(anyhow::Error::msg)?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    ensure!(
+        !shards.is_empty(),
+        "--shards needs at least one address (comma-separated, in shard order)"
+    );
+    let listen = a.get("listen", "127.0.0.1:0");
+    let mut cfg = RouterConfig::new(shards);
+    cfg.require_full = a.has("require-full");
+    let logger = if a.has("log-json") {
+        Arc::new(pqdtw::obs::log::JsonLogger::stderr())
+    } else {
+        Arc::new(pqdtw::obs::log::JsonLogger::disabled())
+    };
+    let server = RouterServer::start_logged(
+        &listen,
+        cfg,
+        RouterServerConfig {
+            max_connections: a.get_parsed("max-conns", 64usize),
+            ..Default::default()
+        },
+        logger,
+    )?;
+    let addr = server.local_addr();
+    if let Some(port_file) = a.flags.get("port-file") {
+        std::fs::write(port_file, addr.to_string())
+            .with_context(|| format!("writing --port-file {port_file}"))?;
+    }
+    println!(
+        "routing {} shards on {addr} (stop with `pqdtw shutdown --connect {addr}`; \
+         shard servers keep running)",
+        server.router().n_shards()
+    );
+    let m = server.wait();
+    println!(
+        "shutdown: routed {} requests ({} errors, {} degraded), {} retries + {} hedges",
+        m.requests, m.errors, m.degraded_responses, m.retries, m.hedges
+    );
+    Ok(())
+}
+
 fn cmd_serve(a: &Args) -> Result<()> {
+    if a.has("router") {
+        return cmd_serve_router(a);
+    }
+    reject_flags(
+        a,
+        &["shards", "require-full"],
+        "has no effect without --router: a plain server holds one engine (add \
+         --router to scatter over a shard fleet)",
+    )?;
     if let Some(listen) = a.flags.get("listen") {
         return cmd_serve_listen(a, listen);
     }
@@ -1005,17 +1126,58 @@ fn cmd_job_status(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// A transport-level failure (an I/O error somewhere in the chain):
+/// retryable on a fresh connection, unlike an application `Error`
+/// frame (e.g. "no such job"), which would fail identically forever.
+fn is_transport_error(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<std::io::Error>().is_some())
+}
+
 /// Print a job's progress events past `--cursor`. With `--follow`,
 /// keep polling (and advancing the cursor) until the job reaches a
-/// terminal status, then print the final snapshot.
+/// terminal status, then print the final snapshot. Losing the server
+/// connection mid-follow is survivable: the cursor protocol is
+/// resumable by design (event seqs are stable server-side), so the
+/// client reconnects with jittered backoff, re-polls from the last
+/// cursor, and prints a single `reconnected` notice — no events are
+/// double-printed and none are skipped.
 fn cmd_job_events(a: &Args) -> Result<()> {
-    let (mut client, id) = job_client(a)?;
+    let addr = a.require("connect").map_err(anyhow::Error::msg)?;
+    let id: u64 = a
+        .require("id")
+        .map_err(anyhow::Error::msg)?
+        .parse()
+        .context("--id must be a job id (a non-negative integer)")?;
     let mut cursor: u64 = a.get_parsed("cursor", 0u64);
     let max: usize =
         a.get_parsed("max", 256usize).clamp(1, pqdtw::net::protocol::MAX_JOB_EVENTS);
     let follow = a.has("follow");
+    let mut client = Client::connect(&addr, ClientConfig::default())?;
+    let mut reconnecting = false;
     loop {
-        let (events, _latest_seq) = client.job_events(id, cursor, max)?;
+        let step = client
+            .job_events(id, cursor, max)
+            .and_then(|(events, _latest_seq)| client.job_status(id).map(|s| (events, s)));
+        let (events, snap) = match step {
+            Ok(v) => v,
+            Err(err) if follow && is_transport_error(&err) => {
+                if !reconnecting {
+                    println!("  connection to {addr} lost ({err:#}); reconnecting");
+                    reconnecting = true;
+                }
+                client = connect_with_retry(
+                    &addr,
+                    ClientConfig::default(),
+                    RetryConfig { attempts: 30, ..Default::default() },
+                )?;
+                continue;
+            }
+            Err(err) => return Err(err),
+        };
+        if reconnecting {
+            println!("  reconnected to {addr}, resuming from cursor {cursor}");
+            reconnecting = false;
+        }
         for e in &events {
             let eta = match e.eta_us {
                 Some(us) => format!(" (eta {:.1}s)", us as f64 / 1e6),
@@ -1031,7 +1193,6 @@ fn cmd_job_events(a: &Args) -> Result<()> {
             );
             cursor = e.seq;
         }
-        let snap = client.job_status(id)?;
         if !follow || snap.status.is_terminal() {
             print_job_snapshot(&snap);
             return Ok(());

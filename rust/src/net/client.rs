@@ -3,7 +3,11 @@
 //!
 //! Server-side failures arrive as `Error` frames and surface as `Err`
 //! from every method, so callers never have to pattern-match transport
-//! failures apart from application ones.
+//! failures apart from application ones. Callers that *do* care about
+//! the failure flavor (the router's health machine, reconnect loops)
+//! can classify with [`is_timeout_error`]: a read timeout means "slow
+//! peer, the connection may still heal", while a decode failure means
+//! "corrupt frame, drop the connection".
 
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
@@ -11,6 +15,7 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::Hit;
+use crate::core::rng::Rng;
 use crate::jobs::{JobEvent, JobResult, JobSnapshot, JobSpec};
 use crate::nn::knn::PqQueryMode;
 use crate::obs::QueryTrace;
@@ -33,6 +38,121 @@ impl Default for ClientConfig {
             io_timeout: Duration::from_secs(30),
         }
     }
+}
+
+/// Bounded-retry policy for [`connect_with_retry`]: up to `attempts`
+/// connects separated by jittered exponential backoff.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryConfig {
+    /// Total connect attempts (>= 1).
+    pub attempts: u32,
+    /// Backoff before the second attempt; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Seed for the deterministic backoff jitter.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            attempts: 5,
+            base_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+            jitter_seed: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+/// The delay before retry number `attempt` (1-based): exponential
+/// doubling from `base`, capped at `max`, then scaled by a uniform
+/// jitter in `[0.5, 1.0]` so a fleet of clients retrying after the
+/// same outage does not reconnect in lockstep.
+pub fn jittered_backoff(base: Duration, max: Duration, attempt: u32, rng: &mut Rng) -> Duration {
+    let exp = base.saturating_mul(1u32 << attempt.saturating_sub(1).min(16));
+    let capped = exp.min(max);
+    capped.mul_f64(0.5 + 0.5 * rng.uniform())
+}
+
+/// True when `err` is a transport timeout (a slow or stalled peer)
+/// rather than a decode or protocol failure (a corrupt frame): some
+/// `io::Error` in its chain reads `TimedOut` or `WouldBlock` (Unix
+/// sockets report an expired `SO_RCVTIMEO` as the latter).
+pub fn is_timeout_error(err: &anyhow::Error) -> bool {
+    err.chain().any(|cause| {
+        cause.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+            )
+        })
+    })
+}
+
+/// [`Client::connect`] with bounded attempts and jittered exponential
+/// backoff between them; returns the last connect error once the
+/// attempt budget is spent.
+pub fn connect_with_retry(addr: &str, cfg: ClientConfig, retry: RetryConfig) -> Result<Client> {
+    ensure!(retry.attempts >= 1, "net: retry policy needs at least one attempt");
+    // Fold the address into the jitter stream so concurrent dials to
+    // different shards from one seed do not share a backoff schedule.
+    let addr_salt = addr
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3));
+    let mut rng = Rng::new(retry.jitter_seed ^ addr_salt);
+    let mut last_err = None;
+    for attempt in 1..=retry.attempts {
+        if attempt > 1 {
+            std::thread::sleep(jittered_backoff(
+                retry.base_backoff,
+                retry.max_backoff,
+                attempt - 1,
+                &mut rng,
+            ));
+        }
+        match Client::connect(addr, cfg) {
+            Ok(client) => return Ok(client),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let err = match last_err {
+        Some(e) => e,
+        // Unreachable (attempts >= 1), but degrade to an error rather
+        // than panic in serving code.
+        None => anyhow::anyhow!("net: no connect attempt was made"),
+    };
+    Err(err.context(format!("net: {addr} unreachable after {} attempts", retry.attempts)))
+}
+
+/// A 1-NN answer with its degraded-mode context (v4 trailer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NnReply {
+    /// Database-global index of the nearest item.
+    pub index: usize,
+    /// Distance to it.
+    pub distance: f64,
+    /// Its label, when the database is labeled.
+    pub label: Option<i64>,
+    /// Present iff the request asked for a trace.
+    pub trace: Option<QueryTrace>,
+    /// True when one or more shards did not contribute.
+    pub degraded: bool,
+    /// The missing shard indices, ascending.
+    pub missing_shards: Vec<u64>,
+}
+
+/// A top-k answer with its degraded-mode context (v4 trailer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopKReply {
+    /// Hits, ascending by `(distance, index)`.
+    pub hits: Vec<Hit>,
+    /// Present iff the request asked for a trace.
+    pub trace: Option<QueryTrace>,
+    /// True when one or more shards did not contribute.
+    pub degraded: bool,
+    /// The missing shard indices, ascending.
+    pub missing_shards: Vec<u64>,
 }
 
 /// A connected `pqdtw` client.
@@ -107,6 +227,20 @@ impl Client {
         }
     }
 
+    /// One raw request/response round trip. The router's scatter path
+    /// forwards already-decoded requests verbatim through this; `Error`
+    /// frames come back as `Ok(NetResponse::Error(..))`, so transport
+    /// health and application failures stay distinguishable.
+    pub fn roundtrip(&mut self, req: &NetRequest) -> Result<NetResponse> {
+        self.call(req)
+    }
+
+    /// True once a transport failure has made this connection unusable
+    /// (every further call will fail fast; reconnect instead).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
     /// Liveness round trip.
     pub fn ping(&mut self) -> Result<()> {
         match self.call(&NetRequest::Ping)? {
@@ -138,11 +272,25 @@ impl Client {
         request_id: u64,
         trace: bool,
     ) -> Result<(usize, f64, Option<i64>, Option<QueryTrace>)> {
+        let reply = self.nn_full(series, mode, nprobe, request_id, trace)?;
+        Ok((reply.index, reply.distance, reply.label, reply.trace))
+    }
+
+    /// [`Client::nn_traced`] returning the full [`NnReply`], including
+    /// the degraded-mode trailer a router may attach.
+    pub fn nn_full(
+        &mut self,
+        series: &[f64],
+        mode: PqQueryMode,
+        nprobe: Option<usize>,
+        request_id: u64,
+        trace: bool,
+    ) -> Result<NnReply> {
         let req =
             NetRequest::Nn { series: series.to_vec(), mode, nprobe, request_id, trace };
         match self.call(&req)? {
-            NetResponse::Nn { index, distance, label, trace } => {
-                Ok((index, distance, label, trace))
+            NetResponse::Nn { index, distance, label, trace, degraded, missing_shards } => {
+                Ok(NnReply { index, distance, label, trace, degraded, missing_shards })
             }
             NetResponse::Error(msg) => bail!("server error: {msg}"),
             other => bail!("net: unexpected response {other:?}"),
@@ -177,6 +325,23 @@ impl Client {
         request_id: u64,
         trace: bool,
     ) -> Result<(Vec<Hit>, Option<QueryTrace>)> {
+        let reply = self.topk_full(series, k, mode, nprobe, rerank, request_id, trace)?;
+        Ok((reply.hits, reply.trace))
+    }
+
+    /// [`Client::topk_traced`] returning the full [`TopKReply`],
+    /// including the degraded-mode trailer a router may attach.
+    #[allow(clippy::too_many_arguments)]
+    pub fn topk_full(
+        &mut self,
+        series: &[f64],
+        k: usize,
+        mode: PqQueryMode,
+        nprobe: Option<usize>,
+        rerank: Option<usize>,
+        request_id: u64,
+        trace: bool,
+    ) -> Result<TopKReply> {
         let req = NetRequest::TopK {
             series: series.to_vec(),
             k,
@@ -187,7 +352,9 @@ impl Client {
             trace,
         };
         match self.call(&req)? {
-            NetResponse::TopK { hits, trace } => Ok((hits, trace)),
+            NetResponse::TopK { hits, trace, degraded, missing_shards } => {
+                Ok(TopKReply { hits, trace, degraded, missing_shards })
+            }
             NetResponse::Error(msg) => bail!("server error: {msg}"),
             other => bail!("net: unexpected response {other:?}"),
         }

@@ -38,6 +38,9 @@ pub mod client;
 pub mod protocol;
 pub mod server;
 
-pub use client::{Client, ClientConfig};
+pub use client::{
+    connect_with_retry, is_timeout_error, jittered_backoff, Client, ClientConfig, NnReply,
+    RetryConfig, TopKReply,
+};
 pub use protocol::{NetRequest, NetResponse, WireClassStats, WireStageStats, WireStats};
 pub use server::{NetServer, ServerConfig};

@@ -6,7 +6,7 @@
 //!
 //! ```text
 //! magic    8 B   "PQDTWNET"
-//! version  4 B   u32 LE (currently 3)
+//! version  4 B   u32 LE (currently 4)
 //! tag      1 B   frame kind
 //! length   8 B   payload length in bytes, u64 LE
 //! payload  …     tag-specific, encoded with the store's codec primitives
@@ -48,7 +48,14 @@ pub const NET_MAGIC: [u8; 8] = *b"PQDTWNET";
 /// v3 added the job-plane frames: `JobCreate`/`JobStatus`/`JobEvents`
 /// (cursor-based poll)/`JobCancel`/`JobResult` requests and their
 /// responses (`JobCancel` is answered with a `JobStatus` result frame).
-pub const NET_VERSION: u32 = 3;
+///
+/// v4 added the degraded-mode trailer on `Nn`/`TopK` results: a
+/// `degraded` flag plus the sorted list of shard indices that did not
+/// contribute, appended after the optional trace so a scatter-gather
+/// router ([`crate::router`]) can surface partial answers explicitly.
+/// Single-node servers always send `degraded = false` with an empty
+/// list.
+pub const NET_VERSION: u32 = 4;
 
 /// Frame header size: magic + version + tag + payload length.
 pub const HEADER_BYTES: usize = 8 + 4 + 1 + 8;
@@ -281,6 +288,13 @@ pub enum NetResponse {
         label: Option<i64>,
         /// Present iff the request set its `trace` flag.
         trace: Option<QueryTrace>,
+        /// True when the answer covers only part of the database (one
+        /// or more shards were unreachable). Always false from a
+        /// single-node server.
+        degraded: bool,
+        /// Shard indices that did not contribute, ascending (empty
+        /// unless `degraded`).
+        missing_shards: Vec<u64>,
     },
     /// Ranked top-k result, ascending by distance.
     TopK {
@@ -288,6 +302,13 @@ pub enum NetResponse {
         hits: Vec<Hit>,
         /// Present iff the request set its `trace` flag.
         trace: Option<QueryTrace>,
+        /// True when the answer covers only part of the database (one
+        /// or more shards were unreachable). Always false from a
+        /// single-node server.
+        degraded: bool,
+        /// Shard indices that did not contribute, ascending (empty
+        /// unless `degraded`).
+        missing_shards: Vec<u64>,
     },
     /// Metrics snapshot.
     Stats(WireStats),
@@ -471,6 +492,38 @@ fn get_opt_trace(r: &mut ByteReader) -> Result<Option<QueryTrace>> {
         1 => Ok(Some(get_trace(r)?)),
         other => bail!("net: bad option flag {other}"),
     }
+}
+
+/// The v4 degraded-mode trailer on query results: flag + missing-shard
+/// list (ascending, empty unless degraded).
+fn put_degraded(w: &mut ByteWriter, degraded: bool, missing_shards: &[u64]) {
+    w.u8(u8::from(degraded));
+    w.usize(missing_shards.len());
+    for &s in missing_shards {
+        w.u64(s);
+    }
+}
+
+fn get_degraded(r: &mut ByteReader) -> Result<(bool, Vec<u64>)> {
+    let degraded = get_bool(r)?;
+    let n = r.usize()?;
+    ensure!(
+        n.saturating_mul(8) <= r.remaining(),
+        "net: missing-shard count {n} exceeds remaining frame bytes"
+    );
+    let mut missing = Vec::with_capacity(n);
+    for _ in 0..n {
+        missing.push(r.u64()?);
+    }
+    ensure!(
+        missing.windows(2).all(|w| w[0] < w[1]),
+        "net: missing-shard list must be strictly ascending"
+    );
+    ensure!(
+        degraded || missing.is_empty(),
+        "net: missing shards listed on a non-degraded result"
+    );
+    Ok((degraded, missing))
 }
 
 /// Frame a payload: header (magic, version, tag, length) + payload.
@@ -729,14 +782,15 @@ pub fn encode_response(resp: &NetResponse) -> Vec<u8> {
     let mut p = ByteWriter::new();
     let tag = match resp {
         NetResponse::Pong => TAG_PONG,
-        NetResponse::Nn { index, distance, label, trace } => {
+        NetResponse::Nn { index, distance, label, trace, degraded, missing_shards } => {
             p.usize(*index);
             p.f64(*distance);
             put_opt_i64(&mut p, *label);
             put_opt_trace(&mut p, trace);
+            put_degraded(&mut p, *degraded, missing_shards);
             TAG_NN_RESULT
         }
-        NetResponse::TopK { hits, trace } => {
+        NetResponse::TopK { hits, trace, degraded, missing_shards } => {
             p.usize(hits.len());
             for h in hits {
                 p.usize(h.index);
@@ -744,6 +798,7 @@ pub fn encode_response(resp: &NetResponse) -> Vec<u8> {
                 put_opt_i64(&mut p, h.label);
             }
             put_opt_trace(&mut p, trace);
+            put_degraded(&mut p, *degraded, missing_shards);
             TAG_TOPK_RESULT
         }
         NetResponse::Stats(s) => {
@@ -790,7 +845,8 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<NetResponse> {
             let distance = r.f64()?;
             let label = get_opt_i64(&mut r)?;
             let trace = get_opt_trace(&mut r)?;
-            NetResponse::Nn { index, distance, label, trace }
+            let (degraded, missing_shards) = get_degraded(&mut r)?;
+            NetResponse::Nn { index, distance, label, trace, degraded, missing_shards }
         }
         TAG_TOPK_RESULT => {
             let n = r.usize()?;
@@ -807,7 +863,8 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<NetResponse> {
                 hits.push(Hit { index, distance, label });
             }
             let trace = get_opt_trace(&mut r)?;
-            NetResponse::TopK { hits, trace }
+            let (degraded, missing_shards) = get_degraded(&mut r)?;
+            NetResponse::TopK { hits, trace, degraded, missing_shards }
         }
         TAG_STATS_RESULT => NetResponse::Stats(get_stats(&mut r)?),
         TAG_METRICS_TEXT_RESULT => NetResponse::MetricsText(r.string()?),
@@ -1050,12 +1107,16 @@ mod tests {
                 distance: 1.25,
                 label: Some(-3),
                 trace: None,
+                degraded: false,
+                missing_shards: vec![],
             },
             NetResponse::Nn {
                 index: 2,
                 distance: 0.5,
                 label: None,
                 trace: Some(sample_trace()),
+                degraded: true,
+                missing_shards: vec![1],
             },
             NetResponse::TopK {
                 hits: vec![
@@ -1063,10 +1124,14 @@ mod tests {
                     Hit { index: 9, distance: 0.75, label: Some(2) },
                 ],
                 trace: None,
+                degraded: true,
+                missing_shards: vec![0, 2],
             },
             NetResponse::TopK {
                 hits: vec![Hit { index: 3, distance: 0.625, label: None }],
                 trace: Some(sample_trace()),
+                degraded: false,
+                missing_shards: vec![],
             },
             NetResponse::Stats(WireStats {
                 requests: 10,
@@ -1412,6 +1477,8 @@ mod tests {
             distance: 1.0,
             label: None,
             trace: Some(sample_trace()),
+            degraded: false,
+            missing_shards: vec![],
         };
         if let NetResponse::Nn { trace: Some(t), .. } = &mut resp {
             t.hits.clear(); // keep the forged byte offset simple
@@ -1427,5 +1494,67 @@ mod tests {
         let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
         let err = decode_response(tag, &payload).unwrap_err().to_string();
         assert!(err.contains("stage tag"), "{err}");
+    }
+
+    #[test]
+    fn hostile_degraded_trailers_are_rejected() {
+        fn decode_nn(payload_writer: impl FnOnce(&mut ByteWriter)) -> Result<NetResponse> {
+            let mut p = ByteWriter::new();
+            p.usize(7); // index
+            p.f64(1.0); // distance
+            p.u8(0); // label: None
+            p.u8(0); // trace: None
+            payload_writer(&mut p);
+            let frame = encode_frame(TAG_NN_RESULT, &p.into_bytes());
+            let mut cursor = std::io::Cursor::new(&frame[..]);
+            let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+            decode_response(tag, &payload)
+        }
+
+        // A missing-shard count the frame cannot back is rejected
+        // before any allocation.
+        let err = decode_nn(|p| {
+            p.u8(1); // degraded
+            p.usize(1 << 60);
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("missing-shard count"), "{err}");
+
+        // Shards listed on a non-degraded result are contradictory.
+        let err = decode_nn(|p| {
+            p.u8(0); // not degraded
+            p.usize(1);
+            p.u64(2);
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("non-degraded"), "{err}");
+
+        // The shard list must be strictly ascending (canonical form).
+        let err = decode_nn(|p| {
+            p.u8(1); // degraded
+            p.usize(2);
+            p.u64(2);
+            p.u64(1);
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("ascending"), "{err}");
+
+        // A well-formed degraded trailer decodes.
+        let resp = decode_nn(|p| {
+            p.u8(1); // degraded
+            p.usize(1);
+            p.u64(2);
+        })
+        .unwrap();
+        match resp {
+            NetResponse::Nn { degraded, missing_shards, .. } => {
+                assert!(degraded);
+                assert_eq!(missing_shards, vec![2]);
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
     }
 }

@@ -512,10 +512,17 @@ fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
 
 fn engine_to_net(resp: Response, trace: Option<QueryTrace>) -> NetResponse {
     match resp {
-        Response::Nn { index, distance, label } => {
-            NetResponse::Nn { index, distance, label, trace }
+        Response::Nn { index, distance, label } => NetResponse::Nn {
+            index,
+            distance,
+            label,
+            trace,
+            degraded: false,
+            missing_shards: Vec::new(),
+        },
+        Response::TopK(hits) => {
+            NetResponse::TopK { hits, trace, degraded: false, missing_shards: Vec::new() }
         }
-        Response::TopK(hits) => NetResponse::TopK { hits, trace },
         Response::Error(msg) => NetResponse::Error(msg),
         // The wire vocabulary deliberately has no encode/pair-dist
         // verbs, so the engine cannot produce these for a net request.

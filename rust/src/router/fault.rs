@@ -1,0 +1,322 @@
+//! `FaultPlan` test harness: a TCP proxy that sits between the router
+//! and one shard and injects the failure modes the robustness tests
+//! need — delay, black-hole (accept but never answer), truncation
+//! (sever mid-frame), and mid-request connection kills.
+//!
+//! The proxy shapes only the upstream→client direction (the shard's
+//! responses); requests pass through untouched, so a shaped shard
+//! still *executes* queries — exactly the "slow or dying, not
+//! cleanly absent" behavior that distinguishes a timeout from a
+//! refused connect. Lives in the library (not `#[cfg(test)]`) so the
+//! loopback integration tests and the CI smoke can drive it; the
+//! serving-plane lints apply to it like any router code, so it is
+//! panic-free by construction.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::lock_unpoisoned;
+
+/// What the proxy does to each chunk of shard→router traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Relay faithfully.
+    Pass,
+    /// Relay after sleeping this long per chunk (a slow shard; the
+    /// router's read deadline turns this into a timeout failure).
+    Delay(Duration),
+    /// Swallow response bytes entirely (a hung shard: the connection
+    /// stays open, the router's read times out).
+    BlackHole,
+    /// Relay this many more bytes per connection, then sever both
+    /// sides (a torn frame: the router sees a decode-level transport
+    /// error, not a timeout).
+    CloseAfter(usize),
+}
+
+struct ProxyShared {
+    upstream: String,
+    mode: Mutex<FaultMode>,
+    stop: AtomicBool,
+    next_conn: AtomicU64,
+    /// Client/upstream stream clones per live relay pair, severable
+    /// from outside for the mid-request kill.
+    conns: Mutex<HashMap<u64, (TcpStream, TcpStream)>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ProxyShared {
+    fn sever_all(&self) {
+        for (client, upstream) in lock_unpoisoned(&self.conns).values() {
+            let _ = client.shutdown(Shutdown::Both);
+            let _ = upstream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// A running fault-injection proxy for one shard.
+pub struct FaultProxy {
+    shared: Arc<ProxyShared>,
+    local_addr: SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Listen on an ephemeral loopback port and forward to `upstream`.
+    pub fn start(upstream: &str) -> Result<FaultProxy> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("fault proxy: binding listener")?;
+        let local_addr = listener.local_addr().context("fault proxy: reading bound address")?;
+        let shared = Arc::new(ProxyShared {
+            upstream: upstream.to_string(),
+            mode: Mutex::new(FaultMode::Pass),
+            stop: AtomicBool::new(false),
+            next_conn: AtomicU64::new(0),
+            conns: Mutex::new(HashMap::new()),
+            threads: Mutex::new(Vec::new()),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(FaultProxy { shared, local_addr, accept_thread: Some(accept_thread) })
+    }
+
+    /// The address the router should use as this shard's address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Switch the failure mode; applies to in-flight and future
+    /// connections at their next relayed chunk.
+    pub fn set_mode(&self, mode: FaultMode) {
+        *lock_unpoisoned(&self.shared.mode) = mode;
+    }
+
+    /// Sever every live relay right now (the "shard killed
+    /// mid-request" injection). New connections still accept.
+    pub fn kill_connections(&self) {
+        self.shared.sever_all();
+    }
+
+    /// Stop accepting, sever everything, join relay threads. After
+    /// this the port refuses connects — the "shard process gone" state.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway self-connect.
+        let _ = TcpStream::connect_timeout(&self.local_addr, Duration::from_secs(1));
+        self.shared.sever_all();
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            lock_unpoisoned(&self.shared.threads).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ProxyShared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let client = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        let _ = client.set_nodelay(true);
+        let upstream = match TcpStream::connect(&shared.upstream) {
+            Ok(s) => s,
+            Err(_) => {
+                // Upstream gone: refuse by closing, like a dead shard.
+                let _ = client.shutdown(Shutdown::Both);
+                continue;
+            }
+        };
+        let _ = upstream.set_nodelay(true);
+        let id = shared.next_conn.fetch_add(1, Ordering::SeqCst);
+        if let (Ok(c), Ok(u)) = (client.try_clone(), upstream.try_clone()) {
+            lock_unpoisoned(&shared.conns).insert(id, (c, u));
+        }
+        let (c2u_from, c2u_to) = (client.try_clone(), upstream.try_clone());
+        let shaped_shared = Arc::clone(&shared);
+        let plain_shared = Arc::clone(&shared);
+        let mut threads = lock_unpoisoned(&shared.threads);
+        threads.retain(|t| !t.is_finished());
+        // Requests pass through unshaped…
+        if let (Ok(from), Ok(to)) = (c2u_from, c2u_to) {
+            threads.push(std::thread::spawn(move || {
+                relay(from, to, plain_shared, false, id)
+            }));
+        }
+        // …responses are shaped by the current mode.
+        threads.push(std::thread::spawn(move || {
+            relay(upstream, client, shaped_shared, true, id)
+        }));
+    }
+}
+
+/// Pump bytes `from` → `to`, applying the fault mode when `shaped`.
+/// Ends on EOF, error, or a severed stream; the conn registry entry is
+/// dropped by whichever direction finishes last.
+fn relay(mut from: TcpStream, mut to: TcpStream, shared: Arc<ProxyShared>, shaped: bool, id: u64) {
+    let mut buf = [0u8; 8192];
+    let mut close_budget: Option<usize> = None;
+    loop {
+        let n = match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        let mode = if shaped { *lock_unpoisoned(&shared.mode) } else { FaultMode::Pass };
+        match mode {
+            FaultMode::Pass => {
+                if to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+            FaultMode::Delay(d) => {
+                std::thread::sleep(d);
+                if to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+            FaultMode::BlackHole => {
+                // Swallow; keep reading so the upstream is not
+                // backpressured into noticing.
+            }
+            FaultMode::CloseAfter(limit) => {
+                let budget = close_budget.get_or_insert(limit);
+                let send = n.min(*budget);
+                if send > 0 && to.write_all(&buf[..send]).is_err() {
+                    break;
+                }
+                *budget -= send;
+                if *budget == 0 {
+                    let _ = to.shutdown(Shutdown::Both);
+                    let _ = from.shutdown(Shutdown::Both);
+                    break;
+                }
+            }
+        }
+    }
+    // Propagate the close: without this the other side would block on
+    // a half-dead pair forever.
+    let _ = to.shutdown(Shutdown::Both);
+    let _ = from.shutdown(Shutdown::Both);
+    lock_unpoisoned(&shared.conns).remove(&id);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo server: accepts one connection, echoes bytes back.
+    fn echo_server() -> (SocketAddr, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            while let Ok((mut stream, _)) = listener.accept() {
+                let mut buf = [0u8; 1024];
+                loop {
+                    match stream.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            if stream.write_all(&buf[..n]).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                // One connection per test is enough.
+                break;
+            }
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn pass_mode_relays_both_directions() {
+        let (addr, server) = echo_server();
+        let proxy = FaultProxy::start(&addr.to_string()).unwrap();
+        let mut client = TcpStream::connect(proxy.local_addr()).unwrap();
+        client.write_all(b"hello").unwrap();
+        let mut back = [0u8; 5];
+        client.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"hello");
+        drop(client);
+        proxy.stop();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn black_hole_swallows_responses_and_close_after_truncates() {
+        let (addr, server) = echo_server();
+        let proxy = FaultProxy::start(&addr.to_string()).unwrap();
+        proxy.set_mode(FaultMode::BlackHole);
+        let mut client = TcpStream::connect(proxy.local_addr()).unwrap();
+        client.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        client.write_all(b"swallowed").unwrap();
+        let mut buf = [0u8; 16];
+        // The echo never arrives: the read must time out.
+        assert!(client.read(&mut buf).is_err());
+
+        // Same connection, now truncating: 3 bytes arrive, then EOF.
+        proxy.set_mode(FaultMode::CloseAfter(3));
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        client.write_all(b"truncated").unwrap();
+        let mut got = Vec::new();
+        loop {
+            match client.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => got.extend_from_slice(&buf[..n]),
+            }
+        }
+        assert_eq!(got, b"tru");
+        drop(client);
+        proxy.stop();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn kill_connections_severs_mid_stream() {
+        let (addr, server) = echo_server();
+        let proxy = FaultProxy::start(&addr.to_string()).unwrap();
+        let mut client = TcpStream::connect(proxy.local_addr()).unwrap();
+        client.write_all(b"ping").unwrap();
+        let mut back = [0u8; 4];
+        client.read_exact(&mut back).unwrap();
+        proxy.kill_connections();
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        // The severed relay surfaces as EOF or reset, never a hang.
+        let mut buf = [0u8; 4];
+        match client.read(&mut buf) {
+            Ok(0) | Err(_) => {}
+            Ok(n) => panic!("expected severed stream, read {n} bytes"),
+        }
+        drop(client);
+        proxy.stop();
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,432 @@
+//! Supervised shard connections: per-shard health state machine,
+//! jittered exponential-backoff reconnects, half-open recovery, and
+//! the one-retry-per-request policy.
+//!
+//! The machine (`docs/serving-topology.md` has the full diagram):
+//!
+//! ```text
+//! Healthy --failure--> Degraded --N consecutive failures--> Down
+//!    ^                     |                                  |
+//!    +------success--------+        half-open probe succeeds  |
+//!    +-----------------------------------------------------—-+
+//! ```
+//!
+//! `Down` is a circuit breaker: requests skip the shard outright (it
+//! is reported missing immediately, costing the query nothing) until a
+//! jittered backoff deadline passes, at which point exactly one
+//! request or background probe is allowed through as the *half-open*
+//! trial. Success re-admits the shard; failure re-arms the breaker
+//! with a longer deadline.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::core::rng::Rng;
+use crate::net::client::{is_timeout_error, jittered_backoff, Client, ClientConfig};
+use crate::net::protocol::{NetRequest, NetResponse};
+
+use super::metrics::RouterMetrics;
+
+/// Health-policy knobs shared by every shard connection.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthConfig {
+    /// TCP connect deadline per dial.
+    pub connect_timeout: Duration,
+    /// Read/write deadline per frame (a breach is a *timeout* failure,
+    /// the retry for which counts as a hedge).
+    pub io_timeout: Duration,
+    /// Consecutive failures that open the breaker (`Down`).
+    pub failures_to_down: u32,
+    /// First half-open retry delay; doubles per failed trial.
+    pub base_backoff: Duration,
+    /// Half-open retry delay ceiling.
+    pub max_backoff: Duration,
+    /// Background probe cadence ([`super::RouterServer`]'s prober).
+    pub probe_interval: Duration,
+    /// Seed for the deterministic backoff jitter.
+    pub jitter_seed: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(10),
+            failures_to_down: 2,
+            base_backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_secs(5),
+            probe_interval: Duration::from_millis(500),
+            jitter_seed: 0xda7a_b0a7,
+        }
+    }
+}
+
+/// Rolling health of one shard, as exposed in the
+/// `pqdtw_router_shard_health` gauge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Last interaction succeeded.
+    Healthy,
+    /// At least one recent failure; still being tried on every request.
+    Degraded,
+    /// Breaker open: skipped until the half-open deadline.
+    Down,
+}
+
+impl ShardHealth {
+    /// Stable display name (log events, CLI output).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardHealth::Healthy => "healthy",
+            ShardHealth::Degraded => "degraded",
+            ShardHealth::Down => "down",
+        }
+    }
+
+    /// Gauge encoding: 0 healthy, 1 degraded, 2 down.
+    pub fn as_gauge(self) -> f64 {
+        match self {
+            ShardHealth::Healthy => 0.0,
+            ShardHealth::Degraded => 1.0,
+            ShardHealth::Down => 2.0,
+        }
+    }
+}
+
+/// The pure state machine, separated from the socket so the
+/// transition table is unit-testable without a network.
+#[derive(Debug)]
+pub(crate) struct HealthMachine {
+    state: ShardHealth,
+    consecutive_failures: u32,
+    failures_to_down: u32,
+    /// Failed half-open trials since the breaker opened (drives the
+    /// backoff exponent).
+    down_trials: u32,
+}
+
+impl HealthMachine {
+    pub(crate) fn new(failures_to_down: u32) -> Self {
+        HealthMachine {
+            state: ShardHealth::Healthy,
+            consecutive_failures: 0,
+            failures_to_down: failures_to_down.max(1),
+            down_trials: 0,
+        }
+    }
+
+    pub(crate) fn state(&self) -> ShardHealth {
+        self.state
+    }
+
+    /// Any successful interaction fully re-admits the shard.
+    pub(crate) fn on_success(&mut self) -> ShardHealth {
+        self.state = ShardHealth::Healthy;
+        self.consecutive_failures = 0;
+        self.down_trials = 0;
+        self.state
+    }
+
+    /// One failed interaction; returns the new state and, when the
+    /// breaker is (still) open, the backoff exponent for the next
+    /// half-open deadline.
+    pub(crate) fn on_failure(&mut self) -> (ShardHealth, Option<u32>) {
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        if self.consecutive_failures >= self.failures_to_down {
+            if self.state == ShardHealth::Down {
+                self.down_trials = self.down_trials.saturating_add(1);
+            }
+            self.state = ShardHealth::Down;
+            (self.state, Some(self.down_trials.saturating_add(1)))
+        } else {
+            self.state = ShardHealth::Degraded;
+            (self.state, None)
+        }
+    }
+}
+
+/// How one scatter leg ended.
+#[derive(Debug)]
+pub enum ShardOutcome {
+    /// A frame came back (possibly an application `Error` frame).
+    Ok(NetResponse),
+    /// Breaker open and not yet due for a half-open trial; the shard
+    /// was not contacted.
+    Skipped,
+    /// Transport failure after the retry budget (rendered message —
+    /// `anyhow::Error` is not `Clone` and the scatter joins threads).
+    Failed(String),
+}
+
+/// One supervised shard connection. All methods take `&mut self`; the
+/// router wraps each in a `Mutex` and scatters with one thread per
+/// shard.
+pub struct ShardConn {
+    shard_index: u64,
+    addr: String,
+    cfg: HealthConfig,
+    client: Option<Client>,
+    machine: HealthMachine,
+    rng: Rng,
+    /// Half-open deadline while the breaker is open.
+    next_trial_at: Option<Instant>,
+}
+
+impl ShardConn {
+    /// Supervision state for the shard at `addr` (dials lazily).
+    pub fn new(shard_index: u64, addr: String, cfg: HealthConfig) -> ShardConn {
+        // Distinct jitter stream per shard so breakers opened by one
+        // outage do not retry in lockstep.
+        let rng = Rng::new(cfg.jitter_seed ^ shard_index.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        ShardConn {
+            shard_index,
+            addr,
+            machine: HealthMachine::new(cfg.failures_to_down),
+            cfg,
+            client: None,
+            rng,
+            next_trial_at: None,
+        }
+    }
+
+    /// This shard's address (metrics labels).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Current health.
+    pub fn health(&self) -> ShardHealth {
+        self.machine.state()
+    }
+
+    fn client_config(&self) -> ClientConfig {
+        ClientConfig {
+            connect_timeout: self.cfg.connect_timeout,
+            io_timeout: self.cfg.io_timeout,
+        }
+    }
+
+    /// True while the breaker is open and the half-open deadline has
+    /// not passed.
+    fn breaker_blocks(&self, now: Instant) -> bool {
+        self.machine.state() == ShardHealth::Down
+            && self.next_trial_at.is_some_and(|at| now < at)
+    }
+
+    fn record_success(&mut self) {
+        self.machine.on_success();
+        self.next_trial_at = None;
+    }
+
+    fn record_failure(&mut self, now: Instant) {
+        let (_, backoff_exp) = self.machine.on_failure();
+        if let Some(exp) = backoff_exp {
+            self.next_trial_at = Some(
+                now + jittered_backoff(
+                    self.cfg.base_backoff,
+                    self.cfg.max_backoff,
+                    exp,
+                    &mut self.rng,
+                ),
+            );
+        }
+    }
+
+    /// One dial + round trip, no policy.
+    fn attempt(&mut self, req: &NetRequest) -> Result<NetResponse> {
+        if self.client.as_ref().map_or(true, Client::is_poisoned) {
+            self.client = Some(Client::connect(&self.addr, self.client_config())?);
+        }
+        match self.client.as_mut() {
+            Some(client) => client.roundtrip(req),
+            // Unreachable: assigned above. Degrade to an error rather
+            // than panic in serving code.
+            None => Err(anyhow::anyhow!("router: shard {} has no connection", self.shard_index)),
+        }
+    }
+
+    /// One request under the full policy: breaker check, dial, round
+    /// trip, and on transport failure one retry on a fresh connection
+    /// (a hedge when the failure was a timeout — the old connection
+    /// may still deliver a late reply, which poisoning discards).
+    pub fn request(&mut self, req: &NetRequest, metrics: &RouterMetrics) -> ShardOutcome {
+        let now = Instant::now();
+        if self.breaker_blocks(now) {
+            metrics.shard_skips.incr();
+            return ShardOutcome::Skipped;
+        }
+        let first_err = match self.attempt(req) {
+            Ok(resp) => {
+                self.record_success();
+                return ShardOutcome::Ok(resp);
+            }
+            Err(e) => e,
+        };
+        metrics.shard_failures.incr();
+        if is_timeout_error(&first_err) {
+            metrics.hedges.incr();
+        } else {
+            metrics.retries.incr();
+        }
+        // The failed connection is gone either way; retry exactly once
+        // on a fresh one. Queries are idempotent, so a duplicate
+        // execution on the shard is harmless.
+        self.client = None;
+        match self.attempt(req) {
+            Ok(resp) => {
+                self.record_success();
+                ShardOutcome::Ok(resp)
+            }
+            Err(retry_err) => {
+                self.client = None;
+                // Two strikes in one request: count both, so two failed
+                // requests open a `failures_to_down = 4` breaker just
+                // like four straight single failures would.
+                self.record_failure(now);
+                self.record_failure(now);
+                metrics.shard_failures.incr();
+                ShardOutcome::Failed(format!(
+                    "shard {} at {}: {first_err:#}; retry: {retry_err:#}",
+                    self.shard_index, self.addr
+                ))
+            }
+        }
+    }
+
+    /// One background Ping under the breaker policy (the half-open
+    /// trial for Down shards); returns the post-probe health.
+    pub fn probe(&mut self, metrics: &RouterMetrics) -> ShardHealth {
+        let now = Instant::now();
+        if self.breaker_blocks(now) {
+            return self.health();
+        }
+        metrics.probes.incr();
+        match self.attempt(&NetRequest::Ping) {
+            Ok(NetResponse::Pong) => self.record_success(),
+            Ok(_) | Err(_) => {
+                metrics.probe_failures.incr();
+                self.client = None;
+                self.record_failure(now);
+            }
+        }
+        self.health()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpListener;
+
+    #[test]
+    fn machine_walks_healthy_degraded_down_and_back() {
+        let mut m = HealthMachine::new(2);
+        assert_eq!(m.state(), ShardHealth::Healthy);
+        let (s, exp) = m.on_failure();
+        assert_eq!(s, ShardHealth::Degraded);
+        assert!(exp.is_none());
+        let (s, exp) = m.on_failure();
+        assert_eq!(s, ShardHealth::Down);
+        assert_eq!(exp, Some(1));
+        // Failed half-open trials stretch the backoff exponent.
+        let (s, exp) = m.on_failure();
+        assert_eq!(s, ShardHealth::Down);
+        assert_eq!(exp, Some(2));
+        assert_eq!(m.on_success(), ShardHealth::Healthy);
+        // Recovery resets the failure count: one new failure is
+        // Degraded again, not Down.
+        let (s, _) = m.on_failure();
+        assert_eq!(s, ShardHealth::Degraded);
+    }
+
+    #[test]
+    fn machine_with_threshold_one_skips_degraded() {
+        let mut m = HealthMachine::new(1);
+        let (s, exp) = m.on_failure();
+        assert_eq!(s, ShardHealth::Down);
+        assert_eq!(exp, Some(1));
+    }
+
+    fn test_cfg() -> HealthConfig {
+        HealthConfig {
+            connect_timeout: Duration::from_millis(300),
+            io_timeout: Duration::from_millis(300),
+            failures_to_down: 2,
+            base_backoff: Duration::from_millis(30),
+            max_backoff: Duration::from_millis(120),
+            probe_interval: Duration::from_millis(50),
+            jitter_seed: 7,
+        }
+    }
+
+    #[test]
+    fn unreachable_shard_opens_the_breaker_then_skips() {
+        // Bind-then-drop yields a port with nothing listening.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let metrics = RouterMetrics::new();
+        let mut conn = ShardConn::new(0, addr, test_cfg());
+        // One request = two failed attempts = breaker open.
+        match conn.request(&NetRequest::Ping, &metrics) {
+            ShardOutcome::Failed(msg) => assert!(msg.contains("shard 0"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(conn.health(), ShardHealth::Down);
+        // Immediately after opening, the half-open deadline blocks.
+        assert!(matches!(
+            conn.request(&NetRequest::Ping, &metrics),
+            ShardOutcome::Skipped
+        ));
+        assert_eq!(metrics.shard_skips.get(), 1);
+        assert!(metrics.shard_failures.get() >= 2);
+    }
+
+    #[test]
+    fn half_open_probe_readmits_a_recovered_shard() {
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let metrics = RouterMetrics::new();
+        let mut conn = ShardConn::new(1, addr.clone(), test_cfg());
+        let _ = conn.request(&NetRequest::Ping, &metrics);
+        assert_eq!(conn.health(), ShardHealth::Down);
+
+        // "Restart" the shard: a tiny Ping-answering server on the
+        // same port the breaker remembers.
+        let listener = TcpListener::bind(&addr).unwrap();
+        let server = std::thread::spawn(move || {
+            if let Ok((mut stream, _)) = listener.accept() {
+                let frame = crate::net::protocol::read_frame(
+                    &mut stream,
+                    crate::net::protocol::MAX_FRAME_BYTES,
+                );
+                if let Ok(Some((tag, _))) = frame {
+                    assert_eq!(tag, crate::net::protocol::TAG_PING);
+                }
+                let reply = crate::net::protocol::encode_response(&NetResponse::Pong);
+                let _ = crate::net::protocol::write_frame(&mut stream, &reply);
+                // Hold the connection until the client is done.
+                let mut scratch = [0u8; 16];
+                let _ = stream.read(&mut scratch);
+            }
+        });
+        // Wait out the half-open deadline, then probe until re-admitted
+        // (the first due probe should do it).
+        let mut state = conn.health();
+        for _ in 0..50 {
+            std::thread::sleep(Duration::from_millis(20));
+            state = conn.probe(&metrics);
+            if state == ShardHealth::Healthy {
+                break;
+            }
+        }
+        assert_eq!(state, ShardHealth::Healthy);
+        drop(conn);
+        server.join().unwrap();
+    }
+}

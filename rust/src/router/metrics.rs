@@ -1,0 +1,118 @@
+//! Router-plane counters and their `pqdtw_router_*` Prometheus
+//! families (rendered by [`super::Router::prometheus_text`], verbs
+//! documented in `docs/observability.md`).
+//!
+//! All counters are relaxed atomics: each is monotone and independent,
+//! so no cross-field ordering is needed — same discipline as
+//! [`crate::obs::ScanStats`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::prometheus::PromText;
+
+use super::health::ShardHealth;
+
+/// One monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    pub fn incr(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The router's counter set. Fields are public so the scatter path
+/// can bump them without a method per counter.
+#[derive(Debug, Default)]
+pub struct RouterMetrics {
+    /// Client requests the router answered (any frame kind).
+    pub requests: Counter,
+    /// Requests answered with an `Error` frame.
+    pub errors: Counter,
+    /// Responses flagged `degraded` (at least one shard missing).
+    pub degraded_responses: Counter,
+    /// Scatter legs that failed at the transport level (both the
+    /// first attempt and a failed retry count).
+    pub shard_failures: Counter,
+    /// Retries after a hard transport failure (refused, reset, torn
+    /// frame).
+    pub retries: Counter,
+    /// Retries after a read timeout — the shard may only be slow, so
+    /// the fresh-connection retry races the stalled one.
+    pub hedges: Counter,
+    /// Scatter legs skipped because the shard's breaker was open.
+    pub shard_skips: Counter,
+    /// Background health probes sent.
+    pub probes: Counter,
+    /// Background health probes that failed.
+    pub probe_failures: Counter,
+}
+
+impl RouterMetrics {
+    /// Fresh zeroed counter set.
+    pub fn new() -> Self {
+        RouterMetrics::default()
+    }
+
+    /// Render the `pqdtw_router_*` families; `shards` supplies the
+    /// per-shard health gauge rows as `(index, addr, health)`.
+    pub fn render_prometheus(&self, p: &mut PromText, shards: &[(u64, String, ShardHealth)]) {
+        p.counter("pqdtw_router_requests_total", self.requests.get());
+        p.counter("pqdtw_router_errors_total", self.errors.get());
+        p.counter("pqdtw_router_degraded_responses_total", self.degraded_responses.get());
+        p.counter("pqdtw_router_shard_failures_total", self.shard_failures.get());
+        p.counter("pqdtw_router_retries_total", self.retries.get());
+        p.counter("pqdtw_router_hedges_total", self.hedges.get());
+        p.counter("pqdtw_router_shard_skips_total", self.shard_skips.get());
+        p.counter("pqdtw_router_probes_total", self.probes.get());
+        p.counter("pqdtw_router_probe_failures_total", self.probe_failures.get());
+        p.gauge("pqdtw_router_shards", shards.len() as f64);
+        p.family("pqdtw_router_shard_health", "gauge");
+        for (index, addr, health) in shards {
+            let shard = index.to_string();
+            p.sample(
+                "pqdtw_router_shard_health",
+                &[("shard", shard.as_str()), ("addr", addr.as_str())],
+                health.as_gauge(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::prometheus::validate_exposition;
+
+    #[test]
+    fn exposition_is_well_formed_and_carries_every_family() {
+        let m = RouterMetrics::new();
+        m.requests.incr();
+        m.requests.incr();
+        m.hedges.incr();
+        m.degraded_responses.incr();
+        let shards = vec![
+            (0u64, "127.0.0.1:7001".to_string(), ShardHealth::Healthy),
+            (1u64, "127.0.0.1:7002".to_string(), ShardHealth::Down),
+        ];
+        let mut p = PromText::new();
+        m.render_prometheus(&mut p, &shards);
+        let text = p.finish();
+        validate_exposition(&text).expect("router exposition must validate");
+        assert!(text.contains("pqdtw_router_requests_total 2\n"));
+        assert!(text.contains("pqdtw_router_hedges_total 1\n"));
+        assert!(text.contains("pqdtw_router_degraded_responses_total 1\n"));
+        assert!(text.contains("pqdtw_router_shards 2\n"));
+        assert!(text
+            .contains("pqdtw_router_shard_health{shard=\"0\",addr=\"127.0.0.1:7001\"} 0\n"));
+        assert!(text
+            .contains("pqdtw_router_shard_health{shard=\"1\",addr=\"127.0.0.1:7002\"} 2\n"));
+    }
+}

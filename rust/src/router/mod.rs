@@ -1,0 +1,553 @@
+//! `router` — fault-tolerant scatter-gather serving over shard
+//! servers: one router process fans each query out to N `pqdtw serve`
+//! shards over the wire protocol and merges the replies through the
+//! same `(distance, index)` total order the engine uses, so a
+//! full-health routed answer is **bit-identical** to the unsharded
+//! scan (see `docs/serving-topology.md`).
+//!
+//! The shard split is `id % n` at build time (`build-index --shard
+//! i/n`): every shard trains the *same* quantizer on the full dataset,
+//! encodes only its own rows, and stores its global-id mapping, so the
+//! hits each shard returns already carry database-global indices and
+//! the merge is a pure order-preserving k-way selection.
+//!
+//! Robustness is the point, not an afterthought:
+//!
+//! - [`health`] — each shard connection is supervised by a
+//!   `Healthy → Degraded → Down` state machine fed by in-band failures
+//!   and background Ping probes, with jittered exponential backoff and
+//!   half-open recovery probes for Down shards.
+//! - per-request policy — idempotent queries are retried once on a
+//!   fresh connection (a retry after a read timeout is a *hedge*:
+//!   the shard may be slow, not dead); after that the router either
+//!   fails the request (`--require-full`) or answers with what the
+//!   surviving shards returned, flagged `degraded` with the missing
+//!   shard list (the wire v4 trailer).
+//! - [`metrics`] — `pqdtw_router_*` Prometheus families: per-shard
+//!   health gauge, retries, hedges, degraded responses, probe
+//!   counters.
+//! - [`fault`] — a fault-injection proxy that can delay, black-hole,
+//!   truncate, or sever a shard's traffic; the loopback integration
+//!   tests drive every failure mode through it.
+//!
+//! Std-only like the rest of the serving plane (`std::net` + threads;
+//! `docs/DESIGN.md` §3).
+
+// rustc-side twin of the xtask no-panic-in-serving rule: router code
+// must propagate errors, never unwrap. Test code is exempt on purpose.
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
+
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::Hit;
+use crate::net::protocol::{NetRequest, NetResponse, WireStats};
+use crate::obs::log::JsonLogger;
+use crate::obs::prometheus::PromText;
+
+pub mod fault;
+pub mod health;
+pub mod metrics;
+pub mod server;
+
+pub use fault::{FaultMode, FaultProxy};
+pub use health::{HealthConfig, ShardConn, ShardHealth, ShardOutcome};
+pub use metrics::RouterMetrics;
+pub use server::{RouterRunSummary, RouterServer, RouterServerConfig};
+
+/// Scatter-gather policy knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Shard server addresses; position is the shard index, so the
+    /// list must match the `--shard i/n` split order.
+    pub shards: Vec<String>,
+    /// Strict mode: fail any query a shard cannot answer instead of
+    /// returning a degraded partial result.
+    pub require_full: bool,
+    /// Per-shard connect/read deadlines and health thresholds.
+    pub health: HealthConfig,
+}
+
+impl RouterConfig {
+    /// A router over `shards` with default health policy.
+    pub fn new(shards: Vec<String>) -> Self {
+        RouterConfig { shards, require_full: false, health: HealthConfig::default() }
+    }
+}
+
+/// The deterministic hit order shared by the engine's scans and the
+/// router's merge: ascending distance (IEEE-754 total order, so NaN
+/// sorts deterministically too), ties broken by ascending global
+/// index.
+pub fn hit_order(a: &Hit, b: &Hit) -> std::cmp::Ordering {
+    a.distance.total_cmp(&b.distance).then(a.index.cmp(&b.index))
+}
+
+/// Merge per-shard top-k lists into the global top-k. Because every
+/// hit carries its database-global index and every shard saw the same
+/// quantizer, this equals the unsharded scan's answer exactly when all
+/// shards contribute.
+pub fn merge_topk(per_shard: Vec<Vec<Hit>>, k: usize) -> Vec<Hit> {
+    let mut all: Vec<Hit> = per_shard.into_iter().flatten().collect();
+    all.sort_by(hit_order);
+    all.truncate(k);
+    all
+}
+
+/// Merge per-shard 1-NN winners into the global winner (`None` when no
+/// shard contributed a hit).
+pub fn merge_nn(per_shard: Vec<Hit>) -> Option<Hit> {
+    per_shard.into_iter().min_by(hit_order)
+}
+
+/// Aggregate per-shard stats frames into one fleet view: counters sum,
+/// means weight by request count, percentiles take the fleet-worst
+/// (max), and the index header comes from the first reporting shard
+/// with `n_items` summed across the fleet.
+pub fn aggregate_stats(per_shard: &[WireStats]) -> Option<WireStats> {
+    let first = per_shard.first()?;
+    let mut out = first.clone();
+    out.n_items = per_shard.iter().map(|s| s.n_items).sum();
+    out.requests = per_shard.iter().map(|s| s.requests).sum();
+    out.errors = per_shard.iter().map(|s| s.errors).sum();
+    out.batches = per_shard.iter().map(|s| s.batches).sum();
+    out.mean_batch_size = weighted_mean(per_shard.iter().map(|s| (s.batches, s.mean_batch_size)));
+    out.mean_latency_us =
+        weighted_mean(per_shard.iter().map(|s| (s.requests, s.mean_latency_us)));
+    out.p50_us = per_shard.iter().map(|s| s.p50_us).max().unwrap_or(0);
+    out.p99_us = per_shard.iter().map(|s| s.p99_us).max().unwrap_or(0);
+    for (ci, class) in out.per_class.iter_mut().enumerate() {
+        let rows: Vec<_> = per_shard.iter().filter_map(|s| s.per_class.get(ci)).collect();
+        class.requests = rows.iter().map(|c| c.requests).sum();
+        class.mean_latency_us =
+            weighted_mean(rows.iter().map(|c| (c.requests, c.mean_latency_us)));
+        class.p50_us = rows.iter().map(|c| c.p50_us).max().unwrap_or(0);
+        class.p99_us = rows.iter().map(|c| c.p99_us).max().unwrap_or(0);
+    }
+    for (si, stage) in out.per_stage.iter_mut().enumerate() {
+        let rows: Vec<_> = per_shard.iter().filter_map(|s| s.per_stage.get(si)).collect();
+        stage.count = rows.iter().map(|s| s.count).sum();
+        stage.mean_us = weighted_mean(rows.iter().map(|s| (s.count, s.mean_us)));
+        stage.p50_us = rows.iter().map(|s| s.p50_us).max().unwrap_or(0);
+        stage.p99_us = rows.iter().map(|s| s.p99_us).max().unwrap_or(0);
+    }
+    out.scan.items_scanned = per_shard.iter().map(|s| s.scan.items_scanned).sum();
+    out.scan.items_abandoned = per_shard.iter().map(|s| s.scan.items_abandoned).sum();
+    out.scan.blocks_skipped = per_shard.iter().map(|s| s.scan.blocks_skipped).sum();
+    out.scan.lut_collapses = per_shard.iter().map(|s| s.scan.lut_collapses).sum();
+    out.scan.shard_time_us = per_shard.iter().map(|s| s.scan.shard_time_us).sum();
+    out.scan.shards = per_shard.iter().map(|s| s.scan.shards).sum();
+    // Fleet-minimum uptime: "how long has the weakest member been up"
+    // is the operationally honest number after a shard restart.
+    out.uptime_s = per_shard.iter().map(|s| s.uptime_s).min().unwrap_or(0);
+    out.version = env!("CARGO_PKG_VERSION").to_string();
+    Some(out)
+}
+
+fn weighted_mean(rows: impl Iterator<Item = (u64, f64)>) -> f64 {
+    let (mut weight, mut sum) = (0u64, 0.0f64);
+    for (w, mean) in rows {
+        weight += w;
+        sum += w as f64 * mean;
+    }
+    if weight == 0 {
+        0.0
+    } else {
+        sum / weight as f64
+    }
+}
+
+/// Lock a mutex, recovering from poison (same rationale as the net
+/// server: a panicking peer thread must not wedge the router).
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The scatter-gather core: supervised shard connections plus the
+/// request policy. [`RouterServer`] wraps this in a TCP accept loop;
+/// tests drive it directly.
+pub struct Router {
+    cfg: RouterConfig,
+    shards: Vec<Mutex<ShardConn>>,
+    metrics: RouterMetrics,
+    logger: Arc<JsonLogger>,
+    started: Instant,
+}
+
+impl Router {
+    /// Build the supervision state for `cfg.shards` (no connections are
+    /// opened yet; the first request or probe dials lazily).
+    pub fn new(cfg: RouterConfig, logger: Arc<JsonLogger>) -> Result<Router> {
+        ensure!(!cfg.shards.is_empty(), "router: need at least one shard address");
+        let shards = cfg
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| Mutex::new(ShardConn::new(i as u64, addr.clone(), cfg.health)))
+            .collect();
+        Ok(Router { cfg, shards, metrics: RouterMetrics::new(), logger, started: Instant::now() })
+    }
+
+    /// Shard count this router scatters over.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Router-level counters (shared with the serving loop).
+    pub fn metrics(&self) -> &RouterMetrics {
+        &self.metrics
+    }
+
+    /// Current per-shard health, by shard index.
+    pub fn health(&self) -> Vec<ShardHealth> {
+        self.shards.iter().map(|s| lock_unpoisoned(s).health()).collect()
+    }
+
+    /// Send `req` to every shard in parallel; returns per-shard
+    /// outcomes indexed by shard.
+    fn scatter(&self, req: &NetRequest) -> Vec<ShardOutcome> {
+        let mut outcomes: Vec<ShardOutcome> = Vec::with_capacity(self.shards.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|shard| scope.spawn(move || lock_unpoisoned(shard).request(req, &self.metrics)))
+                .collect();
+            for (i, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(outcome) => outcomes.push(outcome),
+                    // A panicking scatter thread counts as a failed
+                    // shard, not a dead router.
+                    Err(_) => outcomes.push(ShardOutcome::Failed(format!(
+                        "router: scatter worker for shard {i} panicked"
+                    ))),
+                }
+            }
+        });
+        outcomes
+    }
+
+    /// Probe every shard once (the background prober calls this on its
+    /// interval): Down shards get their half-open recovery attempt,
+    /// live shards get a liveness check.
+    pub fn probe_all(&self) {
+        for (i, shard) in self.shards.iter().enumerate() {
+            let mut conn = lock_unpoisoned(shard);
+            let before = conn.health();
+            let after = conn.probe(&self.metrics);
+            if before != after {
+                self.logger.event(
+                    "shard_health",
+                    &[
+                        ("shard", (i as u64).into()),
+                        ("from", before.name().into()),
+                        ("to", after.name().into()),
+                    ],
+                );
+            }
+        }
+    }
+
+    /// Answer one decoded client request. Everything is answered
+    /// inline: the router holds no engine, so there is nothing to
+    /// batch.
+    pub fn dispatch(&self, req: NetRequest) -> NetResponse {
+        self.metrics.requests.incr();
+        let resp = self.dispatch_inner(req);
+        if matches!(resp, NetResponse::Error(_)) {
+            self.metrics.errors.incr();
+        }
+        resp
+    }
+
+    fn dispatch_inner(&self, req: NetRequest) -> NetResponse {
+        match req {
+            // The router answers for its own liveness; shard liveness
+            // is the prober's job and is visible in the health gauge.
+            NetRequest::Ping => NetResponse::Pong,
+            NetRequest::MetricsText => NetResponse::MetricsText(self.prometheus_text()),
+            NetRequest::Shutdown => NetResponse::ShutdownAck,
+            NetRequest::Stats => self.routed_stats(),
+            NetRequest::Nn { series, mode, nprobe, request_id, .. } => {
+                // Traces are per-shard artifacts with no sound merge;
+                // the routed query always runs untraced (documented in
+                // docs/serving-topology.md).
+                let fwd = NetRequest::Nn { series, mode, nprobe, request_id, trace: false };
+                self.routed_nn(&fwd)
+            }
+            NetRequest::TopK { series, k, mode, nprobe, rerank, request_id, .. } => {
+                let fwd = NetRequest::TopK {
+                    series,
+                    k,
+                    mode,
+                    nprobe,
+                    rerank,
+                    request_id,
+                    trace: false,
+                };
+                self.routed_topk(&fwd, k)
+            }
+            NetRequest::JobCreate { .. }
+            | NetRequest::JobStatus { .. }
+            | NetRequest::JobEvents { .. }
+            | NetRequest::JobCancel { .. }
+            | NetRequest::JobResult { .. } => NetResponse::Error(
+                "job plane is not routed: submit jobs to a shard server directly".into(),
+            ),
+        }
+    }
+
+    /// Split scatter outcomes into in-shape replies and missing shards.
+    /// A shard that answered with an application `Error` frame is
+    /// missing *unless every reachable shard erred* — then the error is
+    /// about the query itself (wrong length, bad k) and is propagated
+    /// verbatim instead of being dressed up as an outage.
+    fn gather(
+        &self,
+        outcomes: Vec<ShardOutcome>,
+    ) -> std::result::Result<(Vec<(u64, NetResponse)>, Vec<u64>), NetResponse> {
+        let mut replies = Vec::new();
+        let mut missing = Vec::new();
+        let mut app_errors = Vec::new();
+        for (i, outcome) in outcomes.into_iter().enumerate() {
+            let shard = i as u64;
+            match outcome {
+                ShardOutcome::Ok(NetResponse::Error(msg)) => app_errors.push((shard, msg)),
+                ShardOutcome::Ok(resp) => replies.push((shard, resp)),
+                ShardOutcome::Skipped => missing.push(shard),
+                ShardOutcome::Failed(err) => {
+                    self.logger.event(
+                        "shard_failed",
+                        &[("shard", shard.into()), ("error", err.clone().into())],
+                    );
+                    missing.push(shard);
+                }
+            }
+        }
+        if replies.is_empty() {
+            if let Some((_, msg)) = app_errors.into_iter().next() {
+                return Err(NetResponse::Error(msg));
+            }
+            return Err(NetResponse::Error(format!(
+                "router: no shard available ({} down/unreachable)",
+                missing.len()
+            )));
+        }
+        missing.extend(app_errors.into_iter().map(|(shard, _)| shard));
+        missing.sort_unstable();
+        if self.cfg.require_full && !missing.is_empty() {
+            return Err(NetResponse::Error(format!(
+                "router: {} of {} shards unavailable (require-full): missing {missing:?}",
+                missing.len(),
+                self.shards.len()
+            )));
+        }
+        if !missing.is_empty() {
+            self.metrics.degraded_responses.incr();
+            self.logger.event(
+                "degraded_response",
+                &[("missing", format!("{missing:?}").into())],
+            );
+        }
+        Ok((replies, missing))
+    }
+
+    fn routed_nn(&self, fwd: &NetRequest) -> NetResponse {
+        let (replies, missing) = match self.gather(self.scatter(fwd)) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let mut winners = Vec::with_capacity(replies.len());
+        for (shard, resp) in replies {
+            match resp {
+                NetResponse::Nn { index, distance, label, .. } => {
+                    winners.push(Hit { index, distance, label });
+                }
+                other => {
+                    return NetResponse::Error(format!(
+                        "router: shard {shard} answered NN with {other:?}"
+                    ))
+                }
+            }
+        }
+        match merge_nn(winners) {
+            Some(best) => NetResponse::Nn {
+                index: best.index,
+                distance: best.distance,
+                label: best.label,
+                trace: None,
+                degraded: !missing.is_empty(),
+                missing_shards: missing,
+            },
+            None => NetResponse::Error("router: no shard returned a neighbor".into()),
+        }
+    }
+
+    fn routed_topk(&self, fwd: &NetRequest, k: usize) -> NetResponse {
+        let (replies, missing) = match self.gather(self.scatter(fwd)) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let mut per_shard = Vec::with_capacity(replies.len());
+        for (shard, resp) in replies {
+            match resp {
+                NetResponse::TopK { hits, .. } => per_shard.push(hits),
+                other => {
+                    return NetResponse::Error(format!(
+                        "router: shard {shard} answered TopK with {other:?}"
+                    ))
+                }
+            }
+        }
+        NetResponse::TopK {
+            hits: merge_topk(per_shard, k),
+            trace: None,
+            degraded: !missing.is_empty(),
+            missing_shards: missing,
+        }
+    }
+
+    fn routed_stats(&self) -> NetResponse {
+        let (replies, _missing) = match self.gather(self.scatter(&NetRequest::Stats)) {
+            Ok(v) => v,
+            Err(resp) => return resp,
+        };
+        let mut stats = Vec::with_capacity(replies.len());
+        for (shard, resp) in replies {
+            match resp {
+                NetResponse::Stats(s) => stats.push(s),
+                other => {
+                    return NetResponse::Error(format!(
+                        "router: shard {shard} answered Stats with {other:?}"
+                    ))
+                }
+            }
+        }
+        match aggregate_stats(&stats) {
+            Some(s) => NetResponse::Stats(s),
+            None => NetResponse::Error("router: no shard reported stats".into()),
+        }
+    }
+
+    /// The router's own Prometheus exposition (`pqdtw_router_*`): it
+    /// deliberately does *not* proxy shard metrics — scrape the shards
+    /// directly for engine counters.
+    pub fn prometheus_text(&self) -> String {
+        let mut p = PromText::new();
+        let healths: Vec<(u64, String, ShardHealth)> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let conn = lock_unpoisoned(s);
+                (i as u64, conn.addr().to_string(), conn.health())
+            })
+            .collect();
+        self.metrics.render_prometheus(&mut p, &healths);
+        p.gauge("pqdtw_router_uptime_seconds", self.started.elapsed().as_secs_f64());
+        p.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hit(index: usize, distance: f64) -> Hit {
+        Hit { index, distance, label: None }
+    }
+
+    #[test]
+    fn merge_topk_is_the_global_order() {
+        let shard0 = vec![hit(0, 0.5), hit(3, 0.75), hit(6, 2.0)];
+        let shard1 = vec![hit(1, 0.25), hit(4, 0.75), hit(7, 0.75)];
+        let shard2 = vec![hit(2, 3.0)];
+        let merged = merge_topk(vec![shard0, shard1, shard2], 4);
+        let got: Vec<(usize, f64)> = merged.iter().map(|h| (h.index, h.distance)).collect();
+        // Ties at 0.75 resolve by ascending global index: 3, 4, 7.
+        assert_eq!(got, vec![(1, 0.25), (0, 0.5), (3, 0.75), (4, 0.75)]);
+    }
+
+    #[test]
+    fn merge_topk_truncates_and_handles_empty_shards() {
+        assert!(merge_topk(vec![], 3).is_empty());
+        assert!(merge_topk(vec![vec![], vec![]], 3).is_empty());
+        let merged = merge_topk(vec![vec![hit(5, 1.0)], vec![]], 3);
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged[0].index, 5);
+    }
+
+    #[test]
+    fn merge_order_is_total_under_nan() {
+        // total_cmp sorts +NaN above +inf, so a NaN distance cannot
+        // shadow a finite winner and the merge stays deterministic.
+        let merged = merge_topk(
+            vec![vec![hit(0, f64::NAN)], vec![hit(1, f64::INFINITY)], vec![hit(2, 1.0)]],
+            3,
+        );
+        let order: Vec<usize> = merged.iter().map(|h| h.index).collect();
+        assert_eq!(order, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn merge_nn_breaks_ties_by_index() {
+        let best = merge_nn(vec![hit(9, 0.5), hit(2, 0.5), hit(4, 1.0)]).unwrap();
+        assert_eq!(best.index, 2);
+        assert!(merge_nn(vec![]).is_none());
+    }
+
+    #[test]
+    fn aggregate_stats_sums_counts_and_weights_means() {
+        use crate::net::protocol::WireClassStats;
+        let mut a = WireStats {
+            requests: 10,
+            errors: 1,
+            batches: 5,
+            mean_batch_size: 2.0,
+            mean_latency_us: 100.0,
+            p50_us: 80,
+            p99_us: 200,
+            per_class: vec![WireClassStats {
+                class: 0,
+                name: "ping".into(),
+                requests: 10,
+                mean_latency_us: 100.0,
+                p50_us: 80,
+                p99_us: 200,
+            }],
+            per_stage: vec![],
+            scan: Default::default(),
+            uptime_s: 50,
+            version: "x".into(),
+            n_items: 100,
+            n_subspaces: 4,
+            codebook_size: 8,
+            series_len: 64,
+            window_frac: 0.1,
+            coarse_metric: "dtw".into(),
+            nlist: None,
+        };
+        a.scan.items_scanned = 7;
+        let mut b = a.clone();
+        b.requests = 30;
+        b.mean_latency_us = 200.0;
+        b.p99_us = 400;
+        b.n_items = 28;
+        b.uptime_s = 9;
+        b.per_class[0].requests = 30;
+        b.per_class[0].mean_latency_us = 200.0;
+        let agg = aggregate_stats(&[a, b]).unwrap();
+        assert_eq!(agg.requests, 40);
+        assert_eq!(agg.errors, 2);
+        assert_eq!(agg.n_items, 128);
+        assert_eq!(agg.p99_us, 400);
+        assert_eq!(agg.uptime_s, 9);
+        assert_eq!(agg.scan.items_scanned, 14);
+        // 10 × 100 + 30 × 200 over 40 requests.
+        assert!((agg.mean_latency_us - 175.0).abs() < 1e-9);
+        assert!((agg.per_class[0].mean_latency_us - 175.0).abs() < 1e-9);
+        assert!(aggregate_stats(&[]).is_none());
+    }
+}

@@ -1,0 +1,357 @@
+//! The router's TCP front end: the same wire protocol as a shard
+//! server, so existing clients (`query --connect`, `stats --connect`)
+//! point at a router unchanged; plus the background prober thread that
+//! drives half-open recovery while no queries are flowing.
+//!
+//! Unlike [`crate::net::server::NetServer`] there is no service or
+//! batcher behind this listener — every reply is produced inline by
+//! [`Router::dispatch`], whose scatter threads do the waiting — so a
+//! connection is one thread doing strict read/dispatch/write
+//! alternation, and per-connection ordering is trivial.
+//!
+//! Shutdown semantics: a `Shutdown` frame stops the *router only*.
+//! Shard servers keep running and must be drained individually — the
+//! router does not own their lifecycle (`docs/serving-topology.md`).
+
+use std::collections::HashMap;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::net::protocol::{self, NetRequest, NetResponse};
+use crate::obs::log::JsonLogger;
+
+use super::{lock_unpoisoned, Router, RouterConfig};
+
+/// Listener-side limits (the scatter policy lives in [`RouterConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct RouterServerConfig {
+    /// Maximum concurrent client connections.
+    pub max_connections: usize,
+    /// Per-frame payload ceiling for incoming requests.
+    pub max_frame_bytes: usize,
+    /// Write timeout per response frame.
+    pub write_timeout: Duration,
+}
+
+impl Default for RouterServerConfig {
+    fn default() -> Self {
+        RouterServerConfig {
+            max_connections: 64,
+            max_frame_bytes: protocol::MAX_FRAME_BYTES,
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+struct Shared {
+    router: Router,
+    cfg: RouterServerConfig,
+    logger: Arc<JsonLogger>,
+    local_addr: SocketAddr,
+    stop: AtomicBool,
+    active: AtomicUsize,
+    next_conn: AtomicU64,
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+    done: (Mutex<bool>, Condvar),
+}
+
+impl Shared {
+    /// Begin the drain exactly once (same shape as the net server):
+    /// stop accepting, wake the accept loop, half-close connections,
+    /// wake the prober, release [`RouterServer::wait`].
+    fn trigger(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let mut wake = self.local_addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        for stream in lock_unpoisoned(&self.conns).values() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        let (lock, cv) = &self.done;
+        *lock_unpoisoned(lock) = true;
+        cv.notify_all();
+    }
+}
+
+/// Final counter totals [`RouterServer::wait`] hands back for the
+/// CLI's shutdown summary line.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterRunSummary {
+    /// Client requests answered.
+    pub requests: u64,
+    /// Requests answered with an `Error` frame.
+    pub errors: u64,
+    /// Responses flagged degraded.
+    pub degraded_responses: u64,
+    /// Hard-failure retries.
+    pub retries: u64,
+    /// Timeout-driven retries.
+    pub hedges: u64,
+}
+
+/// A running scatter-gather router. Dropping it (or calling
+/// [`RouterServer::shutdown`]) drains connections, stops the prober,
+/// and joins every thread.
+pub struct RouterServer {
+    shared: Arc<Shared>,
+    accept_thread: Option<JoinHandle<()>>,
+    probe_thread: Option<JoinHandle<()>>,
+}
+
+impl RouterServer {
+    /// Bind `addr` and start routing over `cfg.shards`.
+    pub fn start(addr: &str, cfg: RouterConfig, srv: RouterServerConfig) -> Result<RouterServer> {
+        RouterServer::start_logged(addr, cfg, srv, Arc::new(JsonLogger::disabled()))
+    }
+
+    /// [`RouterServer::start`] with a structured event logger
+    /// (`serve --router --log-json`).
+    pub fn start_logged(
+        addr: &str,
+        cfg: RouterConfig,
+        srv: RouterServerConfig,
+        logger: Arc<JsonLogger>,
+    ) -> Result<RouterServer> {
+        let probe_interval = cfg.health.probe_interval;
+        let router = Router::new(cfg, Arc::clone(&logger))?;
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("router: binding {addr}"))?;
+        let local_addr = listener.local_addr().context("router: reading bound address")?;
+        logger.event(
+            "router_start",
+            &[
+                ("addr", local_addr.to_string().into()),
+                ("shards", (router.n_shards() as u64).into()),
+            ],
+        );
+        let shared = Arc::new(Shared {
+            router,
+            cfg: srv,
+            logger,
+            local_addr,
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            next_conn: AtomicU64::new(0),
+            conns: Mutex::new(HashMap::new()),
+            conn_threads: Mutex::new(Vec::new()),
+            done: (Mutex::new(false), Condvar::new()),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::spawn(move || accept_loop(listener, accept_shared));
+        let probe_shared = Arc::clone(&shared);
+        let probe_thread =
+            std::thread::spawn(move || probe_loop(probe_shared, probe_interval));
+        Ok(RouterServer {
+            shared,
+            accept_thread: Some(accept_thread),
+            probe_thread: Some(probe_thread),
+        })
+    }
+
+    /// The address the router actually bound (resolves `:0` ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    /// The scatter core (tests inspect health and metrics through it).
+    pub fn router(&self) -> &Router {
+        &self.shared.router
+    }
+
+    /// Block until a client's `Shutdown` frame stops the router, then
+    /// drain, join every thread, and report the final counter totals.
+    pub fn wait(mut self) -> RouterRunSummary {
+        {
+            let (lock, cv) = &self.shared.done;
+            let mut done = lock_unpoisoned(lock);
+            while !*done {
+                done = cv.wait(done).unwrap_or_else(PoisonError::into_inner);
+            }
+        }
+        self.finish();
+        let m = self.shared.router.metrics();
+        RouterRunSummary {
+            requests: m.requests.get(),
+            errors: m.errors.get(),
+            degraded_responses: m.degraded_responses.get(),
+            retries: m.retries.get(),
+            hedges: m.hedges.get(),
+        }
+    }
+
+    /// Stop the router from this side.
+    pub fn shutdown(mut self) {
+        self.shared.trigger();
+        self.finish();
+    }
+
+    fn finish(&mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.probe_thread.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            lock_unpoisoned(&self.shared.conn_threads).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RouterServer {
+    fn drop(&mut self) {
+        self.shared.trigger();
+        self.finish();
+    }
+}
+
+/// Background prober: probes every shard on the configured cadence
+/// (half-open trials for Down shards, liveness checks otherwise),
+/// sleeping on the done condvar so shutdown interrupts it promptly.
+fn probe_loop(shared: Arc<Shared>, interval: Duration) {
+    let interval = interval.max(Duration::from_millis(10));
+    loop {
+        {
+            let (lock, cv) = &shared.done;
+            let done = lock_unpoisoned(lock);
+            // A spurious wakeup just probes early; that is harmless.
+            let (done, _) =
+                cv.wait_timeout(done, interval).unwrap_or_else(PoisonError::into_inner);
+            if *done {
+                return;
+            }
+        }
+        shared.router.probe_all();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+        if shared.active.load(Ordering::SeqCst) >= shared.cfg.max_connections {
+            let mut stream = stream;
+            let frame = protocol::encode_response(&NetResponse::Error(format!(
+                "router at its {}-connection capacity",
+                shared.cfg.max_connections
+            )));
+            let _ = protocol::write_frame(&mut stream, &frame);
+            let _ = stream.shutdown(Shutdown::Both);
+            continue;
+        }
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        let id = shared.next_conn.fetch_add(1, Ordering::SeqCst);
+        if shared.logger.is_enabled() {
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "unknown".into());
+            shared
+                .logger
+                .event("conn_open", &[("conn", id.into()), ("peer", peer.into())]);
+        }
+        {
+            // Same registration race discipline as the net server: a
+            // concurrent trigger either sees this connection or its
+            // stop store is visible here.
+            let mut conns = lock_unpoisoned(&shared.conns);
+            if let Ok(clone) = stream.try_clone() {
+                conns.insert(id, clone);
+            }
+            if shared.stop.load(Ordering::SeqCst) {
+                let _ = stream.shutdown(Shutdown::Read);
+            }
+        }
+        let conn_shared = Arc::clone(&shared);
+        let handle = std::thread::spawn(move || handle_connection(stream, id, conn_shared));
+        let mut threads = lock_unpoisoned(&shared.conn_threads);
+        threads.retain(|t| !t.is_finished());
+        threads.push(handle);
+    }
+}
+
+fn handle_connection(stream: TcpStream, id: u64, shared: Arc<Shared>) {
+    let saw_shutdown = serve_connection(&stream, &shared);
+    lock_unpoisoned(&shared.conns).remove(&id);
+    shared.logger.event("conn_close", &[("conn", id.into())]);
+    shared.active.fetch_sub(1, Ordering::SeqCst);
+    let _ = stream.shutdown(Shutdown::Both);
+    if saw_shutdown {
+        shared.trigger();
+    }
+}
+
+/// One connection: read a frame, dispatch through the router, write
+/// the reply, repeat. Returns whether a `Shutdown` frame was served.
+fn serve_connection(stream: &TcpStream, shared: &Shared) -> bool {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    let mut writer = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    loop {
+        match protocol::read_frame(&mut reader, shared.cfg.max_frame_bytes) {
+            Ok(None) => return false,
+            Ok(Some((tag, payload))) => match protocol::decode_request(tag, &payload) {
+                Ok(req) => {
+                    let is_shutdown = matches!(req, NetRequest::Shutdown);
+                    let resp = shared.router.dispatch(req);
+                    let frame = protocol::encode_response(&resp);
+                    if protocol::write_frame(&mut writer, &frame).is_err() || is_shutdown {
+                        return is_shutdown;
+                    }
+                }
+                Err(e) => {
+                    // Payload fully read: the stream is still on a
+                    // frame boundary; answer and keep serving.
+                    shared
+                        .logger
+                        .event("bad_request", &[("error", format!("{e:#}").into())]);
+                    let frame =
+                        protocol::encode_response(&NetResponse::Error(format!("{e:#}")));
+                    if protocol::write_frame(&mut writer, &frame).is_err() {
+                        return false;
+                    }
+                }
+            },
+            Err(e) => {
+                // Torn header or over-limit length: best-effort error
+                // frame, then drop the connection.
+                shared
+                    .logger
+                    .event("frame_error", &[("error", format!("{e:#}").into())]);
+                let frame = protocol::encode_response(&NetResponse::Error(format!("{e:#}")));
+                let _ = protocol::write_frame(&mut writer, &frame);
+                return false;
+            }
+        }
+    }
+}

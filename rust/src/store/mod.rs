@@ -20,9 +20,15 @@
 //! magic    8 B   "PQDTWIDX"
 //! version  4 B   u32 LE
 //! sections       tag u8 · length u64 LE · payload
-//!                (header, quantizer, encoded, raw, [ivf], [jobs]) in order
+//!                (header, quantizer, encoded, raw, [ivf], [jobs],
+//!                [shard]) in order
 //! checksum 8 B   FNV-1a 64 of every preceding byte, u64 LE
 //! ```
+//!
+//! The optional trailing shard section records shard membership for
+//! `build-index --shard i/n` splits (shard index/count plus the
+//! database-global id of every retained row); files without it are
+//! unsharded and byte-identical to what pre-shard writers produced.
 //!
 //! Everything is explicit little-endian and hand-rolled over `std` —
 //! no serialization dependency. `f64` values round-trip via their IEEE
@@ -66,6 +72,71 @@ const SEC_ENCODED: u8 = 3;
 const SEC_RAW: u8 = 4;
 const SEC_IVF: u8 = 5;
 const SEC_JOBS: u8 = 6;
+const SEC_SHARD: u8 = 7;
+
+/// Shard membership metadata (the optional trailing `SEC_SHARD`
+/// section): which deterministic slice of a larger database this index
+/// holds. `build-index --shard i/n` keeps rows with `id % n == i`, in
+/// ascending id order, so `global_ids` is strictly increasing — local
+/// tie-break order equals global tie-break order, which is what lets a
+/// scatter-gather router merge shard results bit-identically to the
+/// unsharded scan (`docs/serving-topology.md`). A file without this
+/// section is an unsharded index and is byte-identical to what older
+/// writers produced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardInfo {
+    /// This shard's index in `0..shard_count`.
+    pub shard_index: u64,
+    /// Total shards in the split.
+    pub shard_count: u64,
+    /// Database-global id of each local row (local `i` holds global
+    /// `global_ids[i]`; strictly increasing).
+    pub global_ids: Vec<u64>,
+}
+
+fn put_shard(w: &mut ByteWriter, s: &ShardInfo) {
+    w.u64(s.shard_index);
+    w.u64(s.shard_count);
+    w.usize(s.global_ids.len());
+    for &id in &s.global_ids {
+        w.u64(id);
+    }
+}
+
+fn get_shard(payload: &[u8], n_series: usize) -> Result<ShardInfo> {
+    let mut r = ByteReader::new(payload);
+    let shard_index = r.u64()?;
+    let shard_count = r.u64()?;
+    ensure!(shard_count >= 1, "store: shard count must be >= 1");
+    ensure!(
+        shard_index < shard_count,
+        "store: shard index {shard_index} out of range for {shard_count} shards"
+    );
+    let n = r.usize()?;
+    ensure!(
+        n.saturating_mul(8) <= r.remaining(),
+        "store: shard id count {n} exceeds remaining section bytes"
+    );
+    let mut global_ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        global_ids.push(r.u64()?);
+    }
+    ensure!(r.is_exhausted(), "store: trailing bytes in shard section");
+    ensure!(
+        global_ids.len() == n_series,
+        "store: shard id count {} != encoded row count {n_series}",
+        global_ids.len()
+    );
+    ensure!(
+        global_ids.windows(2).all(|w| w[0] < w[1]),
+        "store: shard global ids must be strictly increasing"
+    );
+    ensure!(
+        global_ids.iter().all(|&id| id % shard_count == shard_index),
+        "store: shard global ids disagree with the id % {shard_count} == {shard_index} split"
+    );
+    Ok(ShardInfo { shard_index, shard_count, global_ids })
+}
 
 /// The full serving state reconstructed from disk.
 pub struct StoredIndex {
@@ -79,6 +150,9 @@ pub struct StoredIndex {
     pub ivf: Option<IvfIndex>,
     /// Persisted jobs (empty when the file carries no jobs section).
     pub jobs: Vec<PersistedJob>,
+    /// Shard membership, when this index holds a slice of a larger
+    /// database (`None` = unsharded).
+    pub shard: Option<ShardInfo>,
 }
 
 /// Summary of an index file — the `info --index` view, readable without
@@ -157,6 +231,20 @@ pub fn encode_index_with_jobs(
     ivf: Option<&IvfIndex>,
     persisted_jobs: &[PersistedJob],
 ) -> Vec<u8> {
+    encode_index_full(pq, encoded, raw, ivf, persisted_jobs, None)
+}
+
+/// Serialize everything: serving state, job registry, and shard
+/// membership. `None` shard writes no shard section, so unsharded
+/// indexes are byte-identical to [`encode_index_with_jobs`] output.
+pub fn encode_index_full(
+    pq: &ProductQuantizer,
+    encoded: &EncodedDataset,
+    raw: &Dataset,
+    ivf: Option<&IvfIndex>,
+    persisted_jobs: &[PersistedJob],
+    shard: Option<&ShardInfo>,
+) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.bytes(&MAGIC);
     w.u32(VERSION);
@@ -181,6 +269,11 @@ pub fn encode_index_with_jobs(
         let mut s = ByteWriter::new();
         jobs::put_jobs(&mut s, persisted_jobs);
         w.section(SEC_JOBS, &s.into_bytes());
+    }
+    if let Some(shard) = shard {
+        let mut s = ByteWriter::new();
+        put_shard(&mut s, shard);
+        w.section(SEC_SHARD, &s.into_bytes());
     }
     let mut buf = w.into_bytes();
     let sum = fnv1a(&buf);
@@ -242,31 +335,35 @@ pub fn decode_index(bytes: &[u8]) -> Result<StoredIndex> {
         raw.n_series(),
         encoded.n()
     );
-    // Optional tail: [ivf] then [jobs], either independently absent.
+    // Optional tail: [ivf], [jobs], [shard] — each independently
+    // absent, but always in ascending tag order (which also rejects
+    // duplicate sections).
     let mut ivf = None;
     let mut stored_jobs = Vec::new();
-    if !r.is_exhausted() {
+    let mut shard = None;
+    let mut last_tag = SEC_RAW;
+    while !r.is_exhausted() {
         let (tag, payload) = r.section()?;
+        ensure!(
+            tag > last_tag,
+            "store: section tag {tag} out of order after tag {last_tag}"
+        );
+        last_tag = tag;
         match tag {
             SEC_IVF => {
                 ivf = Some(codec::get_ivf(payload, pq.series_len, encoded.n())?);
-                if !r.is_exhausted() {
-                    let (tag, payload) = r.section()?;
-                    ensure!(tag == SEC_JOBS, "store: expected jobs section, found tag {tag}");
-                    let mut jr = ByteReader::new(payload);
-                    stored_jobs = jobs::get_jobs(&mut jr)?;
-                    ensure!(jr.is_exhausted(), "store: trailing bytes in jobs section");
-                }
             }
             SEC_JOBS => {
                 let mut jr = ByteReader::new(payload);
                 stored_jobs = jobs::get_jobs(&mut jr)?;
                 ensure!(jr.is_exhausted(), "store: trailing bytes in jobs section");
             }
+            SEC_SHARD => {
+                shard = Some(get_shard(payload, encoded.n())?);
+            }
             other => bail!("store: unexpected section tag {other}"),
         }
     }
-    ensure!(r.is_exhausted(), "store: trailing bytes after final section");
     ensure!(
         header.n_subspaces == pq.config.n_subspaces
             && header.codebook_size == pq.codebook.k
@@ -278,7 +375,7 @@ pub fn decode_index(bytes: &[u8]) -> Result<StoredIndex> {
             && header.ivf_nlist == ivf.as_ref().map(|i| i.nlist()),
         "store: header summary disagrees with section contents"
     );
-    Ok(StoredIndex { pq, encoded, raw, ivf, jobs: stored_jobs })
+    Ok(StoredIndex { pq, encoded, raw, ivf, jobs: stored_jobs, shard })
 }
 
 /// Write the full serving state to `path`, atomically: the bytes go to
@@ -306,7 +403,23 @@ pub fn save_index_with_jobs(
     ivf: Option<&IvfIndex>,
     persisted_jobs: &[PersistedJob],
 ) -> Result<()> {
-    let bytes = encode_index_with_jobs(pq, encoded, raw, ivf, persisted_jobs);
+    save_index_full(path, pq, encoded, raw, ivf, persisted_jobs, None)
+}
+
+/// [`save_index_with_jobs`] plus shard membership — the full writer
+/// behind `build-index --shard i/n`. `None` shard writes no shard
+/// section.
+#[allow(clippy::too_many_arguments)]
+pub fn save_index_full(
+    path: &Path,
+    pq: &ProductQuantizer,
+    encoded: &EncodedDataset,
+    raw: &Dataset,
+    ivf: Option<&IvfIndex>,
+    persisted_jobs: &[PersistedJob],
+    shard: Option<&ShardInfo>,
+) -> Result<()> {
+    let bytes = encode_index_full(pq, encoded, raw, ivf, persisted_jobs, shard);
     let mut tmp_name = path.as_os_str().to_owned();
     tmp_name.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp_name);
@@ -476,6 +589,150 @@ mod tests {
             encode_index(&pq, &enc, &db, Some(&ivf)),
             encode_index_with_jobs(&pq, &enc, &db, Some(&ivf), &[])
         );
+    }
+
+    /// Shard info for the 12-row tiny state: shard 1 of a 3-way split
+    /// holds global rows 1, 4, 7, 10.
+    fn tiny_shard() -> ShardInfo {
+        ShardInfo { shard_index: 1, shard_count: 3, global_ids: vec![1, 4, 7, 10] }
+    }
+
+    /// Tiny state cut down to the 4 rows of [`tiny_shard`], so the
+    /// shard section's row-count cross-check passes.
+    fn tiny_shard_state() -> (ProductQuantizer, EncodedDataset, Dataset) {
+        let (pq, _, db, _) = tiny_state();
+        let sub = db.subset(&[1, 4, 7, 10]);
+        let enc = pq.encode_dataset(&sub);
+        (pq, enc, sub)
+    }
+
+    #[test]
+    fn shard_section_roundtrips() {
+        let (pq, enc, db) = tiny_shard_state();
+        let shard = tiny_shard();
+        let bytes = encode_index_full(&pq, &enc, &db, None, &[], Some(&shard));
+        let idx = decode_index(&bytes).unwrap();
+        assert_eq!(idx.shard, Some(shard));
+        // With the full optional tail: [ivf], [jobs], [shard].
+        let ivf = IvfIndex::build(&db, 2, CoarseMetric::Euclidean, 5);
+        let shard = tiny_shard();
+        let bytes =
+            encode_index_full(&pq, &enc, &db, Some(&ivf), &tiny_jobs(), Some(&shard));
+        let idx = decode_index(&bytes).unwrap();
+        assert!(idx.ivf.is_some());
+        assert_eq!(idx.jobs, tiny_jobs());
+        assert_eq!(idx.shard, Some(shard));
+    }
+
+    #[test]
+    fn absent_shard_is_byte_identical_to_the_jobs_encoder() {
+        let (pq, enc, db, ivf) = tiny_state();
+        assert_eq!(
+            encode_index_with_jobs(&pq, &enc, &db, Some(&ivf), &tiny_jobs()),
+            encode_index_full(&pq, &enc, &db, Some(&ivf), &tiny_jobs(), None)
+        );
+        assert!(decode_index(&encode_index(&pq, &enc, &db, None)).unwrap().shard.is_none());
+    }
+
+    #[test]
+    fn hostile_shard_sections_are_rejected() {
+        let (pq, enc, db) = tiny_shard_state();
+        let cases: Vec<(&str, ShardInfo)> = vec![
+            (
+                "index out of range",
+                ShardInfo { shard_index: 3, shard_count: 3, global_ids: vec![1, 4, 7, 10] },
+            ),
+            (
+                "zero shard count",
+                ShardInfo { shard_index: 0, shard_count: 0, global_ids: vec![1, 4, 7, 10] },
+            ),
+            (
+                "id count mismatch",
+                ShardInfo { shard_index: 1, shard_count: 3, global_ids: vec![1, 4, 7] },
+            ),
+            (
+                "non-increasing ids",
+                ShardInfo { shard_index: 1, shard_count: 3, global_ids: vec![1, 7, 4, 10] },
+            ),
+            (
+                "id off the modular split",
+                ShardInfo { shard_index: 1, shard_count: 3, global_ids: vec![1, 4, 7, 9] },
+            ),
+        ];
+        for (name, shard) in cases {
+            let bytes = encode_index_full(&pq, &enc, &db, None, &[], Some(&shard));
+            assert!(decode_index(&bytes).is_err(), "case '{name}' must fail");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_errors_with_shard_section() {
+        let (pq, enc, db) = tiny_shard_state();
+        let good = encode_index_full(&pq, &enc, &db, None, &[], Some(&tiny_shard()));
+        for i in (0..good.len()).step_by(sweep_stride()) {
+            let mut bad = good.clone();
+            bad[i] ^= 0x40;
+            assert!(decode_index(&bad).is_err(), "flip at byte {i} must fail");
+        }
+    }
+
+    #[test]
+    fn restamped_hostile_shard_id_count_is_rejected() {
+        let (pq, enc, db) = tiny_shard_state();
+        let good = encode_index_full(&pq, &enc, &db, None, &[], Some(&tiny_shard()));
+        // Locate the shard section and forge its id-count field (which
+        // sits after the two u64 index/count fields).
+        let mut pos = 12;
+        let body_end = good.len() - 8;
+        let payload_start = loop {
+            assert!(pos + 9 <= body_end, "shard section must exist");
+            let tag = good[pos];
+            let len = u64::from_le_bytes(good[pos + 1..pos + 9].try_into().unwrap());
+            if tag == SEC_SHARD {
+                break pos + 9;
+            }
+            pos += 9 + usize::try_from(len).unwrap();
+        };
+        let count_at = payload_start + 16;
+        let mut bad = good.clone();
+        bad[count_at..count_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        restamp_checksum(&mut bad);
+        let err = decode_index(&bad).unwrap_err().to_string();
+        assert!(err.contains("shard id count"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn out_of_order_tail_sections_are_rejected() {
+        // Hand-assemble a file whose optional tail carries [jobs] then
+        // [ivf] — valid tags, wrong order — and assert the ordered-tag
+        // check fires.
+        let (pq, enc, db, ivf) = tiny_state();
+        let mut w = ByteWriter::new();
+        w.bytes(&MAGIC);
+        w.u32(VERSION);
+        let mut s = ByteWriter::new();
+        put_header(&mut s, &pq, enc.n(), Some(&ivf));
+        w.section(SEC_HEADER, &s.into_bytes());
+        let mut s = ByteWriter::new();
+        codec::put_quantizer(&mut s, &pq);
+        w.section(SEC_QUANTIZER, &s.into_bytes());
+        let mut s = ByteWriter::new();
+        codec::put_encoded(&mut s, &enc);
+        w.section(SEC_ENCODED, &s.into_bytes());
+        let mut s = ByteWriter::new();
+        codec::put_dataset(&mut s, &db);
+        w.section(SEC_RAW, &s.into_bytes());
+        let mut s = ByteWriter::new();
+        jobs::put_jobs(&mut s, &tiny_jobs());
+        w.section(SEC_JOBS, &s.into_bytes());
+        let mut s = ByteWriter::new();
+        codec::put_ivf(&mut s, &ivf);
+        w.section(SEC_IVF, &s.into_bytes());
+        let mut buf = w.into_bytes();
+        let sum = fnv1a(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        let err = decode_index(&buf).unwrap_err().to_string();
+        assert!(err.contains("out of order"), "unexpected error: {err}");
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Loopback integration tests for the fault-tolerant sharded serving
+//! plane: three real shard servers on 127.0.0.1:0, a real router in
+//! front, and the unsharded engine as ground truth.
+//!
+//! The headline properties:
+//!
+//! - **full health ⇒ bit identity**: a routed top-k / 1-NN answer
+//!   equals the unsharded engine's, byte for byte;
+//! - **kill one shard mid-request ⇒ deterministic partial**: the
+//!   answer is flagged `degraded`, lists the missing shard, and equals
+//!   the deterministic merge of the survivors;
+//! - **restart ⇒ re-admission**: once the shard is reachable again the
+//!   half-open prober brings it back and answers are bit-identical to
+//!   the unsharded oracle once more.
+//!
+//! The failure modes are driven through [`FaultProxy`], a byte-level
+//! TCP proxy in front of one shard.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pqdtw::coordinator::{Engine, Hit, Request, Response, Service, ServiceConfig};
+use pqdtw::data::ucr_like::ucr_like_by_name;
+use pqdtw::net::{Client, ClientConfig, NetServer, ServerConfig};
+use pqdtw::nn::knn::PqQueryMode;
+use pqdtw::pq::quantizer::PqConfig;
+use pqdtw::router::{
+    FaultMode, FaultProxy, HealthConfig, RouterConfig, RouterServer, RouterServerConfig,
+    ShardHealth,
+};
+
+const N_SHARDS: u64 = 3;
+
+fn pq_cfg() -> PqConfig {
+    PqConfig { n_subspaces: 4, codebook_size: 8, window_frac: 0.2, ..Default::default() }
+}
+
+/// The unsharded oracle plus one served engine per `id % 3` shard.
+struct Fleet {
+    oracle: Engine,
+    queries: pqdtw::core::series::Dataset,
+    servers: Vec<NetServer>,
+    addrs: Vec<String>,
+}
+
+fn start_fleet() -> Fleet {
+    let tt = ucr_like_by_name("SpikePosition", 77).unwrap();
+    let oracle = Engine::build(&tt.train, &pq_cfg(), 3).unwrap();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for i in 0..N_SHARDS {
+        let engine = Engine::build_shard(&tt.train, &pq_cfg(), 3, i, N_SHARDS).unwrap();
+        let svc = Arc::new(Service::start(Arc::new(engine), ServiceConfig::default()));
+        let server = NetServer::start("127.0.0.1:0", svc, ServerConfig::default()).unwrap();
+        addrs.push(server.local_addr().to_string());
+        servers.push(server);
+    }
+    Fleet { oracle, queries: tt.test, servers, addrs }
+}
+
+/// Tight deadlines so fault-injection tests converge in milliseconds,
+/// not the production multi-second defaults.
+fn fast_health() -> HealthConfig {
+    HealthConfig {
+        connect_timeout: Duration::from_secs(2),
+        io_timeout: Duration::from_millis(300),
+        base_backoff: Duration::from_millis(20),
+        max_backoff: Duration::from_millis(100),
+        probe_interval: Duration::from_millis(40),
+        ..Default::default()
+    }
+}
+
+fn quick_client(addr: &str) -> Client {
+    Client::connect(
+        addr,
+        ClientConfig { connect_timeout: Duration::from_secs(5), io_timeout: Duration::from_secs(20) },
+    )
+    .unwrap()
+}
+
+fn oracle_topk(oracle: &Engine, q: &[f64], k: usize) -> Vec<Hit> {
+    match oracle.handle(&Request::TopKQuery {
+        series: q.to_vec(),
+        k,
+        mode: PqQueryMode::Asymmetric,
+        nprobe: None,
+        rerank: None,
+    }) {
+        Response::TopK(hits) => hits,
+        other => panic!("unexpected oracle response {other:?}"),
+    }
+}
+
+fn assert_hits_eq(got: &[Hit], want: &[Hit], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: hit count");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.index, w.index, "{ctx}");
+        assert_eq!(g.distance.to_bits(), w.distance.to_bits(), "{ctx}: distance bits");
+        assert_eq!(g.label, w.label, "{ctx}");
+    }
+}
+
+/// Wait until the router reports `shard` at `health`, or panic.
+fn await_health(server: &RouterServer, shard: usize, health: ShardHealth) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if server.router().health()[shard] == health {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "shard {shard} never reached {health:?} (now {:?})",
+            server.router().health()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn full_health_routing_is_bit_identical_to_the_unsharded_engine() {
+    let fleet = start_fleet();
+    let router = RouterServer::start(
+        "127.0.0.1:0",
+        RouterConfig::new(fleet.addrs.clone()),
+        RouterServerConfig::default(),
+    )
+    .unwrap();
+    let mut client = quick_client(&router.local_addr().to_string());
+    for i in 0..5 {
+        let q = fleet.queries.row(i);
+        for k in [1, 4, 9] {
+            let reply = client
+                .topk_full(q, k, PqQueryMode::Asymmetric, None, None, i as u64 + 1, false)
+                .unwrap();
+            assert!(!reply.degraded, "query {i} k={k} unexpectedly degraded");
+            assert!(reply.missing_shards.is_empty());
+            assert_hits_eq(&reply.hits, &oracle_topk(&fleet.oracle, q, k), "routed top-k");
+        }
+        for mode in [PqQueryMode::Symmetric, PqQueryMode::Asymmetric] {
+            let reply = client.nn_full(q, mode, None, i as u64 + 100, false).unwrap();
+            match fleet.oracle.handle(&Request::NnQuery {
+                series: q.to_vec(),
+                mode,
+                nprobe: None,
+            }) {
+                Response::Nn { index, distance, label } => {
+                    assert_eq!(reply.index, index, "query {i} {mode:?}");
+                    assert_eq!(reply.distance.to_bits(), distance.to_bits());
+                    assert_eq!(reply.label, label);
+                    assert!(!reply.degraded);
+                }
+                other => panic!("unexpected oracle response {other:?}"),
+            }
+        }
+    }
+    // Routed stats aggregate the fleet: n_items must equal the whole
+    // database even though every shard holds only a slice.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.n_items as usize, fleet.oracle.n_items);
+    router.shutdown();
+    for s in fleet.servers {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn killed_shard_yields_a_deterministic_degraded_partial_then_recovers() {
+    let fleet = start_fleet();
+    // Shard 1 sits behind the fault proxy; the router only knows the
+    // proxy's address.
+    let proxy = FaultProxy::start(&fleet.addrs[1]).unwrap();
+    let shard_addrs =
+        vec![fleet.addrs[0].clone(), proxy.local_addr().to_string(), fleet.addrs[2].clone()];
+    let mut cfg = RouterConfig::new(shard_addrs);
+    cfg.health = fast_health();
+    let router =
+        RouterServer::start("127.0.0.1:0", cfg, RouterServerConfig::default()).unwrap();
+    let mut client = quick_client(&router.local_addr().to_string());
+    let q = fleet.queries.row(0);
+    let k = 6;
+
+    // Phase 1: healthy fleet, sanity-check bit identity.
+    let reply = client
+        .topk_full(q, k, PqQueryMode::Asymmetric, None, None, 1, false)
+        .unwrap();
+    assert!(!reply.degraded);
+    assert_hits_eq(&reply.hits, &oracle_topk(&fleet.oracle, q, k), "healthy fleet");
+
+    // Phase 2: kill shard 1 mid-request — every response is severed
+    // after 5 bytes (a torn frame), including the fresh-connection
+    // retry, so the scatter leg hard-fails.
+    proxy.set_mode(FaultMode::CloseAfter(5));
+    proxy.kill_connections();
+    let reply = client
+        .topk_full(q, k, PqQueryMode::Asymmetric, None, None, 2, false)
+        .unwrap();
+    assert!(reply.degraded, "killed shard must flag the response degraded");
+    assert_eq!(reply.missing_shards, vec![1]);
+    // The partial answer is exactly the merge of the survivors: the
+    // oracle's ranking with shard 1's rows (index % 3 == 1) removed.
+    let survivors: Vec<Hit> = oracle_topk(&fleet.oracle, q, fleet.oracle.n_items)
+        .into_iter()
+        .filter(|h| h.index as u64 % N_SHARDS != 1)
+        .take(k)
+        .collect();
+    assert_hits_eq(&reply.hits, &survivors, "degraded partial");
+    // Two consecutive failures (first attempt + retry) opened the
+    // breaker; metrics saw the hard-failure retry.
+    assert_eq!(router.router().health()[1], ShardHealth::Down);
+    assert!(router.router().metrics().retries.get() >= 1);
+    assert!(router.router().metrics().degraded_responses.get() >= 1);
+    // While Down, the next query skips the shard instantly (breaker).
+    let reply = client
+        .topk_full(q, k, PqQueryMode::Asymmetric, None, None, 3, false)
+        .unwrap();
+    assert!(reply.degraded);
+    assert_eq!(reply.missing_shards, vec![1]);
+
+    // Phase 3: restart the shard (heal the proxy); the background
+    // half-open prober must re-admit it without any client traffic.
+    proxy.set_mode(FaultMode::Pass);
+    await_health(&router, 1, ShardHealth::Healthy);
+    let reply = client
+        .topk_full(q, k, PqQueryMode::Asymmetric, None, None, 4, false)
+        .unwrap();
+    assert!(!reply.degraded, "recovered fleet must stop degrading");
+    assert!(reply.missing_shards.is_empty());
+    assert_hits_eq(&reply.hits, &oracle_topk(&fleet.oracle, q, k), "recovered fleet");
+
+    router.shutdown();
+    proxy.stop();
+    for s in fleet.servers {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn require_full_fails_queries_instead_of_degrading() {
+    let fleet = start_fleet();
+    let proxy = FaultProxy::start(&fleet.addrs[2]).unwrap();
+    proxy.set_mode(FaultMode::CloseAfter(0));
+    let shard_addrs =
+        vec![fleet.addrs[0].clone(), fleet.addrs[1].clone(), proxy.local_addr().to_string()];
+    let mut cfg = RouterConfig::new(shard_addrs);
+    cfg.require_full = true;
+    cfg.health = fast_health();
+    let router =
+        RouterServer::start("127.0.0.1:0", cfg, RouterServerConfig::default()).unwrap();
+    let mut client = quick_client(&router.local_addr().to_string());
+    let q = fleet.queries.row(0);
+    let err = client
+        .topk_full(q, 4, PqQueryMode::Asymmetric, None, None, 1, false)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("require-full"), "{msg}");
+    assert!(msg.contains('2'), "missing shard index in: {msg}");
+    // The router survives and keeps answering its own liveness.
+    client.ping().unwrap();
+    router.shutdown();
+    proxy.stop();
+    for s in fleet.servers {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn router_rejects_job_requests_and_reports_its_own_metrics() {
+    let fleet = start_fleet();
+    let router = RouterServer::start(
+        "127.0.0.1:0",
+        RouterConfig::new(fleet.addrs.clone()),
+        RouterServerConfig::default(),
+    )
+    .unwrap();
+    let mut client = quick_client(&router.local_addr().to_string());
+    let err = client.job_status(1).unwrap_err();
+    assert!(format!("{err:#}").contains("not routed"), "{err:#}");
+    let text = client.metrics_text().unwrap();
+    assert!(text.contains("pqdtw_router_requests_total"), "{text}");
+    assert!(text.contains("pqdtw_router_shard_health"), "{text}");
+    assert!(text.contains("pqdtw_router_uptime_seconds"), "{text}");
+    // Shard-engine families are deliberately NOT proxied.
+    assert!(!text.contains("pqdtw_requests_total"), "{text}");
+    router.shutdown();
+    for s in fleet.servers {
+        s.shutdown();
+    }
+}

@@ -586,3 +586,135 @@ fn prop_dtw_triangle_violations_exist_but_bounded_scaling() {
         close(dtw(&a2, &b2, None), s * dtw(&a, &b, None), 1e-6)
     });
 }
+
+#[test]
+fn prop_shard_split_merge_is_bit_identical_to_unsharded() {
+    // The router's bit-identity chain, without sockets: for every
+    // `id % n` split (n ∈ {1, 2, 3, 5}), merging the shards' exhaustive
+    // top-k / 1-NN answers through the deterministic `(distance, index)`
+    // order must reproduce the unsharded engine's answer bit for bit —
+    // including tie-heavy databases (duplicated rows) and NaN-poisoned
+    // queries, where only the total order keeps the result well-defined.
+    use pqdtw::coordinator::{Hit, Response};
+    use pqdtw::router::{merge_nn, merge_topk};
+    check("shard split merge", 5, |rng| {
+        let m = 4 + rng.below(4); // distinct base rows
+        let len = 32 + 4 * rng.below(4);
+        let reps = 2 + rng.below(2); // duplicates ⇒ exact distance ties
+        let mut bases = Vec::with_capacity(m);
+        for _ in 0..m {
+            bases.push(gen_walk(rng, len));
+        }
+        let n = m * reps + 4;
+        let mut values = Vec::with_capacity(n * len);
+        for i in 0..n {
+            if i < m * reps {
+                values.extend(bases[i % m].iter().copied());
+            } else {
+                values.extend(gen_walk(rng, len));
+            }
+        }
+        let data = Dataset::from_flat(values, len);
+        let cfg = PqConfig {
+            n_subspaces: 2 + rng.below(2),
+            codebook_size: 4 + rng.below(4),
+            window_frac: 0.25,
+            kmeans_iters: 2,
+            dba_iters: 1,
+            ..Default::default()
+        };
+        let seed = rng.next_u64();
+        let oracle = Engine::build(&data, &cfg, seed).map_err(|e| e.to_string())?;
+        for shards in [1u64, 2, 3, 5] {
+            let fleet: Vec<Engine> = (0..shards)
+                .map(|i| Engine::build_shard(&data, &cfg, seed, i, shards))
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?;
+            for case in 0..3 {
+                let mut q = gen_walk(rng, len);
+                if case == 2 {
+                    // NaN-adjacent distances: the poisoned query makes
+                    // every row's distance NaN on both sides.
+                    q[rng.below(len)] = f64::NAN;
+                }
+                let k = 1 + rng.below(8);
+                let mode = if rng.below(2) == 0 {
+                    PqQueryMode::Symmetric
+                } else {
+                    PqQueryMode::Asymmetric
+                };
+                let topk_req = |series: Vec<f64>| Request::TopKQuery {
+                    series,
+                    k,
+                    mode,
+                    nprobe: None,
+                    rerank: None,
+                };
+                let want = match oracle.handle(&topk_req(q.clone())) {
+                    Response::TopK(hits) => hits,
+                    other => return Err(format!("oracle top-k answered {other:?}")),
+                };
+                let per_shard: Vec<Vec<Hit>> = fleet
+                    .iter()
+                    .map(|e| match e.handle(&topk_req(q.clone())) {
+                        Response::TopK(hits) => Ok(hits),
+                        other => Err(format!("shard top-k answered {other:?}")),
+                    })
+                    .collect::<Result<_, String>>()?;
+                let got = merge_topk(per_shard, k);
+                if got.len() != want.len() {
+                    return Err(format!(
+                        "n={shards} k={k}: merged {} hits, oracle {}",
+                        got.len(),
+                        want.len()
+                    ));
+                }
+                for (g, w) in got.iter().zip(&want) {
+                    if g.index != w.index
+                        || g.distance.to_bits() != w.distance.to_bits()
+                        || g.label != w.label
+                    {
+                        return Err(format!(
+                            "n={shards} k={k} {mode:?}: merged {g:?} vs oracle {w:?}"
+                        ));
+                    }
+                }
+                let want_nn = oracle.handle(&Request::NnQuery {
+                    series: q.clone(),
+                    mode,
+                    nprobe: None,
+                });
+                let winners: Vec<Hit> = fleet
+                    .iter()
+                    .map(|e| match e.handle(&Request::NnQuery {
+                        series: q.clone(),
+                        mode,
+                        nprobe: None,
+                    }) {
+                        Response::Nn { index, distance, label } => {
+                            Ok(Hit { index, distance, label })
+                        }
+                        other => Err(format!("shard 1-NN answered {other:?}")),
+                    })
+                    .collect::<Result<_, String>>()?;
+                let got_nn =
+                    merge_nn(winners).ok_or_else(|| "no shard returned a winner".to_string())?;
+                match want_nn {
+                    Response::Nn { index, distance, label } => {
+                        if got_nn.index != index
+                            || got_nn.distance.to_bits() != distance.to_bits()
+                            || got_nn.label != label
+                        {
+                            return Err(format!(
+                                "n={shards} {mode:?}: merged NN {got_nn:?} vs oracle \
+                                 ({index}, {distance}, {label:?})"
+                            ));
+                        }
+                    }
+                    other => return Err(format!("oracle 1-NN answered {other:?}")),
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,25 @@
+// Fixture: router-plane code compliant with no-panic-in-serving — a
+// failed shard leg degrades the merge instead of crashing the router,
+// and lock poisoning is recovered, never unwrapped. Linted as if it
+// lived under `router/`.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+pub enum Outcome {
+    Hit(u64, f64),
+    Missing(u64),
+}
+
+pub fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+pub fn gather(outcomes: Vec<Result<(u64, f64), u64>>) -> Vec<Outcome> {
+    outcomes
+        .into_iter()
+        .map(|o| match o {
+            Ok((shard, distance)) => Outcome::Hit(shard, distance),
+            Err(shard) => Outcome::Missing(shard),
+        })
+        .collect()
+}

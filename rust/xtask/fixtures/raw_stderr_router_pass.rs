@@ -1,0 +1,15 @@
+// Fixture: router-plane code compliant with no-raw-stderr-in-serving —
+// health transitions and degraded responses flow through a structured
+// logger, never raw stderr. Linted as if it lived under `router/`.
+
+pub trait EventSink {
+    fn event(&self, name: &str, shard: u64);
+}
+
+pub fn on_shard_down(sink: &dyn EventSink, shard: u64) {
+    sink.event("shard_health", shard);
+}
+
+pub fn on_degraded_response(sink: &dyn EventSink, shard: u64) {
+    sink.event("degraded_response", shard);
+}

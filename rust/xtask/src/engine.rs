@@ -294,6 +294,32 @@ mod tests {
     }
 
     #[test]
+    fn no_panic_scope_covers_the_router_plane() {
+        // The fail fixture under a router/ path must be flagged …
+        let f = lint_source("router/health.rs", &fixture("no_panic_fail.rs"));
+        assert!(
+            f.iter().filter(|f| f.rule == rules::NO_PANIC).count() >= 4,
+            "router/ is in no-panic scope, got {f:?}"
+        );
+        // … and the error-propagating twin must pass with zero waivers.
+        let f = lint_source("router/health.rs", &fixture("no_panic_router_pass.rs"));
+        assert!(f.is_empty(), "degrade-don't-crash router code must pass, got {f:?}");
+    }
+
+    #[test]
+    fn raw_stderr_scope_covers_the_router_plane() {
+        // The fail fixture under a router/ path must be flagged …
+        let f = lint_source("router/server.rs", &fixture("raw_stderr_fail.rs"));
+        assert!(
+            f.iter().filter(|f| f.rule == rules::NO_RAW_STDERR).count() >= 3,
+            "router/ is in no-raw-stderr scope, got {f:?}"
+        );
+        // … and the structured-logger twin must pass with zero waivers.
+        let f = lint_source("router/server.rs", &fixture("raw_stderr_router_pass.rs"));
+        assert!(f.is_empty(), "logger-based router events must pass, got {f:?}");
+    }
+
+    #[test]
     fn raw_stderr_ignored_outside_serving_scope() {
         let f = lint_source("obs/log.rs", &fixture("raw_stderr_fail.rs"));
         assert!(

@@ -52,7 +52,7 @@ pub const RULES: &[RuleInfo] = &[
         name: NO_PANIC,
         summary: "no unwrap/expect/panic-family macros in serving code; \
                   hostile bytes must surface as Err, never a crash",
-        scope: "store/, net/, coordinator/service.rs (non-test)",
+        scope: "store/, net/, router/, coordinator/service.rs (non-test)",
     },
     RuleInfo {
         name: NO_LOSSY_CAST,
@@ -84,7 +84,7 @@ pub const RULES: &[RuleInfo] = &[
         summary: "no eprintln!/eprint! in serving code; operational events \
                   must flow through obs::log::JsonLogger so operators get \
                   structured, machine-parseable output",
-        scope: "net/, coordinator/, jobs/ (non-test)",
+        scope: "net/, router/, coordinator/, jobs/ (non-test)",
     },
     RuleInfo {
         name: LINT_WAIVER,
@@ -171,7 +171,10 @@ pub fn check_all(rel: &str, cf: &CleanFile) -> Vec<Finding> {
 }
 
 fn scope_no_panic(rel: &str) -> bool {
-    rel.starts_with("store/") || rel.starts_with("net/") || rel == "coordinator/service.rs"
+    rel.starts_with("store/")
+        || rel.starts_with("net/")
+        || rel.starts_with("router/")
+        || rel == "coordinator/service.rs"
 }
 
 fn scope_lossy_cast(rel: &str) -> bool {
@@ -187,7 +190,10 @@ fn scope_validate_alloc(rel: &str) -> bool {
 }
 
 fn scope_raw_stderr(rel: &str) -> bool {
-    rel.starts_with("net/") || rel.starts_with("coordinator/") || rel.starts_with("jobs/")
+    rel.starts_with("net/")
+        || rel.starts_with("router/")
+        || rel.starts_with("coordinator/")
+        || rel.starts_with("jobs/")
 }
 
 /// Panic surfaces: `.unwrap()` / `.expect(..)` calls and the panic
