@@ -478,6 +478,7 @@ impl Engine {
                         pq_estimate,
                         exact_dtw,
                         admitted_by,
+                        shard: None,
                     }
                 })
                 .collect();

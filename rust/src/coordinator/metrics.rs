@@ -12,8 +12,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::obs::prometheus::PromText;
 use crate::obs::{Stage, N_STAGES};
 
-/// Log-spaced latency buckets in microseconds (upper bounds).
-const BUCKETS_US: [u64; 12] =
+/// Log-spaced latency buckets in microseconds (upper bounds). Public
+/// because the bucket bounds are part of the metrics-federation
+/// contract: `StatsResult` carries raw per-bucket counts aligned with
+/// this array, and the router merges fleets bucket-wise over it.
+pub const BUCKETS_US: [u64; 12] =
     [10, 25, 50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 50_000, u64::MAX];
 
 /// Request families tracked with separate throughput/latency counters.
@@ -107,13 +110,17 @@ pub struct Metrics {
     stage_count: [AtomicU64; N_STAGES],
     stage_latency_us: [AtomicU64; N_STAGES],
     stage_latency_buckets: [[AtomicU64; 12]; N_STAGES],
+    slow_queries: AtomicU64,
 }
 
 /// Approximate percentile over a `(bucket upper bound µs, count)`
 /// histogram: the upper bound of the bucket containing the percentile.
 /// `p = 0.0` lands on the first non-empty bucket, `p = 1.0` on the last
-/// non-empty one; an empty histogram reports `0`.
-fn histogram_percentile(hist: &[(u64, u64)], p: f64) -> u64 {
+/// non-empty one; an empty histogram reports `0`. Public because the
+/// router computes fleet percentiles from bucket-wise-merged histograms
+/// with exactly this function, so routed and single-node percentiles
+/// share one definition.
+pub fn histogram_percentile(hist: &[(u64, u64)], p: f64) -> u64 {
     let total: u64 = hist.iter().map(|(_, c)| c).sum();
     if total == 0 {
         return 0;
@@ -130,7 +137,7 @@ fn histogram_percentile(hist: &[(u64, u64)], p: f64) -> u64 {
 }
 
 /// Per-class slice of a [`MetricsSnapshot`].
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClassSnapshot {
     /// The request class.
     pub class: RequestClass,
@@ -143,11 +150,14 @@ pub struct ClassSnapshot {
     /// 99th-percentile latency (µs) within the class (histogram upper
     /// bound).
     pub p99_us: u64,
+    /// Raw latency histogram (bucket upper bound µs, count), aligned
+    /// with [`BUCKETS_US`] — the lossless federation payload.
+    pub histogram: Vec<(u64, u64)>,
 }
 
 /// Per-query-stage slice of a [`MetricsSnapshot`] (same shape as
 /// [`ClassSnapshot`], keyed by ladder stage instead of request class).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StageSnapshot {
     /// The query ladder stage.
     pub stage: Stage,
@@ -159,6 +169,9 @@ pub struct StageSnapshot {
     pub p50_us: u64,
     /// 99th-percentile span wall-time (µs, histogram upper bound).
     pub p99_us: u64,
+    /// Raw span-latency histogram (bucket upper bound µs, count),
+    /// aligned with [`BUCKETS_US`].
+    pub histogram: Vec<(u64, u64)>,
 }
 
 /// A point-in-time copy of the metrics.
@@ -194,12 +207,12 @@ impl MetricsSnapshot {
 
     /// Counters for one request class.
     pub fn class(&self, class: RequestClass) -> ClassSnapshot {
-        self.per_class[class.idx()]
+        self.per_class[class.idx()].clone()
     }
 
     /// Counters for one query ladder stage.
     pub fn stage(&self, stage: Stage) -> StageSnapshot {
-        self.per_stage[stage.index()]
+        self.per_stage[stage.index()].clone()
     }
 }
 
@@ -227,6 +240,17 @@ impl Metrics {
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Record one query that crossed the configured slow-query
+    /// threshold (`serve --slow-query-ms`).
+    pub fn record_slow_query(&self) {
+        self.slow_queries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Queries that crossed the slow-query threshold so far.
+    pub fn slow_queries(&self) -> u64 {
+        self.slow_queries.load(Ordering::Relaxed)
     }
 
     /// Record one query-stage span's wall-time, reusing the same
@@ -261,6 +285,7 @@ impl Metrics {
                     mean_latency_us: if n > 0 { lat as f64 / n as f64 } else { 0.0 },
                     p50_us: histogram_percentile(&hist, 0.5),
                     p99_us: histogram_percentile(&hist, 0.99),
+                    histogram: hist,
                 }
             })
             .collect();
@@ -280,6 +305,7 @@ impl Metrics {
                     mean_us: if n > 0 { lat as f64 / n as f64 } else { 0.0 },
                     p50_us: histogram_percentile(&hist, 0.5),
                     p99_us: histogram_percentile(&hist, 0.99),
+                    histogram: hist,
                 }
             })
             .collect();
@@ -312,6 +338,7 @@ impl Metrics {
             "pqdtw_batched_items_total",
             self.batched_items.load(Ordering::Relaxed),
         );
+        p.counter("pqdtw_slow_queries_total", self.slow_queries.load(Ordering::Relaxed));
         p.family("pqdtw_request_latency_microseconds", "histogram");
         for &class in RequestClass::ALL.iter() {
             let hist: Vec<(u64, u64)> = BUCKETS_US
@@ -472,6 +499,39 @@ mod tests {
         assert_eq!(s.stage(Stage::LutCollapse).count, 0);
         // Stage spans do not perturb request counters.
         assert_eq!(s.requests, 0);
+    }
+
+    #[test]
+    fn snapshots_retain_raw_bucket_counts() {
+        let m = Metrics::new();
+        m.record_request(RequestClass::Nn, 30, false); // ≤50 bucket
+        m.record_request(RequestClass::Nn, 30, false);
+        m.record_stage(Stage::Rerank, 400); // ≤500 bucket
+        let s = m.snapshot();
+        let nn = s.class(RequestClass::Nn);
+        assert_eq!(nn.histogram.len(), BUCKETS_US.len());
+        assert_eq!(nn.histogram[2], (50, 2));
+        assert_eq!(nn.histogram.iter().map(|&(_, c)| c).sum::<u64>(), 2);
+        let rr = s.stage(Stage::Rerank);
+        assert_eq!(rr.histogram[5], (500, 1));
+        // Bucket bounds mirror BUCKETS_US exactly, in order.
+        for (got, want) in nn.histogram.iter().zip(BUCKETS_US.iter()) {
+            assert_eq!(got.0, *want);
+        }
+    }
+
+    #[test]
+    fn slow_query_counter_accumulates_and_renders() {
+        let m = Metrics::new();
+        assert_eq!(m.slow_queries(), 0);
+        m.record_slow_query();
+        m.record_slow_query();
+        assert_eq!(m.slow_queries(), 2);
+        let mut p = PromText::new();
+        m.render_prometheus(&mut p);
+        let text = p.finish();
+        assert!(text.contains("# TYPE pqdtw_slow_queries_total counter"));
+        assert!(text.contains("pqdtw_slow_queries_total 2"));
     }
 
     #[test]

@@ -22,5 +22,8 @@ pub mod service;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use engine::{Engine, EngineInfo, Hit, Request, Response};
-pub use metrics::{ClassSnapshot, Metrics, MetricsSnapshot, RequestClass, StageSnapshot};
+pub use metrics::{
+    histogram_percentile, ClassSnapshot, Metrics, MetricsSnapshot, RequestClass, StageSnapshot,
+    BUCKETS_US,
+};
 pub use service::{Service, ServiceConfig};

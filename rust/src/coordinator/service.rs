@@ -206,6 +206,26 @@ impl Service {
         p.finish()
     }
 
+    /// JSON body for the scrape endpoint's `GET /healthz` route. A
+    /// single-node server that can answer at all is healthy; the body
+    /// carries uptime and queue depth so a probe can watch for
+    /// backpressure without parsing the full exposition.
+    pub fn healthz_json(&self) -> String {
+        format!(
+            "{{\"status\":\"ok\",\"uptime_s\":{},\"queue_depth\":{}}}",
+            self.uptime_s(),
+            self.queue_depth()
+        )
+    }
+
+    /// Bump the slow-query counter. Threshold detection lives in the
+    /// serving planes (`serve --slow-query-ms`); the counter lives here
+    /// so `pqdtw_slow_queries_total` renders with the rest of the
+    /// request metrics.
+    pub fn record_slow_query(&self) {
+        self.metrics.record_slow_query();
+    }
+
     /// Record a request served outside the engine path — e.g. the
     /// network plane's ping/stats frames — into the same metrics sink,
     /// so a remote `stats` call accounts for every request class.

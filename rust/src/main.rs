@@ -14,6 +14,7 @@
 //!   pqdtw query --connect 127.0.0.1:7447 --dataset RandomWalk-4096x128 --topk 5 --nprobe 4
 //!   pqdtw query --connect 127.0.0.1:7447 --dataset RandomWalk-4096x128 --topk 5 --trace
 //!   pqdtw serve --listen 127.0.0.1:7447 --index rw.pqx --log-json
+//!   pqdtw serve --listen 127.0.0.1:7447 --index rw.pqx --metrics-listen 127.0.0.1:9464 --slow-query-ms 50
 //!   pqdtw stats --connect 127.0.0.1:7447
 //!   pqdtw stats --connect 127.0.0.1:7447 --prometheus
 //!   pqdtw shutdown --connect 127.0.0.1:7447
@@ -52,7 +53,10 @@ use pqdtw::core::matrix::CondensedMatrix;
 use pqdtw::data::random_walk::RandomWalks;
 use pqdtw::data::ucr_like::{ucr_like_by_name, TrainTest};
 use pqdtw::distance::measure::Measure;
-use pqdtw::net::{connect_with_retry, Client, ClientConfig, NetServer, RetryConfig, ServerConfig};
+use pqdtw::net::{
+    connect_with_retry, Client, ClientConfig, HttpConfig, HttpEndpoints, HttpServer, NetServer,
+    RetryConfig, ServerConfig,
+};
 use pqdtw::nn::ivf::CoarseMetric;
 use pqdtw::nn::knn::{nn_classify_pq, nn_classify_raw, PqQueryMode};
 use pqdtw::pq::quantizer::{PqConfig, PqMetric, PrealignConfig, ProductQuantizer};
@@ -91,7 +95,8 @@ const SPECS: &[CommandSpec] = &[
         flags: pq_flags!(
             "workers", "requests", "topk", "nprobe", "rerank", "nlist", "coarse",
             "scan-threads", "index", "listen", "port-file", "max-conns", "log-json",
-            "job-workers", "router", "shards", "require-full"
+            "job-workers", "router", "shards", "require-full", "metrics-listen",
+            "metrics-port-file", "slow-query-ms"
         ),
     },
     CommandSpec { name: "build-index", flags: pq_flags!("out", "nlist", "coarse", "shard") },
@@ -303,7 +308,7 @@ fn cmd_query_remote(a: &Args, addr: &str) -> Result<()> {
         ensure!(
             reply.trace.is_some() == want_trace,
             "server trace presence does not match the --trace flag for query {i} \
-             (routers answer untraced — trace against a shard directly)"
+             (both shard servers and routers must echo the trace request)"
         );
         n_hits += reply.hits.len();
         if reply.degraded {
@@ -709,6 +714,38 @@ fn parse_bench_results(json: &str) -> Vec<(String, f64)> {
     out
 }
 
+/// `--slow-query-ms` converted to microseconds; `Some(0)` flags every
+/// query (useful for smoke tests), `None` disables detection.
+fn slow_query_us(a: &Args) -> Option<u64> {
+    a.get_opt::<u64>("slow-query-ms").map(|ms| ms.saturating_mul(1000))
+}
+
+/// Start the HTTP scrape endpoint when `--metrics-listen` is present;
+/// the returned guard keeps it serving until dropped. The bound
+/// address is written to `--metrics-port-file` only after the listener
+/// is live (same supervisor contract as `--port-file`).
+fn start_metrics_http(
+    a: &Args,
+    endpoints: HttpEndpoints,
+    logger: &Arc<pqdtw::obs::log::JsonLogger>,
+) -> Result<Option<HttpServer>> {
+    let Some(addr) = a.flags.get("metrics-listen") else {
+        ensure!(
+            !a.flags.contains_key("metrics-port-file"),
+            "--metrics-port-file has no effect without --metrics-listen"
+        );
+        return Ok(None);
+    };
+    let server = HttpServer::start(addr, endpoints, HttpConfig::default(), Arc::clone(logger))?;
+    let http_addr = server.local_addr();
+    if let Some(port_file) = a.flags.get("metrics-port-file") {
+        std::fs::write(port_file, http_addr.to_string())
+            .with_context(|| format!("writing --metrics-port-file {port_file}"))?;
+    }
+    println!("metrics on http://{http_addr}/metrics (health: http://{http_addr}/healthz)");
+    Ok(Some(server))
+}
+
 /// Network serving: cold-start an engine (straight from an index file,
 /// or trained from dataset flags), put the threaded service behind a
 /// TCP listener, and run until a client sends a `Shutdown` frame.
@@ -780,9 +817,20 @@ fn cmd_serve_listen(a: &Args, listen: &str) -> Result<()> {
         Arc::clone(&svc),
         ServerConfig {
             max_connections: a.get_parsed("max-conns", 64usize),
+            slow_query_us: slow_query_us(a),
             ..Default::default()
         },
-        logger,
+        Arc::clone(&logger),
+    )?;
+    let metrics_svc = Arc::clone(&svc);
+    let healthz_svc = Arc::clone(&svc);
+    let _metrics_http = start_metrics_http(
+        a,
+        HttpEndpoints {
+            metrics: Arc::new(move || metrics_svc.prometheus_text()),
+            healthz: Arc::new(move || healthz_svc.healthz_json()),
+        },
+        &logger,
     )?;
     let addr = server.local_addr();
     if let Some(port_file) = a.flags.get("port-file") {
@@ -860,6 +908,7 @@ fn cmd_serve_router(a: &Args) -> Result<()> {
     let listen = a.get("listen", "127.0.0.1:0");
     let mut cfg = RouterConfig::new(shards);
     cfg.require_full = a.has("require-full");
+    cfg.slow_query_us = slow_query_us(a);
     let logger = if a.has("log-json") {
         Arc::new(pqdtw::obs::log::JsonLogger::stderr())
     } else {
@@ -872,8 +921,9 @@ fn cmd_serve_router(a: &Args) -> Result<()> {
             max_connections: a.get_parsed("max-conns", 64usize),
             ..Default::default()
         },
-        logger,
+        Arc::clone(&logger),
     )?;
+    let _metrics_http = start_metrics_http(a, server.http_endpoints(), &logger)?;
     let addr = server.local_addr();
     if let Some(port_file) = a.flags.get("port-file") {
         std::fs::write(port_file, addr.to_string())
@@ -907,7 +957,10 @@ fn cmd_serve(a: &Args) -> Result<()> {
     }
     reject_flags(
         a,
-        &["port-file", "max-conns", "log-json"],
+        &[
+            "port-file", "max-conns", "log-json", "metrics-listen", "metrics-port-file",
+            "slow-query-ms",
+        ],
         "has no effect without --listen: the local synthetic load loop binds no \
          socket (add --listen <addr> to serve over TCP)",
     )?;

@@ -1,0 +1,443 @@
+//! Native HTTP/1.1 scrape endpoint for the observability plane
+//! (`serve --metrics-listen <addr>`), std-only like the rest of the
+//! serving stack.
+//!
+//! Prometheus and load balancers speak plain HTTP, not the PQDTWNET
+//! frame protocol, so the `MetricsText` wire verb alone leaves the
+//! exposition unreachable from a stock scraper. This listener answers
+//! exactly two routes — `GET /metrics` (text exposition) and
+//! `GET /healthz` (JSON health body) — and nothing else.
+//!
+//! Hardening mirrors the frame server's discipline, scaled down to the
+//! protocol's simplicity:
+//!
+//! - one request per connection, always `Connection: close` — no
+//!   keep-alive state machine to get wrong;
+//! - the request head is read under a byte cap and a read timeout, so
+//!   a hostile peer can neither balloon memory nor pin a thread;
+//! - anything that is not a well-formed `GET` of a known route gets a
+//!   minimal error status (`400`/`404`/`405`) and a disconnect;
+//! - connections past the cap receive `503` without a thread spawn.
+//!
+//! Route bodies come from caller-supplied closures, so the same
+//! listener serves the single-node plane (service exposition) and the
+//! router plane (router exposition + per-shard health) without this
+//! module knowing either.
+
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::obs::log::JsonLogger;
+
+/// A route body provider: called once per matching request, returns
+/// the current body text.
+pub type BodyFn = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// The two routes the endpoint serves.
+#[derive(Clone)]
+pub struct HttpEndpoints {
+    /// `GET /metrics` — Prometheus text exposition.
+    pub metrics: BodyFn,
+    /// `GET /healthz` — JSON health body.
+    pub healthz: BodyFn,
+}
+
+impl std::fmt::Debug for HttpEndpoints {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HttpEndpoints").finish_non_exhaustive()
+    }
+}
+
+/// Scrape-endpoint limits.
+#[derive(Debug, Clone, Copy)]
+pub struct HttpConfig {
+    /// Maximum concurrent scrape connections; excess connects receive
+    /// `503` and are closed without spawning a thread.
+    pub max_connections: usize,
+    /// Byte cap on the request head (request line + headers); larger
+    /// heads get `400` and a disconnect.
+    pub max_request_bytes: usize,
+    /// How long a connection may dribble its request head.
+    pub read_timeout: Duration,
+    /// Write timeout per response.
+    pub write_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            max_connections: 16,
+            max_request_bytes: 8 * 1024,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Lock a mutex, recovering from poison — a panicking scrape thread
+/// must not wedge shutdown (same discipline as the frame server).
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+struct Shared {
+    endpoints: HttpEndpoints,
+    cfg: HttpConfig,
+    logger: Arc<JsonLogger>,
+    local_addr: SocketAddr,
+    stop: AtomicBool,
+    active: AtomicUsize,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A running scrape endpoint. Dropping it (or calling
+/// [`HttpServer::shutdown`]) stops the accept loop and joins every
+/// connection thread.
+pub struct HttpServer {
+    shared: Arc<Shared>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start answering scrapes.
+    pub fn start(
+        addr: &str,
+        endpoints: HttpEndpoints,
+        cfg: HttpConfig,
+        logger: Arc<JsonLogger>,
+    ) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("http: binding {addr}"))?;
+        let local_addr = listener.local_addr().context("http: reading bound address")?;
+        logger.event("metrics_http_start", &[("addr", local_addr.to_string().into())]);
+        let shared = Arc::new(Shared {
+            endpoints,
+            cfg,
+            logger,
+            local_addr,
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            conn_threads: Mutex::new(Vec::new()),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(HttpServer { shared, accept_thread: Some(accept_thread) })
+    }
+
+    /// The address the endpoint actually bound (resolves `:0` ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    /// Stop accepting, join the accept loop and every scrape thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if !self.shared.stop.swap(true, Ordering::SeqCst) {
+            // Wake the accept loop with a throwaway connection.
+            let mut wake = self.shared.local_addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match wake.ip() {
+                    IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                    IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                });
+            }
+            let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            lock_unpoisoned(&self.shared.conn_threads).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                // Persistent accept failures (EMFILE) must not spin.
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+        };
+        let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+        let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+        if shared.active.load(Ordering::SeqCst) >= shared.cfg.max_connections {
+            shared.logger.event(
+                "metrics_http_rejected",
+                &[("capacity", (shared.cfg.max_connections as u64).into())],
+            );
+            write_response(&mut stream, 503, "text/plain; charset=utf-8", "busy\n");
+            let _ = stream.shutdown(Shutdown::Both);
+            continue;
+        }
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        let conn_shared = Arc::clone(&shared);
+        let handle = std::thread::spawn(move || {
+            serve_one(stream, &conn_shared);
+            conn_shared.active.fetch_sub(1, Ordering::SeqCst);
+        });
+        let mut threads = lock_unpoisoned(&shared.conn_threads);
+        threads.retain(|t| !t.is_finished());
+        threads.push(handle);
+    }
+}
+
+/// Answer exactly one request on `stream`, then close. Every outcome —
+/// including a torn or hostile head — produces at most one response
+/// and a disconnect; nothing here can panic or block past the
+/// configured timeouts.
+fn serve_one(mut stream: TcpStream, shared: &Shared) {
+    let (status, content_type, body) = match read_head(&mut stream, shared.cfg.max_request_bytes)
+    {
+        Ok(head) => route(&head, &shared.endpoints),
+        Err(_) => (400, "text/plain; charset=utf-8", "bad request\n".to_string()),
+    };
+    if shared.logger.is_enabled() {
+        shared.logger.event(
+            "metrics_http_request",
+            &[("status", u64::from(status).into()), ("bytes", (body.len() as u64).into())],
+        );
+    }
+    write_response(&mut stream, status, content_type, &body);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Read the request head (request line + headers) up to the byte cap.
+/// Errors on a torn head, an over-cap head, or a read timeout.
+fn read_head(stream: &mut TcpStream, cap: usize) -> std::io::Result<String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut scratch = [0u8; 512];
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+        if buf.len() >= cap {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "request head exceeds cap",
+            ));
+        }
+        let n = stream.read(&mut scratch)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-request",
+            ));
+        }
+        buf.extend_from_slice(&scratch[..n]);
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}
+
+/// Map a request head to `(status, content type, body)`. Headers are
+/// deliberately ignored — only the request line matters for a scrape.
+fn route(head: &str, endpoints: &HttpEndpoints) -> (u16, &'static str, String) {
+    let line = head.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = (
+        parts.next().unwrap_or(""),
+        parts.next().unwrap_or(""),
+        parts.next().unwrap_or(""),
+    );
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return (400, "text/plain; charset=utf-8", "bad request\n".to_string());
+    }
+    if method != "GET" {
+        return (405, "text/plain; charset=utf-8", "method not allowed\n".to_string());
+    }
+    match path {
+        "/metrics" => {
+            (200, "text/plain; version=0.0.4; charset=utf-8", (endpoints.metrics)())
+        }
+        "/healthz" => (200, "application/json", (endpoints.healthz)()),
+        _ => (404, "text/plain; charset=utf-8", "not found\n".to_string()),
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+/// Write one complete HTTP/1.1 response; failures are swallowed (the
+/// peer is gone, and observability must never take the plane down).
+fn write_response(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        reason(status),
+        body.len(),
+    );
+    if status == 405 {
+        head.push_str("Allow: GET\r\n");
+    }
+    head.push_str("\r\n");
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_endpoints() -> HttpEndpoints {
+        HttpEndpoints {
+            metrics: Arc::new(|| "# TYPE up gauge\nup 1\n".to_string()),
+            healthz: Arc::new(|| "{\"status\":\"ok\"}".to_string()),
+        }
+    }
+
+    fn short_cfg() -> HttpConfig {
+        HttpConfig {
+            read_timeout: Duration::from_millis(300),
+            write_timeout: Duration::from_millis(300),
+            ..HttpConfig::default()
+        }
+    }
+
+    /// One raw HTTP exchange: send `request`, read to EOF.
+    fn exchange(addr: SocketAddr, request: &[u8]) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request).unwrap();
+        let mut out = Vec::new();
+        let _ = s.read_to_end(&mut out);
+        String::from_utf8_lossy(&out).into_owned()
+    }
+
+    #[test]
+    fn serves_metrics_and_healthz_with_close_semantics() {
+        let srv = HttpServer::start(
+            "127.0.0.1:0",
+            test_endpoints(),
+            short_cfg(),
+            Arc::new(JsonLogger::disabled()),
+        )
+        .unwrap();
+        let resp = exchange(srv.local_addr(), b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n"));
+        assert!(resp.contains("Connection: close\r\n"));
+        assert!(resp.ends_with("up 1\n"));
+        let resp = exchange(srv.local_addr(), b"GET /healthz HTTP/1.0\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("Content-Type: application/json\r\n"));
+        assert!(resp.ends_with("{\"status\":\"ok\"}"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn content_length_matches_the_body() {
+        let srv = HttpServer::start(
+            "127.0.0.1:0",
+            test_endpoints(),
+            short_cfg(),
+            Arc::new(JsonLogger::disabled()),
+        )
+        .unwrap();
+        let resp = exchange(srv.local_addr(), b"GET /metrics HTTP/1.1\r\n\r\n");
+        let (head, body) = resp.split_once("\r\n\r\n").expect("header/body split");
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .expect("content-length header")
+            .parse()
+            .unwrap();
+        assert_eq!(len, body.len());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unknown_route_is_404_and_non_get_is_405() {
+        let srv = HttpServer::start(
+            "127.0.0.1:0",
+            test_endpoints(),
+            short_cfg(),
+            Arc::new(JsonLogger::disabled()),
+        )
+        .unwrap();
+        let resp = exchange(srv.local_addr(), b"GET /nope HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404 Not Found\r\n"), "{resp}");
+        let resp = exchange(srv.local_addr(), b"POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"), "{resp}");
+        assert!(resp.contains("Allow: GET\r\n"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn hostile_heads_get_400_not_a_hang() {
+        let srv = HttpServer::start(
+            "127.0.0.1:0",
+            test_endpoints(),
+            HttpConfig { max_request_bytes: 256, ..short_cfg() },
+            Arc::new(JsonLogger::disabled()),
+        )
+        .unwrap();
+        // Not an HTTP request line at all.
+        let resp = exchange(srv.local_addr(), b"PQDTWNET garbage\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400 Bad Request\r\n"), "{resp}");
+        // Head larger than the cap, never terminated.
+        let big = vec![b'A'; 4096];
+        let resp = exchange(srv.local_addr(), &big);
+        assert!(resp.starts_with("HTTP/1.1 400 Bad Request\r\n"), "{resp}");
+        // Torn head (peer closes before CRLFCRLF).
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        s.write_all(b"GET /metr").unwrap();
+        s.shutdown(Shutdown::Write).unwrap();
+        let mut out = Vec::new();
+        let _ = s.read_to_end(&mut out);
+        let resp = String::from_utf8_lossy(&out);
+        assert!(resp.starts_with("HTTP/1.1 400 Bad Request\r\n"), "{resp}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn connections_past_the_cap_get_503() {
+        let srv = HttpServer::start(
+            "127.0.0.1:0",
+            test_endpoints(),
+            HttpConfig { max_connections: 0, ..short_cfg() },
+            Arc::new(JsonLogger::disabled()),
+        )
+        .unwrap();
+        let resp = exchange(srv.local_addr(), b"GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{resp}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn route_parses_the_request_line_only() {
+        let e = test_endpoints();
+        assert_eq!(route("GET /metrics HTTP/1.1\r\n\r\n", &e).0, 200);
+        assert_eq!(route("GET /healthz HTTP/1.1\r\nX-Junk: y\r\n\r\n", &e).0, 200);
+        assert_eq!(route("GET /metrics/extra HTTP/1.1\r\n\r\n", &e).0, 404);
+        assert_eq!(route("DELETE /metrics HTTP/1.1\r\n\r\n", &e).0, 405);
+        assert_eq!(route("GET /metrics SPDY/3\r\n\r\n", &e).0, 400);
+        assert_eq!(route("", &e).0, 400);
+    }
+}

@@ -23,6 +23,11 @@
 //! - [`client`] — blocking client with connect/request timeouts; the
 //!   `query --connect` / `stats --connect` / `shutdown --connect` CLI
 //!   verbs are thin wrappers around it.
+//! - [`http`] — hardened HTTP/1.1 scrape endpoint
+//!   (`serve --metrics-listen`): `GET /metrics` serves the Prometheus
+//!   exposition and `GET /healthz` a JSON health body, so stock
+//!   scrapers and load balancers reach the observability plane without
+//!   speaking the frame protocol.
 //!
 //! A networked query answers **bit-identically** to the in-process
 //! engine across all serving modes (exhaustive, IVF-probed, DTW
@@ -35,6 +40,7 @@
 #![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod client;
+pub mod http;
 pub mod protocol;
 pub mod server;
 
@@ -42,5 +48,6 @@ pub use client::{
     connect_with_retry, is_timeout_error, jittered_backoff, Client, ClientConfig, NnReply,
     RetryConfig, TopKReply,
 };
+pub use http::{HttpConfig, HttpEndpoints, HttpServer};
 pub use protocol::{NetRequest, NetResponse, WireClassStats, WireStageStats, WireStats};
 pub use server::{NetServer, ServerConfig};

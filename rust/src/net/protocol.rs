@@ -6,7 +6,7 @@
 //!
 //! ```text
 //! magic    8 B   "PQDTWNET"
-//! version  4 B   u32 LE (currently 4)
+//! version  4 B   u32 LE (currently 5)
 //! tag      1 B   frame kind
 //! length   8 B   payload length in bytes, u64 LE
 //! payload  …     tag-specific, encoded with the store's codec primitives
@@ -30,7 +30,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::coordinator::Hit;
 use crate::jobs::{JobEvent, JobSnapshot, JobSpec};
 use crate::nn::knn::PqQueryMode;
-use crate::obs::{HitExplain, QueryTrace, ScanSnapshot, Stage, StageSpan};
+use crate::obs::{ChildTrace, HitExplain, QueryTrace, ScanSnapshot, Stage, StageSpan};
 use crate::store::format::{ByteReader, ByteWriter};
 use crate::store::jobs as jobs_codec;
 
@@ -55,7 +55,15 @@ pub const NET_MAGIC: [u8; 8] = *b"PQDTWNET";
 /// router ([`crate::router`]) can surface partial answers explicitly.
 /// Single-node servers always send `degraded = false` with an empty
 /// list.
-pub const NET_VERSION: u32 = 4;
+///
+/// v5 made the observability plane topology-aware: `Nn`/`TopK` traces
+/// gained an optional per-hit shard provenance field and a trailing
+/// list of per-shard child traces (depth 1 — a child may not itself
+/// carry children), and [`WireStats`] gained raw per-bucket histogram
+/// counts (total, per-class, and per-stage, aligned with
+/// [`crate::coordinator::BUCKETS_US`]) so a router can merge fleet
+/// percentiles exactly instead of approximating.
+pub const NET_VERSION: u32 = 5;
 
 /// Frame header size: magic + version + tag + payload length.
 pub const HEADER_BYTES: usize = 8 + 4 + 1 + 8;
@@ -69,6 +77,15 @@ pub const MAX_FRAME_BYTES: usize = 8 << 20;
 /// series length — a request over this limit is rejected at decode
 /// time, before the engine sees it.
 pub const MAX_QUERY_LEN: usize = 1 << 20;
+
+/// Latency histograms cross the wire as exactly this many raw `u64`
+/// per-bucket counts, one per [`crate::coordinator::BUCKETS_US`]
+/// bound — fixed-size, so there is no length prefix to validate.
+pub const N_LATENCY_BUCKETS: usize = 12;
+
+// The wire layout is pinned to the metrics plane's bucket ladder; a
+// bucket change is a protocol version bump.
+const _: () = assert!(crate::coordinator::metrics::BUCKETS_US.len() == N_LATENCY_BUCKETS);
 
 /// Request tags (1..=11).
 pub const TAG_PING: u8 = 1;
@@ -211,6 +228,10 @@ pub struct WireClassStats {
     pub p50_us: u64,
     /// 99th-percentile latency (µs, histogram bucket upper bound).
     pub p99_us: u64,
+    /// Raw per-bucket histogram counts, one per
+    /// [`crate::coordinator::BUCKETS_US`] bound (exactly
+    /// [`N_LATENCY_BUCKETS`] entries).
+    pub buckets: Vec<u64>,
 }
 
 /// One query-ladder stage in a [`WireStats`] frame.
@@ -228,6 +249,10 @@ pub struct WireStageStats {
     pub p50_us: u64,
     /// 99th-percentile stage wall-time (µs, bucket upper bound).
     pub p99_us: u64,
+    /// Raw per-bucket histogram counts, one per
+    /// [`crate::coordinator::BUCKETS_US`] bound (exactly
+    /// [`N_LATENCY_BUCKETS`] entries).
+    pub buckets: Vec<u64>,
 }
 
 /// The server metrics snapshot as it crosses the wire.
@@ -247,6 +272,11 @@ pub struct WireStats {
     pub p50_us: u64,
     /// 99th-percentile latency (µs) across all classes.
     pub p99_us: u64,
+    /// Raw per-bucket histogram counts across all classes, one per
+    /// [`crate::coordinator::BUCKETS_US`] bound (exactly
+    /// [`N_LATENCY_BUCKETS`] entries) — the lossless form the router's
+    /// exact percentile federation merges.
+    pub latency_buckets: Vec<u64>,
     /// Per-request-class counters.
     pub per_class: Vec<WireClassStats>,
     /// Per-ladder-stage latency counters.
@@ -403,6 +433,41 @@ fn get_opt_f64(r: &mut ByteReader) -> Result<Option<f64>> {
     }
 }
 
+fn put_opt_u64(w: &mut ByteWriter, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            w.u8(1);
+            w.u64(x);
+        }
+        None => w.u8(0),
+    }
+}
+
+fn get_opt_u64(r: &mut ByteReader) -> Result<Option<u64>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(r.u64()?)),
+        other => bail!("net: bad option flag {other}"),
+    }
+}
+
+/// A latency histogram's cumulative bucket counts — fixed-size, no
+/// length prefix (see [`N_LATENCY_BUCKETS`]).
+fn put_buckets(w: &mut ByteWriter, buckets: &[u64]) {
+    debug_assert_eq!(buckets.len(), N_LATENCY_BUCKETS);
+    for i in 0..N_LATENCY_BUCKETS {
+        w.u64(buckets.get(i).copied().unwrap_or(0));
+    }
+}
+
+fn get_buckets(r: &mut ByteReader) -> Result<Vec<u64>> {
+    let mut buckets = Vec::with_capacity(12); // N_LATENCY_BUCKETS, fixed
+    for _ in 0..N_LATENCY_BUCKETS {
+        buckets.push(r.u64()?);
+    }
+    Ok(buckets)
+}
+
 fn put_trace(w: &mut ByteWriter, t: &QueryTrace) {
     w.u64(t.request_id);
     w.usize(t.spans.len());
@@ -418,6 +483,7 @@ fn put_trace(w: &mut ByteWriter, t: &QueryTrace) {
         w.f64(h.pq_estimate);
         put_opt_f64(w, h.exact_dtw);
         w.u8(h.admitted_by.as_u8());
+        put_opt_u64(w, h.shard);
     }
     w.u64(t.scan.items_scanned);
     w.u64(t.scan.items_abandoned);
@@ -425,6 +491,14 @@ fn put_trace(w: &mut ByteWriter, t: &QueryTrace) {
     w.u64(t.scan.lut_collapses);
     w.u64(t.scan.shard_time_us);
     w.u64(t.scan.shards);
+    w.usize(t.children.len());
+    for c in &t.children {
+        w.u64(c.shard);
+        w.u8(u8::from(c.retried));
+        w.u8(u8::from(c.hedged));
+        w.u8(u8::from(c.degraded));
+        put_trace(w, &c.trace);
+    }
 }
 
 fn get_stage(r: &mut ByteReader) -> Result<Stage> {
@@ -433,6 +507,13 @@ fn get_stage(r: &mut ByteReader) -> Result<Stage> {
 }
 
 fn get_trace(r: &mut ByteReader) -> Result<QueryTrace> {
+    get_trace_at_depth(r, 0)
+}
+
+/// Decode one trace body. `depth` is 0 for a top-level trace and 1 for
+/// a per-shard child; children below a child are rejected so a hostile
+/// frame cannot recurse the decoder.
+fn get_trace_at_depth(r: &mut ByteReader, depth: usize) -> Result<QueryTrace> {
     let request_id = r.u64()?;
     let n_spans = r.usize()?;
     // stage tag + wall + in + out = 25 B per span; reject counts the
@@ -451,9 +532,10 @@ fn get_trace(r: &mut ByteReader) -> Result<QueryTrace> {
         });
     }
     let n_hits = r.usize()?;
-    // index + estimate + exact presence byte + stage tag = ≥ 18 B.
+    // index + estimate + exact presence byte + stage tag + shard
+    // presence byte = ≥ 19 B.
     ensure!(
-        n_hits.saturating_mul(18) <= r.remaining(),
+        n_hits.saturating_mul(19) <= r.remaining(),
         "net: explain count {n_hits} exceeds remaining frame bytes"
     );
     let mut hits = Vec::with_capacity(n_hits);
@@ -463,6 +545,7 @@ fn get_trace(r: &mut ByteReader) -> Result<QueryTrace> {
             pq_estimate: r.f64()?,
             exact_dtw: get_opt_f64(r)?,
             admitted_by: get_stage(r)?,
+            shard: get_opt_u64(r)?,
         });
     }
     let scan = ScanSnapshot {
@@ -473,7 +556,32 @@ fn get_trace(r: &mut ByteReader) -> Result<QueryTrace> {
         shard_time_us: r.u64()?,
         shards: r.u64()?,
     };
-    Ok(QueryTrace { request_id, spans, hits, scan })
+    let n_children = r.usize()?;
+    ensure!(
+        depth == 0 || n_children == 0,
+        "net: child traces may not carry children (depth limit 1)"
+    );
+    // shard id + three flag bytes + the minimal empty trace body
+    // (request id + three zero counts + scan snapshot = 80 B) = 91 B.
+    ensure!(
+        n_children.saturating_mul(91) <= r.remaining(),
+        "net: child-trace count {n_children} exceeds remaining frame bytes"
+    );
+    let mut children = Vec::with_capacity(n_children);
+    for _ in 0..n_children {
+        children.push(ChildTrace {
+            shard: r.u64()?,
+            retried: get_bool(r)?,
+            hedged: get_bool(r)?,
+            degraded: get_bool(r)?,
+            trace: get_trace_at_depth(r, depth + 1)?,
+        });
+    }
+    ensure!(
+        children.windows(2).all(|c| c[0].shard < c[1].shard),
+        "net: child-trace shard ids must be strictly ascending"
+    );
+    Ok(QueryTrace { request_id, spans, hits, scan, children })
 }
 
 fn put_opt_trace(w: &mut ByteWriter, t: &Option<QueryTrace>) {
@@ -657,6 +765,7 @@ fn put_stats(w: &mut ByteWriter, s: &WireStats) {
     w.f64(s.mean_latency_us);
     w.u64(s.p50_us);
     w.u64(s.p99_us);
+    put_buckets(w, &s.latency_buckets);
     w.usize(s.per_class.len());
     for c in &s.per_class {
         w.u8(c.class);
@@ -665,6 +774,7 @@ fn put_stats(w: &mut ByteWriter, s: &WireStats) {
         w.f64(c.mean_latency_us);
         w.u64(c.p50_us);
         w.u64(c.p99_us);
+        put_buckets(w, &c.buckets);
     }
     w.usize(s.per_stage.len());
     for st in &s.per_stage {
@@ -674,6 +784,7 @@ fn put_stats(w: &mut ByteWriter, s: &WireStats) {
         w.f64(st.mean_us);
         w.u64(st.p50_us);
         w.u64(st.p99_us);
+        put_buckets(w, &st.buckets);
     }
     w.u64(s.scan.items_scanned);
     w.u64(s.scan.items_abandoned);
@@ -700,12 +811,14 @@ fn get_stats(r: &mut ByteReader) -> Result<WireStats> {
     let mean_latency_us = r.f64()?;
     let p50_us = r.u64()?;
     let p99_us = r.u64()?;
+    let latency_buckets = get_buckets(r)?;
     let n = r.usize()?;
-    // Each class entry holds at least tag + name length + counters, so
-    // any count claiming more than the remaining bytes could encode is
-    // hostile — reject before reserving capacity.
+    // Each class entry holds at least tag + name length + counters +
+    // the fixed 96-byte bucket array, so any count claiming more than
+    // the remaining bytes could encode is hostile — reject before
+    // reserving capacity.
     ensure!(
-        n.saturating_mul(41) <= r.remaining(),
+        n.saturating_mul(137) <= r.remaining(),
         "net: stats class count {n} exceeds remaining frame bytes"
     );
     let mut per_class = Vec::with_capacity(n);
@@ -717,13 +830,14 @@ fn get_stats(r: &mut ByteReader) -> Result<WireStats> {
             mean_latency_us: r.f64()?,
             p50_us: r.u64()?,
             p99_us: r.u64()?,
+            buckets: get_buckets(r)?,
         });
     }
     let n_stages = r.usize()?;
     // Same minimum entry size as a class: tag + name length prefix +
-    // four 8-byte counters.
+    // four 8-byte counters + the fixed bucket array.
     ensure!(
-        n_stages.saturating_mul(41) <= r.remaining(),
+        n_stages.saturating_mul(137) <= r.remaining(),
         "net: stats stage count {n_stages} exceeds remaining frame bytes"
     );
     let mut per_stage = Vec::with_capacity(n_stages);
@@ -735,6 +849,7 @@ fn get_stats(r: &mut ByteReader) -> Result<WireStats> {
             mean_us: r.f64()?,
             p50_us: r.u64()?,
             p99_us: r.u64()?,
+            buckets: get_buckets(r)?,
         });
     }
     let scan = ScanSnapshot {
@@ -762,6 +877,7 @@ fn get_stats(r: &mut ByteReader) -> Result<WireStats> {
         mean_latency_us,
         p50_us,
         p99_us,
+        latency_buckets,
         per_class,
         per_stage,
         scan,
@@ -978,12 +1094,14 @@ mod tests {
                     pq_estimate: 0.5,
                     exact_dtw: Some(0.625),
                     admitted_by: Stage::Rerank,
+                    shard: None,
                 },
                 HitExplain {
                     index: 11,
                     pq_estimate: 0.75,
                     exact_dtw: None,
                     admitted_by: Stage::BlockedScan,
+                    shard: None,
                 },
             ],
             scan: ScanSnapshot {
@@ -994,6 +1112,81 @@ mod tests {
                 shard_time_us: 40,
                 shards: 1,
             },
+            children: Vec::new(),
+        }
+    }
+
+    /// A router-merged trace: fanout/shard_rpc/merge ladder, per-hit
+    /// shard provenance, and per-shard child traces.
+    fn sample_routed_trace() -> QueryTrace {
+        QueryTrace {
+            request_id: 901,
+            spans: vec![
+                StageSpan {
+                    stage: Stage::Fanout,
+                    wall_us: 3,
+                    candidates_in: 2,
+                    candidates_out: 2,
+                },
+                StageSpan {
+                    stage: Stage::ShardRpc,
+                    wall_us: 120,
+                    candidates_in: 1,
+                    candidates_out: 1,
+                },
+                StageSpan {
+                    stage: Stage::ShardRpc,
+                    wall_us: 95,
+                    candidates_in: 1,
+                    candidates_out: 1,
+                },
+                StageSpan {
+                    stage: Stage::Merge,
+                    wall_us: 2,
+                    candidates_in: 4,
+                    candidates_out: 2,
+                },
+            ],
+            hits: vec![
+                HitExplain {
+                    index: 3,
+                    pq_estimate: 0.5,
+                    exact_dtw: Some(0.625),
+                    admitted_by: Stage::Rerank,
+                    shard: Some(0),
+                },
+                HitExplain {
+                    index: 11,
+                    pq_estimate: 0.75,
+                    exact_dtw: None,
+                    admitted_by: Stage::BlockedScan,
+                    shard: Some(2),
+                },
+            ],
+            scan: ScanSnapshot {
+                items_scanned: 256,
+                items_abandoned: 238,
+                blocks_skipped: 2,
+                lut_collapses: 2,
+                shard_time_us: 80,
+                shards: 2,
+            },
+            children: vec![
+                ChildTrace {
+                    shard: 0,
+                    retried: false,
+                    hedged: false,
+                    degraded: false,
+                    trace: sample_trace(),
+                },
+                ChildTrace {
+                    shard: 2,
+                    retried: true,
+                    hedged: true,
+                    degraded: true,
+                    trace: QueryTrace::default(),
+                },
+            ],
         }
     }
 
@@ -1085,6 +1278,7 @@ mod tests {
                     pq_estimate: 0.0,
                     exact_dtw: Some(0.0),
                     admitted_by: Stage::Rerank,
+                    shard: None,
                 }],
             }])),
             NetResponse::JobResult(crate::jobs::JobResult::Autotune {
@@ -1133,6 +1327,23 @@ mod tests {
                 degraded: false,
                 missing_shards: vec![],
             },
+            NetResponse::TopK {
+                hits: vec![
+                    Hit { index: 3, distance: 0.625, label: None },
+                    Hit { index: 11, distance: 0.75, label: Some(1) },
+                ],
+                trace: Some(sample_routed_trace()),
+                degraded: true,
+                missing_shards: vec![1],
+            },
+            NetResponse::Nn {
+                index: 3,
+                distance: 0.625,
+                label: None,
+                trace: Some(sample_routed_trace()),
+                degraded: false,
+                missing_shards: vec![],
+            },
             NetResponse::Stats(WireStats {
                 requests: 10,
                 errors: 1,
@@ -1141,6 +1352,7 @@ mod tests {
                 mean_latency_us: 120.0,
                 p50_us: 100,
                 p99_us: 1000,
+                latency_buckets: vec![0, 1, 2, 4, 8, 9, 10, 10, 10, 10, 10, 10],
                 per_class: vec![WireClassStats {
                     class: 3,
                     name: "topk_exhaustive".into(),
@@ -1148,6 +1360,7 @@ mod tests {
                     mean_latency_us: 120.0,
                     p50_us: 100,
                     p99_us: 1000,
+                    buckets: vec![0, 1, 2, 4, 8, 9, 10, 10, 10, 10, 10, 10],
                 }],
                 per_stage: vec![WireStageStats {
                     stage: 2,
@@ -1156,6 +1369,7 @@ mod tests {
                     mean_us: 40.5,
                     p50_us: 50,
                     p99_us: 100,
+                    buckets: vec![0, 2, 5, 10, 10, 10, 10, 10, 10, 10, 10, 10],
                 }],
                 scan: ScanSnapshot {
                     items_scanned: 1280,
@@ -1494,6 +1708,111 @@ mod tests {
         let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
         let err = decode_response(tag, &payload).unwrap_err().to_string();
         assert!(err.contains("stage tag"), "{err}");
+    }
+
+    #[test]
+    fn hostile_child_traces_are_rejected() {
+        // Build an NN-result payload carrying an empty trace body plus
+        // a forged child section, then decode it.
+        fn decode_nn_with_children(
+            children: impl FnOnce(&mut ByteWriter),
+        ) -> Result<NetResponse> {
+            let mut p = ByteWriter::new();
+            p.usize(7); // index
+            p.f64(1.0); // distance
+            p.u8(0); // label: None
+            p.u8(1); // trace present
+            p.u64(0); // trace request id
+            p.usize(0); // spans
+            p.usize(0); // hits
+            for _ in 0..6 {
+                p.u64(0); // scan snapshot
+            }
+            children(&mut p);
+            p.u8(0); // not degraded
+            p.usize(0); // no missing shards
+            let frame = encode_frame(TAG_NN_RESULT, &p.into_bytes());
+            let mut cursor = std::io::Cursor::new(&frame[..]);
+            let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+            decode_response(tag, &payload)
+        }
+
+        /// One minimal well-formed child body (empty trace).
+        fn put_child(p: &mut ByteWriter, shard: u64) {
+            p.u64(shard);
+            p.u8(0); // retried
+            p.u8(0); // hedged
+            p.u8(0); // degraded
+            p.u64(0); // child request id
+            p.usize(0); // spans
+            p.usize(0); // hits
+            for _ in 0..6 {
+                p.u64(0); // scan snapshot
+            }
+            p.usize(0); // grandchildren
+        }
+
+        // A child count the frame cannot back is rejected before any
+        // allocation.
+        let err = decode_nn_with_children(|p| p.usize(1 << 60)).unwrap_err().to_string();
+        assert!(err.contains("child-trace count"), "{err}");
+
+        // Child shard ids must be strictly ascending (canonical form).
+        let err = decode_nn_with_children(|p| {
+            p.usize(2);
+            put_child(p, 3);
+            put_child(p, 1);
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("ascending"), "{err}");
+
+        // A well-formed child section decodes.
+        let resp = decode_nn_with_children(|p| {
+            p.usize(1);
+            put_child(p, 2);
+        })
+        .unwrap();
+        match resp {
+            NetResponse::Nn { trace: Some(t), .. } => {
+                assert_eq!(t.children.len(), 1);
+                assert_eq!(t.children[0].shard, 2);
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+
+        // A grandchild (depth 2) is rejected even when well-formed —
+        // the decoder's recursion is bounded.
+        let grandchild = ChildTrace {
+            shard: 0,
+            retried: false,
+            hedged: false,
+            degraded: false,
+            trace: QueryTrace::default(),
+        };
+        let child = ChildTrace {
+            shard: 0,
+            retried: false,
+            hedged: false,
+            degraded: false,
+            trace: QueryTrace { children: vec![grandchild], ..QueryTrace::default() },
+        };
+        let resp = NetResponse::Nn {
+            index: 0,
+            distance: 0.0,
+            label: None,
+            trace: Some(QueryTrace {
+                children: vec![child],
+                ..QueryTrace::default()
+            }),
+            degraded: false,
+            missing_shards: vec![],
+        };
+        let frame = encode_response(&resp);
+        let mut cursor = std::io::Cursor::new(&frame[..]);
+        let (tag, payload) = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().unwrap();
+        let err = decode_response(tag, &payload).unwrap_err().to_string();
+        assert!(err.contains("depth"), "{err}");
     }
 
     #[test]

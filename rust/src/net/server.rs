@@ -44,6 +44,11 @@ pub struct ServerConfig {
     /// Write timeout per response frame, bounding how long a drained
     /// shutdown can be held up by a client that stops reading.
     pub write_timeout: Duration,
+    /// Engine-bound requests whose submit-to-reply wall time reaches
+    /// this threshold emit a `slow_query` event and bump
+    /// `pqdtw_slow_queries_total` (`serve --slow-query-ms`). `None`
+    /// disables detection.
+    pub slow_query_us: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -53,6 +58,7 @@ impl Default for ServerConfig {
             max_frame_bytes: protocol::MAX_FRAME_BYTES,
             max_in_flight: 32,
             write_timeout: Duration::from_secs(30),
+            slow_query_us: None,
         }
     }
 }
@@ -271,13 +277,16 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 
 /// One queued reply on a connection: either already materialized at the
 /// net layer (ping/stats/errors) or pending from a service worker.
-/// Pending replies carry the wire request id, stamped over the trace
-/// (if any) before the result frame goes out.
+/// Pending replies carry the wire request id (stamped over the trace,
+/// if any, before the result frame goes out) plus the submit instant
+/// and request class, so the writer can detect slow queries end to end.
 enum Outgoing {
     Ready(NetResponse),
     Pending {
         reply: mpsc::Receiver<(Response, Option<QueryTrace>)>,
         request_id: u64,
+        submitted: Instant,
+        class: &'static str,
     },
 }
 
@@ -296,7 +305,7 @@ fn handle_connection(stream: TcpStream, id: u64, shared: Arc<Shared>) {
 
 /// Reader half of a connection; returns whether a `Shutdown` frame was
 /// served (the caller then triggers the server-wide drain).
-fn serve_connection(stream: &TcpStream, shared: &Shared) -> bool {
+fn serve_connection(stream: &TcpStream, shared: &Arc<Shared>) -> bool {
     let mut reader = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return false,
@@ -306,7 +315,8 @@ fn serve_connection(stream: &TcpStream, shared: &Shared) -> bool {
         Err(_) => return false,
     };
     let (tx, rx) = mpsc::sync_channel::<Outgoing>(shared.cfg.max_in_flight.max(1));
-    let writer = std::thread::spawn(move || write_loop(writer_stream, rx));
+    let writer_shared = Arc::clone(shared);
+    let writer = std::thread::spawn(move || write_loop(writer_stream, rx, writer_shared));
     let mut saw_shutdown = false;
     loop {
         match protocol::read_frame(&mut reader, shared.cfg.max_frame_bytes) {
@@ -479,25 +489,29 @@ fn dispatch_job(req: NetRequest, shared: &Shared) -> Outgoing {
 }
 
 fn submit(shared: &Shared, req: Request, request_id: u64, trace: bool) -> Outgoing {
+    let class = req.class().name();
     match shared.service.submit_traced(req, trace) {
-        Some(reply) => Outgoing::Pending { reply, request_id },
+        Some(reply) => {
+            Outgoing::Pending { reply, request_id, submitted: Instant::now(), class }
+        }
         None => Outgoing::Ready(NetResponse::Error("service closed".into())),
     }
 }
 
 /// Writer half of a connection: replies go out strictly in request
 /// order, draining whatever is still queued when the reader stops.
-fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
+fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>, shared: Arc<Shared>) {
     while let Ok(out) = rx.recv() {
         let resp = match out {
             Outgoing::Ready(resp) => resp,
-            Outgoing::Pending { reply, request_id } => match reply.recv() {
+            Outgoing::Pending { reply, request_id, submitted, class } => match reply.recv() {
                 Ok((resp, mut trace)) => {
                     // The engine doesn't know wire ids; stamp the
                     // client's id onto the trace it asked for.
                     if let Some(t) = &mut trace {
                         t.request_id = request_id;
                     }
+                    observe_slow_query(&shared, request_id, class, submitted, trace.as_ref());
                     engine_to_net(resp, trace)
                 }
                 Err(_) => NetResponse::Error("worker dropped request".into()),
@@ -508,6 +522,41 @@ fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
             break; // client gone; reader notices via the closed channel
         }
     }
+}
+
+/// Slow-query detection for engine-bound requests, measured submit to
+/// reply (queueing + batching + engine time — what the client actually
+/// waited, minus socket transfer). Crossing the `--slow-query-ms`
+/// threshold bumps `pqdtw_slow_queries_total` and emits one
+/// `slow_query` event; `spans` carries the per-stage wall-time summary
+/// when the request was traced (empty otherwise), `degraded` is always
+/// false on a single-node server (the field exists so the router's
+/// events have the same shape).
+fn observe_slow_query(
+    shared: &Shared,
+    request_id: u64,
+    class: &'static str,
+    submitted: Instant,
+    trace: Option<&QueryTrace>,
+) {
+    let Some(threshold_us) = shared.cfg.slow_query_us else {
+        return;
+    };
+    let wall_us = u64::try_from(submitted.elapsed().as_micros()).unwrap_or(u64::MAX);
+    if wall_us < threshold_us {
+        return;
+    }
+    shared.service.record_slow_query();
+    shared.logger.event(
+        "slow_query",
+        &[
+            ("request_id", request_id.into()),
+            ("class", class.into()),
+            ("wall_us", wall_us.into()),
+            ("degraded", false.into()),
+            ("spans", trace.map(QueryTrace::span_summary).unwrap_or_default().into()),
+        ],
+    );
 }
 
 fn engine_to_net(resp: Response, trace: Option<QueryTrace>) -> NetResponse {
@@ -545,6 +594,10 @@ pub fn wire_stats(m: &MetricsSnapshot) -> WireStats {
         mean_latency_us: m.mean_latency_us,
         p50_us: m.percentile_us(0.5),
         p99_us: m.percentile_us(0.99),
+        // Raw per-bucket counts ride along with every percentile so the
+        // router can merge distributions exactly instead of
+        // approximating fleet percentiles from per-shard scalars.
+        latency_buckets: m.histogram.iter().map(|&(_, c)| c).collect(),
         per_class: m
             .per_class
             .iter()
@@ -556,6 +609,7 @@ pub fn wire_stats(m: &MetricsSnapshot) -> WireStats {
                 mean_latency_us: c.mean_latency_us,
                 p50_us: c.p50_us,
                 p99_us: c.p99_us,
+                buckets: c.histogram.iter().map(|&(_, n)| n).collect(),
             })
             .collect(),
         per_stage: m
@@ -568,6 +622,7 @@ pub fn wire_stats(m: &MetricsSnapshot) -> WireStats {
                 mean_us: s.mean_us,
                 p50_us: s.p50_us,
                 p99_us: s.p99_us,
+                buckets: s.histogram.iter().map(|&(_, n)| n).collect(),
             })
             .collect(),
         scan: Default::default(),
@@ -619,6 +674,28 @@ mod tests {
         assert!(probed.p50_us >= 100);
         let ping = s.per_class.iter().find(|c| c.name == "ping").unwrap();
         assert_eq!(ping.requests, 1);
+    }
+
+    #[test]
+    fn wire_stats_carry_raw_bucket_counts() {
+        use crate::coordinator::BUCKETS_US;
+        let m = Metrics::new();
+        m.record_request(RequestClass::Nn, 120, false); // lands in the 250µs bucket
+        m.record_request(RequestClass::Nn, 3, false); // lands in the 10µs bucket
+        let s = wire_stats(&m.snapshot());
+        assert_eq!(s.latency_buckets.len(), protocol::N_LATENCY_BUCKETS);
+        assert_eq!(s.latency_buckets.iter().sum::<u64>(), 2);
+        assert_eq!(s.latency_buckets[0], 1);
+        let idx_250 = BUCKETS_US.iter().position(|&ub| ub == 250).unwrap();
+        assert_eq!(s.latency_buckets[idx_250], 1);
+        let nn = s.per_class.iter().find(|c| c.name == "nn").unwrap();
+        assert_eq!(nn.buckets, s.latency_buckets);
+        for c in &s.per_class {
+            assert_eq!(c.buckets.len(), protocol::N_LATENCY_BUCKETS);
+        }
+        for st in &s.per_stage {
+            assert_eq!(st.buckets.len(), protocol::N_LATENCY_BUCKETS);
+        }
     }
 
     #[test]

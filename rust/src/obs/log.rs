@@ -139,7 +139,8 @@ pub fn render_event(ts: u64, name: &str, fields: &[(&str, Value)]) -> String {
     out
 }
 
-fn escape(s: &str) -> String {
+/// JSON string escaping (shared with the `/healthz` body builder).
+pub(crate) fn escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

@@ -128,6 +128,10 @@ impl ScanSnapshot {
 
 /// One rung of the query ladder. Wire encoding and Prometheus label both
 /// use [`Stage::name`]; the discriminant is stable (`as_u8`/`from_u8`).
+///
+/// Tags 0–3 are the single-engine ladder; tags 4–6 are the router-level
+/// stages a scatter-gather router records around its shard fan-out
+/// (they never appear in a single-engine trace).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage {
     /// Query-side LUT derivation (symmetric collapse or asymmetric build).
@@ -138,15 +142,30 @@ pub enum Stage {
     BlockedScan,
     /// Exact windowed-DTW re-rank of the PQ candidate pool.
     Rerank,
+    /// Router: scatter of one query to every healthy shard (wall time of
+    /// the whole fan-out, including the slowest leg).
+    Fanout,
+    /// Router: one shard's RPC leg (one span per shard that answered).
+    ShardRpc,
+    /// Router: deterministic k-way merge of the shard answers.
+    Merge,
 }
 
 /// Number of distinct stages (histogram array dimension).
-pub const N_STAGES: usize = 4;
+pub const N_STAGES: usize = 7;
 
 impl Stage {
-    /// All stages in ladder order.
-    pub const ALL: [Stage; N_STAGES] =
-        [Stage::LutCollapse, Stage::CoarseProbe, Stage::BlockedScan, Stage::Rerank];
+    /// All stages in ladder order (engine rungs first, then the
+    /// router-level fan-out stages).
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::LutCollapse,
+        Stage::CoarseProbe,
+        Stage::BlockedScan,
+        Stage::Rerank,
+        Stage::Fanout,
+        Stage::ShardRpc,
+        Stage::Merge,
+    ];
 
     /// Stable snake_case name (wire docs, Prometheus `stage` label,
     /// JSON trace output).
@@ -156,6 +175,9 @@ impl Stage {
             Stage::CoarseProbe => "coarse_probe",
             Stage::BlockedScan => "blocked_scan",
             Stage::Rerank => "rerank",
+            Stage::Fanout => "fanout",
+            Stage::ShardRpc => "shard_rpc",
+            Stage::Merge => "merge",
         }
     }
 
@@ -166,6 +188,9 @@ impl Stage {
             Stage::CoarseProbe => 1,
             Stage::BlockedScan => 2,
             Stage::Rerank => 3,
+            Stage::Fanout => 4,
+            Stage::ShardRpc => 5,
+            Stage::Merge => 6,
         }
     }
 
@@ -177,6 +202,9 @@ impl Stage {
             1 => Some(Stage::CoarseProbe),
             2 => Some(Stage::BlockedScan),
             3 => Some(Stage::Rerank),
+            4 => Some(Stage::Fanout),
+            5 => Some(Stage::ShardRpc),
+            6 => Some(Stage::Merge),
             _ => None,
         }
     }
@@ -213,6 +241,28 @@ pub struct HitExplain {
     pub exact_dtw: Option<f64>,
     /// The last stage that (re)admitted the hit into the result set.
     pub admitted_by: Stage,
+    /// The shard whose engine admitted the hit (routed traces only;
+    /// `None` for single-engine traces and job-plane explains).
+    pub shard: Option<u64>,
+}
+
+/// One shard's sub-trace inside a routed [`QueryTrace`]: the shard's
+/// own engine trace plus the router's per-leg annotations. Child traces
+/// are depth-1 by construction — a child never carries children of its
+/// own (the wire decoder rejects deeper nesting).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChildTrace {
+    /// Shard index (position in the router's `--shards` list).
+    pub shard: u64,
+    /// The leg was re-attempted after a hard failure.
+    pub retried: bool,
+    /// The leg was re-attempted after a read timeout.
+    pub hedged: bool,
+    /// The shard did not contribute to the merged answer (its trace is
+    /// whatever arrived before the leg failed — usually empty).
+    pub degraded: bool,
+    /// The shard server's own trace for this query.
+    pub trace: QueryTrace,
 }
 
 /// End-to-end record of one query's walk down the ladder.
@@ -229,6 +279,9 @@ pub struct QueryTrace {
     pub hits: Vec<HitExplain>,
     /// This query's kernel counters (quiescent per-query sink snapshot).
     pub scan: ScanSnapshot,
+    /// Per-shard sub-traces, ascending by shard (routed traces only;
+    /// empty for single-engine traces).
+    pub children: Vec<ChildTrace>,
 }
 
 impl QueryTrace {
@@ -237,14 +290,48 @@ impl QueryTrace {
         self.spans.iter().find(|s| s.stage == stage)
     }
 
+    /// One-line per-stage wall-time summary
+    /// (`"fanout=3us shard_rpc=120us merge=2us"`) — the `spans` field
+    /// of `slow_query` log events.
+    pub fn span_summary(&self) -> String {
+        let parts: Vec<String> = self
+            .spans
+            .iter()
+            .map(|s| format!("{}={}us", s.stage.name(), s.wall_us))
+            .collect();
+        parts.join(" ")
+    }
+
     /// Render the trace as human-readable text (the `query --trace` CLI
-    /// output; one line per span, then one per explained hit).
+    /// output; one line per span, then one per explained hit, then —
+    /// for routed traces — each shard's sub-ladder indented below).
     pub fn render_text(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!("trace request_id={}\n", self.request_id));
+        self.render_body(&mut out, "  ");
+        for c in &self.children {
+            let mut flags = String::new();
+            if c.retried {
+                flags.push_str(" retried");
+            }
+            if c.hedged {
+                flags.push_str(" hedged");
+            }
+            if c.degraded {
+                flags.push_str(" degraded");
+            }
+            out.push_str(&format!("  shard {}{flags}\n", c.shard));
+            out.push_str(&format!("    trace request_id={}\n", c.trace.request_id));
+            c.trace.render_body(&mut out, "    ");
+        }
+        out
+    }
+
+    /// The span/scan/hit lines shared by top-level and child renderings.
+    fn render_body(&self, out: &mut String, pad: &str) {
         for s in &self.spans {
             out.push_str(&format!(
-                "  stage {:<13} wall_us={:<8} in={:<8} out={}\n",
+                "{pad}stage {:<13} wall_us={:<8} in={:<8} out={}\n",
                 s.stage.name(),
                 s.wall_us,
                 s.candidates_in,
@@ -252,7 +339,7 @@ impl QueryTrace {
             ));
         }
         out.push_str(&format!(
-            "  scan items={} abandoned={} ({:.1}%) blocks_skipped={} \
+            "{pad}scan items={} abandoned={} ({:.1}%) blocks_skipped={} \
              lut_collapses={}\n",
             self.scan.items_scanned,
             self.scan.items_abandoned,
@@ -265,15 +352,19 @@ impl QueryTrace {
                 Some(d) => format!(" exact_dtw={d:.6}"),
                 None => String::new(),
             };
+            let shard = match h.shard {
+                Some(s) => format!(" shard={s}"),
+                None => String::new(),
+            };
             out.push_str(&format!(
-                "  hit index={:<6} pq_estimate={:.6}{} admitted_by={}\n",
+                "{pad}hit index={:<6} pq_estimate={:.6}{} admitted_by={}{}\n",
                 h.index,
                 h.pq_estimate,
                 exact,
-                h.admitted_by.name()
+                h.admitted_by.name(),
+                shard
             ));
         }
-        out
     }
 }
 
@@ -320,13 +411,16 @@ mod tests {
         for stage in Stage::ALL {
             assert_eq!(Stage::from_u8(stage.as_u8()), Some(stage));
         }
-        assert_eq!(Stage::from_u8(4), None);
+        assert_eq!(Stage::from_u8(7), None);
         assert_eq!(Stage::from_u8(255), None);
         // The discriminants are part of the wire format — pin them.
         assert_eq!(Stage::LutCollapse.as_u8(), 0);
         assert_eq!(Stage::CoarseProbe.as_u8(), 1);
         assert_eq!(Stage::BlockedScan.as_u8(), 2);
         assert_eq!(Stage::Rerank.as_u8(), 3);
+        assert_eq!(Stage::Fanout.as_u8(), 4);
+        assert_eq!(Stage::ShardRpc.as_u8(), 5);
+        assert_eq!(Stage::Merge.as_u8(), 6);
     }
 
     #[test]
@@ -363,6 +457,7 @@ mod tests {
                 pq_estimate: 1.25,
                 exact_dtw: Some(1.5),
                 admitted_by: Stage::Rerank,
+                shard: None,
             }],
             scan: ScanSnapshot {
                 items_scanned: 100,
@@ -372,6 +467,7 @@ mod tests {
                 shard_time_us: 49,
                 shards: 1,
             },
+            children: Vec::new(),
         };
         assert_eq!(trace.span(Stage::BlockedScan).map(|s| s.wall_us), Some(50));
         assert_eq!(trace.span(Stage::Rerank), None);
@@ -380,5 +476,76 @@ mod tests {
         assert!(text.contains("blocked_scan"));
         assert!(text.contains("abandoned=88"));
         assert!(text.contains("admitted_by=rerank"));
+    }
+
+    #[test]
+    fn routed_trace_renders_the_cross_node_ladder() {
+        let child = QueryTrace {
+            request_id: 9,
+            spans: vec![StageSpan {
+                stage: Stage::BlockedScan,
+                wall_us: 40,
+                candidates_in: 50,
+                candidates_out: 5,
+            }],
+            hits: Vec::new(),
+            scan: ScanSnapshot::default(),
+            children: Vec::new(),
+        };
+        let trace = QueryTrace {
+            request_id: 9,
+            spans: vec![
+                StageSpan {
+                    stage: Stage::Fanout,
+                    wall_us: 55,
+                    candidates_in: 3,
+                    candidates_out: 2,
+                },
+                StageSpan {
+                    stage: Stage::ShardRpc,
+                    wall_us: 40,
+                    candidates_in: 0,
+                    candidates_out: 5,
+                },
+                StageSpan {
+                    stage: Stage::Merge,
+                    wall_us: 2,
+                    candidates_in: 10,
+                    candidates_out: 4,
+                },
+            ],
+            hits: vec![HitExplain {
+                index: 4,
+                pq_estimate: 0.5,
+                exact_dtw: None,
+                admitted_by: Stage::Merge,
+                shard: Some(1),
+            }],
+            scan: ScanSnapshot::default(),
+            children: vec![
+                ChildTrace {
+                    shard: 1,
+                    retried: false,
+                    hedged: false,
+                    degraded: false,
+                    trace: child,
+                },
+                ChildTrace {
+                    shard: 2,
+                    retried: true,
+                    hedged: false,
+                    degraded: true,
+                    trace: QueryTrace::default(),
+                },
+            ],
+        };
+        let text = trace.render_text();
+        assert!(text.contains("stage fanout"), "{text}");
+        assert!(text.contains("stage shard_rpc"), "{text}");
+        assert!(text.contains("stage merge"), "{text}");
+        assert!(text.contains("shard 1\n"), "{text}");
+        assert!(text.contains("shard 2 retried degraded\n"), "{text}");
+        assert!(text.contains("shard=1"), "{text}");
+        assert!(text.contains("    stage blocked_scan"), "{text}");
     }
 }

@@ -150,7 +150,18 @@ impl HealthMachine {
 #[derive(Debug)]
 pub enum ShardOutcome {
     /// A frame came back (possibly an application `Error` frame).
-    Ok(NetResponse),
+    Ok {
+        /// The shard's reply.
+        resp: NetResponse,
+        /// True when the reply came from the single retry after a hard
+        /// transport failure (surfaced as a `shard_rpc` trace
+        /// annotation).
+        retried: bool,
+        /// True when the reply came from the single retry after a
+        /// timeout — a hedge: the first attempt may still complete on
+        /// the shard, but its reply is discarded.
+        hedged: bool,
+    },
     /// Breaker open and not yet due for a half-open trial; the shard
     /// was not contacted.
     Skipped,
@@ -259,12 +270,13 @@ impl ShardConn {
         let first_err = match self.attempt(req) {
             Ok(resp) => {
                 self.record_success();
-                return ShardOutcome::Ok(resp);
+                return ShardOutcome::Ok { resp, retried: false, hedged: false };
             }
             Err(e) => e,
         };
         metrics.shard_failures.incr();
-        if is_timeout_error(&first_err) {
+        let hedged = is_timeout_error(&first_err);
+        if hedged {
             metrics.hedges.incr();
         } else {
             metrics.retries.incr();
@@ -276,7 +288,7 @@ impl ShardConn {
         match self.attempt(req) {
             Ok(resp) => {
                 self.record_success();
-                ShardOutcome::Ok(resp)
+                ShardOutcome::Ok { resp, retried: !hedged, hedged }
             }
             Err(retry_err) => {
                 self.client = None;

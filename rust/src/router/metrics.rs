@@ -53,6 +53,12 @@ pub struct RouterMetrics {
     pub probes: Counter,
     /// Background health probes that failed.
     pub probe_failures: Counter,
+    /// Routed queries whose end-to-end wall time crossed the
+    /// `--slow-query-ms` threshold (0 while no threshold is set).
+    /// Rendered as `pqdtw_slow_queries_total` — deliberately the same
+    /// family name as the single-node server's, so one dashboard query
+    /// covers both planes.
+    pub slow_queries: Counter,
 }
 
 impl RouterMetrics {
@@ -73,6 +79,7 @@ impl RouterMetrics {
         p.counter("pqdtw_router_shard_skips_total", self.shard_skips.get());
         p.counter("pqdtw_router_probes_total", self.probes.get());
         p.counter("pqdtw_router_probe_failures_total", self.probe_failures.get());
+        p.counter("pqdtw_slow_queries_total", self.slow_queries.get());
         p.gauge("pqdtw_router_shards", shards.len() as f64);
         p.family("pqdtw_router_shard_health", "gauge");
         for (index, addr, health) in shards {
@@ -98,6 +105,7 @@ mod tests {
         m.requests.incr();
         m.hedges.incr();
         m.degraded_responses.incr();
+        m.slow_queries.incr();
         let shards = vec![
             (0u64, "127.0.0.1:7001".to_string(), ShardHealth::Healthy),
             (1u64, "127.0.0.1:7002".to_string(), ShardHealth::Down),
@@ -109,6 +117,7 @@ mod tests {
         assert!(text.contains("pqdtw_router_requests_total 2\n"));
         assert!(text.contains("pqdtw_router_hedges_total 1\n"));
         assert!(text.contains("pqdtw_router_degraded_responses_total 1\n"));
+        assert!(text.contains("pqdtw_slow_queries_total 1\n"));
         assert!(text.contains("pqdtw_router_shards 2\n"));
         assert!(text
             .contains("pqdtw_router_shard_health{shard=\"0\",addr=\"127.0.0.1:7001\"} 0\n"));

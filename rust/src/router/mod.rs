@@ -42,10 +42,11 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::coordinator::Hit;
+use crate::coordinator::{histogram_percentile, Hit, BUCKETS_US};
 use crate::net::protocol::{NetRequest, NetResponse, WireStats};
 use crate::obs::log::JsonLogger;
 use crate::obs::prometheus::PromText;
+use crate::obs::{ChildTrace, HitExplain, QueryTrace, ScanSnapshot, Stage, StageSpan};
 
 pub mod fault;
 pub mod health;
@@ -68,12 +69,21 @@ pub struct RouterConfig {
     pub require_full: bool,
     /// Per-shard connect/read deadlines and health thresholds.
     pub health: HealthConfig,
+    /// Emit a `slow_query` log event (and bump
+    /// `pqdtw_slow_queries_total`) for routed queries whose end-to-end
+    /// wall time reaches this many microseconds (`None` disables).
+    pub slow_query_us: Option<u64>,
 }
 
 impl RouterConfig {
     /// A router over `shards` with default health policy.
     pub fn new(shards: Vec<String>) -> Self {
-        RouterConfig { shards, require_full: false, health: HealthConfig::default() }
+        RouterConfig {
+            shards,
+            require_full: false,
+            health: HealthConfig::default(),
+            slow_query_us: None,
+        }
     }
 }
 
@@ -102,12 +112,47 @@ pub fn merge_nn(per_shard: Vec<Hit>) -> Option<Hit> {
     per_shard.into_iter().min_by(hit_order)
 }
 
+/// Element-wise sum of per-shard raw bucket-count arrays (aligned with
+/// [`BUCKETS_US`]). Histogram addition is associative and commutative,
+/// so merging loses nothing and any merge order yields the same fleet
+/// distribution (proptested in `tests/proptests.rs`).
+pub fn merge_buckets<'a>(rows: impl Iterator<Item = &'a [u64]>) -> Vec<u64> {
+    let mut out = vec![0u64; BUCKETS_US.len()];
+    for row in rows {
+        for (acc, &c) in out.iter_mut().zip(row.iter()) {
+            *acc = acc.saturating_add(c);
+        }
+    }
+    out
+}
+
+/// Percentile over a raw bucket-count array, via the exact same
+/// [`histogram_percentile`] definition the single-node snapshot uses —
+/// routed and unsharded percentiles share one formula.
+pub fn bucket_percentile(buckets: &[u64], p: f64) -> u64 {
+    let hist: Vec<(u64, u64)> =
+        BUCKETS_US.iter().copied().zip(buckets.iter().copied()).collect();
+    histogram_percentile(&hist, p)
+}
+
 /// Aggregate per-shard stats frames into one fleet view: counters sum,
-/// means weight by request count, percentiles take the fleet-worst
-/// (max), and the index header comes from the first reporting shard
-/// with `n_items` summed across the fleet.
+/// means weight by request count, and percentiles come from the exact
+/// bucket-wise merge of the shards' raw latency histograms — the fleet
+/// p50/p99 equal the percentiles over the union of every shard's raw
+/// observations (at histogram resolution), exactly what one node
+/// serving all the traffic would report. The index header comes from
+/// the first reporting shard with `n_items` summed across the fleet.
 pub fn aggregate_stats(per_shard: &[WireStats]) -> Option<WireStats> {
     let first = per_shard.first()?;
+    if per_shard.len() == 1 {
+        // A one-shard fleet must report stats bit-identical to the
+        // shard itself. The general path recomputes each mean as
+        // `(mean * n) / n`, which can drift by an ULP in f64, so the
+        // identity case skips the round trip entirely.
+        let mut out = first.clone();
+        out.version = env!("CARGO_PKG_VERSION").to_string();
+        return Some(out);
+    }
     let mut out = first.clone();
     out.n_items = per_shard.iter().map(|s| s.n_items).sum();
     out.requests = per_shard.iter().map(|s| s.requests).sum();
@@ -116,22 +161,25 @@ pub fn aggregate_stats(per_shard: &[WireStats]) -> Option<WireStats> {
     out.mean_batch_size = weighted_mean(per_shard.iter().map(|s| (s.batches, s.mean_batch_size)));
     out.mean_latency_us =
         weighted_mean(per_shard.iter().map(|s| (s.requests, s.mean_latency_us)));
-    out.p50_us = per_shard.iter().map(|s| s.p50_us).max().unwrap_or(0);
-    out.p99_us = per_shard.iter().map(|s| s.p99_us).max().unwrap_or(0);
+    out.latency_buckets = merge_buckets(per_shard.iter().map(|s| s.latency_buckets.as_slice()));
+    out.p50_us = bucket_percentile(&out.latency_buckets, 0.5);
+    out.p99_us = bucket_percentile(&out.latency_buckets, 0.99);
     for (ci, class) in out.per_class.iter_mut().enumerate() {
         let rows: Vec<_> = per_shard.iter().filter_map(|s| s.per_class.get(ci)).collect();
         class.requests = rows.iter().map(|c| c.requests).sum();
         class.mean_latency_us =
             weighted_mean(rows.iter().map(|c| (c.requests, c.mean_latency_us)));
-        class.p50_us = rows.iter().map(|c| c.p50_us).max().unwrap_or(0);
-        class.p99_us = rows.iter().map(|c| c.p99_us).max().unwrap_or(0);
+        class.buckets = merge_buckets(rows.iter().map(|c| c.buckets.as_slice()));
+        class.p50_us = bucket_percentile(&class.buckets, 0.5);
+        class.p99_us = bucket_percentile(&class.buckets, 0.99);
     }
     for (si, stage) in out.per_stage.iter_mut().enumerate() {
         let rows: Vec<_> = per_shard.iter().filter_map(|s| s.per_stage.get(si)).collect();
         stage.count = rows.iter().map(|s| s.count).sum();
         stage.mean_us = weighted_mean(rows.iter().map(|s| (s.count, s.mean_us)));
-        stage.p50_us = rows.iter().map(|s| s.p50_us).max().unwrap_or(0);
-        stage.p99_us = rows.iter().map(|s| s.p99_us).max().unwrap_or(0);
+        stage.buckets = merge_buckets(rows.iter().map(|s| s.buckets.as_slice()));
+        stage.p50_us = bucket_percentile(&stage.buckets, 0.5);
+        stage.p99_us = bucket_percentile(&stage.buckets, 0.99);
     }
     out.scan.items_scanned = per_shard.iter().map(|s| s.scan.items_scanned).sum();
     out.scan.items_abandoned = per_shard.iter().map(|s| s.scan.items_abandoned).sum();
@@ -163,6 +211,82 @@ fn weighted_mean(rows: impl Iterator<Item = (u64, f64)>) -> f64 {
 /// server: a panicking peer thread must not wedge the router).
 pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Microseconds since `t0`, saturating instead of truncating.
+fn elapsed_us(t0: Instant) -> u64 {
+    u64::try_from(t0.elapsed().as_micros()).unwrap_or(u64::MAX)
+}
+
+/// One scatter leg: the shard's outcome plus the leg's wall time as
+/// observed from the router.
+struct Leg {
+    outcome: ShardOutcome,
+    wall_us: u64,
+}
+
+/// One in-shape shard reply after gathering, with the leg annotations
+/// that become `shard_rpc` span / child-trace metadata.
+struct ShardReply {
+    shard: u64,
+    wall_us: u64,
+    retried: bool,
+    hedged: bool,
+    resp: NetResponse,
+}
+
+/// The per-hit explain recorded by `shard`'s own engine for global
+/// index `index`, when that shard sent one.
+fn explain_for(children: &[ChildTrace], shard: u64, index: u64) -> Option<HitExplain> {
+    children
+        .iter()
+        .find(|c| c.shard == shard)
+        .and_then(|c| c.trace.hits.iter().find(|h| h.index == index))
+        .copied()
+}
+
+/// Assemble the merged router-level trace: a `fanout` span (shards
+/// contacted → shards answered), one `shard_rpc` span per answering
+/// shard (1:1 with `children`, both ascending by shard index), and a
+/// `merge` span (candidates in → hits out). The scan snapshot is the
+/// fleet sum of the children's, and `hits` carry shard provenance.
+#[allow(clippy::too_many_arguments)]
+fn build_routed_trace(
+    request_id: u64,
+    n_shards: usize,
+    fanout_us: u64,
+    merge_us: u64,
+    merge_in: u64,
+    merge_out: u64,
+    rpc_spans: Vec<StageSpan>,
+    children: Vec<ChildTrace>,
+    hits: Vec<HitExplain>,
+) -> QueryTrace {
+    let mut spans = Vec::with_capacity(rpc_spans.len() + 2);
+    spans.push(StageSpan {
+        stage: Stage::Fanout,
+        wall_us: fanout_us,
+        candidates_in: n_shards as u64,
+        candidates_out: children.len() as u64,
+    });
+    spans.extend(rpc_spans);
+    spans.push(StageSpan {
+        stage: Stage::Merge,
+        wall_us: merge_us,
+        candidates_in: merge_in,
+        candidates_out: merge_out,
+    });
+    let mut scan = ScanSnapshot::default();
+    for c in &children {
+        scan.items_scanned = scan.items_scanned.saturating_add(c.trace.scan.items_scanned);
+        scan.items_abandoned =
+            scan.items_abandoned.saturating_add(c.trace.scan.items_abandoned);
+        scan.blocks_skipped = scan.blocks_skipped.saturating_add(c.trace.scan.blocks_skipped);
+        scan.lut_collapses = scan.lut_collapses.saturating_add(c.trace.scan.lut_collapses);
+        scan.shard_time_us = scan.shard_time_us.saturating_add(c.trace.scan.shard_time_us);
+        scan.shards = scan.shards.saturating_add(c.trace.scan.shards);
+    }
+    QueryTrace { request_id, spans, hits, scan, children }
 }
 
 /// The scatter-gather core: supervised shard connections plus the
@@ -205,28 +329,38 @@ impl Router {
         self.shards.iter().map(|s| lock_unpoisoned(s).health()).collect()
     }
 
-    /// Send `req` to every shard in parallel; returns per-shard
-    /// outcomes indexed by shard.
-    fn scatter(&self, req: &NetRequest) -> Vec<ShardOutcome> {
-        let mut outcomes: Vec<ShardOutcome> = Vec::with_capacity(self.shards.len());
+    /// Send `req` to every shard in parallel; returns per-shard legs
+    /// indexed by shard, each timed from dispatch to joined reply (so
+    /// a leg's wall time includes connect, retry, and hedge cost).
+    fn scatter(&self, req: &NetRequest) -> Vec<Leg> {
+        let mut legs: Vec<Leg> = Vec::with_capacity(self.shards.len());
         std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .shards
                 .iter()
-                .map(|shard| scope.spawn(move || lock_unpoisoned(shard).request(req, &self.metrics)))
+                .map(|shard| {
+                    scope.spawn(move || {
+                        let t0 = Instant::now();
+                        let outcome = lock_unpoisoned(shard).request(req, &self.metrics);
+                        Leg { outcome, wall_us: elapsed_us(t0) }
+                    })
+                })
                 .collect();
             for (i, h) in handles.into_iter().enumerate() {
                 match h.join() {
-                    Ok(outcome) => outcomes.push(outcome),
+                    Ok(leg) => legs.push(leg),
                     // A panicking scatter thread counts as a failed
                     // shard, not a dead router.
-                    Err(_) => outcomes.push(ShardOutcome::Failed(format!(
-                        "router: scatter worker for shard {i} panicked"
-                    ))),
+                    Err(_) => legs.push(Leg {
+                        outcome: ShardOutcome::Failed(format!(
+                            "router: scatter worker for shard {i} panicked"
+                        )),
+                        wall_us: 0,
+                    }),
                 }
             }
         });
-        outcomes
+        legs
     }
 
     /// Probe every shard once (the background prober calls this on its
@@ -270,24 +404,24 @@ impl Router {
             NetRequest::MetricsText => NetResponse::MetricsText(self.prometheus_text()),
             NetRequest::Shutdown => NetResponse::ShutdownAck,
             NetRequest::Stats => self.routed_stats(),
-            NetRequest::Nn { series, mode, nprobe, request_id, .. } => {
-                // Traces are per-shard artifacts with no sound merge;
-                // the routed query always runs untraced (documented in
-                // docs/serving-topology.md).
-                let fwd = NetRequest::Nn { series, mode, nprobe, request_id, trace: false };
-                self.routed_nn(&fwd)
+            // A traced query scatters traced: each shard's own trace
+            // comes back as a child under the router's
+            // fanout/shard_rpc/merge ladder (docs/serving-topology.md
+            // has the merge contract).
+            NetRequest::Nn { series, mode, nprobe, request_id, trace } => {
+                let t0 = Instant::now();
+                let fwd = NetRequest::Nn { series, mode, nprobe, request_id, trace };
+                let resp = self.routed_nn(&fwd, trace);
+                self.observe_slow_query(request_id, "nn", t0, &resp);
+                resp
             }
-            NetRequest::TopK { series, k, mode, nprobe, rerank, request_id, .. } => {
-                let fwd = NetRequest::TopK {
-                    series,
-                    k,
-                    mode,
-                    nprobe,
-                    rerank,
-                    request_id,
-                    trace: false,
-                };
-                self.routed_topk(&fwd, k)
+            NetRequest::TopK { series, k, mode, nprobe, rerank, request_id, trace } => {
+                let t0 = Instant::now();
+                let fwd =
+                    NetRequest::TopK { series, k, mode, nprobe, rerank, request_id, trace };
+                let resp = self.routed_topk(&fwd, k, trace);
+                self.observe_slow_query(request_id, "topk", t0, &resp);
+                resp
             }
             NetRequest::JobCreate { .. }
             | NetRequest::JobStatus { .. }
@@ -299,23 +433,66 @@ impl Router {
         }
     }
 
-    /// Split scatter outcomes into in-shape replies and missing shards.
+    /// When a `--slow-query-ms` threshold is configured and this
+    /// routed query crossed it, bump `pqdtw_slow_queries_total` and
+    /// emit a `slow_query` event with the per-stage span summary.
+    fn observe_slow_query(
+        &self,
+        request_id: u64,
+        class: &str,
+        started: Instant,
+        resp: &NetResponse,
+    ) {
+        let Some(threshold_us) = self.cfg.slow_query_us else {
+            return;
+        };
+        let wall_us = elapsed_us(started);
+        if wall_us < threshold_us {
+            return;
+        }
+        self.metrics.slow_queries.incr();
+        let (degraded, trace) = match resp {
+            NetResponse::Nn { degraded, trace, .. }
+            | NetResponse::TopK { degraded, trace, .. } => (*degraded, trace.as_ref()),
+            _ => (false, None),
+        };
+        self.logger.event(
+            "slow_query",
+            &[
+                ("request_id", request_id.into()),
+                ("class", class.into()),
+                ("wall_us", wall_us.into()),
+                ("degraded", degraded.into()),
+                ("spans", trace.map(QueryTrace::span_summary).unwrap_or_default().into()),
+            ],
+        );
+    }
+
+    /// Split scatter legs into in-shape replies and missing shards.
     /// A shard that answered with an application `Error` frame is
     /// missing *unless every reachable shard erred* — then the error is
     /// about the query itself (wrong length, bad k) and is propagated
     /// verbatim instead of being dressed up as an outage.
     fn gather(
         &self,
-        outcomes: Vec<ShardOutcome>,
-    ) -> std::result::Result<(Vec<(u64, NetResponse)>, Vec<u64>), NetResponse> {
+        legs: Vec<Leg>,
+    ) -> std::result::Result<(Vec<ShardReply>, Vec<u64>), NetResponse> {
         let mut replies = Vec::new();
         let mut missing = Vec::new();
         let mut app_errors = Vec::new();
-        for (i, outcome) in outcomes.into_iter().enumerate() {
+        for (i, leg) in legs.into_iter().enumerate() {
             let shard = i as u64;
-            match outcome {
-                ShardOutcome::Ok(NetResponse::Error(msg)) => app_errors.push((shard, msg)),
-                ShardOutcome::Ok(resp) => replies.push((shard, resp)),
+            match leg.outcome {
+                ShardOutcome::Ok { resp: NetResponse::Error(msg), .. } => {
+                    app_errors.push((shard, msg))
+                }
+                ShardOutcome::Ok { resp, retried, hedged } => replies.push(ShardReply {
+                    shard,
+                    wall_us: leg.wall_us,
+                    retried,
+                    hedged,
+                    resp,
+                }),
                 ShardOutcome::Skipped => missing.push(shard),
                 ShardOutcome::Failed(err) => {
                     self.logger.event(
@@ -354,56 +531,169 @@ impl Router {
         Ok((replies, missing))
     }
 
-    fn routed_nn(&self, fwd: &NetRequest) -> NetResponse {
-        let (replies, missing) = match self.gather(self.scatter(fwd)) {
+    fn routed_nn(&self, fwd: &NetRequest, traced: bool) -> NetResponse {
+        let request_id = match fwd {
+            NetRequest::Nn { request_id, .. } => *request_id,
+            _ => 0,
+        };
+        let fan_t0 = Instant::now();
+        let legs = self.scatter(fwd);
+        let n_shards = legs.len();
+        let fanout_us = elapsed_us(fan_t0);
+        let (replies, missing) = match self.gather(legs) {
             Ok(v) => v,
             Err(resp) => return resp,
         };
+        let merge_t0 = Instant::now();
         let mut winners = Vec::with_capacity(replies.len());
-        for (shard, resp) in replies {
-            match resp {
-                NetResponse::Nn { index, distance, label, .. } => {
-                    winners.push(Hit { index, distance, label });
+        let mut rpc_spans = Vec::with_capacity(replies.len());
+        let mut children = Vec::with_capacity(replies.len());
+        for reply in replies {
+            match reply.resp {
+                NetResponse::Nn { index, distance, label, trace, degraded, .. } => {
+                    winners.push((reply.shard, Hit { index, distance, label }));
+                    if traced {
+                        rpc_spans.push(StageSpan {
+                            stage: Stage::ShardRpc,
+                            wall_us: reply.wall_us,
+                            candidates_in: 1,
+                            candidates_out: 1,
+                        });
+                        children.push(ChildTrace {
+                            shard: reply.shard,
+                            retried: reply.retried,
+                            hedged: reply.hedged,
+                            degraded,
+                            trace: trace.unwrap_or_default(),
+                        });
+                    }
                 }
                 other => {
                     return NetResponse::Error(format!(
-                        "router: shard {shard} answered NN with {other:?}"
+                        "router: shard {} answered NN with {other:?}",
+                        reply.shard
                     ))
                 }
             }
         }
-        match merge_nn(winners) {
-            Some(best) => NetResponse::Nn {
-                index: best.index,
-                distance: best.distance,
-                label: best.label,
-                trace: None,
-                degraded: !missing.is_empty(),
-                missing_shards: missing,
-            },
+        let n_candidates = winners.len() as u64;
+        let best = winners.into_iter().min_by(|a, b| hit_order(&a.1, &b.1));
+        match best {
+            Some((shard, best)) => {
+                let trace = traced.then(|| {
+                    let mut hits = Vec::new();
+                    if let Some(mut h) = explain_for(&children, shard, best.index as u64) {
+                        h.shard = Some(shard);
+                        hits.push(h);
+                    }
+                    build_routed_trace(
+                        request_id,
+                        n_shards,
+                        fanout_us,
+                        elapsed_us(merge_t0),
+                        n_candidates,
+                        1,
+                        rpc_spans,
+                        children,
+                        hits,
+                    )
+                });
+                NetResponse::Nn {
+                    index: best.index,
+                    distance: best.distance,
+                    label: best.label,
+                    trace,
+                    degraded: !missing.is_empty(),
+                    missing_shards: missing,
+                }
+            }
             None => NetResponse::Error("router: no shard returned a neighbor".into()),
         }
     }
 
-    fn routed_topk(&self, fwd: &NetRequest, k: usize) -> NetResponse {
-        let (replies, missing) = match self.gather(self.scatter(fwd)) {
+    fn routed_topk(&self, fwd: &NetRequest, k: usize, traced: bool) -> NetResponse {
+        let request_id = match fwd {
+            NetRequest::TopK { request_id, .. } => *request_id,
+            _ => 0,
+        };
+        let fan_t0 = Instant::now();
+        let legs = self.scatter(fwd);
+        let n_shards = legs.len();
+        let fanout_us = elapsed_us(fan_t0);
+        let (replies, missing) = match self.gather(legs) {
             Ok(v) => v,
             Err(resp) => return resp,
         };
+        let merge_t0 = Instant::now();
         let mut per_shard = Vec::with_capacity(replies.len());
-        for (shard, resp) in replies {
-            match resp {
-                NetResponse::TopK { hits, .. } => per_shard.push(hits),
+        let mut rpc_spans = Vec::with_capacity(replies.len());
+        let mut children = Vec::with_capacity(replies.len());
+        for reply in replies {
+            match reply.resp {
+                NetResponse::TopK { hits, trace, degraded, .. } => {
+                    if traced {
+                        rpc_spans.push(StageSpan {
+                            stage: Stage::ShardRpc,
+                            wall_us: reply.wall_us,
+                            candidates_in: 1,
+                            candidates_out: hits.len() as u64,
+                        });
+                        children.push(ChildTrace {
+                            shard: reply.shard,
+                            retried: reply.retried,
+                            hedged: reply.hedged,
+                            degraded,
+                            trace: trace.unwrap_or_default(),
+                        });
+                    }
+                    per_shard.push((reply.shard, hits));
+                }
                 other => {
                     return NetResponse::Error(format!(
-                        "router: shard {shard} answered TopK with {other:?}"
+                        "router: shard {} answered TopK with {other:?}",
+                        reply.shard
                     ))
                 }
             }
         }
+        let n_candidates: u64 = per_shard.iter().map(|(_, h)| h.len() as u64).sum();
+        let merged =
+            merge_topk(per_shard.iter().map(|(_, h)| h.clone()).collect(), k);
+        let trace = traced.then(|| {
+            let hits = merged
+                .iter()
+                .filter_map(|hit| {
+                    let shard = per_shard
+                        .iter()
+                        .find(|(_, hs)| hs.iter().any(|h| h.index == hit.index))
+                        .map(|(s, _)| *s)?;
+                    let mut h = explain_for(&children, shard, hit.index as u64)
+                        .unwrap_or(HitExplain {
+                            index: hit.index as u64,
+                            pq_estimate: hit.distance,
+                            exact_dtw: None,
+                            admitted_by: Stage::Merge,
+                            shard: None,
+                        });
+                    h.shard = Some(shard);
+                    Some(h)
+                })
+                .collect();
+            build_routed_trace(
+                request_id,
+                n_shards,
+                fanout_us,
+                elapsed_us(merge_t0),
+                n_candidates,
+                merged.len() as u64,
+                rpc_spans,
+                children,
+                hits,
+            )
+        });
         NetResponse::TopK {
-            hits: merge_topk(per_shard, k),
-            trace: None,
+            hits: merged,
+            trace,
             degraded: !missing.is_empty(),
             missing_shards: missing,
         }
@@ -415,12 +705,13 @@ impl Router {
             Err(resp) => return resp,
         };
         let mut stats = Vec::with_capacity(replies.len());
-        for (shard, resp) in replies {
-            match resp {
+        for reply in replies {
+            match reply.resp {
                 NetResponse::Stats(s) => stats.push(s),
                 other => {
                     return NetResponse::Error(format!(
-                        "router: shard {shard} answered Stats with {other:?}"
+                        "router: shard {} answered Stats with {other:?}",
+                        reply.shard
                     ))
                 }
             }
@@ -431,23 +722,67 @@ impl Router {
         }
     }
 
-    /// The router's own Prometheus exposition (`pqdtw_router_*`): it
-    /// deliberately does *not* proxy shard metrics — scrape the shards
-    /// directly for engine counters.
-    pub fn prometheus_text(&self) -> String {
-        let mut p = PromText::new();
-        let healths: Vec<(u64, String, ShardHealth)> = self
-            .shards
+    /// Per-shard `(index, addr, health)` rows for exposition and the
+    /// `/healthz` body.
+    fn shard_healths(&self) -> Vec<(u64, String, ShardHealth)> {
+        self.shards
             .iter()
             .enumerate()
             .map(|(i, s)| {
                 let conn = lock_unpoisoned(s);
                 (i as u64, conn.addr().to_string(), conn.health())
             })
-            .collect();
-        self.metrics.render_prometheus(&mut p, &healths);
+            .collect()
+    }
+
+    /// The router's own Prometheus exposition (`pqdtw_router_*` plus
+    /// the fleet-joinable `pqdtw_build_info`): it deliberately does
+    /// *not* proxy shard metrics — scrape the shards directly for
+    /// engine counters.
+    pub fn prometheus_text(&self) -> String {
+        let mut p = PromText::new();
+        self.metrics.render_prometheus(&mut p, &self.shard_healths());
         p.gauge("pqdtw_router_uptime_seconds", self.started.elapsed().as_secs_f64());
+        // Same family name as the single-node server's so fleet
+        // dashboards can join router and shards on version.
+        p.family("pqdtw_build_info", "gauge");
+        p.sample(
+            "pqdtw_build_info",
+            &[("version", env!("CARGO_PKG_VERSION")), ("role", "router")],
+            1.0,
+        );
         p.finish()
+    }
+
+    /// JSON body for `GET /healthz`: overall status (`ok` when every
+    /// shard is healthy, `down` when every breaker is open, `degraded`
+    /// otherwise) plus the per-shard breaker states the prober
+    /// maintains.
+    pub fn healthz_json(&self) -> String {
+        use std::fmt::Write as _;
+        let healths = self.shard_healths();
+        let status = if healths.iter().all(|(_, _, h)| *h == ShardHealth::Healthy) {
+            "ok"
+        } else if healths.iter().all(|(_, _, h)| *h == ShardHealth::Down) {
+            "down"
+        } else {
+            "degraded"
+        };
+        let mut body = String::new();
+        let _ = write!(body, "{{\"status\":\"{status}\",\"shards\":[");
+        for (i, (index, addr, health)) in healths.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            let _ = write!(
+                body,
+                "{{\"shard\":{index},\"addr\":\"{}\",\"health\":\"{}\"}}",
+                crate::obs::log::escape(addr),
+                health.name()
+            );
+        }
+        body.push_str("]}");
+        body
     }
 }
 
@@ -498,29 +833,42 @@ mod tests {
         assert!(merge_nn(vec![]).is_none());
     }
 
-    #[test]
-    fn aggregate_stats_sums_counts_and_weights_means() {
+    /// Per-bucket counts with `n` observations in the bucket at
+    /// `idx` ([`BUCKETS_US`] alignment).
+    fn buckets_with(idx: usize, n: u64) -> Vec<u64> {
+        let mut b = vec![0u64; BUCKETS_US.len()];
+        b[idx] = n;
+        b
+    }
+
+    /// A stats frame whose scalar percentiles are derived from its own
+    /// buckets (as a real server's are), so aggregation identities are
+    /// exact.
+    fn stats_with(requests: u64, bucket_idx: usize) -> WireStats {
         use crate::net::protocol::WireClassStats;
-        let mut a = WireStats {
-            requests: 10,
+        let buckets = buckets_with(bucket_idx, requests);
+        WireStats {
+            requests,
             errors: 1,
             batches: 5,
             mean_batch_size: 2.0,
             mean_latency_us: 100.0,
-            p50_us: 80,
-            p99_us: 200,
+            p50_us: bucket_percentile(&buckets, 0.5),
+            p99_us: bucket_percentile(&buckets, 0.99),
+            latency_buckets: buckets.clone(),
             per_class: vec![WireClassStats {
                 class: 0,
                 name: "ping".into(),
-                requests: 10,
+                requests,
                 mean_latency_us: 100.0,
-                p50_us: 80,
-                p99_us: 200,
+                p50_us: bucket_percentile(&buckets, 0.5),
+                p99_us: bucket_percentile(&buckets, 0.99),
+                buckets,
             }],
             per_stage: vec![],
             scan: Default::default(),
             uptime_s: 50,
-            version: "x".into(),
+            version: env!("CARGO_PKG_VERSION").into(),
             n_items: 100,
             n_subspaces: 4,
             codebook_size: 8,
@@ -528,26 +876,81 @@ mod tests {
             window_frac: 0.1,
             coarse_metric: "dtw".into(),
             nlist: None,
-        };
+        }
+    }
+
+    #[test]
+    fn aggregate_stats_sums_counts_and_weights_means() {
+        // Shard a: 10 requests in the 100µs bucket; shard b: 30 in the
+        // 250µs bucket.
+        let mut a = stats_with(10, 3);
         a.scan.items_scanned = 7;
-        let mut b = a.clone();
-        b.requests = 30;
+        let mut b = stats_with(30, 4);
         b.mean_latency_us = 200.0;
-        b.p99_us = 400;
+        b.per_class[0].mean_latency_us = 200.0;
         b.n_items = 28;
         b.uptime_s = 9;
-        b.per_class[0].requests = 30;
-        b.per_class[0].mean_latency_us = 200.0;
+        b.scan.items_scanned = 7;
         let agg = aggregate_stats(&[a, b]).unwrap();
         assert_eq!(agg.requests, 40);
         assert_eq!(agg.errors, 2);
         assert_eq!(agg.n_items, 128);
-        assert_eq!(agg.p99_us, 400);
         assert_eq!(agg.uptime_s, 9);
         assert_eq!(agg.scan.items_scanned, 14);
+        // The merged histogram holds both shards' raw counts…
+        assert_eq!(agg.latency_buckets, {
+            let mut m = buckets_with(3, 10);
+            m[4] = 30;
+            m
+        });
+        // …and the percentiles are computed over the union: the 20th
+        // of 40 observations lands in the 250µs bucket.
+        assert_eq!(agg.p50_us, 250);
+        assert_eq!(agg.p99_us, 250);
+        assert_eq!(agg.per_class[0].p50_us, 250);
         // 10 × 100 + 30 × 200 over 40 requests.
         assert!((agg.mean_latency_us - 175.0).abs() < 1e-9);
         assert!((agg.per_class[0].mean_latency_us - 175.0).abs() < 1e-9);
         assert!(aggregate_stats(&[]).is_none());
+    }
+
+    #[test]
+    fn exact_merge_beats_fleet_max_percentiles() {
+        // 99 fast observations on one shard, 1 slow on another. The
+        // old fleet-max rule would report p99 = 50 000 µs; the exact
+        // merged distribution puts the 99th of 100 observations in the
+        // 10 µs bucket.
+        let a = stats_with(99, 0);
+        let b = stats_with(1, 10);
+        let agg = aggregate_stats(&[a, b]).unwrap();
+        assert_eq!(agg.p99_us, 10);
+        assert_eq!(agg.p50_us, 10);
+    }
+
+    #[test]
+    fn one_shard_fleet_stats_are_identical_to_the_shard() {
+        let mut a = stats_with(10, 3);
+        a.scan.items_scanned = 42;
+        let agg = aggregate_stats(&[a.clone()]).unwrap();
+        assert_eq!(agg, a);
+    }
+
+    #[test]
+    fn merge_buckets_is_associative_and_commutative_on_samples() {
+        let a = buckets_with(0, 3);
+        let b = buckets_with(4, 7);
+        let c = buckets_with(11, 1);
+        let ab_c = merge_buckets(
+            [merge_buckets([a.as_slice(), b.as_slice()].into_iter()).as_slice(), c.as_slice()]
+                .into_iter(),
+        );
+        let a_bc = merge_buckets(
+            [a.as_slice(), merge_buckets([b.as_slice(), c.as_slice()].into_iter()).as_slice()]
+                .into_iter(),
+        );
+        let ba = merge_buckets([b.as_slice(), a.as_slice()].into_iter());
+        let ab = merge_buckets([a.as_slice(), b.as_slice()].into_iter());
+        assert_eq!(ab_c, a_bc);
+        assert_eq!(ab, ba);
     }
 }

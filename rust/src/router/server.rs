@@ -171,6 +171,19 @@ impl RouterServer {
         &self.shared.router
     }
 
+    /// Scrape-endpoint bodies backed by this router, for
+    /// `serve --router --metrics-listen`: `/metrics` renders the full
+    /// router exposition, `/healthz` the per-shard breaker-state JSON.
+    /// The closures hold the router alive independently of `self`.
+    pub fn http_endpoints(&self) -> crate::net::http::HttpEndpoints {
+        let metrics = Arc::clone(&self.shared);
+        let healthz = Arc::clone(&self.shared);
+        crate::net::http::HttpEndpoints {
+            metrics: Arc::new(move || metrics.router.prometheus_text()),
+            healthz: Arc::new(move || healthz.router.healthz_json()),
+        }
+    }
+
     /// Block until a client's `Shutdown` frame stops the router, then
     /// drain, join every thread, and report the final counter totals.
     pub fn wait(mut self) -> RouterRunSummary {

@@ -310,11 +310,14 @@ pub(crate) fn get_result(r: &mut ByteReader) -> Result<JobResult> {
                 );
                 let mut explains = Vec::with_capacity(n_explains);
                 for _ in 0..n_explains {
+                    // The job store never persists shard provenance —
+                    // job results are computed by one engine.
                     explains.push(HitExplain {
                         index: r.u64()?,
                         pq_estimate: r.f64()?,
                         exact_dtw: get_opt_f64(r)?,
                         admitted_by: get_stage(r)?,
+                        shard: None,
                     });
                 }
                 rows.push(AllPairsRow { query_index, hits, explains });
@@ -435,6 +438,7 @@ mod tests {
                         pq_estimate: 1.25,
                         exact_dtw: Some(-0.0),
                         admitted_by: Stage::Rerank,
+                        shard: None,
                     }],
                 }])),
             },

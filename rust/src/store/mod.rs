@@ -500,6 +500,7 @@ mod tests {
                         pq_estimate: 0.5,
                         exact_dtw: Some(0.25),
                         admitted_by: Stage::Rerank,
+                        shard: None,
                     }],
                 }])),
             },

@@ -427,6 +427,163 @@ fn wire_stats_carry_stage_histograms_and_the_index_header() {
     server.shutdown();
 }
 
+/// One blocking HTTP/1.1 GET against the scrape endpoint; returns
+/// (status line, full header block, body).
+fn http_get(addr: &str, path: &str) -> (String, String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    let status = head.lines().next().unwrap_or_default().to_string();
+    (status, head.to_string(), body.to_string())
+}
+
+#[test]
+fn http_scrape_serves_the_exposition_and_health_documents() {
+    use pqdtw::net::{HttpConfig, HttpEndpoints, HttpServer};
+    use pqdtw::obs::log::JsonLogger;
+
+    let (server, svc, _engine, test, addr) = toy_server(ServerConfig::default());
+    let mut client = quick_client(&addr);
+    client.topk(test.row(0), 2, PqQueryMode::Asymmetric, None, None).unwrap();
+
+    let metrics_svc = Arc::clone(&svc);
+    let healthz_svc = Arc::clone(&svc);
+    let http = HttpServer::start(
+        "127.0.0.1:0",
+        HttpEndpoints {
+            metrics: Arc::new(move || metrics_svc.prometheus_text()),
+            healthz: Arc::new(move || healthz_svc.healthz_json()),
+        },
+        HttpConfig::default(),
+        Arc::new(JsonLogger::disabled()),
+    )
+    .unwrap();
+    let haddr = http.local_addr().to_string();
+
+    // `GET /metrics` is the same validated exposition the wire verb
+    // serves, now reachable by a stock Prometheus scraper.
+    let (status, head, body) = http_get(&haddr, "/metrics");
+    assert!(status.contains("200"), "{status}");
+    assert!(head.contains("text/plain"), "{head}");
+    let samples = prometheus::validate_exposition(&body)
+        .unwrap_or_else(|e| panic!("invalid exposition over HTTP: {e}\n{body}"));
+    assert!(samples > 10, "expected a real document, got {samples} samples");
+    assert!(body.contains("pqdtw_requests_total"), "{body}");
+
+    // `GET /healthz` answers liveness as JSON.
+    let (status, head, body) = http_get(&haddr, "/healthz");
+    assert!(status.contains("200"), "{status}");
+    assert!(head.contains("application/json"), "{head}");
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    assert!(body.contains("\"queue_depth\""), "{body}");
+
+    // Unknown paths are a clean 404, and the listener keeps serving.
+    let (status, _, _) = http_get(&haddr, "/fav.ico");
+    assert!(status.contains("404"), "{status}");
+    let (status, _, _) = http_get(&haddr, "/metrics");
+    assert!(status.contains("200"), "{status}");
+
+    http.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn server_slow_query_log_flags_every_crossing_query() {
+    use pqdtw::obs::log::JsonLogger;
+    use std::sync::Mutex;
+
+    #[derive(Default, Clone)]
+    struct LogBuf(Arc<Mutex<Vec<u8>>>);
+    impl Write for LogBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    let tt = ucr_like_by_name("SpikePosition", 77).unwrap();
+    let pq_cfg = PqConfig {
+        n_subspaces: 4,
+        codebook_size: 8,
+        window_frac: 0.2,
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::build(&tt.train, &pq_cfg, 3).unwrap());
+    let svc = Arc::new(Service::start(Arc::clone(&engine), ServiceConfig::default()));
+    let buf = LogBuf::default();
+    let server = NetServer::start_logged(
+        "127.0.0.1:0",
+        Arc::clone(&svc),
+        // Threshold zero: every query crosses, so the test is
+        // deterministic regardless of machine speed.
+        ServerConfig { slow_query_us: Some(0), ..Default::default() },
+        Arc::new(JsonLogger::to_writer(Box::new(buf.clone()))),
+    )
+    .unwrap();
+    let mut client = quick_client(&server.local_addr().to_string());
+
+    let q = tt.test.row(0);
+    client.topk_traced(q, 3, PqQueryMode::Asymmetric, None, None, 9, true).unwrap();
+    // Non-query verbs never count as slow queries.
+    client.ping().unwrap();
+    client.stats().unwrap();
+
+    let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+    let slow: Vec<&str> =
+        text.lines().filter(|l| l.contains("\"event\":\"slow_query\"")).collect();
+    assert_eq!(slow.len(), 1, "{text}");
+    assert!(slow[0].contains("\"request_id\":9"), "{}", slow[0]);
+    assert!(slow[0].contains("\"class\":\"topk_exhaustive\""), "{}", slow[0]);
+    assert!(slow[0].contains("\"degraded\":false"), "{}", slow[0]);
+    // The traced query's event summarizes its stage ladder.
+    assert!(slow[0].contains("blocked_scan="), "{}", slow[0]);
+    // The counter rides the exposition.
+    let mtext = client.metrics_text().unwrap();
+    assert!(mtext.contains("pqdtw_slow_queries_total 1"), "{mtext}");
+    server.shutdown();
+}
+
+#[test]
+fn wire_stats_bucket_counts_reconstruct_the_percentiles() {
+    use pqdtw::coordinator::{histogram_percentile, BUCKETS_US};
+
+    let (server, _svc, _engine, test, addr) = toy_server(ServerConfig::default());
+    let mut client = quick_client(&addr);
+    for i in 0..4 {
+        client.topk(test.row(i), 2, PqQueryMode::Asymmetric, None, None).unwrap();
+    }
+    let stats = client.stats().unwrap();
+    // Raw per-bucket counts ride along with every percentile, sized to
+    // the shared ladder, and total to the request count.
+    assert_eq!(stats.latency_buckets.len(), BUCKETS_US.len());
+    assert_eq!(stats.latency_buckets.iter().sum::<u64>(), stats.requests);
+    // The scalar percentiles the server reports are exactly what the
+    // buckets reproduce — the invariant exact federation relies on.
+    let hist: Vec<(u64, u64)> = BUCKETS_US
+        .iter()
+        .zip(&stats.latency_buckets)
+        .map(|(&ub, &c)| (ub, c))
+        .collect();
+    assert_eq!(stats.p50_us, histogram_percentile(&hist, 0.5));
+    assert_eq!(stats.p99_us, histogram_percentile(&hist, 0.99));
+    for class in &stats.per_class {
+        assert_eq!(class.buckets.len(), BUCKETS_US.len());
+        assert_eq!(class.buckets.iter().sum::<u64>(), class.requests);
+    }
+    for stage in &stats.per_stage {
+        assert_eq!(stage.buckets.len(), BUCKETS_US.len());
+        assert_eq!(stage.buckets.iter().sum::<u64>(), stage.count);
+    }
+    server.shutdown();
+}
+
 #[test]
 fn shutdown_frame_drains_the_server() {
     let (server, svc, _engine, test, addr) = toy_server(ServerConfig::default());

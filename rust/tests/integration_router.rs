@@ -16,13 +16,15 @@
 //! The failure modes are driven through [`FaultProxy`], a byte-level
 //! TCP proxy in front of one shard.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use pqdtw::coordinator::{Engine, Hit, Request, Response, Service, ServiceConfig};
 use pqdtw::data::ucr_like::ucr_like_by_name;
 use pqdtw::net::{Client, ClientConfig, NetServer, ServerConfig};
 use pqdtw::nn::knn::PqQueryMode;
+use pqdtw::obs::log::JsonLogger;
+use pqdtw::obs::Stage;
 use pqdtw::pq::quantizer::PqConfig;
 use pqdtw::router::{
     FaultMode, FaultProxy, HealthConfig, RouterConfig, RouterServer, RouterServerConfig,
@@ -114,6 +116,26 @@ fn await_health(server: &RouterServer, shard: usize, health: ShardHealth) {
             server.router().health()
         );
         std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Shared in-memory sink for asserting the router's structured events.
+#[derive(Default, Clone)]
+struct LogBuf(Arc<Mutex<Vec<u8>>>);
+
+impl std::io::Write for LogBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl LogBuf {
+    fn text(&self) -> String {
+        String::from_utf8_lossy(&self.0.lock().unwrap()).into_owned()
     }
 }
 
@@ -282,6 +304,194 @@ fn router_rejects_job_requests_and_reports_its_own_metrics() {
     assert!(text.contains("pqdtw_router_uptime_seconds"), "{text}");
     // Shard-engine families are deliberately NOT proxied.
     assert!(!text.contains("pqdtw_requests_total"), "{text}");
+    router.shutdown();
+    for s in fleet.servers {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn routed_trace_is_a_merged_ladder_with_per_shard_children() {
+    let fleet = start_fleet();
+    let router = RouterServer::start(
+        "127.0.0.1:0",
+        RouterConfig::new(fleet.addrs.clone()),
+        RouterServerConfig::default(),
+    )
+    .unwrap();
+    let mut client = quick_client(&router.local_addr().to_string());
+    let q = fleet.queries.row(0);
+    let k = 6;
+
+    // Tracing is a pure observer: the traced answer is bit-identical
+    // to the untraced one, and both match the unsharded oracle.
+    let plain = client.topk_full(q, k, PqQueryMode::Asymmetric, None, None, 7, false).unwrap();
+    let traced = client.topk_full(q, k, PqQueryMode::Asymmetric, None, None, 7, true).unwrap();
+    assert!(plain.trace.is_none());
+    assert_hits_eq(&traced.hits, &plain.hits, "traced vs untraced");
+    assert_hits_eq(&traced.hits, &oracle_topk(&fleet.oracle, q, k), "traced vs oracle");
+
+    let trace = traced.trace.expect("trace requested");
+    assert_eq!(trace.request_id, 7);
+    // One `shard_rpc` span per healthy shard; one child trace per
+    // shard, ascending by shard index.
+    let rpc: Vec<_> = trace.spans.iter().filter(|s| s.stage == Stage::ShardRpc).collect();
+    assert_eq!(rpc.len(), N_SHARDS as usize, "{:?}", trace.spans);
+    assert_eq!(trace.children.len(), N_SHARDS as usize);
+    let shards: Vec<u64> = trace.children.iter().map(|c| c.shard).collect();
+    assert_eq!(shards, vec![0, 1, 2]);
+    for c in &trace.children {
+        assert!(!c.retried && !c.hedged && !c.degraded, "healthy fleet: {c:?}");
+        // Children are the shards' own single-engine ladders: depth 1,
+        // never carrying router-level stages of their own.
+        assert!(c.trace.children.is_empty());
+        assert!(c
+            .trace
+            .spans
+            .iter()
+            .all(|s| !matches!(s.stage, Stage::Fanout | Stage::ShardRpc | Stage::Merge)));
+        assert!(!c.trace.spans.is_empty(), "shard {} recorded no spans", c.shard);
+    }
+    let fanout = trace.span(Stage::Fanout).expect("fanout span");
+    assert_eq!(fanout.candidates_in, N_SHARDS);
+    assert_eq!(fanout.candidates_out, N_SHARDS);
+    let merge = trace.span(Stage::Merge).expect("merge span");
+    assert_eq!(merge.candidates_out, traced.hits.len() as u64);
+    // Per-hit provenance: each hit is attributed to the `id % 3` shard
+    // that actually owns its row.
+    assert_eq!(trace.hits.len(), traced.hits.len());
+    for (h, e) in traced.hits.iter().zip(&trace.hits) {
+        assert_eq!(e.index, h.index as u64);
+        assert_eq!(e.shard, Some(h.index as u64 % N_SHARDS), "hit {}", h.index);
+    }
+    // The merged scan snapshot is the fleet sum of the children's.
+    let summed: u64 = trace.children.iter().map(|c| c.trace.scan.items_scanned).sum();
+    assert_eq!(trace.scan.items_scanned, summed);
+
+    // 1-NN gets the same ladder shape.
+    let nn = client.nn_full(q, PqQueryMode::Asymmetric, None, 8, true).unwrap();
+    let nt = nn.trace.expect("nn trace");
+    assert_eq!(nt.request_id, 8);
+    assert_eq!(nt.children.len(), N_SHARDS as usize);
+    assert_eq!(
+        nt.spans.iter().filter(|s| s.stage == Stage::ShardRpc).count(),
+        N_SHARDS as usize
+    );
+
+    router.shutdown();
+    for s in fleet.servers {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn one_shard_fleet_serves_stats_bit_identical_to_the_shard() {
+    // A fleet of one: the router's exact histogram federation must
+    // reproduce the shard's own stats bit for bit — counts, buckets,
+    // percentiles and f64 means alike.
+    let tt = ucr_like_by_name("SpikePosition", 77).unwrap();
+    let engine = Engine::build(&tt.train, &pq_cfg(), 3).unwrap();
+    let svc = Arc::new(Service::start(Arc::new(engine), ServiceConfig::default()));
+    let server = NetServer::start("127.0.0.1:0", svc, ServerConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let router = RouterServer::start(
+        "127.0.0.1:0",
+        RouterConfig::new(vec![addr.clone()]),
+        RouterServerConfig::default(),
+    )
+    .unwrap();
+    let mut via_router = quick_client(&router.local_addr().to_string());
+    // Put real observations into every histogram family first.
+    for i in 0..6 {
+        let q = tt.test.row(i);
+        via_router.topk(q, 3, PqQueryMode::Asymmetric, None, None).unwrap();
+        via_router.nn(q, PqQueryMode::Symmetric, None).unwrap();
+    }
+    let mut direct = quick_client(&addr);
+    let want = direct.stats().unwrap();
+    let mut got = via_router.stats().unwrap();
+    // `uptime_s` is the lone wall-clock scalar: the routed snapshot is
+    // taken a moment after the direct one, so allow the second to tick
+    // once, then require everything else bit-identical.
+    assert!(
+        got.uptime_s >= want.uptime_s && got.uptime_s <= want.uptime_s + 1,
+        "uptime drifted: direct {} routed {}",
+        want.uptime_s,
+        got.uptime_s
+    );
+    got.uptime_s = want.uptime_s;
+    assert_eq!(got, want, "one-shard fleet stats must match the shard exactly");
+    router.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn router_healthz_reflects_a_killed_shard() {
+    let fleet = start_fleet();
+    let proxy = FaultProxy::start(&fleet.addrs[1]).unwrap();
+    let shard_addrs =
+        vec![fleet.addrs[0].clone(), proxy.local_addr().to_string(), fleet.addrs[2].clone()];
+    let mut cfg = RouterConfig::new(shard_addrs);
+    cfg.health = fast_health();
+    let router =
+        RouterServer::start("127.0.0.1:0", cfg, RouterServerConfig::default()).unwrap();
+    let body = router.router().healthz_json();
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    assert!(body.contains("\"health\":\"healthy\""), "{body}");
+
+    // Kill shard 1 and let one failing query trip the breaker.
+    proxy.set_mode(FaultMode::CloseAfter(0));
+    proxy.kill_connections();
+    let mut client = quick_client(&router.local_addr().to_string());
+    let q = fleet.queries.row(0);
+    let reply = client.topk_full(q, 4, PqQueryMode::Asymmetric, None, None, 1, false).unwrap();
+    assert!(reply.degraded);
+    await_health(&router, 1, ShardHealth::Down);
+
+    // The same body the HTTP `/healthz` endpoint serves now carries
+    // the per-shard breaker verdict.
+    let body = router.router().healthz_json();
+    assert!(body.contains("\"status\":\"degraded\""), "{body}");
+    assert!(body.contains("\"shard\":1"), "{body}");
+    assert!(body.contains("\"health\":\"down\""), "{body}");
+
+    router.shutdown();
+    proxy.stop();
+    for s in fleet.servers {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn router_slow_query_log_reports_the_crossing_queries() {
+    let fleet = start_fleet();
+    let buf = LogBuf::default();
+    let logger = Arc::new(JsonLogger::to_writer(Box::new(buf.clone())));
+    let mut cfg = RouterConfig::new(fleet.addrs.clone());
+    // Threshold zero: every query crosses, so the test is deterministic.
+    cfg.slow_query_us = Some(0);
+    let router =
+        RouterServer::start_logged("127.0.0.1:0", cfg, RouterServerConfig::default(), logger)
+            .unwrap();
+    let mut client = quick_client(&router.local_addr().to_string());
+    let q = fleet.queries.row(0);
+    client.topk_full(q, 4, PqQueryMode::Asymmetric, None, None, 42, false).unwrap();
+    client.nn_full(q, PqQueryMode::Asymmetric, None, 43, true).unwrap();
+
+    let text = buf.text();
+    let slow: Vec<&str> = text.lines().filter(|l| l.contains("\"event\":\"slow_query\"")).collect();
+    assert_eq!(slow.len(), 2, "{text}");
+    assert!(slow[0].contains("\"request_id\":42"), "{}", slow[0]);
+    assert!(slow[0].contains("\"class\":\"topk\""), "{}", slow[0]);
+    assert!(slow[0].contains("\"degraded\":false"), "{}", slow[0]);
+    assert!(slow[1].contains("\"request_id\":43"), "{}", slow[1]);
+    assert!(slow[1].contains("\"class\":\"nn\""), "{}", slow[1]);
+    // The traced query's event carries the router-stage span summary.
+    assert!(slow[1].contains("shard_rpc="), "{}", slow[1]);
+    // And the counter is exported.
+    let mtext = client.metrics_text().unwrap();
+    assert!(mtext.contains("pqdtw_slow_queries_total 2"), "{mtext}");
+
     router.shutdown();
     for s in fleet.servers {
         s.shutdown();

@@ -588,6 +588,77 @@ fn prop_dtw_triangle_violations_exist_but_bounded_scaling() {
 }
 
 #[test]
+fn prop_bucket_merge_is_associative_commutative_and_exact() {
+    // The router's histogram federation must be a true monoid fold:
+    // element-wise bucket addition is associative and commutative, and
+    // the percentile of the merged distribution must equal the
+    // percentile computed over one histogram of every shard's raw
+    // observations concatenated — the property the old fleet-max
+    // "merge" lacked.
+    use pqdtw::coordinator::{histogram_percentile, BUCKETS_US};
+    use pqdtw::router::{bucket_percentile, merge_buckets};
+
+    // One raw latency, spread over the full bucket range including
+    // the `u64::MAX` overflow bucket.
+    fn gen_latency(rng: &mut Rng) -> u64 {
+        match rng.below(4) {
+            0 => rng.below(10) as u64,
+            1 => rng.below(1_000) as u64,
+            2 => rng.below(60_000) as u64,
+            _ => 50_001 + rng.below(1_000_000) as u64,
+        }
+    }
+    // Per-bucket counts exactly as `Metrics::record_request` buckets:
+    // first upper bound with `v <= ub` wins.
+    fn bucketize(obs: &[u64]) -> Vec<u64> {
+        let mut row = vec![0u64; BUCKETS_US.len()];
+        for &v in obs {
+            if let Some(idx) = BUCKETS_US.iter().position(|&ub| v <= ub) {
+                row[idx] += 1;
+            }
+        }
+        row
+    }
+
+    check("bucket merge monoid", default_cases(), |rng| {
+        let n_shards = 1 + rng.below(5);
+        let mut shards: Vec<Vec<u64>> = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let n_obs = rng.below(40);
+            shards.push((0..n_obs).map(|_| gen_latency(rng)).collect());
+        }
+        let rows: Vec<Vec<u64>> = shards.iter().map(|obs| bucketize(obs)).collect();
+        // Commutative: merging in reverse shard order changes nothing.
+        let fwd = merge_buckets(rows.iter().map(Vec::as_slice));
+        let rev = merge_buckets(rows.iter().rev().map(Vec::as_slice));
+        if fwd != rev {
+            return Err("merge is order-sensitive".into());
+        }
+        // Associative: a pairwise left fold equals the one-shot merge.
+        let mut acc = vec![0u64; BUCKETS_US.len()];
+        for row in &rows {
+            acc = merge_buckets([acc.as_slice(), row.as_slice()].into_iter());
+        }
+        if acc != fwd {
+            return Err("pairwise fold != one-shot merge".into());
+        }
+        // Exactness: merged percentiles equal percentiles of the
+        // global histogram over all raw observations concatenated.
+        let all: Vec<u64> = shards.iter().flatten().copied().collect();
+        let global: Vec<(u64, u64)> =
+            BUCKETS_US.iter().zip(bucketize(&all)).map(|(&ub, c)| (ub, c)).collect();
+        for &p in &[0.5, 0.9, 0.99, 1.0] {
+            let merged = bucket_percentile(&fwd, p);
+            let exact = histogram_percentile(&global, p);
+            if merged != exact {
+                return Err(format!("p={p}: merged {merged}us != concatenated {exact}us"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_shard_split_merge_is_bit_identical_to_unsharded() {
     // The router's bit-identity chain, without sockets: for every
     // `id % n` split (n ∈ {1, 2, 3, 5}), merging the shards' exhaustive

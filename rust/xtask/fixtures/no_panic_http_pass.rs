@@ -1,0 +1,30 @@
+// Fixture: HTTP-endpoint code compliant with no-panic-in-serving — a
+// malformed request line becomes a 400 response and a poisoned body
+// mutex is recovered, never unwrapped. Linted as if it lived under
+// `net/`.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+pub fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+pub fn route(head: &str) -> (u16, &'static str) {
+    let mut parts = head.split_whitespace();
+    let method = match parts.next() {
+        Some(m) => m,
+        None => return (400, "bad request"),
+    };
+    let path = match parts.next() {
+        Some(p) => p,
+        None => return (400, "bad request"),
+    };
+    if method != "GET" {
+        return (405, "method not allowed");
+    }
+    match path {
+        "/metrics" => (200, "ok"),
+        "/healthz" => (200, "ok"),
+        _ => (404, "not found"),
+    }
+}

@@ -1,0 +1,15 @@
+// Fixture: HTTP-endpoint code compliant with no-raw-stderr-in-serving —
+// scrape requests and rejected connections flow through a structured
+// logger, never raw stderr. Linted as if it lived under `net/`.
+
+pub trait EventSink {
+    fn event(&self, name: &str, status: u16);
+}
+
+pub fn on_scrape(sink: &dyn EventSink, status: u16) {
+    sink.event("metrics_http_request", status);
+}
+
+pub fn on_rejected(sink: &dyn EventSink) {
+    sink.event("metrics_http_rejected", 503);
+}

@@ -320,6 +320,34 @@ mod tests {
     }
 
     #[test]
+    fn no_panic_scope_covers_the_http_endpoint() {
+        // The fail fixture under the scrape endpoint's path must be
+        // flagged …
+        let f = lint_source("net/http.rs", &fixture("no_panic_fail.rs"));
+        assert!(
+            f.iter().filter(|f| f.rule == rules::NO_PANIC).count() >= 4,
+            "net/http.rs is in no-panic scope, got {f:?}"
+        );
+        // … and the error-propagating twin must pass with zero waivers.
+        let f = lint_source("net/http.rs", &fixture("no_panic_http_pass.rs"));
+        assert!(f.is_empty(), "400-don't-crash endpoint code must pass, got {f:?}");
+    }
+
+    #[test]
+    fn raw_stderr_scope_covers_the_http_endpoint() {
+        // The fail fixture under the scrape endpoint's path must be
+        // flagged …
+        let f = lint_source("net/http.rs", &fixture("raw_stderr_fail.rs"));
+        assert!(
+            f.iter().filter(|f| f.rule == rules::NO_RAW_STDERR).count() >= 3,
+            "net/http.rs is in no-raw-stderr scope, got {f:?}"
+        );
+        // … and the structured-logger twin must pass with zero waivers.
+        let f = lint_source("net/http.rs", &fixture("raw_stderr_http_pass.rs"));
+        assert!(f.is_empty(), "logger-based scrape events must pass, got {f:?}");
+    }
+
+    #[test]
     fn raw_stderr_ignored_outside_serving_scope() {
         let f = lint_source("obs/log.rs", &fixture("raw_stderr_fail.rs"));
         assert!(
